@@ -1,0 +1,105 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Builds a small clustered dataset with a partition constraint, constructs
+//! a coreset with SeqCoreset (Algorithm 1), extracts a sum-diverse solution
+//! with AMT local search, and compares against running local search on the
+//! full input.
+//!
+//!     cargo run --release --example quickstart
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::algo::seq_coreset::seq_coreset;
+use matroid_coreset::algo::Budget;
+use matroid_coreset::data::synth;
+use matroid_coreset::diversity::{diversity, Objective};
+use matroid_coreset::matroid::{Matroid, PartitionMatroid};
+use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::util::rng::Rng;
+use matroid_coreset::util::timer::time_it;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a dataset: 20k points in 8-d, 6 categories, Gaussian blobs
+    let ds = synth::clustered(20_000, 8, 32, 0.15, 6, 42);
+    println!("dataset: {} ({} points, dim {})", ds.name, ds.n(), ds.dim);
+
+    // 2. a matroid constraint: at most 2 representatives per category
+    let matroid = PartitionMatroid::new(vec![2; 6]);
+    let k = 8;
+    println!("matroid: {} | k = {k}", matroid.describe());
+
+    // 3. build a (1-eps)-coreset with SeqCoreset (Algorithm 1)
+    let engine = ScalarEngine::new();
+    let (coreset, t_coreset) =
+        time_it(|| seq_coreset(&ds, &matroid, k, Budget::Clusters(64), &engine));
+    let coreset = coreset?;
+    println!(
+        "coreset: {} points from {} clusters (radius {:.4}) in {:.3}s",
+        coreset.len(),
+        coreset.n_clusters,
+        coreset.radius,
+        t_coreset.as_secs_f64()
+    );
+
+    // 4. extract the final solution with AMT local search (gamma = 0)
+    let mut rng = Rng::new(1);
+    let (result, t_search) = time_it(|| {
+        local_search_sum(
+            &ds,
+            &matroid,
+            k,
+            &coreset.indices,
+            LocalSearchParams::default(),
+            None,
+            &mut rng,
+        )
+    });
+    println!(
+        "solution: {:?}\n  sum-diversity = {:.4} ({} swaps, {:.3}s)",
+        result.solution,
+        result.diversity,
+        result.swaps,
+        t_search.as_secs_f64()
+    );
+    assert!(matroid.is_independent(&ds, &result.solution));
+
+    // 5. compare against local search on the FULL input (the AMT baseline)
+    let all: Vec<usize> = (0..ds.n()).collect();
+    let mut rng2 = Rng::new(1);
+    let (full, t_full) = time_it(|| {
+        local_search_sum(
+            &ds,
+            &matroid,
+            k,
+            &all,
+            LocalSearchParams::default(),
+            None,
+            &mut rng2,
+        )
+    });
+    println!(
+        "baseline (AMT on full input): diversity = {:.4} in {:.3}s",
+        full.diversity,
+        t_full.as_secs_f64()
+    );
+    let total = t_coreset.as_secs_f64() + t_search.as_secs_f64();
+    println!(
+        "=> coreset route keeps {:.1}% of the diversity at {:.1}x speedup",
+        100.0 * result.diversity / full.diversity,
+        t_full.as_secs_f64() / total
+    );
+
+    // other objectives work via exhaustive search on the coreset:
+    let tree = matroid_coreset::algo::exhaustive::exhaustive_best(
+        &ds,
+        &&matroid,
+        4,
+        &coreset.indices,
+        Objective::Tree,
+    );
+    println!(
+        "tree-DMMC (k=4, exhaustive on coreset): {:.4} (={:.4} recomputed)",
+        tree.diversity,
+        diversity(&ds, &tree.solution, Objective::Tree)
+    );
+    Ok(())
+}

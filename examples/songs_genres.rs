@@ -1,0 +1,91 @@
+//! Songs-genres scenario (paper §5, Table 2 row 2 — substituted by the
+//! songsim generator): a partition matroid with caps proportional to genre
+//! frequency (rank ~ 89), processed with the MAPREDUCE coreset at several
+//! degrees of parallelism — the paper's Figure 3 protocol in miniature.
+//!
+//!     cargo run --release --example songs_genres [n] [tau]
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::algo::Budget;
+use matroid_coreset::data::synth;
+use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
+use matroid_coreset::matroid::Matroid;
+use matroid_coreset::util::rng::Rng;
+use matroid_coreset::util::timer::time_it;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(100_000);
+    let tau: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(64);
+
+    println!("generating songsim n={n} (48-d count vectors, 16 genres)...");
+    let ds = synth::songsim(n, 11);
+    let matroid = synth::songsim_matroid(&ds, 89);
+    let rank = matroid.rank_bound(&ds);
+    let k = rank / 4;
+    println!("matroid: {} (rank {rank}), k = {k}", matroid.describe());
+
+    println!("\n ell  makespan_r1  wall      coreset  diversity  (tau/ell clusters per worker)");
+    for ell in [1usize, 2, 4, 8] {
+        let cfg = MapReduceConfig {
+            workers: ell,
+            budget: Budget::Clusters((tau / ell).max(1)),
+            second_round_tau: None,
+            seed: 33,
+        };
+        let (rep, _) = time_it(|| mr_coreset(&ds, &matroid, k, cfg));
+        let rep = rep?;
+        let mut rng = Rng::new(1);
+        let (res, t_ls) = time_it(|| {
+            local_search_sum(
+                &ds,
+                &matroid,
+                k,
+                &rep.coreset.indices,
+                LocalSearchParams::default(),
+                None,
+                &mut rng,
+            )
+        });
+        assert!(matroid.is_independent(&ds, &res.solution));
+        println!(
+            "  {ell:2}  {:>9.3}s  {:>7.3}s  {:>7}  {:>9.3}  (+{:.2}s local search)",
+            rep.makespan_round1.as_secs_f64(),
+            rep.wall_time.as_secs_f64(),
+            rep.coreset.len(),
+            res.diversity,
+            t_ls.as_secs_f64()
+        );
+    }
+
+    // genre balance of the ell=4 solution
+    let cfg = MapReduceConfig {
+        workers: 4,
+        budget: Budget::Clusters((tau / 4).max(1)),
+        second_round_tau: None,
+        seed: 33,
+    };
+    let rep = mr_coreset(&ds, &matroid, k, cfg)?;
+    let mut rng = Rng::new(1);
+    let res = local_search_sum(
+        &ds,
+        &matroid,
+        k,
+        &rep.coreset.indices,
+        LocalSearchParams::default(),
+        None,
+        &mut rng,
+    );
+    let mut per_genre = vec![0usize; ds.n_categories as usize];
+    for &i in &res.solution {
+        per_genre[ds.categories[i][0] as usize] += 1;
+    }
+    println!("\ngenre histogram of the solution (cap per genre in parens):");
+    for (g, &cnt) in per_genre.iter().enumerate() {
+        if cnt > 0 {
+            println!("  genre {g:2}: {cnt} (cap {})", matroid.cap(g as u32));
+            assert!(cnt <= matroid.cap(g as u32));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Wikipedia-topics scenario (paper §5, Table 2 row 1 — substituted by the
+//! wikisim generator, see DESIGN.md §1): pick k pages that are maximally
+//! diverse in embedding space while "well spread" across overlapping topics
+//! — a transversal matroid constraint — processing the input as a STREAM.
+//!
+//!     cargo run --release --example wiki_topics [n] [k] [tau]
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::data::synth;
+use matroid_coreset::matroid::{Matroid, TransversalMatroid};
+use matroid_coreset::streaming::{run_stream, StreamMode};
+use matroid_coreset::util::rng::Rng;
+use matroid_coreset::util::timer::time_it;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(100_000);
+    let k: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(25);
+    let tau: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(64);
+
+    println!("generating wikisim n={n} (25-d GloVe-like embeddings, 100 topics)...");
+    let ds = synth::wikisim(n, 7);
+    let matroid = TransversalMatroid::new();
+    println!(
+        "matroid: transversal over {} topics (rank bound {})",
+        ds.n_categories,
+        matroid.rank_bound(&ds)
+    );
+
+    // stream pass: one permutation = one simulated arrival order
+    let mut rng = Rng::new(99);
+    let order = rng.permutation(ds.n());
+    let rep = run_stream(&ds, &matroid, k, StreamMode::Tau(tau), &order);
+    println!(
+        "stream pass: {} pts at {:.0} pts/s | coreset {} pts / {} clusters | peak mem {} pts | {} restructures",
+        rep.stats.points_processed,
+        rep.throughput,
+        rep.coreset.len(),
+        rep.coreset.n_clusters,
+        rep.stats.peak_memory_points,
+        rep.stats.restructures,
+    );
+
+    // final solution on the coreset
+    let (res, t_ls) = time_it(|| {
+        let mut r2 = Rng::new(5);
+        local_search_sum(
+            &ds,
+            &matroid,
+            k,
+            &rep.coreset.indices,
+            LocalSearchParams::default(),
+            None,
+            &mut r2,
+        )
+    });
+    println!(
+        "local search on coreset: diversity {:.4} in {:.2}s ({} swaps)",
+        res.diversity,
+        t_ls.as_secs_f64(),
+        res.swaps
+    );
+    assert!(matroid.is_independent(&ds, &res.solution));
+
+    // report topic coverage of the solution — the point of the constraint
+    let mut topics: Vec<u32> = res
+        .solution
+        .iter()
+        .flat_map(|&i| ds.categories[i].iter().copied())
+        .collect();
+    topics.sort_unstable();
+    topics.dedup();
+    println!(
+        "solution covers {} distinct topics with {} pages",
+        topics.len(),
+        res.solution.len()
+    );
+    println!(
+        "end-to-end: {:.2}s stream + {:.2}s search over {} pages",
+        rep.elapsed.as_secs_f64(),
+        t_ls.as_secs_f64(),
+        ds.n()
+    );
+    Ok(())
+}

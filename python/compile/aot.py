@@ -1,0 +1,69 @@
+"""AOT lowering: JAX entries -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published ``xla``
+crate) rejects with ``proto.id() <= INT_MAX``.  The HLO *text* parser
+reassigns ids on load, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="output directory for *.hlo.txt artifacts")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated entry names (default: all)")
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = model.aot_entries()
+    if args.only:
+        wanted = set(args.only.split(","))
+        entries = {k: v for k, v in entries.items() if k in wanted}
+        missing = wanted - set(entries)
+        if missing:
+            raise SystemExit(f"unknown entries: {sorted(missing)}")
+
+    for name, (fn, specs) in sorted(entries.items()):
+        text = lower_entry(name, fn, specs)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(model.manifest_lines()) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

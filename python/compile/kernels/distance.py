@@ -1,0 +1,200 @@
+"""L1 — Pallas distance kernels for the GMM / coreset hot path.
+
+The paper's hot spot is the O(n*tau) distance evaluation inside the GMM
+(Gonzalez) clustering and the streaming assignment loop: every point of the
+input must repeatedly be compared against the current set of centers.  This
+module implements that hot spot as tiled Pallas kernels:
+
+  * ``gmm_assign``  — for a block of points, distance to every center, plus
+    min/argmin reduction (used for initial assignment and for the streaming
+    restructure step).
+  * ``gmm_update``  — incremental GMM iteration: distance of every point to
+    ONE new center, folded into the running (min-dist, argmin) state.  This
+    is the O(n)-per-iteration inner loop of Algorithm 1 (SeqCoreset).
+  * ``pairwise``    — a full distance tile between two point blocks (used to
+    precompute coreset distance matrices for the local-search / exhaustive
+    final step).
+
+TPU adaptation (see DESIGN.md §5): points are streamed HBM->VMEM in
+``TP x D`` tiles via the BlockSpec grid, the center tile (``TC x D``) stays
+VMEM-resident, and the inner product runs as an MXU-shaped ``x @ c.T``
+matmul with ``preferred_element_type=float32``.  Kernels MUST be lowered
+with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the Rust runtime
+(xla crate) executes directly.
+
+Padding protocol (the Rust caller relies on this):
+  * the feature dimension is zero-padded up to ``D`` — this changes neither
+    Euclidean nor cosine distances;
+  * centers beyond ``n_centers`` (a (1,1) int32 operand) are masked with
+    ``HUGE`` so they never win the min/argmin;
+  * point rows beyond the true count produce garbage rows that the caller
+    simply ignores.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# ---- Tile geometry (keep in sync with rust/src/runtime/shapes.rs) ----
+#
+# TP is a target-dependent tuning knob (EXPERIMENTS.md §Perf): the Pallas
+# grid loop costs ~0.18 ms of dispatch per tile under interpret-mode XLA
+# CPU (measured: TP=256 -> 5.8 ms/call, 2048 -> 1.0 ms, 8192 -> 0.2 ms),
+# so CPU-validation builds use one full-size tile (grid = 1).  The tile
+# still fits a real TPU's VMEM (8192x64x4B = 2 MiB points + 64 KiB centers
+# out of ~16 MiB); a double-buffered TPU build would drop back to TP=256
+# (64 KiB/tile) purely by changing this constant and re-running
+# `make artifacts` — the BlockSpec schedule is unchanged.
+TP = 8192      # points per tile (grid dimension walks these)
+TC = 256        # centers per call (VMEM-resident tile)
+NP = 8192       # points per AOT executable call (grid = NP // TP)
+DIMS = (32, 64)  # supported padded feature dims (one artifact set each)
+
+HUGE = 1.0e30   # sentinel distance for masked centers
+EPS = 1.0e-12   # norm guard for the cosine metric
+
+METRICS = ("euclidean", "cosine")
+
+
+def dist_tile(x, c, metric):
+    """Distance block between ``x`` (P x D) and ``c`` (C x D) -> (P x C).
+
+    ``euclidean`` is the L2 distance computed via the expanded form
+    ``|x|^2 + |c|^2 - 2 x.c`` so the inner product maps onto the MXU.
+    ``cosine`` is the *metric* cosine distance of the paper (angular
+    distance): ``arccos(cos_sim) / pi`` in [0, 1].
+    """
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    if metric == "euclidean":
+        xx = jnp.sum(x * x, axis=1, keepdims=True)
+        cc = jnp.sum(c * c, axis=1, keepdims=True).T
+        d2 = jnp.maximum(xx + cc - 2.0 * xc, 0.0)
+        return jnp.sqrt(d2)
+    elif metric == "cosine":
+        xn = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+        cn = jnp.sqrt(jnp.sum(c * c, axis=1, keepdims=True)).T
+        sim = xc / jnp.maximum(xn * cn, EPS)
+        sim = jnp.clip(sim, -1.0, 1.0)
+        return jnp.arccos(sim) * (1.0 / jnp.pi)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+# --------------------------------------------------------------------------
+# gmm_assign: points vs. the full (masked) center tile, min + argmin.
+# --------------------------------------------------------------------------
+
+def _gmm_assign_kernel(metric, x_ref, c_ref, nc_ref, dmin_ref, amin_ref):
+    x = x_ref[...]
+    c = c_ref[...]
+    nc = nc_ref[0, 0]
+    d = dist_tile(x, c, metric)
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(col < nc, d, HUGE)
+    dmin_ref[...] = jnp.min(d, axis=1)
+    amin_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def gmm_assign(points, centers, n_centers, *, metric="euclidean"):
+    """(NP x D, TC x D, (1,1) i32) -> (NP f32 min-dist, NP i32 argmin)."""
+    np_, d = points.shape
+    assert np_ % TP == 0, (np_, TP)
+    assert centers.shape == (TC, d), centers.shape
+    grid = (np_ // TP,)
+    return pl.pallas_call(
+        functools.partial(_gmm_assign_kernel, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TP, d), lambda i: (i, 0)),
+            pl.BlockSpec((TC, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TP,), lambda i: (i,)),
+            pl.BlockSpec((TP,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        interpret=True,
+    )(points, centers, n_centers)
+
+
+# --------------------------------------------------------------------------
+# gmm_update: incremental fold of ONE new center into (min-dist, argmin).
+# --------------------------------------------------------------------------
+
+def _gmm_update_kernel(metric, x_ref, c_ref, dmin_ref, amin_ref, idx_ref,
+                       odmin_ref, oamin_ref):
+    x = x_ref[...]
+    c = c_ref[...]                      # (1, D): the newly selected center
+    d = dist_tile(x, c, metric)[:, 0]   # (TP,)
+    cur_d = dmin_ref[...]
+    cur_a = amin_ref[...]
+    better = d < cur_d
+    odmin_ref[...] = jnp.where(better, d, cur_d)
+    oamin_ref[...] = jnp.where(better, idx_ref[0, 0], cur_a)
+
+
+def gmm_update(points, center, dmin, amin, new_index, *, metric="euclidean"):
+    """Fold one new center into the running GMM assignment state.
+
+    points (NP x D), center (1 x D), dmin (NP,), amin (NP,) i32,
+    new_index (1,1) i32 -> updated (dmin, amin).
+    """
+    np_, d = points.shape
+    assert np_ % TP == 0
+    assert center.shape == (1, d)
+    grid = (np_ // TP,)
+    return pl.pallas_call(
+        functools.partial(_gmm_update_kernel, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TP, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((TP,), lambda i: (i,)),
+            pl.BlockSpec((TP,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TP,), lambda i: (i,)),
+            pl.BlockSpec((TP,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        interpret=True,
+    )(points, center, dmin, amin, new_index)
+
+
+# --------------------------------------------------------------------------
+# pairwise: one full distance tile between two blocks.
+# --------------------------------------------------------------------------
+
+def _pairwise_kernel(metric, a_ref, b_ref, out_ref):
+    out_ref[...] = dist_tile(a_ref[...], b_ref[...], metric)
+
+
+def pairwise(a, b, *, metric="euclidean"):
+    """(NA x D, TC x D) -> NA x TC distance matrix (grid over rows of a)."""
+    na, d = a.shape
+    assert na % TP == 0
+    assert b.shape == (TC, d)
+    grid = (na // TP,)
+    return pl.pallas_call(
+        functools.partial(_pairwise_kernel, metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TP, d), lambda i: (i, 0)),
+            pl.BlockSpec((TC, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TP, TC), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((na, TC), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,97 @@
+"""L2 — the JAX compute graph that gets AOT-lowered for the Rust runtime.
+
+The DMMC paper has no neural model; its "model" is the distance geometry
+that the coreset constructions consume.  This module defines the AOT entry
+points — fixed-shape jitted functions that call the L1 Pallas kernels — and
+their example-argument specs.  ``aot.py`` lowers each entry to HLO text; the
+Rust runtime (rust/src/runtime/) loads one executable per entry.
+
+Entry naming convention (mirrored by rust/src/runtime/shapes.rs):
+
+    <kernel>_<metric>_d<D>            e.g. gmm_update_cosine_d32
+
+with the tile geometry of ``kernels/distance.py`` (NP points per call, TC
+centers per call, feature dim padded to D in {32, 64}).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance as K
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def entry_gmm_assign(metric, d):
+    def fn(points, centers, n_centers):
+        dmin, amin = K.gmm_assign(points, centers, n_centers, metric=metric)
+        return (dmin, amin)
+
+    specs = (
+        jax.ShapeDtypeStruct((K.NP, d), F32),
+        jax.ShapeDtypeStruct((K.TC, d), F32),
+        jax.ShapeDtypeStruct((1, 1), I32),
+    )
+    return fn, specs
+
+
+def entry_gmm_update(metric, d):
+    def fn(points, center, dmin, amin, new_index):
+        ndmin, namin = K.gmm_update(points, center, dmin, amin, new_index,
+                                    metric=metric)
+        return (ndmin, namin)
+
+    specs = (
+        jax.ShapeDtypeStruct((K.NP, d), F32),
+        jax.ShapeDtypeStruct((1, d), F32),
+        jax.ShapeDtypeStruct((K.NP,), F32),
+        jax.ShapeDtypeStruct((K.NP,), I32),
+        jax.ShapeDtypeStruct((1, 1), I32),
+    )
+    return fn, specs
+
+
+def entry_pairwise(metric, d):
+    def fn(a, b):
+        return (K.pairwise(a, b, metric=metric),)
+
+    specs = (
+        jax.ShapeDtypeStruct((K.NP, d), F32),
+        jax.ShapeDtypeStruct((K.TC, d), F32),
+    )
+    return fn, specs
+
+
+_BUILDERS = {
+    "gmm_assign": entry_gmm_assign,
+    "gmm_update": entry_gmm_update,
+    "pairwise": entry_pairwise,
+}
+
+
+def aot_entries():
+    """name -> (fn, example_specs) for every artifact we ship."""
+    entries = {}
+    for kernel, builder in _BUILDERS.items():
+        for metric in K.METRICS:
+            for d in K.DIMS:
+                name = f"{kernel}_{metric}_d{d}"
+                entries[name] = builder(metric, d)
+    return entries
+
+
+def manifest_lines():
+    """Human/Rust-readable manifest describing the artifact geometry."""
+    lines = [
+        f"np={K.NP}",
+        f"tp={K.TP}",
+        f"tc={K.TC}",
+        f"dims={','.join(str(d) for d in K.DIMS)}",
+        f"metrics={','.join(K.METRICS)}",
+    ]
+    for name in sorted(aot_entries()):
+        lines.append(f"entry={name}")
+    return lines

@@ -1,0 +1,55 @@
+"""AOT pipeline: HLO-text artifacts are produced and parseable."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+ENTRY = "gmm_update_euclidean_d32"
+
+
+@pytest.fixture(scope="module")
+def hlo_text():
+    fn, specs = model.aot_entries()[ENTRY]
+    return aot.lower_entry(ENTRY, fn, specs)
+
+
+def test_hlo_text_has_entry_computation(hlo_text):
+    assert "ENTRY" in hlo_text
+    assert "HloModule" in hlo_text
+
+
+def test_hlo_text_shapes_match_manifest(hlo_text):
+    # the entry signature must mention the fixed tile geometry
+    from compile.kernels import distance as K
+    assert f"f32[{K.NP},32]" in hlo_text.replace(" ", "")
+
+
+def test_hlo_is_text_not_proto(hlo_text):
+    # serialized protos are binary; text must be ascii-decodable
+    hlo_text.encode("ascii")
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    cmd = [sys.executable, "-m", "compile.aot", "--out", str(out),
+           "--only", ENTRY]
+    env = dict(os.environ)
+    subprocess.run(cmd, check=True, cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), env=env)
+    files = sorted(p.name for p in out.iterdir())
+    assert f"{ENTRY}.hlo.txt" in files
+    assert "manifest.txt" in files
+    text = (out / f"{ENTRY}.hlo.txt").read_text()
+    assert "ENTRY" in text
+
+
+def test_aot_rejects_unknown_entry(tmp_path):
+    cmd = [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+           "--only", "nope_not_real"]
+    proc = subprocess.run(cmd, capture_output=True, cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode != 0

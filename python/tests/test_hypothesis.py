@@ -1,0 +1,84 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/value space."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import distance as K
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _points(seed, n, d, scale):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(size=(n, d)) * scale, dtype=jnp.float32)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 3),
+    d=st.sampled_from(K.DIMS),
+    nc=st.integers(1, K.TC),
+    metric=st.sampled_from(K.METRICS),
+    scale=st.floats(1e-2, 1e2),
+)
+@settings(**SETTINGS)
+def test_gmm_assign_fuzz(seed, tiles, d, nc, metric, scale):
+    pts = _points(seed, tiles * K.TP, d, scale)
+    ctr = _points(seed + 1, K.TC, d, scale)
+    dmin, amin = K.gmm_assign(pts, ctr, jnp.array([[nc]], jnp.int32),
+                              metric=metric)
+    rd, ra = ref.gmm_assign(pts, ctr, nc, metric)
+    assert_allclose(np.asarray(dmin), np.asarray(rd), rtol=1e-4, atol=1e-4)
+    # argmin may legitimately differ on exact ties; check distances agree
+    d_full = np.asarray(ref.dist_matrix(pts, ctr, metric))
+    picked = d_full[np.arange(len(pts)), np.asarray(amin)]
+    assert_allclose(picked, np.asarray(rd), rtol=1e-4, atol=1e-4)
+    assert (np.asarray(amin) < nc).all()
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.sampled_from(K.DIMS),
+    metric=st.sampled_from(K.METRICS),
+    steps=st.integers(1, 12),
+)
+@settings(**SETTINGS)
+def test_gmm_incremental_consistency_fuzz(seed, d, metric, steps):
+    """Incremental gmm_update chain == one-shot gmm_assign (distances)."""
+    pts = _points(seed, K.TP, d, 1.0)
+    ctr = _points(seed + 2, K.TC, d, 1.0)
+    dmin, amin = K.gmm_assign(pts, ctr, jnp.array([[1]], jnp.int32),
+                              metric=metric)
+    for j in range(1, steps + 1):
+        dmin, amin = K.gmm_update(pts, ctr[j:j + 1], dmin, amin,
+                                  jnp.array([[j]], jnp.int32), metric=metric)
+    fd, _ = K.gmm_assign(pts, ctr, jnp.array([[steps + 1]], jnp.int32),
+                         metric=metric)
+    assert_allclose(np.asarray(dmin), np.asarray(fd), rtol=1e-4, atol=1e-5)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.sampled_from(K.DIMS),
+    metric=st.sampled_from(K.METRICS),
+)
+@settings(**SETTINGS)
+def test_triangle_inequality_fuzz(seed, d, metric):
+    """Both metrics must satisfy the triangle inequality (the paper's proofs
+    depend on it) — checked on kernel outputs."""
+    pts = _points(seed, K.TP, d, 1.0)
+    ctr = _points(seed + 3, K.TC, d, 1.0)
+    dm = np.asarray(K.pairwise(pts, ctr, metric=metric))
+    # triangle through the first 16x16x16 triple block via the oracle
+    a, b, c = pts[:16], ctr[:16], pts[16:32]
+    dab = np.asarray(ref.dist_matrix(a, b, metric))
+    dbc = np.asarray(ref.dist_matrix(b, c, metric)) if metric else None
+    dac = np.asarray(ref.dist_matrix(a, c, metric))
+    for i in range(16):
+        for j in range(16):
+            for k in range(16):
+                assert dac[i, k] <= dab[i, j] + dbc[j, k] + 1e-4
+    assert (dm >= -1e-6).all()

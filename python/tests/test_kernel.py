@@ -1,0 +1,174 @@
+"""Pallas kernels vs. the pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import distance as K
+from compile.kernels import ref
+
+METRICS = list(K.METRICS)
+DIMS = list(K.DIMS)
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def rand_points(r, n, d, scale=1.0):
+    return jnp.asarray(r.normal(size=(n, d)) * scale, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("d", DIMS)
+def test_gmm_assign_matches_ref(metric, d):
+    r = rng(42)
+    pts = rand_points(r, 2 * K.TP, d)
+    ctr = rand_points(r, K.TC, d)
+    nc = jnp.array([[37]], dtype=jnp.int32)
+    dmin, amin = K.gmm_assign(pts, ctr, nc, metric=metric)
+    rdmin, ramin = ref.gmm_assign(pts, ctr, 37, metric)
+    assert_allclose(np.asarray(dmin), np.asarray(rdmin), rtol=1e-5, atol=1e-5)
+    # argmin may differ on near-ties (expanded vs exact distance form):
+    # require the picked center to achieve the reference min-distance
+    d_full = np.asarray(ref.dist_matrix(pts, ctr, metric))
+    picked = d_full[np.arange(len(pts)), np.asarray(amin)]
+    assert_allclose(picked, np.asarray(rdmin), rtol=1e-4, atol=1e-4)
+    assert (np.asarray(amin) < 37).all()
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_gmm_assign_masks_padded_centers(metric):
+    """Sentinel-masked centers must never win argmin, even if they are at
+    distance zero from a point."""
+    r = rng(1)
+    d = DIMS[0]
+    pts = rand_points(r, K.TP, d)
+    ctr = rand_points(r, K.TC, d)
+    # center 5 (beyond mask nc=3) is an exact copy of point 0
+    ctr = ctr.at[5].set(pts[0])
+    nc = jnp.array([[3]], dtype=jnp.int32)
+    _, amin = K.gmm_assign(pts, ctr, nc, metric=metric)
+    assert int(amin[0]) < 3
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("d", DIMS)
+def test_gmm_update_matches_ref(metric, d):
+    r = rng(7)
+    pts = rand_points(r, K.TP, d)
+    ctr0 = rand_points(r, K.TC, d)
+    nc = jnp.array([[10]], dtype=jnp.int32)
+    dmin, amin = K.gmm_assign(pts, ctr0, nc, metric=metric)
+    newc = rand_points(r, 1, d)
+    idx = jnp.array([[10]], dtype=jnp.int32)
+    ndmin, namin = K.gmm_update(pts, newc, dmin, amin, idx, metric=metric)
+    rdmin, ramin = ref.gmm_update(np.asarray(pts), np.asarray(newc)[0],
+                                  np.asarray(dmin), np.asarray(amin), 10,
+                                  metric)
+    assert_allclose(np.asarray(ndmin), np.asarray(rdmin), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(namin), np.asarray(ramin))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_gmm_update_equals_full_assign(metric):
+    """Folding centers one at a time must equal one shot against all of them."""
+    r = rng(3)
+    d = DIMS[0]
+    pts = rand_points(r, K.TP, d)
+    ctr = rand_points(r, K.TC, d)
+    nc1 = jnp.array([[1]], dtype=jnp.int32)
+    dmin, amin = K.gmm_assign(pts, ctr, nc1, metric=metric)
+    for j in range(1, 8):
+        idx = jnp.array([[j]], dtype=jnp.int32)
+        dmin, amin = K.gmm_update(pts, ctr[j:j + 1], dmin, amin, idx,
+                                  metric=metric)
+    fdmin, famin = K.gmm_assign(pts, ctr, jnp.array([[8]], jnp.int32),
+                                metric=metric)
+    assert_allclose(np.asarray(dmin), np.asarray(fdmin), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(amin), np.asarray(famin))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("d", DIMS)
+def test_pairwise_matches_ref(metric, d):
+    r = rng(11)
+    a = rand_points(r, K.TP, d)
+    b = rand_points(r, K.TC, d)
+    out = K.pairwise(a, b, metric=metric)
+    expect = ref.dist_matrix(a, b, metric)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_zero_padding_in_feature_dim_is_neutral(metric):
+    """Zero-padding the feature dim (Rust protocol) must not change distances."""
+    r = rng(5)
+    raw = rand_points(r, K.TP, 25)
+    pad32 = jnp.pad(raw, ((0, 0), (0, 7)))
+    braw = rand_points(r, K.TC, 25)
+    bpad = jnp.pad(braw, ((0, 0), (0, 7)))
+    d_raw = ref.dist_matrix(raw, braw, metric)
+    d_pad = np.asarray(K.pairwise(pad32, bpad, metric=metric))
+    assert_allclose(d_pad, np.asarray(d_raw), rtol=1e-5, atol=1e-5)
+
+
+def test_pairwise_self_distance_near_zero_euclidean():
+    """Self-distance under the MXU-friendly expanded form |x|^2+|c|^2-2xc.
+
+    The expanded form trades exactness at d~0 for an MXU-shaped matmul:
+    cancellation leaves O(sqrt(eps_f32)*|x|) residue, so the tolerance here
+    is the formula's actual precision, not 0.  (GMM only consumes min-dists,
+    where this residue is harmless; the Rust scalar path uses the exact
+    difference form when distances near zero matter.)"""
+    r = rng(9)
+    a = rand_points(r, K.TP, DIMS[0])
+    b = jnp.zeros((K.TC, DIMS[0]), jnp.float32).at[: K.TP].set(a[: K.TC])
+    out = np.asarray(K.pairwise(a, b, metric="euclidean"))
+    diag = np.diag(out)[: min(K.TP, K.TC)]
+    scale = np.sqrt((np.asarray(a[: K.TC]) ** 2).sum(axis=1))
+    assert (diag <= 2e-3 * np.maximum(scale, 1.0) + 1e-4).all()
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_distances_nonnegative_and_symmetric(metric):
+    r = rng(13)
+    a = rand_points(r, K.TP, DIMS[0])
+    b = rand_points(r, K.TC, DIMS[0])
+    dab = np.asarray(K.pairwise(a, b, metric=metric))
+    assert (dab >= 0).all()
+    # symmetry via the oracle on the transposed call
+    dba = np.asarray(ref.dist_matrix(b, a, metric))
+    assert_allclose(dab, dba.T, rtol=1e-5, atol=1e-5)
+
+
+def test_cosine_zero_vector_guard():
+    """The EPS guard must keep cosine distances finite on zero vectors."""
+    a = jnp.zeros((K.TP, DIMS[0]), jnp.float32)
+    b = jnp.ones((K.TC, DIMS[0]), jnp.float32)
+    out = np.asarray(K.pairwise(a, b, metric="cosine"))
+    assert np.isfinite(out).all()
+
+
+def test_cosine_range():
+    r = rng(17)
+    a = rand_points(r, K.TP, DIMS[0])
+    b = rand_points(r, K.TC, DIMS[0])
+    out = np.asarray(K.pairwise(a, b, metric="cosine"))
+    assert (out >= 0).all() and (out <= 1.0 + 1e-6).all()
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_multi_tile_grid(metric):
+    """Kernels must behave identically across grid tiles (4-tile call)."""
+    r = rng(19)
+    d = DIMS[0]
+    pts = rand_points(r, 4 * K.TP, d)
+    ctr = rand_points(r, K.TC, d)
+    nc = jnp.array([[K.TC]], dtype=jnp.int32)
+    dmin, amin = K.gmm_assign(pts, ctr, nc, metric=metric)
+    rd, ra = ref.gmm_assign(pts, ctr, K.TC, metric)
+    assert_allclose(np.asarray(dmin), np.asarray(rd), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(amin), np.asarray(ra))

@@ -1,0 +1,53 @@
+"""L2 entry points: shapes, dtypes, and lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import distance as K
+
+
+def test_all_entries_enumerated():
+    entries = model.aot_entries()
+    # 3 kernels x 2 metrics x |DIMS| dims
+    assert len(entries) == 3 * len(K.METRICS) * len(K.DIMS)
+    for name in entries:
+        kernel, metric, dtag = name.rsplit("_", 2)
+        assert kernel in ("gmm_assign", "gmm_update", "pairwise")
+        assert metric in K.METRICS
+        assert int(dtag[1:]) in K.DIMS
+
+
+@pytest.mark.parametrize("name", sorted(model.aot_entries()))
+def test_entry_executes_with_example_specs(name):
+    fn, specs = model.aot_entries()[name]
+    args = []
+    r = np.random.default_rng(0)
+    for s in specs:
+        if s.dtype == jnp.int32:
+            args.append(jnp.ones(s.shape, jnp.int32))
+        else:
+            args.append(jnp.asarray(r.normal(size=s.shape), jnp.float32))
+    out = fn(*args)
+    assert isinstance(out, tuple)
+    for o in out:
+        assert np.isfinite(np.asarray(o)).any()
+
+
+def test_manifest_mentions_every_entry():
+    lines = model.manifest_lines()
+    names = {l.split("=", 1)[1] for l in lines if l.startswith("entry=")}
+    assert names == set(model.aot_entries())
+    assert f"np={K.NP}" in lines
+    assert f"tc={K.TC}" in lines
+
+
+@pytest.mark.parametrize("name", ["gmm_update_euclidean_d32",
+                                  "pairwise_cosine_d64"])
+def test_entry_lowers_to_stablehlo(name):
+    fn, specs = model.aot_entries()[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert "stablehlo" in text or "func.func" in text

@@ -1,0 +1,81 @@
+//! Ablation: how tight are the O(k tau) / O(k^2 tau) coreset-size bounds
+//! (Theorems 1-2) in practice?  The paper remarks (§3.1.2) that the k^2
+//! bound is "a rather conservative worst-case estimate" — this bench
+//! quantifies that across matroid types, tau and k, for both the
+//! sequential and streaming constructions.
+
+use matroid_coreset::algo::seq_coreset::seq_coreset;
+use matroid_coreset::algo::stream_coreset::stream_coreset_tau;
+use matroid_coreset::algo::Budget;
+use matroid_coreset::bench::scenarios::bench_seed;
+use matroid_coreset::bench::{bench_header, Table};
+use matroid_coreset::csv_row;
+use matroid_coreset::data::synth;
+use matroid_coreset::matroid::{Matroid, TransversalMatroid};
+use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let seed = bench_seed();
+    bench_header(
+        "ablation_coreset_size",
+        "Coreset size vs the Theorem 1/2 bounds (k*tau and k^2*tau), seq + stream",
+    );
+    let mut csv = CsvWriter::create(
+        "bench_results/ablation_size.csv",
+        &["matroid", "construction", "tau", "k", "size", "bound", "fill"],
+    )?;
+    let n = 30_000;
+    let engine = ScalarEngine::new();
+
+    let wiki = synth::wikisim(n, seed);
+    let trans = TransversalMatroid::new();
+    let songs = synth::songsim(n, seed);
+    let part = synth::songsim_matroid(&songs, 89);
+
+    let mut table = Table::new(&["matroid", "construction", "tau", "k", "|T|", "bound", "fill%"]);
+    for tau in [16usize, 64] {
+        for k in [5usize, 25] {
+            // partition: bound k*tau
+            let cs = seq_coreset(&songs, &part, k, Budget::Clusters(tau), &engine)?;
+            let bound = k * tau;
+            table.row(csv_row![
+                "partition", "seq", tau, k, cs.len(), bound,
+                format!("{:.1}", 100.0 * cs.len() as f64 / bound as f64)
+            ]);
+            csv.row(&csv_row!["partition", "seq", tau, k, cs.len(), bound,
+                cs.len() as f64 / bound as f64])?;
+
+            let (scs, _) = stream_coreset_tau(&songs, &part, k, tau, &(0..songs.n()).collect::<Vec<_>>());
+            table.row(csv_row![
+                "partition", "stream", tau, k, scs.len(), bound,
+                format!("{:.1}", 100.0 * scs.len() as f64 / bound as f64)
+            ]);
+            csv.row(&csv_row!["partition", "stream", tau, k, scs.len(), bound,
+                scs.len() as f64 / bound as f64])?;
+
+            // transversal: bound gamma * k^2 * tau (gamma = 4 max topics/pt)
+            let cs = seq_coreset(&wiki, &trans, k, Budget::Clusters(tau), &engine)?;
+            let bound = 4 * k * k * tau;
+            table.row(csv_row![
+                "transversal", "seq", tau, k, cs.len(), bound,
+                format!("{:.1}", 100.0 * cs.len() as f64 / bound as f64)
+            ]);
+            csv.row(&csv_row!["transversal", "seq", tau, k, cs.len(), bound,
+                cs.len() as f64 / bound as f64])?;
+
+            let (scs, _) = stream_coreset_tau(&wiki, &trans, k, tau, &(0..wiki.n()).collect::<Vec<_>>());
+            table.row(csv_row![
+                "transversal", "stream", tau, k, scs.len(), bound,
+                format!("{:.1}", 100.0 * scs.len() as f64 / bound as f64)
+            ]);
+            csv.row(&csv_row!["transversal", "stream", tau, k, scs.len(), bound,
+                scs.len() as f64 / bound as f64])?;
+        }
+    }
+    table.print();
+    println!("\nfill% << 100 confirms the paper's remark that the worst-case bounds are loose.");
+    csv.flush()?;
+    println!("CSV -> bench_results/ablation_size.csv");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Ablation: PJRT/Pallas distance engine vs the scalar Rust path inside
+//! GMM — the L1<->L3 boundary of the three-layer architecture.  Measures
+//! the GMM hot loop (update_min folds) across n, dim and metric, and
+//! verifies both engines select the same clustering radius.
+
+use matroid_coreset::algo::gmm::{gmm, GmmStop};
+use matroid_coreset::bench::scenarios::bench_seed;
+use matroid_coreset::bench::{bench_header, time_once, Table};
+use matroid_coreset::core::{Dataset, Metric};
+use matroid_coreset::csv_row;
+use matroid_coreset::runtime::{default_artifact_dir, Manifest, PjrtEngine, ScalarEngine};
+use matroid_coreset::util::csv::CsvWriter;
+use matroid_coreset::util::rng::Rng;
+
+fn dataset(metric: Metric, n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let coords: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    Dataset::new(dim, metric, coords, vec![vec![0]; n], 1, "bench")
+}
+
+fn main() -> anyhow::Result<()> {
+    let seed = bench_seed();
+    bench_header(
+        "ablation_distance_engine",
+        "GMM hot path: scalar Rust vs PJRT(Pallas AOT) engine (tau=64 folds)",
+    );
+    let manifest = match Manifest::load(default_artifact_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP: {e:#} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    let mut csv = CsvWriter::create(
+        "bench_results/ablation_engine.csv",
+        &["metric", "n", "dim", "engine", "gmm_s", "radius"],
+    )?;
+    let tau = 64;
+    let mut table = Table::new(&["metric", "n", "dim", "scalar_s", "pjrt_s", "speedup", "radius_agree"]);
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        for (n, dim) in [(20_000usize, 25usize), (50_000, 25), (50_000, 48), (100_000, 25)] {
+            let ds = dataset(metric, n, dim, seed);
+            let scalar = ScalarEngine::new();
+            let (c_s, t_s) = time_once(|| gmm(&ds, &scalar, 0, GmmStop::Clusters(tau)).unwrap());
+            let pjrt = PjrtEngine::for_dataset(&manifest, &ds)?;
+            let (c_p, t_p) = time_once(|| gmm(&ds, &pjrt, 0, GmmStop::Clusters(tau)).unwrap());
+            let agree = (c_s.radius - c_p.radius).abs() < 2e-3 * c_s.radius.max(1e-9);
+            table.row(csv_row![
+                metric.name(), n, dim,
+                format!("{t_s:.3}"), format!("{t_p:.3}"),
+                format!("{:.2}x", t_s / t_p),
+                agree
+            ]);
+            csv.row(&csv_row![metric.name(), n, dim, "scalar", t_s, c_s.radius])?;
+            csv.row(&csv_row![metric.name(), n, dim, "pjrt", t_p, c_p.radius])?;
+        }
+    }
+    table.print();
+    csv.flush()?;
+    println!("\nCSV -> bench_results/ablation_engine.csv");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Theorem 4 empirically: on a dataset of doubling dimension D, the
+//! optimal tau-clustering radius obeys r*_tau <= 2*Delta / tau^(1/D) —
+//! i.e. log(radius) falls with slope ~ -1/D in log(tau).  GMM (a
+//! 2-approximation) must track that envelope, which is exactly what makes
+//! the coreset sizes of §3.2 independent of n.  We fit the slope on
+//! uniform cubes of dimension 1..4 and report it against -1/D.
+
+use matroid_coreset::algo::gmm::{gmm, GmmStop};
+use matroid_coreset::bench::scenarios::bench_seed;
+use matroid_coreset::bench::{bench_header, Table};
+use matroid_coreset::csv_row;
+use matroid_coreset::data::synth;
+use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let seed = bench_seed();
+    bench_header(
+        "doubling_dim",
+        "Theorem 4: GMM radius vs tau on cubes of doubling dimension D (slope ~ -1/D)",
+    );
+    let mut csv = CsvWriter::create(
+        "bench_results/doubling_dim.csv",
+        &["dim", "tau", "radius"],
+    )?;
+    let n = 20_000;
+    let taus = [4usize, 8, 16, 32, 64, 128, 256];
+    let mut table = Table::new(&["D", "fitted slope", "theory (-1/D)", "radii tau=4..256"]);
+    for dim in 1..=4usize {
+        let ds = synth::uniform_cube(n, dim, seed);
+        let mut logs: Vec<(f64, f64)> = Vec::new();
+        let mut radii = Vec::new();
+        for &tau in &taus {
+            let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(tau)).unwrap();
+            logs.push(((tau as f64).ln(), c.radius.max(1e-12).ln()));
+            radii.push(format!("{:.3}", c.radius));
+            csv.row(&csv_row![dim, tau, c.radius])?;
+        }
+        // least-squares slope of log radius vs log tau
+        let mx = logs.iter().map(|p| p.0).sum::<f64>() / logs.len() as f64;
+        let my = logs.iter().map(|p| p.1).sum::<f64>() / logs.len() as f64;
+        let slope = logs.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum::<f64>()
+            / logs.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum::<f64>();
+        table.row(csv_row![
+            dim,
+            format!("{slope:.3}"),
+            format!("{:.3}", -1.0 / dim as f64),
+            radii.join(" ")
+        ]);
+        // the fitted decay must be within a band of the theory slope
+        let theory = -1.0 / dim as f64;
+        assert!(
+            (slope - theory).abs() < 0.45 * theory.abs() + 0.05,
+            "dim {dim}: slope {slope} far from theory {theory}"
+        );
+    }
+    table.print();
+    csv.flush()?;
+    println!("\nCSV -> bench_results/doubling_dim.csv");
+    Ok(())
+}

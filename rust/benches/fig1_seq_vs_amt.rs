@@ -1,0 +1,99 @@
+//! Figure 1 — sequential setting: AMT vs SeqCoreset, time vs diversity
+//! (top row) and the SeqCoreset runtime breakdown (bottom row).
+//!
+//! Protocol (paper §5.1): 5,000-element random samples of each dataset,
+//! k in {rank/4, rank}; SeqCoreset with tau in {8,16,32,64,128,256}
+//! finished by local search with gamma = 0; AMT with a gamma sweep
+//! (we report the gamma = 0 "best quality" and gamma = 0.4 "fast" rows —
+//! the paper likewise reports two representative AMT runs).
+//!
+//! Expected shape: SeqCoreset reaches AMT-level diversity 1-2 orders of
+//! magnitude faster; larger tau -> higher diversity, more time; coreset
+//! construction does not dominate at 5k.
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::algo::seq_coreset::seq_coreset;
+use matroid_coreset::algo::Budget;
+use matroid_coreset::bench::scenarios::{amt_baseline, bench_seed, testbeds};
+use matroid_coreset::bench::{bench_header, time_once, Table};
+use matroid_coreset::csv_row;
+use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::util::csv::CsvWriter;
+use matroid_coreset::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let seed = bench_seed();
+    bench_header(
+        "fig1_seq_vs_amt",
+        "Paper Fig. 1: time vs diversity, AMT vs SeqCoreset (5k samples, k in {rank/4, rank})",
+    );
+    let mut csv = CsvWriter::create(
+        "bench_results/fig1.csv",
+        &["dataset", "k", "algo", "param", "diversity", "coreset_s", "search_s", "total_s", "coreset_size"],
+    )?;
+
+    for bed in testbeds(5_000, seed) {
+        for k in [bed.rank / 4, bed.rank] {
+            let k = k.max(2);
+            let mut table = Table::new(&[
+                "algo", "param", "diversity", "coreset_s", "search_s", "total_s", "|T|",
+            ]);
+            // --- AMT rows (full 5k input) ---
+            let cands: Vec<usize> = (0..bed.ds.n()).collect();
+            for gamma in [0.0, 0.4] {
+                let (res, secs) =
+                    time_once(|| amt_baseline(&bed.ds, &bed.matroid, k, &cands, gamma, seed));
+                table.row(csv_row![
+                    "AMT",
+                    format!("g={gamma}"),
+                    format!("{:.3}", res.diversity),
+                    "-",
+                    format!("{secs:.3}"),
+                    format!("{secs:.3}"),
+                    bed.ds.n()
+                ]);
+                csv.row(&csv_row![
+                    bed.name, k, "amt", gamma, res.diversity, 0.0, secs, secs, bed.ds.n()
+                ])?;
+            }
+            // --- SeqCoreset rows ---
+            for tau in [8usize, 16, 32, 64, 128, 256] {
+                let engine = ScalarEngine::new();
+                let (cs, cs_secs) = time_once(|| {
+                    seq_coreset(&bed.ds, &bed.matroid, k, Budget::Clusters(tau), &engine).unwrap()
+                });
+                let mut rng = Rng::new(seed);
+                let (res, ls_secs) = time_once(|| {
+                    local_search_sum(
+                        &bed.ds,
+                        &bed.matroid,
+                        k,
+                        &cs.indices,
+                        LocalSearchParams::default(),
+                        None,
+                        &mut rng,
+                    )
+                });
+                let total = cs_secs + ls_secs;
+                table.row(csv_row![
+                    "SeqCoreset",
+                    format!("tau={tau}"),
+                    format!("{:.3}", res.diversity),
+                    format!("{cs_secs:.3}"),
+                    format!("{ls_secs:.3}"),
+                    format!("{total:.3}"),
+                    cs.len()
+                ]);
+                csv.row(&csv_row![
+                    bed.name, k, "seqcoreset", tau, res.diversity, cs_secs, ls_secs, total,
+                    cs.len()
+                ])?;
+            }
+            println!("\n[{} k={k}]", bed.name);
+            table.print();
+        }
+    }
+    csv.flush()?;
+    println!("\nCSV -> bench_results/fig1.csv");
+    Ok(())
+}

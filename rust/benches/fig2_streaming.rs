@@ -1,0 +1,91 @@
+//! Figure 2 — streaming setting: running-time breakdown (left) and the
+//! diversity distribution across random stream orders (right) as the
+//! coreset size tau grows.
+//!
+//! Protocol (paper §5.2): full datasets, k = rank/4, tau in {8..256},
+//! >= DMMC_BENCH_RUNS random permutations per configuration; approximation
+//! ratios are reported w.r.t. the best solution ever found on the dataset.
+//!
+//! Expected shape: quality rises and concentrates with tau; time grows
+//! roughly linearly with tau.
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::bench::scenarios::{bench_n, bench_runs, bench_seed, testbeds};
+use matroid_coreset::bench::{bench_header, time_once, Table};
+use matroid_coreset::csv_row;
+use matroid_coreset::streaming::{run_stream, StreamMode};
+use matroid_coreset::util::csv::CsvWriter;
+use matroid_coreset::util::rng::Rng;
+use matroid_coreset::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n();
+    let runs = bench_runs();
+    let seed = bench_seed();
+    bench_header(
+        "fig2_streaming",
+        &format!("Paper Fig. 2: StreamCoreset tau sweep (n={n}, k=rank/4, {runs} permutations)"),
+    );
+    let mut csv = CsvWriter::create(
+        "bench_results/fig2.csv",
+        &["dataset", "tau", "run", "diversity", "stream_s", "search_s", "coreset_size", "peak_mem"],
+    )?;
+
+    for bed in testbeds(n, seed) {
+        let k = (bed.rank / 4).max(2);
+        let mut table = Table::new(&[
+            "tau", "stream_s(p50)", "search_s(p50)", "diversity distribution", "|T|(p50)", "ratio(p50)",
+        ]);
+        let mut best_ever: f64 = 0.0;
+        let mut rows: Vec<(usize, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> = Vec::new();
+        for tau in [8usize, 16, 32, 64, 128, 256] {
+            let mut rng = Rng::new(seed ^ tau as u64);
+            let (mut divs, mut st, mut se, mut sz) = (vec![], vec![], vec![], vec![]);
+            for run in 0..runs {
+                let order = rng.permutation(bed.ds.n());
+                let (rep, stream_s) =
+                    time_once(|| run_stream(&bed.ds, &bed.matroid, k, StreamMode::Tau(tau), &order));
+                let mut rng2 = Rng::new(seed + run as u64);
+                let (res, search_s) = time_once(|| {
+                    local_search_sum(
+                        &bed.ds,
+                        &bed.matroid,
+                        k,
+                        &rep.coreset.indices,
+                        LocalSearchParams::default(),
+                        None,
+                        &mut rng2,
+                    )
+                });
+                best_ever = best_ever.max(res.diversity);
+                divs.push(res.diversity);
+                st.push(stream_s);
+                se.push(search_s);
+                sz.push(rep.coreset.len() as f64);
+                csv.row(&csv_row![
+                    bed.name, tau, run, res.diversity, stream_s, search_s,
+                    rep.coreset.len(), rep.stats.peak_memory_points
+                ])?;
+            }
+            rows.push((tau, divs, st, se, sz));
+        }
+        for (tau, divs, st, se, sz) in rows {
+            let d = Summary::of(&divs);
+            let ratios: Vec<f64> = divs.iter().map(|v| v / best_ever).collect();
+            let r = Summary::of(&ratios);
+            table.row(csv_row![
+                tau,
+                format!("{:.3}", Summary::of(&st).p50),
+                format!("{:.3}", Summary::of(&se).p50),
+                format!("min {:.2} p25 {:.2} p50 {:.2} p75 {:.2} max {:.2}", d.min, d.p25, d.p50, d.p75, d.max),
+                format!("{:.0}", Summary::of(&sz).p50),
+                format!("{:.4}", r.p50)
+            ]);
+        }
+        println!("\n[{} k={k}] (ratio vs best-ever {best_ever:.3})", bed.name);
+        table.print();
+    }
+    csv.flush()?;
+    println!("\nCSV -> bench_results/fig2.csv");
+    Ok(())
+}

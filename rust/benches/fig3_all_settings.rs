@@ -1,0 +1,124 @@
+//! Figure 3 — all algorithms at tau = 64 on the full datasets: runtime
+//! breakdown (coreset construction vs local search) and solution quality,
+//! with MRCoreset at ell in {1, 2, 4, 8, 16} (ell = 1 == SeqCoreset) and
+//! StreamCoreset alongside.
+//!
+//! Expected shape: coreset construction dominates on full datasets; the
+//! MR construction scales with ell (superlinearly for the clustering part,
+//! as each worker computes tau/ell clusters on n/ell points); streaming is
+//! competitive with mid-ell MR in time with slightly lower quality.
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::algo::Budget;
+use matroid_coreset::bench::scenarios::{bench_n, bench_runs, bench_seed, testbeds};
+use matroid_coreset::bench::{bench_header, time_once, Table};
+use matroid_coreset::csv_row;
+use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
+use matroid_coreset::streaming::{run_stream, StreamMode};
+use matroid_coreset::util::csv::CsvWriter;
+use matroid_coreset::util::rng::Rng;
+use matroid_coreset::util::stats::Summary;
+
+const TAU: usize = 64;
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n();
+    let runs = bench_runs();
+    let seed = bench_seed();
+    bench_header(
+        "fig3_all_settings",
+        &format!("Paper Fig. 3: all settings, tau={TAU}, full datasets (n={n}), k=rank/4"),
+    );
+    let mut csv = CsvWriter::create(
+        "bench_results/fig3.csv",
+        &["dataset", "algo", "run", "diversity", "coreset_s", "search_s", "coreset_size"],
+    )?;
+
+    for bed in testbeds(n, seed) {
+        let k = (bed.rank / 4).max(2);
+        let mut table = Table::new(&[
+            "algo", "coreset_s(p50)", "search_s(p50)", "diversity p50 [min..max]", "|T|(p50)",
+        ]);
+        let mut emit = |name: &str,
+                        samples: Vec<(f64, f64, f64, usize)>,
+                        table: &mut Table,
+                        csv: &mut CsvWriter|
+         -> anyhow::Result<()> {
+            for (run, (div, cs_s, ls_s, size)) in samples.iter().enumerate() {
+                csv.row(&csv_row![bed.name, name, run, div, cs_s, ls_s, size])?;
+            }
+            let divs: Vec<f64> = samples.iter().map(|s| s.0).collect();
+            let d = Summary::of(&divs);
+            table.row(csv_row![
+                name,
+                format!("{:.3}", Summary::of(&samples.iter().map(|s| s.1).collect::<Vec<_>>()).p50),
+                format!("{:.3}", Summary::of(&samples.iter().map(|s| s.2).collect::<Vec<_>>()).p50),
+                format!("{:.3} [{:.3}..{:.3}]", d.p50, d.min, d.max),
+                format!("{:.0}", Summary::of(&samples.iter().map(|s| s.3 as f64).collect::<Vec<_>>()).p50)
+            ]);
+            Ok(())
+        };
+
+        // --- MRCoreset with ell = 1 (== SeqCoreset), 2, 4, 8, 16 ---
+        for ell in [1usize, 2, 4, 8, 16] {
+            let mut samples = Vec::new();
+            for run in 0..runs {
+                let cfg = MapReduceConfig {
+                    workers: ell,
+                    budget: Budget::Clusters((TAU / ell).max(1)),
+                    second_round_tau: None,
+                    seed: seed + run as u64,
+                };
+                let (rep, cs_s) = time_once(|| mr_coreset(&bed.ds, &bed.matroid, k, cfg).unwrap());
+                let mut rng = Rng::new(seed + run as u64);
+                let (res, ls_s) = time_once(|| {
+                    local_search_sum(
+                        &bed.ds,
+                        &bed.matroid,
+                        k,
+                        &rep.coreset.indices,
+                        LocalSearchParams::default(),
+                        None,
+                        &mut rng,
+                    )
+                });
+                samples.push((res.diversity, cs_s, ls_s, rep.coreset.len()));
+            }
+            let label = if ell == 1 {
+                "SeqCoreset(=MR ell=1)".to_string()
+            } else {
+                format!("MRCoreset ell={ell}")
+            };
+            emit(&label, samples, &mut table, &mut csv)?;
+        }
+
+        // --- StreamCoreset ---
+        let mut samples = Vec::new();
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        for run in 0..runs {
+            let order = rng.permutation(bed.ds.n());
+            let (rep, cs_s) =
+                time_once(|| run_stream(&bed.ds, &bed.matroid, k, StreamMode::Tau(TAU), &order));
+            let mut rng2 = Rng::new(seed + run as u64);
+            let (res, ls_s) = time_once(|| {
+                local_search_sum(
+                    &bed.ds,
+                    &bed.matroid,
+                    k,
+                    &rep.coreset.indices,
+                    LocalSearchParams::default(),
+                    None,
+                    &mut rng2,
+                )
+            });
+            samples.push((res.diversity, cs_s, ls_s, rep.coreset.len()));
+        }
+        emit("StreamCoreset", samples, &mut table, &mut csv)?;
+
+        println!("\n[{} k={k}]", bed.name);
+        table.print();
+    }
+    csv.flush()?;
+    println!("\nCSV -> bench_results/fig3.csv");
+    Ok(())
+}

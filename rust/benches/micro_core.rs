@@ -1,0 +1,125 @@
+//! Microbenchmarks of the core primitives: distance kernels, matroid
+//! oracles, GMM folds, diversity evaluators, streaming push.  These are
+//! the profile-guided perf counters tracked in EXPERIMENTS.md §Perf.
+
+use matroid_coreset::algo::gmm::{gmm, GmmStop};
+use matroid_coreset::algo::stream_coreset::StreamCoreset;
+use matroid_coreset::bench::scenarios::bench_seed;
+use matroid_coreset::bench::{bench_header, bench_repeat, Table};
+use matroid_coreset::core::Metric;
+use matroid_coreset::csv_row;
+use matroid_coreset::data::synth;
+use matroid_coreset::diversity::{diversity, Objective};
+use matroid_coreset::matroid::{Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid};
+use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::util::csv::CsvWriter;
+use matroid_coreset::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let seed = bench_seed();
+    bench_header("micro_core", "core primitive microbenchmarks (p50 of 20 iters)");
+    let mut csv = CsvWriter::create(
+        "bench_results/micro.csv",
+        &["bench", "p50_us", "per_item_ns"],
+    )?;
+    let mut table = Table::new(&["bench", "p50", "per-item"]);
+    let mut emit = |name: &str, p50_s: f64, items: f64, table: &mut Table| {
+        table.row(csv_row![
+            name,
+            format!("{:.3}ms", p50_s * 1e3),
+            format!("{:.0}ns", p50_s / items * 1e9)
+        ]);
+        csv.row(&csv_row![name, p50_s * 1e6, p50_s / items * 1e9]).unwrap();
+    };
+
+    // distance evaluation
+    let mut rng = Rng::new(seed);
+    let a: Vec<f32> = (0..25).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..25).map(|_| rng.normal() as f32).collect();
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let s = bench_repeat(3, 20, || {
+            let mut acc = 0.0;
+            for _ in 0..100_000 {
+                acc += metric.dist(&a, &b);
+            }
+            acc
+        });
+        emit(&format!("dist/{}/d25 x100k", metric.name()), s.p50, 100_000.0, &mut table);
+    }
+
+    // GMM fold (update_min over 50k points)
+    let ds = synth::wikisim(50_000, seed);
+    let s = bench_repeat(1, 5, || {
+        gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(16)).unwrap()
+    });
+    emit("gmm/tau=16/n=50k", s.p50, (50_000 * 16) as f64, &mut table);
+
+    // matroid oracles
+    let part_ds = synth::songsim(10_000, seed);
+    let part = synth::songsim_matroid(&part_ds, 89);
+    let set: Vec<usize> = (0..22).collect();
+    let s = bench_repeat(3, 20, || {
+        let mut ok = true;
+        for _ in 0..10_000 {
+            ok &= part.is_independent(&part_ds, &set);
+        }
+        ok
+    });
+    emit("oracle/partition/k=22 x10k", s.p50, 10_000.0, &mut table);
+
+    let trans = TransversalMatroid::new();
+    let tset: Vec<usize> = (0..25).collect();
+    let s = bench_repeat(3, 20, || {
+        let mut ok = true;
+        for _ in 0..1_000 {
+            ok &= trans.is_independent(&ds, &tset);
+        }
+        ok
+    });
+    emit("oracle/transversal/k=25 x1k", s.p50, 1_000.0, &mut table);
+
+    // diversity evaluators at k=12
+    let sset: Vec<usize> = (0..12).collect();
+    for obj in [Objective::Sum, Objective::Star, Objective::Tree, Objective::Cycle, Objective::Bipartition] {
+        let s = bench_repeat(3, 20, || {
+            let mut acc = 0.0;
+            for _ in 0..100 {
+                acc += diversity(&ds, &sset, obj);
+            }
+            acc
+        });
+        emit(&format!("diversity/{}/k=12 x100", obj.name()), s.p50, 100.0, &mut table);
+    }
+
+    // streaming push throughput
+    let u = UniformMatroid::new(8);
+    let s = bench_repeat(1, 5, || {
+        let mut alg = StreamCoreset::with_tau(&ds, &u, 8, 64);
+        for i in 0..ds.n() {
+            alg.push(i);
+        }
+        alg.n_centers()
+    });
+    emit("stream/push/n=50k/tau=64", s.p50, ds.n() as f64, &mut table);
+
+    // partition extract path
+    let pm = PartitionMatroid::new(vec![2; 8]);
+    let cl = synth::clustered(20_000, 8, 16, 0.1, 8, seed);
+    let s = bench_repeat(1, 5, || {
+        matroid_coreset::algo::seq_coreset::seq_coreset(
+            &cl,
+            &pm,
+            8,
+            matroid_coreset::algo::Budget::Clusters(32),
+            &ScalarEngine::new(),
+        )
+        .unwrap()
+        .len()
+    });
+    emit("seq_coreset/n=20k/tau=32", s.p50, cl.n() as f64, &mut table);
+
+    table.print();
+    csv.flush()?;
+    println!("\nCSV -> bench_results/micro.csv");
+    Ok(())
+}

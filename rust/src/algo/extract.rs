@@ -1,0 +1,180 @@
+//! Per-cluster coreset EXTRACT procedures (paper §3.1 / Algorithm 1).
+//!
+//! Given one cluster `C` of a small-radius clustering, select the points
+//! that enter the coreset, by matroid kind:
+//!
+//! * **partition** (§3.1.1): a largest independent subset of size <= k —
+//!   coreset size O(k tau) (Theorem 1);
+//! * **transversal** (§3.1.2): a largest independent subset `U`, augmented
+//!   so that every category of a point of `U` has `min(k, |A inter C|)`
+//!   representatives — size O(k^2 tau) (Theorem 2);
+//! * **general** (§3.1.3): a size-k independent subset if one exists,
+//!   otherwise the whole cluster (Theorem 3).
+
+use std::collections::HashMap;
+
+use crate::core::Dataset;
+use crate::matroid::{maximal_independent, Matroid, MatroidKind};
+
+/// EXTRACT(C, k) of Algorithm 1, dispatching on the matroid kind.
+pub fn extract(ds: &Dataset, m: &dyn Matroid, cluster: &[usize], k: usize) -> Vec<usize> {
+    let u = maximal_independent(m, ds, cluster, k);
+    if u.len() == k || m.kind() == MatroidKind::Partition {
+        return u;
+    }
+    match m.kind() {
+        MatroidKind::Partition => unreachable!(),
+        MatroidKind::Transversal => augment_transversal(ds, cluster, u, k),
+        MatroidKind::General => cluster.to_vec(),
+    }
+}
+
+/// Transversal augmentation: ensure `min(k, |A inter C|)` points of every
+/// category `A` of a point of `U` (a point counts for all of its
+/// categories, matching the paper's remark).
+fn augment_transversal(
+    ds: &Dataset,
+    cluster: &[usize],
+    u: Vec<usize>,
+    k: usize,
+) -> Vec<usize> {
+    // categories of interest = categories of the points of U
+    let mut target: HashMap<u32, usize> = HashMap::new();
+    for &x in &u {
+        for &c in &ds.categories[x] {
+            target.insert(c, 0);
+        }
+    }
+    // |A inter C| for each category of interest
+    for &x in cluster {
+        for &c in &ds.categories[x] {
+            if let Some(t) = target.get_mut(&c) {
+                *t += 1;
+            }
+        }
+    }
+    for t in target.values_mut() {
+        *t = (*t).min(k);
+    }
+    // count current coverage from U, then greedily add cluster points that
+    // help an under-covered category
+    let mut have: HashMap<u32, usize> = target.keys().map(|&c| (c, 0)).collect();
+    let mut out = u.clone();
+    let in_u: std::collections::HashSet<usize> = u.iter().copied().collect();
+    for &x in &u {
+        for &c in &ds.categories[x] {
+            if let Some(h) = have.get_mut(&c) {
+                *h += 1;
+            }
+        }
+    }
+    for &x in cluster {
+        if in_u.contains(&x) {
+            continue;
+        }
+        let helps = ds.categories[x]
+            .iter()
+            .any(|c| match (have.get(c), target.get(c)) {
+                (Some(h), Some(t)) => h < t,
+                _ => false,
+            });
+        if helps {
+            out.push(x);
+            for &c in &ds.categories[x] {
+                if let Some(h) = have.get_mut(&c) {
+                    *h += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dataset, Metric};
+    use crate::matroid::{
+        GraphicMatroid, PartitionMatroid, TransversalMatroid, UniformMatroid,
+    };
+
+    fn ds(cats: Vec<Vec<u32>>, n_categories: u32) -> Dataset {
+        let n = cats.len();
+        Dataset::new(
+            1,
+            Metric::Euclidean,
+            (0..n).map(|i| i as f32).collect(),
+            cats,
+            n_categories,
+            "test",
+        )
+    }
+
+    #[test]
+    fn partition_extract_is_largest_independent() {
+        let d = ds(vec![vec![0], vec![0], vec![0], vec![1]], 2);
+        let m = PartitionMatroid::new(vec![2, 2]);
+        let out = extract(&d, &m, &[0, 1, 2, 3], 4);
+        // cap on category 0 limits to 2+1 = 3 points
+        assert_eq!(out.len(), 3);
+        assert!(m.is_independent(&d, &out));
+    }
+
+    #[test]
+    fn partition_extract_caps_at_k() {
+        let d = ds(vec![vec![0]; 10], 1);
+        let m = PartitionMatroid::new(vec![10]);
+        let out = extract(&d, &m, &(0..10).collect::<Vec<_>>(), 3);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn transversal_extract_covers_categories() {
+        // U will be smaller than k; categories of U must reach
+        // min(k, |A inter C|) coverage in the output.
+        // points: 0:{0}, 1:{0}, 2:{0}, 3:{1}, 4:{1}
+        let d = ds(vec![vec![0], vec![0], vec![0], vec![1], vec![1]], 2);
+        let m = TransversalMatroid::new();
+        let k = 3;
+        let out = extract(&d, &m, &[0, 1, 2, 3, 4], k);
+        // max independent subset has size 2 (<k) with categories {0,1};
+        // coverage targets: cat0 -> min(3,3)=3, cat1 -> min(3,2)=2
+        let count = |cat: u32| {
+            out.iter()
+                .filter(|&&x| d.categories[x].contains(&cat))
+                .count()
+        };
+        assert!(count(0) >= 3, "{out:?}");
+        assert!(count(1) >= 2, "{out:?}");
+    }
+
+    #[test]
+    fn transversal_extract_full_k_short_circuit() {
+        let d = ds(vec![vec![0], vec![1], vec![2], vec![3]], 4);
+        let m = TransversalMatroid::new();
+        let out = extract(&d, &m, &[0, 1, 2, 3], 2);
+        assert_eq!(out.len(), 2);
+        assert!(m.is_independent(&d, &out));
+    }
+
+    #[test]
+    fn general_extract_falls_back_to_whole_cluster() {
+        let d = ds(vec![vec![0]; 6], 1);
+        // graphic matroid over a path graph 0-1-2: only 2 edges independent
+        let m = GraphicMatroid::new(
+            vec![(0, 1), (0, 1), (1, 2), (1, 2), (0, 2), (0, 2)],
+            3,
+        );
+        // no size-4 independent subset exists (rank = 2) -> whole cluster
+        let out = extract(&d, &m, &[0, 1, 2, 3, 4, 5], 4);
+        assert_eq!(out.len(), 6);
+    }
+
+    #[test]
+    fn general_extract_returns_k_when_possible() {
+        let d = ds(vec![vec![0]; 6], 1);
+        let m = UniformMatroid::new(10);
+        let out = extract(&d, &m, &[0, 1, 2, 3, 4, 5], 4);
+        assert_eq!(out.len(), 4);
+    }
+}

@@ -1,0 +1,205 @@
+//! GMM (Gonzalez) greedy k-center clustering — the clustering primitive of
+//! SeqCoreset (paper §4.1, [18]).
+//!
+//! Incremental farthest-point iteration: each round folds the newest center
+//! into the running (min-dist, argmin) state via the [`DistanceEngine`]
+//! (O(n) per round — the hot path that the Pallas/PJRT backend accelerates)
+//! and then picks the point of maximum min-dist as the next center.  After
+//! `i` rounds the implicit clustering is a 2-approximation to the optimal
+//! `i`-clustering radius [18].
+
+use anyhow::Result;
+
+use crate::core::Dataset;
+use crate::runtime::engine::DistanceEngine;
+
+/// Result of a GMM run: centers + the implicit clustering state.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// Selected centers (dataset indices), in selection order.
+    pub centers: Vec<usize>,
+    /// Per point: position (into `centers`) of its closest center.
+    pub assign: Vec<u32>,
+    /// Per point: distance to its closest center.
+    pub mindist: Vec<f32>,
+    /// Clustering radius = max over points of `mindist`.
+    pub radius: f64,
+    /// `d(z1, z2)` — the paper's diameter proxy (`Delta/2 <= delta <= Delta`).
+    pub delta: f64,
+}
+
+impl Clustering {
+    /// Cluster membership lists (position-indexed like `centers`).
+    pub fn clusters(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.centers.len()];
+        for (i, &a) in self.assign.iter().enumerate() {
+            out[a as usize].push(i);
+        }
+        out
+    }
+}
+
+/// Stopping rule for the GMM iteration.
+#[derive(Clone, Copy, Debug)]
+pub enum GmmStop {
+    /// Stop at exactly `tau` centers (the tau-controlled mode of §5).
+    Clusters(usize),
+    /// Algorithm 1 rule: stop once `radius <= eps * delta / (16 k)`.
+    RadiusFactor { eps: f64, k: usize },
+}
+
+/// Run GMM from `first` until `stop` is met (or every point is a center).
+pub fn gmm(
+    ds: &Dataset,
+    engine: &dyn DistanceEngine,
+    first: usize,
+    stop: GmmStop,
+) -> Result<Clustering> {
+    let n = ds.n();
+    assert!(n > 0, "gmm on empty dataset");
+    let mut centers = vec![first];
+    let mut mindist = vec![f32::INFINITY; n];
+    let mut assign = vec![0u32; n];
+    engine.update_min(ds, first, 0, &mut mindist, &mut assign)?;
+
+    // second center = farthest point; delta = d(z1, z2)
+    let mut delta = 0.0f64;
+    if n > 1 {
+        let far = argmax(&mindist);
+        delta = mindist[far] as f64;
+        if delta > 0.0 {
+            centers.push(far);
+            engine.update_min(ds, far, 1, &mut mindist, &mut assign)?;
+        }
+    }
+
+    loop {
+        let far = argmax(&mindist);
+        let radius = mindist[far] as f64;
+        let done = match stop {
+            GmmStop::Clusters(tau) => centers.len() >= tau.max(1),
+            GmmStop::RadiusFactor { eps, k } => {
+                radius <= eps * delta / (16.0 * k as f64)
+            }
+        };
+        if done || radius == 0.0 || centers.len() == n {
+            return Ok(Clustering {
+                radius,
+                delta,
+                centers,
+                assign,
+                mindist,
+            });
+        }
+        let id = centers.len() as u32;
+        centers.push(far);
+        engine.update_min(ds, far, id, &mut mindist, &mut assign)?;
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::runtime::engine::ScalarEngine;
+
+    #[test]
+    fn exact_cover_when_tau_equals_clusters() {
+        // 4 tight blobs, tau=4 -> radius must collapse to the blob spread
+        let ds = synth::clustered(200, 2, 4, 0.01, 1, 1);
+        let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(4)).unwrap();
+        assert_eq!(c.centers.len(), 4);
+        assert!(c.radius < 0.2, "radius {}", c.radius);
+        // blob span is ~10; picking 2 centers leaves radius large
+        let c2 = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(2)).unwrap();
+        assert!(c2.radius > c.radius);
+    }
+
+    #[test]
+    fn radius_is_max_mindist_and_assign_consistent() {
+        let ds = synth::uniform_cube(300, 3, 2);
+        let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(10)).unwrap();
+        let mut maxd: f64 = 0.0;
+        for i in 0..ds.n() {
+            let z = c.centers[c.assign[i] as usize];
+            let d = ds.dist(i, z);
+            assert!((d - c.mindist[i] as f64).abs() < 1e-4);
+            // closest-center property
+            for &other in &c.centers {
+                assert!(ds.dist(i, other) >= d - 1e-4);
+            }
+            maxd = maxd.max(d);
+        }
+        assert!((maxd - c.radius).abs() < 1e-4);
+    }
+
+    #[test]
+    fn delta_is_diameter_proxy() {
+        let ds = synth::uniform_cube(200, 2, 3);
+        let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(5)).unwrap();
+        let diam = ds.diameter_exact();
+        assert!(c.delta <= diam + 1e-9);
+        assert!(c.delta >= diam / 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn radius_factor_stop_reaches_bound() {
+        let ds = synth::uniform_cube(400, 2, 4);
+        let (eps, k) = (0.5, 4);
+        let c = gmm(
+            &ds,
+            &ScalarEngine::new(),
+            0,
+            GmmStop::RadiusFactor { eps, k },
+        )
+        .unwrap();
+        assert!(c.radius <= eps * c.delta / (16.0 * k as f64) + 1e-9);
+    }
+
+    #[test]
+    fn two_approximation_quality() {
+        // GMM radius after tau rounds <= 2 * optimal tau-clustering radius.
+        // On a 5x5 grid with tau=25, optimal radius is 0 -> GMM must hit 0.
+        let ds = synth::grid(5);
+        let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(25)).unwrap();
+        assert_eq!(c.radius, 0.0);
+        assert_eq!(c.centers.len(), 25);
+    }
+
+    #[test]
+    fn duplicate_points_terminate() {
+        let ds = crate::core::Dataset::new(
+            1,
+            crate::core::Metric::Euclidean,
+            vec![1.0; 50],
+            vec![vec![0]; 50],
+            1,
+            "dup",
+        );
+        let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(10)).unwrap();
+        assert_eq!(c.radius, 0.0);
+        assert!(c.centers.len() <= 2);
+    }
+
+    #[test]
+    fn clusters_partition_points() {
+        let ds = synth::uniform_cube(100, 2, 5);
+        let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(7)).unwrap();
+        let clusters = c.clusters();
+        let total: usize = clusters.iter().map(|cl| cl.len()).sum();
+        assert_eq!(total, 100);
+        for (pos, cl) in clusters.iter().enumerate() {
+            assert!(cl.contains(&c.centers[pos]));
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Matroid-constrained greedy constructions: farthest-point (Gonzalez-
+//! flavoured) initial solutions for the local search, and a plain greedy
+//! sum-diversity baseline used by the benches.
+
+use crate::core::Dataset;
+use crate::matroid::Matroid;
+use crate::util::rng::Rng;
+
+/// Build an independent set of size (up to) `k` by greedy farthest-point
+/// selection subject to the matroid: start from a seed, then repeatedly add
+/// the feasible candidate maximizing the minimum distance to the chosen
+/// set.  This is the standard strong initializer for the AMT local search.
+pub fn greedy_matroid_gonzalez(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    candidates: &[usize],
+    rng: &mut Rng,
+) -> Vec<usize> {
+    if candidates.is_empty() || k == 0 {
+        return Vec::new();
+    }
+    let mut sol: Vec<usize> = Vec::with_capacity(k);
+    // seed: random feasible singleton
+    let mut order: Vec<usize> = candidates.to_vec();
+    rng.shuffle(&mut order);
+    for &x in &order {
+        if m.can_extend(ds, &sol, x) {
+            sol.push(x);
+            break;
+        }
+    }
+    if sol.is_empty() {
+        return sol;
+    }
+    // min-dist to the current solution, maintained incrementally
+    let mut mind: Vec<f64> = candidates
+        .iter()
+        .map(|&x| ds.dist(x, sol[0]))
+        .collect();
+    while sol.len() < k {
+        // candidates sorted by min-dist descending; pick the farthest feasible
+        let mut best: Option<(usize, f64)> = None;
+        for (ci, &x) in candidates.iter().enumerate() {
+            if sol.contains(&x) {
+                continue;
+            }
+            let d = mind[ci];
+            if best.map(|(_, bd)| d > bd).unwrap_or(true) && m.can_extend(ds, &sol, x) {
+                best = Some((ci, d));
+            }
+        }
+        match best {
+            None => break,
+            Some((ci, _)) => {
+                let x = candidates[ci];
+                sol.push(x);
+                for (cj, &y) in candidates.iter().enumerate() {
+                    let d = ds.dist(y, x);
+                    if d < mind[cj] {
+                        mind[cj] = d;
+                    }
+                }
+            }
+        }
+    }
+    sol
+}
+
+/// Plain greedy for sum-diversity under a matroid: repeatedly add the
+/// feasible candidate with the largest total distance to the current set.
+/// A cheap baseline the benches compare against.
+pub fn greedy_sum(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    candidates: &[usize],
+) -> Vec<usize> {
+    let mut sol: Vec<usize> = Vec::with_capacity(k);
+    // total distance to current solution, per candidate
+    let mut tot: Vec<f64> = vec![0.0; candidates.len()];
+    while sol.len() < k {
+        let mut best: Option<(usize, f64)> = None;
+        for (ci, &x) in candidates.iter().enumerate() {
+            if sol.contains(&x) {
+                continue;
+            }
+            let score = if sol.is_empty() { 1.0 } else { tot[ci] };
+            if best.map(|(_, bs)| score > bs).unwrap_or(true) && m.can_extend(ds, &sol, x) {
+                best = Some((ci, score));
+            }
+        }
+        match best {
+            None => break,
+            Some((ci, _)) => {
+                let x = candidates[ci];
+                sol.push(x);
+                for (cj, &y) in candidates.iter().enumerate() {
+                    tot[cj] += ds.dist(y, x);
+                }
+            }
+        }
+    }
+    sol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::diversity::sum_diversity;
+    use crate::matroid::{Matroid, PartitionMatroid, UniformMatroid};
+
+    #[test]
+    fn gonzalez_init_is_independent_and_sized() {
+        let ds = synth::clustered(200, 2, 5, 0.1, 3, 1);
+        let m = PartitionMatroid::new(vec![2, 2, 2]);
+        let mut rng = Rng::new(1);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let sol = greedy_matroid_gonzalez(&ds, &m, 5, &cands, &mut rng);
+        assert_eq!(sol.len(), 5);
+        assert!(m.is_independent(&ds, &sol));
+    }
+
+    #[test]
+    fn gonzalez_respects_rank_limit() {
+        let ds = synth::clustered(50, 2, 4, 0.1, 2, 2);
+        let m = PartitionMatroid::new(vec![1, 1]); // rank 2
+        let mut rng = Rng::new(2);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let sol = greedy_matroid_gonzalez(&ds, &m, 5, &cands, &mut rng);
+        assert_eq!(sol.len(), 2);
+    }
+
+    #[test]
+    fn greedy_sum_beats_random_on_average() {
+        let ds = synth::uniform_cube(150, 2, 3);
+        let m = UniformMatroid::new(5);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let sol = greedy_sum(&ds, &m, 5, &cands);
+        assert_eq!(sol.len(), 5);
+        let greedy_div = sum_diversity(&ds, &sol);
+        let mut rng = Rng::new(4);
+        let mut rand_div = 0.0;
+        for _ in 0..20 {
+            let rand_sol = rng.sample_indices(ds.n(), 5);
+            rand_div += sum_diversity(&ds, &rand_sol);
+        }
+        rand_div /= 20.0;
+        assert!(greedy_div > rand_div, "{greedy_div} <= {rand_div}");
+    }
+
+    #[test]
+    fn spread_seeking_picks_far_points() {
+        // two far blobs, k=2: greedy gonzalez must take one from each
+        let ds = synth::clustered(100, 2, 2, 0.05, 1, 5);
+        let m = UniformMatroid::new(2);
+        let mut rng = Rng::new(6);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let sol = greedy_matroid_gonzalez(&ds, &m, 2, &cands, &mut rng);
+        let d = ds.dist(sol[0], sol[1]);
+        assert!(d > ds.diameter_exact() * 0.5);
+    }
+}

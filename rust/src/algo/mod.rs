@@ -1,0 +1,69 @@
+//! The paper's algorithms: GMM clustering, the coreset constructions
+//! (sequential + streaming; the MapReduce version lives in
+//! [`crate::mapreduce`]), the AMT local-search baseline/finisher and the
+//! exhaustive finisher for the non-sum DMMC variants.
+
+pub mod exhaustive;
+pub mod extract;
+pub mod gmm;
+pub mod greedy;
+pub mod local_search;
+pub mod seq_coreset;
+pub mod stream_coreset;
+
+use crate::util::timer::PhaseTimer;
+
+/// Size budget for a coreset construction.
+#[derive(Clone, Copy, Debug)]
+pub enum Budget {
+    /// Theory mode (Algorithm 1): run GMM until the radius drops below
+    /// `eps * delta / (16 k)`.
+    Epsilon(f64),
+    /// Experiment mode (§5): fix the number of clusters `tau` directly.
+    Clusters(usize),
+}
+
+/// A coreset: indices into the originating dataset plus provenance stats.
+#[derive(Clone, Debug)]
+pub struct Coreset {
+    /// Coreset member indices (into the dataset it was built from).
+    pub indices: Vec<usize>,
+    /// Number of clusters the construction used (tau).
+    pub n_clusters: usize,
+    /// Radius of the underlying clustering.
+    pub radius: f64,
+    /// Phase breakdown ("cluster", "extract", ...).
+    pub timer: PhaseTimer,
+}
+
+impl Coreset {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Merge composable coresets (MapReduce union, paper §4.2).
+    pub fn union(parts: Vec<Coreset>) -> Coreset {
+        let mut indices = Vec::new();
+        let mut n_clusters = 0;
+        let mut radius = 0.0f64;
+        let mut timer = PhaseTimer::new();
+        for p in parts {
+            indices.extend(p.indices);
+            n_clusters += p.n_clusters;
+            radius = radius.max(p.radius);
+            timer.merge(&p.timer);
+        }
+        indices.sort_unstable();
+        indices.dedup();
+        Coreset {
+            indices,
+            n_clusters,
+            radius,
+            timer,
+        }
+    }
+}

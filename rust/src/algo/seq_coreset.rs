@@ -1,0 +1,131 @@
+//! SeqCoreset — Algorithm 1 of the paper.
+//!
+//! Run GMM until the clustering radius satisfies Equation (1)
+//! (`r <= eps * delta / (16 k)`, or a fixed cluster count `tau` in the
+//! experiments' budget mode), then EXTRACT a subset from every cluster
+//! according to the matroid kind.  Theorem 5: the result is a
+//! `(1 - eps)`-coreset built in O(n tau) time, of size O(k tau) for the
+//! partition matroid and O(k^2 tau) for the transversal matroid.
+
+use anyhow::Result;
+
+use crate::algo::extract::extract;
+use crate::algo::gmm::{gmm, GmmStop};
+use crate::algo::{Budget, Coreset};
+use crate::core::Dataset;
+use crate::matroid::Matroid;
+use crate::runtime::engine::DistanceEngine;
+use crate::util::timer::PhaseTimer;
+
+/// Build a coreset of `ds` for solutions of size `k` under matroid `m`.
+pub fn seq_coreset(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    budget: Budget,
+    engine: &dyn DistanceEngine,
+) -> Result<Coreset> {
+    let mut timer = PhaseTimer::new();
+    let stop = match budget {
+        Budget::Epsilon(eps) => GmmStop::RadiusFactor { eps, k },
+        Budget::Clusters(tau) => GmmStop::Clusters(tau),
+    };
+    let clustering = {
+        let mut out = None;
+        timer.phase("cluster", || -> Result<()> {
+            out = Some(gmm(ds, engine, 0, stop)?);
+            Ok(())
+        })?;
+        out.unwrap()
+    };
+
+    let mut indices = Vec::new();
+    timer.phase("extract", || {
+        for cluster in clustering.clusters() {
+            indices.extend(extract(ds, m, &cluster, k));
+        }
+    });
+    indices.sort_unstable();
+    indices.dedup();
+
+    Ok(Coreset {
+        indices,
+        n_clusters: clustering.centers.len(),
+        radius: clustering.radius,
+        timer,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::matroid::{
+        maximal_independent, PartitionMatroid, TransversalMatroid, UniformMatroid,
+    };
+    use crate::runtime::engine::ScalarEngine;
+
+    #[test]
+    fn partition_coreset_size_bound() {
+        let ds = synth::clustered(500, 3, 8, 0.1, 4, 1);
+        let m = PartitionMatroid::new(vec![2; 4]);
+        let k = 6;
+        let tau = 16;
+        let cs = seq_coreset(&ds, &m, k, Budget::Clusters(tau), &ScalarEngine::new()).unwrap();
+        assert!(cs.len() <= k * tau, "{} > {}", cs.len(), k * tau);
+        assert_eq!(cs.n_clusters, tau);
+        assert!(cs.len() >= 1);
+    }
+
+    #[test]
+    fn coreset_contains_feasible_solution() {
+        let ds = synth::clustered(300, 2, 6, 0.1, 3, 2);
+        let m = PartitionMatroid::new(vec![2, 2, 2]);
+        let k = 5;
+        let cs = seq_coreset(&ds, &m, k, Budget::Clusters(12), &ScalarEngine::new()).unwrap();
+        let sol = maximal_independent(&m, &ds, &cs.indices, k);
+        assert_eq!(sol.len(), k, "coreset must contain a feasible k-set");
+    }
+
+    #[test]
+    fn epsilon_budget_hits_radius_bound() {
+        let ds = synth::uniform_cube(400, 2, 3);
+        let m = UniformMatroid::new(4);
+        let (k, eps) = (4, 0.8);
+        let cs = seq_coreset(&ds, &m, k, Budget::Epsilon(eps), &ScalarEngine::new()).unwrap();
+        // radius <= eps*delta/(16k) <= eps*Delta/(16k)
+        let diam = ds.diameter_exact();
+        assert!(cs.radius <= eps * diam / (16.0 * k as f64) + 1e-9);
+    }
+
+    #[test]
+    fn transversal_coreset_respects_k2tau_bound() {
+        let ds = synth::wikisim(400, 4);
+        let m = TransversalMatroid::new();
+        let (k, tau) = (5, 8);
+        let cs = seq_coreset(&ds, &m, k, Budget::Clusters(tau), &ScalarEngine::new()).unwrap();
+        // O(k^2 tau) with the O(1)-categories-per-point constant = 4
+        assert!(cs.len() <= 4 * k * k * tau, "{}", cs.len());
+        assert!(!cs.is_empty());
+    }
+
+    #[test]
+    fn indices_unique_and_in_range() {
+        let ds = synth::uniform_cube(200, 2, 5);
+        let m = UniformMatroid::new(3);
+        let cs = seq_coreset(&ds, &m, 3, Budget::Clusters(10), &ScalarEngine::new()).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for &i in &cs.indices {
+            assert!(i < ds.n());
+            assert!(seen.insert(i));
+        }
+    }
+
+    #[test]
+    fn timer_has_both_phases() {
+        let ds = synth::uniform_cube(200, 2, 6);
+        let m = UniformMatroid::new(3);
+        let cs = seq_coreset(&ds, &m, 3, Budget::Clusters(8), &ScalarEngine::new()).unwrap();
+        assert!(cs.timer.get("cluster") > std::time::Duration::ZERO);
+    }
+}

@@ -1,0 +1,129 @@
+//! Mini bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are plain `fn main()` binaries (`harness = false`)
+//! that use this module to (a) time experiment configurations, (b) print
+//! paper-style tables to stdout, and (c) append machine-readable CSV under
+//! `bench_results/`.
+
+pub mod scenarios;
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Time one closure, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat a closure `iters` times after `warmup` runs; summarize seconds.
+pub fn bench_repeat<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) {
+        assert_eq!(fields.len(), self.headers.len(), "table row width");
+        self.rows.push(fields);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!("{:width$}", s, width = widths[c]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Standard bench header: prints the context line every bench target emits.
+pub fn bench_header(name: &str, description: &str) {
+    println!("\n=== {name} ===");
+    println!("{description}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_measures() {
+        let (v, secs) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_repeat_summary() {
+        let s = bench_repeat(1, 5, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(s.n, 5);
+        assert!(s.min >= 0.001);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["algo", "time"]);
+        t.row(vec!["seqcoreset".into(), "1.5".into()]);
+        t.row(vec!["amt".into(), "120.0".into()]);
+        let r = t.render();
+        assert!(r.contains("seqcoreset"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Shared scenario setup for the `cargo bench` targets: the Table-2
+//! dataset stand-ins at bench scale, environment knobs, and the faithful
+//! AMT baseline configuration.
+//!
+//! Env knobs (all optional):
+//!   DMMC_BENCH_N      points per full dataset        (default 60_000)
+//!   DMMC_BENCH_RUNS   repetitions for boxplot rows   (default 5)
+//!   DMMC_BENCH_SEED   base seed                      (default 1)
+
+use crate::algo::local_search::{local_search_sum, LocalSearchParams, LocalSearchResult};
+use crate::core::Dataset;
+use crate::coordinator::spec::MatroidBox;
+use crate::data::synth;
+use crate::matroid::{maximal_independent, Matroid};
+use crate::util::rng::Rng;
+
+pub fn bench_n() -> usize {
+    std::env::var("DMMC_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60_000)
+}
+
+pub fn bench_runs() -> usize {
+    std::env::var("DMMC_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5)
+}
+
+pub fn bench_seed() -> u64 {
+    std::env::var("DMMC_BENCH_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// One experimental testbed: a dataset + its natural matroid (Table 2).
+pub struct Testbed {
+    pub name: &'static str,
+    pub ds: Dataset,
+    pub matroid: MatroidBox,
+    pub rank: usize,
+}
+
+/// The two Table-2 stand-ins at `n` points each.
+pub fn testbeds(n: usize, seed: u64) -> Vec<Testbed> {
+    let wiki = synth::wikisim(n, seed);
+    let wiki_m: MatroidBox = Box::new(crate::matroid::TransversalMatroid::new());
+    let wiki_rank = wiki_m.rank_bound(&wiki);
+    let songs = synth::songsim(n, seed);
+    let songs_m: MatroidBox = Box::new(synth::songsim_matroid(&songs, 89));
+    let songs_rank = songs_m.rank_bound(&songs);
+    vec![
+        Testbed {
+            name: "wikisim",
+            ds: wiki,
+            matroid: wiki_m,
+            rank: wiki_rank,
+        },
+        Testbed {
+            name: "songsim",
+            ds: songs,
+            matroid: songs_m,
+            rank: songs_rank,
+        },
+    ]
+}
+
+/// The paper's AMT baseline, run faithfully: local search over `candidates`
+/// from a RANDOM maximal independent start (not the strong farthest-point
+/// init the coreset route uses) with swap threshold gamma.
+pub fn amt_baseline(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    candidates: &[usize],
+    gamma: f64,
+    seed: u64,
+) -> LocalSearchResult {
+    let mut rng = Rng::new(seed);
+    let mut order = candidates.to_vec();
+    rng.shuffle(&mut order);
+    let init = maximal_independent(&m, ds, &order, k);
+    local_search_sum(
+        ds,
+        m,
+        k,
+        candidates,
+        LocalSearchParams {
+            gamma,
+            max_swaps: 100_000,
+        },
+        Some(init),
+        &mut rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diversity::sum_diversity;
+
+    #[test]
+    fn testbeds_match_table2_shape() {
+        let beds = testbeds(2000, 1);
+        assert_eq!(beds.len(), 2);
+        assert_eq!(beds[0].name, "wikisim");
+        assert_eq!(beds[0].rank, 100);
+        assert!((80..=110).contains(&beds[1].rank), "{}", beds[1].rank);
+    }
+
+    #[test]
+    fn amt_baseline_feasible() {
+        let beds = testbeds(500, 2);
+        for bed in &beds {
+            let k = (bed.rank / 4).max(2).min(8);
+            let cands: Vec<usize> = (0..bed.ds.n()).collect();
+            let res = amt_baseline(&bed.ds, &bed.matroid, k, &cands, 0.0, 3);
+            assert_eq!(res.solution.len(), k);
+            assert!((res.diversity - sum_diversity(&bed.ds, &res.solution)).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline image).
+//!
+//! Grammar: `dmmc <subcommand> [positional ...] [--key value | --key=value |
+//! --flag] ...`.  Unknown-flag detection is the caller's job via
+//! [`Args::expect_known`].
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]` (i.e. without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(sub) = iter.next() {
+            if sub.starts_with('-') {
+                bail!("expected a subcommand, got flag {sub}");
+            }
+            out.subcommand = sub;
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.opt(name).with_context(|| format!("missing required --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad usize {v}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad u64 {v}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad f64 {v}")),
+        }
+    }
+
+    /// Error on any option/flag outside `known` (catches typos).
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // NB: a non-`--` token directly after `--key` is that key's value,
+        // so positionals go before flags (documented grammar).
+        let a = parse(&["run", "pos1", "--n", "100", "--eps=0.5", "--verbose"]);
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.opt("n"), Some("100"));
+        assert_eq!(a.opt("eps"), Some("0.5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["run", "--n", "100", "--eps", "0.25"]);
+        assert_eq!(a.usize_or("n", 1).unwrap(), 100);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!((a.f64_or("eps", 0.0).unwrap() - 0.25).abs() < 1e-12);
+        assert!(a.usize_or("eps", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["run", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("verbose"), None);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["run", "--n", "1", "--oops"]);
+        assert!(a.expect_known(&["n"]).is_err());
+        assert!(a.expect_known(&["n", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn require_errors_when_absent() {
+        let a = parse(&["run"]);
+        assert!(a.require("data").is_err());
+    }
+}

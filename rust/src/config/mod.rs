@@ -1,0 +1,291 @@
+//! Hand-rolled TOML-subset configuration (the offline image has no serde).
+//!
+//! Supported syntax — the subset real experiment configs need:
+//!
+//! ```toml
+//! # comment
+//! [section]            # and [nested.section]
+//! name = "string"
+//! count = 42
+//! ratio = 0.5
+//! flag = true
+//! taus = [8, 16, 32]
+//! ```
+//!
+//! Keys flatten to `section.key`.  Typed getters return `anyhow` errors
+//! naming the key, so config mistakes fail loudly at startup.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar or list value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    fn parse_scalar(tok: &str) -> Result<Value> {
+        let tok = tok.trim();
+        if tok.starts_with('"') && tok.ends_with('"') && tok.len() >= 2 {
+            return Ok(Value::Str(tok[1..tok.len() - 1].to_string()));
+        }
+        if tok == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if tok == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = tok.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("cannot parse value: {tok}")
+    }
+
+    fn parse(tok: &str) -> Result<Value> {
+        let tok = tok.trim();
+        if let Some(inner) = tok.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+            let inner = inner.trim();
+            if inner.is_empty() {
+                return Ok(Value::List(Vec::new()));
+            }
+            let items = inner
+                .split(',')
+                .map(Value::parse_scalar)
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(Value::List(items));
+        }
+        Value::parse_scalar(tok)
+    }
+}
+
+/// Flat `section.key -> Value` configuration map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                let sec = sec.trim();
+                if sec.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = sec.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let parsed = Value::parse(value)
+                .with_context(|| format!("line {}: key {full_key}", lineno + 1))?;
+            if map.insert(full_key.clone(), parsed).is_some() {
+                bail!("line {}: duplicate key {full_key}", lineno + 1);
+            }
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|k| k.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Ok(s),
+            Some(v) => bail!("config key {key}: expected string, got {v:?}"),
+            None => bail!("config key {key} missing"),
+        }
+    }
+
+    pub fn i64(&self, key: &str) -> Result<i64> {
+        match self.get(key) {
+            Some(Value::Int(i)) => Ok(*i),
+            Some(v) => bail!("config key {key}: expected int, got {v:?}"),
+            None => bail!("config key {key} missing"),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        let i = self.i64(key)?;
+        if i < 0 {
+            bail!("config key {key}: negative");
+        }
+        Ok(i as usize)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        match self.get(key) {
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(v) => bail!("config key {key}: expected float, got {v:?}"),
+            None => bail!("config key {key} missing"),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => bail!("config key {key}: expected bool, got {v:?}"),
+            None => bail!("config key {key} missing"),
+        }
+    }
+
+    pub fn usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        match self.get(key) {
+            Some(Value::List(items)) => items
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) if *i >= 0 => Ok(*i as usize),
+                    other => bail!("config key {key}: non-usize item {other:?}"),
+                })
+                .collect(),
+            Some(v) => bail!("config key {key}: expected list, got {v:?}"),
+            None => bail!("config key {key} missing"),
+        }
+    }
+
+    // ---- with-default variants ----
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.get(key) {
+            Some(Value::Str(s)) => s,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.usize(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.f64(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "fig1"        # inline comment
+[dataset]
+kind = "wikisim"
+n = 5000
+[run]
+eps = 0.5
+taus = [8, 16, 32]
+pjrt = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("title").unwrap(), "fig1");
+        assert_eq!(c.str("dataset.kind").unwrap(), "wikisim");
+        assert_eq!(c.usize("dataset.n").unwrap(), 5000);
+        assert!((c.f64("run.eps").unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(c.usize_list("run.taus").unwrap(), vec![8, 16, 32]);
+        assert!(c.bool("run.pjrt").unwrap());
+    }
+
+    #[test]
+    fn missing_and_mistyped_keys_error() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert!(c.str("nope").is_err());
+        assert!(c.usize("title").is_err());
+        assert!(c.bool("dataset.n").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert_eq!(c.str_or("title", "x"), "fig1");
+        assert!(!c.bool_or("nope", false));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.f64("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(Config::parse("a = what").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str("s").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn empty_list() {
+        let c = Config::parse("xs = []").unwrap();
+        assert_eq!(c.usize_list("xs").unwrap(), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,287 @@
+//! The pipeline runner: coreset setting x finisher -> RunOutcome.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::algo::exhaustive::exhaustive_best;
+use crate::algo::greedy::greedy_sum;
+use crate::algo::local_search::{local_search_sum, LocalSearchParams};
+use crate::algo::seq_coreset::seq_coreset;
+use crate::algo::Budget;
+use crate::core::Dataset;
+use crate::diversity::{diversity, Objective};
+use crate::mapreduce::{mr_coreset, MapReduceConfig};
+use crate::matroid::Matroid;
+use crate::runtime::{build_engine, EngineKind};
+use crate::streaming::{run_stream, StreamMode};
+use crate::util::rng::Rng;
+use crate::util::timer::time_it;
+
+/// How the candidate set for the finisher is produced.
+#[derive(Clone, Copy, Debug)]
+pub enum Setting {
+    /// SeqCoreset (Algorithm 1).
+    Seq { budget: Budget },
+    /// StreamCoreset (Algorithm 2 or the tau-variant).
+    Stream { mode: StreamMode },
+    /// MapReduce coreset (paper §4.2).
+    MapReduce {
+        workers: usize,
+        budget: Budget,
+        second_round_tau: Option<usize>,
+    },
+    /// No coreset: the finisher runs on the full input (the AMT baseline).
+    Full,
+}
+
+/// Final-solution extractor run on the candidate set.
+#[derive(Clone, Copy, Debug)]
+pub enum Finisher {
+    /// AMT local search — sum-DMMC only.
+    LocalSearch { gamma: f64 },
+    /// Exhaustive search (any objective; exponential in k).
+    Exhaustive,
+    /// Greedy heuristic (cheap baseline).
+    Greedy,
+}
+
+/// One experiment configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Pipeline {
+    pub setting: Setting,
+    pub finisher: Finisher,
+    pub engine: EngineKind,
+}
+
+/// Everything the benches/CLI report about one run.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub solution: Vec<usize>,
+    pub diversity: f64,
+    pub coreset_size: usize,
+    pub coreset_time: Duration,
+    pub finish_time: Duration,
+    /// Setting-specific extras (peak memory, worker times, swap counts...).
+    pub extra: BTreeMap<String, f64>,
+}
+
+impl RunOutcome {
+    pub fn total_time(&self) -> Duration {
+        self.coreset_time + self.finish_time
+    }
+}
+
+/// Run the full coreset -> finisher protocol.
+pub fn run_pipeline<M: Matroid + Sync>(
+    ds: &Dataset,
+    m: &M,
+    k: usize,
+    obj: Objective,
+    pipeline: Pipeline,
+    seed: u64,
+) -> Result<RunOutcome> {
+    let mut extra = BTreeMap::new();
+    let mut rng = Rng::new(seed);
+
+    // ---- phase 1: candidate set ----
+    let (candidates, coreset_time) = match pipeline.setting {
+        Setting::Seq { budget } => {
+            let engine = build_engine(pipeline.engine, ds)?;
+            let (cs, dt) = time_it(|| seq_coreset(ds, m, k, budget, engine.as_ref()));
+            let cs = cs?;
+            extra.insert("n_clusters".into(), cs.n_clusters as f64);
+            extra.insert("radius".into(), cs.radius);
+            (cs.indices, dt)
+        }
+        Setting::Stream { mode } => {
+            let order = rng.permutation(ds.n());
+            let (rep, dt) = time_it(|| run_stream(ds, m, k, mode, &order));
+            extra.insert("n_clusters".into(), rep.coreset.n_clusters as f64);
+            extra.insert("peak_memory".into(), rep.stats.peak_memory_points as f64);
+            extra.insert("restructures".into(), rep.stats.restructures as f64);
+            extra.insert("throughput".into(), rep.throughput);
+            (rep.coreset.indices, dt)
+        }
+        Setting::MapReduce {
+            workers,
+            budget,
+            second_round_tau,
+        } => {
+            let cfg = MapReduceConfig {
+                workers,
+                budget,
+                second_round_tau,
+                seed: rng.next_u64(),
+            };
+            let (rep, dt) = time_it(|| mr_coreset(ds, m, k, cfg));
+            let rep = rep?;
+            extra.insert("rounds".into(), rep.rounds as f64);
+            extra.insert("local_memory".into(), rep.local_memory_points as f64);
+            extra.insert(
+                "makespan_round1".into(),
+                rep.makespan_round1.as_secs_f64(),
+            );
+            (rep.coreset.indices, dt)
+        }
+        Setting::Full => ((0..ds.n()).collect(), Duration::ZERO),
+    };
+    extra.insert("coreset_size".into(), candidates.len() as f64);
+
+    // ---- phase 2: finisher ----
+    let (solution, finish_time) = match pipeline.finisher {
+        Finisher::LocalSearch { gamma } => {
+            if obj != Objective::Sum {
+                bail!("local search finisher only applies to sum-DMMC");
+            }
+            let params = LocalSearchParams {
+                gamma,
+                ..Default::default()
+            };
+            let (res, dt) =
+                time_it(|| local_search_sum(ds, m, k, &candidates, params, None, &mut rng));
+            extra.insert("swaps".into(), res.swaps as f64);
+            extra.insert("oracle_calls".into(), res.oracle_calls as f64);
+            (res.solution, dt)
+        }
+        Finisher::Exhaustive => {
+            let (res, dt) = time_it(|| exhaustive_best(ds, m, k, &candidates, obj));
+            extra.insert("search_nodes".into(), res.nodes as f64);
+            extra.insert("search_leaves".into(), res.leaves as f64);
+            (res.solution, dt)
+        }
+        Finisher::Greedy => {
+            let (sol, dt) = time_it(|| greedy_sum(ds, m, k, &candidates));
+            (sol, dt)
+        }
+    };
+
+    let div = diversity(ds, &solution, obj);
+    Ok(RunOutcome {
+        solution,
+        diversity: div,
+        coreset_size: candidates.len(),
+        coreset_time,
+        finish_time,
+        extra,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::matroid::{Matroid, PartitionMatroid, UniformMatroid};
+
+    fn pipe(setting: Setting, finisher: Finisher) -> Pipeline {
+        Pipeline {
+            setting,
+            finisher,
+            engine: EngineKind::Scalar,
+        }
+    }
+
+    #[test]
+    fn seq_plus_local_search_runs() {
+        let ds = synth::clustered(300, 2, 5, 0.1, 3, 1);
+        let m = PartitionMatroid::new(vec![2; 3]);
+        let out = run_pipeline(
+            &ds,
+            &m,
+            5,
+            Objective::Sum,
+            pipe(
+                Setting::Seq {
+                    budget: Budget::Clusters(16),
+                },
+                Finisher::LocalSearch { gamma: 0.0 },
+            ),
+            1,
+        )
+        .unwrap();
+        assert_eq!(out.solution.len(), 5);
+        assert!(m.is_independent(&ds, &out.solution));
+        assert!(out.diversity > 0.0);
+        assert!(out.coreset_size < 300);
+    }
+
+    #[test]
+    fn stream_plus_exhaustive_runs_non_sum() {
+        let ds = synth::uniform_cube(200, 2, 2);
+        let m = UniformMatroid::new(4);
+        let out = run_pipeline(
+            &ds,
+            &m,
+            4,
+            Objective::Tree,
+            pipe(
+                Setting::Stream {
+                    mode: StreamMode::Tau(8),
+                },
+                Finisher::Exhaustive,
+            ),
+            2,
+        )
+        .unwrap();
+        assert_eq!(out.solution.len(), 4);
+        assert!(out.diversity > 0.0);
+        assert!(out.extra.contains_key("peak_memory"));
+    }
+
+    #[test]
+    fn mapreduce_setting_runs() {
+        let ds = synth::uniform_cube(400, 2, 3);
+        let m = UniformMatroid::new(4);
+        let out = run_pipeline(
+            &ds,
+            &m,
+            4,
+            Objective::Sum,
+            pipe(
+                Setting::MapReduce {
+                    workers: 4,
+                    budget: Budget::Clusters(4),
+                    second_round_tau: None,
+                },
+                Finisher::LocalSearch { gamma: 0.0 },
+            ),
+            3,
+        )
+        .unwrap();
+        assert_eq!(out.extra["rounds"], 1.0);
+        assert_eq!(out.solution.len(), 4);
+    }
+
+    #[test]
+    fn full_setting_is_the_baseline() {
+        let ds = synth::uniform_cube(60, 2, 4);
+        let m = UniformMatroid::new(3);
+        let out = run_pipeline(
+            &ds,
+            &m,
+            3,
+            Objective::Sum,
+            pipe(Setting::Full, Finisher::LocalSearch { gamma: 0.0 }),
+            4,
+        )
+        .unwrap();
+        assert_eq!(out.coreset_size, 60);
+        assert_eq!(out.coreset_time, Duration::ZERO);
+    }
+
+    #[test]
+    fn local_search_rejects_non_sum() {
+        let ds = synth::uniform_cube(50, 2, 5);
+        let m = UniformMatroid::new(3);
+        let res = run_pipeline(
+            &ds,
+            &m,
+            3,
+            Objective::Star,
+            pipe(Setting::Full, Finisher::LocalSearch { gamma: 0.0 }),
+            5,
+        );
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Experiment coordinator: dataset/matroid specs, the pipeline runner that
+//! the CLI / examples / benches all share, and metrics plumbing.
+//!
+//! The paper's experimental protocol (§5) is: build a coreset in one of the
+//! three settings, then extract the final solution with a sequential
+//! finisher (AMT local search with gamma = 0 for sum-DMMC, exhaustive
+//! search for the other variants).  [`experiment::run_pipeline`] is that
+//! protocol as a function.
+
+pub mod experiment;
+pub mod spec;
+
+pub use experiment::{run_pipeline, Finisher, Pipeline, RunOutcome, Setting};
+pub use spec::{build_dataset, build_matroid, DatasetSpec, MatroidSpec};

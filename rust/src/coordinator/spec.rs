@@ -1,0 +1,193 @@
+//! Dataset / matroid specifications — the config-file and CLI surface.
+
+use anyhow::{bail, Result};
+
+use crate::core::Dataset;
+use crate::data::{io, synth};
+use crate::matroid::{Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid};
+
+/// Which dataset to build/load.
+#[derive(Clone, Debug)]
+pub enum DatasetSpec {
+    /// Wikipedia stand-in (transversal matroid scenario).
+    Wikisim { n: usize, seed: u64 },
+    /// Songs stand-in (partition matroid scenario).
+    Songsim { n: usize, seed: u64 },
+    /// Controlled-geometry Gaussian blobs.
+    Clustered {
+        n: usize,
+        dim: usize,
+        clusters: usize,
+        spread: f64,
+        labels: u32,
+        seed: u64,
+    },
+    /// Uniform cube (unconstrained-like testing).
+    Cube { n: usize, dim: usize, seed: u64 },
+    /// Load a `.dmmc` binary file.
+    File(String),
+}
+
+impl DatasetSpec {
+    /// Parse CLI shorthand: `wikisim:5000`, `songsim:2000`, `cube:1000x8`,
+    /// `clustered:1000`, or a file path.
+    pub fn parse(s: &str, seed: u64) -> Result<DatasetSpec> {
+        if let Some((kind, rest)) = s.split_once(':') {
+            let spec = match kind {
+                "wikisim" => DatasetSpec::Wikisim {
+                    n: rest.parse()?,
+                    seed,
+                },
+                "songsim" => DatasetSpec::Songsim {
+                    n: rest.parse()?,
+                    seed,
+                },
+                "cube" => {
+                    let (n, dim) = match rest.split_once('x') {
+                        Some((n, d)) => (n.parse()?, d.parse()?),
+                        None => (rest.parse()?, 8),
+                    };
+                    DatasetSpec::Cube { n, dim, seed }
+                }
+                "clustered" => DatasetSpec::Clustered {
+                    n: rest.parse()?,
+                    dim: 8,
+                    clusters: 16,
+                    spread: 0.1,
+                    labels: 8,
+                    seed,
+                },
+                other => bail!("unknown dataset kind {other}"),
+            };
+            Ok(spec)
+        } else {
+            Ok(DatasetSpec::File(s.to_string()))
+        }
+    }
+}
+
+/// Build or load the dataset.
+pub fn build_dataset(spec: &DatasetSpec) -> Result<Dataset> {
+    Ok(match spec {
+        DatasetSpec::Wikisim { n, seed } => synth::wikisim(*n, *seed),
+        DatasetSpec::Songsim { n, seed } => synth::songsim(*n, *seed),
+        DatasetSpec::Clustered {
+            n,
+            dim,
+            clusters,
+            spread,
+            labels,
+            seed,
+        } => synth::clustered(*n, *dim, *clusters, *spread, *labels, *seed),
+        DatasetSpec::Cube { n, dim, seed } => synth::uniform_cube(*n, *dim, *seed),
+        DatasetSpec::File(path) => io::load(path)?,
+    })
+}
+
+/// Which matroid constrains the solutions.
+#[derive(Clone, Debug)]
+pub enum MatroidSpec {
+    Transversal,
+    /// Partition with caps proportional to category frequency, binary-
+    /// searched so the rank lands near `target_rank` (paper's Songs setup).
+    PartitionProportional { target_rank: usize },
+    /// Partition with explicit caps.
+    PartitionCaps(Vec<usize>),
+    /// Uniform (rank r) — the unconstrained-diversity regime.
+    Uniform(usize),
+}
+
+impl MatroidSpec {
+    /// Parse CLI shorthand: `transversal`, `partition:89`, `uniform:10`.
+    pub fn parse(s: &str) -> Result<MatroidSpec> {
+        if s == "transversal" {
+            return Ok(MatroidSpec::Transversal);
+        }
+        if let Some(rest) = s.strip_prefix("partition:") {
+            return Ok(MatroidSpec::PartitionProportional {
+                target_rank: rest.parse()?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("uniform:") {
+            return Ok(MatroidSpec::Uniform(rest.parse()?));
+        }
+        bail!("unknown matroid spec {s} (transversal | partition:<rank> | uniform:<r>)")
+    }
+
+    /// The natural matroid for a dataset spec (wikisim -> transversal,
+    /// songsim -> partition rank 89, like the paper's Table 2).
+    pub fn default_for(spec: &DatasetSpec) -> MatroidSpec {
+        match spec {
+            DatasetSpec::Wikisim { .. } => MatroidSpec::Transversal,
+            DatasetSpec::Songsim { .. } => MatroidSpec::PartitionProportional { target_rank: 89 },
+            _ => MatroidSpec::Uniform(16),
+        }
+    }
+}
+
+/// Boxed matroid usable across threads (MapReduce workers).
+pub type MatroidBox = Box<dyn Matroid + Send + Sync>;
+
+/// Materialize the matroid for `ds`.
+pub fn build_matroid(spec: &MatroidSpec, ds: &Dataset) -> MatroidBox {
+    match spec {
+        MatroidSpec::Transversal => Box::new(TransversalMatroid::new()),
+        MatroidSpec::PartitionProportional { target_rank } => {
+            Box::new(synth::songsim_matroid(ds, *target_rank))
+        }
+        MatroidSpec::PartitionCaps(caps) => Box::new(PartitionMatroid::new(caps.clone())),
+        MatroidSpec::Uniform(r) => Box::new(UniformMatroid::new(*r)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matroid::MatroidKind;
+
+    #[test]
+    fn parse_dataset_shorthands() {
+        assert!(matches!(
+            DatasetSpec::parse("wikisim:100", 1).unwrap(),
+            DatasetSpec::Wikisim { n: 100, seed: 1 }
+        ));
+        assert!(matches!(
+            DatasetSpec::parse("cube:50x4", 1).unwrap(),
+            DatasetSpec::Cube { n: 50, dim: 4, .. }
+        ));
+        assert!(matches!(
+            DatasetSpec::parse("some/file.dmmc", 1).unwrap(),
+            DatasetSpec::File(_)
+        ));
+        assert!(DatasetSpec::parse("bogus:1", 1).is_err());
+    }
+
+    #[test]
+    fn parse_matroid_shorthands() {
+        assert!(matches!(
+            MatroidSpec::parse("transversal").unwrap(),
+            MatroidSpec::Transversal
+        ));
+        assert!(matches!(
+            MatroidSpec::parse("partition:89").unwrap(),
+            MatroidSpec::PartitionProportional { target_rank: 89 }
+        ));
+        assert!(matches!(
+            MatroidSpec::parse("uniform:5").unwrap(),
+            MatroidSpec::Uniform(5)
+        ));
+        assert!(MatroidSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_and_kind() {
+        let spec = DatasetSpec::Wikisim { n: 100, seed: 1 };
+        let ds = build_dataset(&spec).unwrap();
+        let m = build_matroid(&MatroidSpec::default_for(&spec), &ds);
+        assert_eq!(m.kind(), MatroidKind::Transversal);
+        let spec2 = DatasetSpec::Songsim { n: 200, seed: 1 };
+        let ds2 = build_dataset(&spec2).unwrap();
+        let m2 = build_matroid(&MatroidSpec::default_for(&spec2), &ds2);
+        assert_eq!(m2.kind(), MatroidKind::Partition);
+    }
+}

@@ -1,0 +1,197 @@
+//! The dataset container: dense points + per-point category labels.
+//!
+//! Layout is a flat row-major `Vec<f32>` (cache-friendly for the GMM scan,
+//! zero-copy sliceable for the PJRT padding path).  Categories carry the
+//! matroid side-information: one label per point for partition matroids,
+//! one-or-more for transversal matroids (paper §2.1 assumes O(1) categories
+//! per element).
+
+use crate::core::metric::Metric;
+
+/// A dataset of `n` points of dimension `dim` with category labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dim: usize,
+    pub metric: Metric,
+    /// Row-major coordinates, length `n * dim`.
+    pub coords: Vec<f32>,
+    /// Per-point category ids (sorted, deduplicated). Non-empty per point.
+    pub categories: Vec<Vec<u32>>,
+    /// Total number of distinct categories (ids are `0..n_categories`).
+    pub n_categories: u32,
+    /// Human-readable provenance tag (generator name / file path).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(
+        dim: usize,
+        metric: Metric,
+        coords: Vec<f32>,
+        categories: Vec<Vec<u32>>,
+        n_categories: u32,
+        name: impl Into<String>,
+    ) -> Dataset {
+        assert_eq!(coords.len() % dim.max(1), 0, "coords not a multiple of dim");
+        let n = coords.len() / dim.max(1);
+        assert_eq!(categories.len(), n, "one category list per point");
+        let mut categories = categories;
+        for cats in &mut categories {
+            cats.sort_unstable();
+            cats.dedup();
+            assert!(!cats.is_empty(), "every point needs >=1 category");
+            assert!(cats.iter().all(|&c| c < n_categories), "category id OOB");
+        }
+        Dataset {
+            dim,
+            metric,
+            coords,
+            categories,
+            n_categories,
+            name: name.into(),
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.coords.len() / self.dim
+        }
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.coords[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Distance between points `i` and `j` under the dataset metric.
+    #[inline]
+    pub fn dist(&self, i: usize, j: usize) -> f64 {
+        self.metric.dist(self.point(i), self.point(j))
+    }
+
+    /// Distance between point `i` and an arbitrary vector.
+    #[inline]
+    pub fn dist_to(&self, i: usize, v: &[f32]) -> f64 {
+        self.metric.dist(self.point(i), v)
+    }
+
+    /// Exact diameter by brute force — O(n^2), test/bench-sized inputs only.
+    pub fn diameter_exact(&self) -> f64 {
+        let n = self.n();
+        let mut best = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                best = best.max(self.dist(i, j));
+            }
+        }
+        best
+    }
+
+    /// Restriction of the dataset to `indices` (preserving their order).
+    /// Category ids and the metric are preserved, so matroids built from
+    /// category structure remain valid on the restriction.
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut coords = Vec::with_capacity(indices.len() * self.dim);
+        let mut categories = Vec::with_capacity(indices.len());
+        for &i in indices {
+            coords.extend_from_slice(self.point(i));
+            categories.push(self.categories[i].clone());
+        }
+        Dataset {
+            dim: self.dim,
+            metric: self.metric,
+            coords,
+            categories,
+            n_categories: self.n_categories,
+            name: format!("{}[subset:{}]", self.name, indices.len()),
+        }
+    }
+
+    /// Apply a permutation: point `i` of the result is `perm[i]` of `self`.
+    /// The experiments (paper §5) permute the dataset before every run to
+    /// probe solution-quality stability.
+    pub fn permute(&self, perm: &[usize]) -> Dataset {
+        assert_eq!(perm.len(), self.n());
+        self.subset(perm)
+    }
+
+    /// Count of points per category (used by generators and Table 2 stats).
+    pub fn category_histogram(&self) -> Vec<usize> {
+        let mut hist = vec![0usize; self.n_categories as usize];
+        for cats in &self.categories {
+            for &c in cats {
+                hist[c as usize] += 1;
+            }
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            2,
+            Metric::Euclidean,
+            vec![0.0, 0.0, 3.0, 4.0, 0.0, 1.0],
+            vec![vec![0], vec![1], vec![0, 1]],
+            2,
+            "tiny",
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let ds = tiny();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.point(1), &[3.0, 4.0]);
+        assert_eq!(ds.dist(0, 1), 5.0);
+    }
+
+    #[test]
+    fn diameter_exact_small() {
+        let ds = tiny();
+        assert_eq!(ds.diameter_exact(), 5.0);
+    }
+
+    #[test]
+    fn subset_preserves_geometry() {
+        let ds = tiny();
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.n(), 2);
+        assert_eq!(sub.point(0), &[0.0, 1.0]);
+        assert_eq!(sub.dist(0, 1), 1.0);
+        assert_eq!(sub.categories[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn permute_is_bijection() {
+        let ds = tiny();
+        let p = ds.permute(&[2, 1, 0]);
+        assert_eq!(p.point(0), ds.point(2));
+        assert_eq!(p.point(2), ds.point(0));
+    }
+
+    #[test]
+    fn category_histogram_counts_multi() {
+        let ds = tiny();
+        assert_eq!(ds.category_histogram(), vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn category_oob_rejected() {
+        Dataset::new(1, Metric::Euclidean, vec![0.0], vec![vec![5]], 2, "bad");
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_categories_rejected() {
+        Dataset::new(1, Metric::Euclidean, vec![0.0], vec![vec![]], 2, "bad");
+    }
+}

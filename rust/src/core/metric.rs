@@ -1,0 +1,146 @@
+//! Distance metrics over dense `f32` vectors.
+//!
+//! Both metrics satisfy the triangle inequality — every proof in the paper
+//! (Fact 1, Lemmas 1-3) depends on it.  `Cosine` is the *metric* version of
+//! cosine distance used by the paper's experiments: the angular distance
+//! `arccos(cos_sim)/pi` in `[0, 1]`.  The scalar formulas here mirror the
+//! Pallas kernels (`python/compile/kernels/distance.py`) and the jnp oracle
+//! (`ref.py`): pallas == jnp == rust is pinned by
+//! `rust/tests/runtime_numerics.rs`.
+
+/// Supported metrics.  Names match the AOT artifact naming convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// L2 distance.
+    Euclidean,
+    /// Angular distance `arccos(cos_sim)/pi` — the metric cosine distance.
+    Cosine,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Euclidean => "euclidean",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "euclidean" | "l2" => Some(Metric::Euclidean),
+            "cosine" | "angular" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+
+    /// Distance between two vectors of equal dimension.
+    #[inline]
+    pub fn dist(self, a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::Euclidean => euclidean(a, b),
+            Metric::Cosine => cosine_angular(a, b),
+        }
+    }
+}
+
+const EPS: f64 = 1.0e-12;
+
+/// Exact-difference Euclidean distance (not the expanded form): precise at
+/// d ~ 0, which matters for duplicate detection and radius accounting.
+#[inline]
+pub fn euclidean(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+/// Angular distance in [0, 1]: `arccos(clip(cos_sim)) / pi`.
+#[inline]
+pub fn cosine_angular(a: &[f32], b: &[f32]) -> f64 {
+    let (mut ab, mut aa, mut bb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..a.len() {
+        let (x, y) = (a[i] as f64, b[i] as f64);
+        ab += x * y;
+        aa += x * x;
+        bb += y * y;
+    }
+    let denom = (aa.sqrt() * bb.sqrt()).max(EPS);
+    let sim = (ab / denom).clamp(-1.0, 1.0);
+    sim.acos() / std::f64::consts::PI
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(r: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn euclidean_known_values() {
+        assert_eq!(euclidean(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        assert_eq!(euclidean(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn cosine_known_values() {
+        // orthogonal -> 1/2; identical -> 0; opposite -> 1.
+        assert!((cosine_angular(&[1.0, 0.0], &[0.0, 1.0]) - 0.5).abs() < 1e-12);
+        assert!(cosine_angular(&[1.0, 2.0], &[2.0, 4.0]).abs() < 1e-6);
+        assert!((cosine_angular(&[1.0, 0.0], &[-1.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_scale_invariant() {
+        let a = [0.3f32, -1.2, 0.7];
+        let b = [2.0f32, 0.1, -0.5];
+        let scaled: Vec<f32> = b.iter().map(|x| x * 37.0).collect();
+        let d1 = cosine_angular(&a, &b);
+        let d2 = cosine_angular(&a, &scaled);
+        assert!((d1 - d2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_vector_guard_finite() {
+        let z = [0.0f32; 4];
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        assert!(cosine_angular(&z, &a).is_finite());
+        assert!(cosine_angular(&z, &z).is_finite());
+    }
+
+    #[test]
+    fn metric_axioms_random() {
+        let mut r = Rng::new(11);
+        for metric in [Metric::Euclidean, Metric::Cosine] {
+            for _ in 0..200 {
+                let a = rand_vec(&mut r, 8);
+                let b = rand_vec(&mut r, 8);
+                let c = rand_vec(&mut r, 8);
+                let dab = metric.dist(&a, &b);
+                let dba = metric.dist(&b, &a);
+                let dac = metric.dist(&a, &c);
+                let dbc = metric.dist(&b, &c);
+                assert!(dab >= 0.0);
+                assert!((dab - dba).abs() < 1e-9, "symmetry");
+                assert!(dac <= dab + dbc + 1e-9, "triangle inequality");
+                // cosine self-similarity lands at 1 - O(eps); arccos
+                // amplifies that to sqrt(2 eps) ~ 1e-8 -> tolerance 1e-6
+                assert!(metric.dist(&a, &a) < 1e-6, "identity");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [Metric::Euclidean, Metric::Cosine] {
+            assert_eq!(Metric::parse(m.name()), Some(m));
+        }
+        assert_eq!(Metric::parse("nope"), None);
+    }
+}

@@ -1,0 +1,7 @@
+//! Core types: metrics and the dataset container.
+
+pub mod dataset;
+pub mod metric;
+
+pub use dataset::Dataset;
+pub use metric::Metric;

@@ -1,0 +1,186 @@
+//! Dataset (de)serialization: a simple little-endian binary format plus a
+//! CSV loader for external data.
+//!
+//! Binary layout (`.dmmc` files, magic "DMMC1"):
+//!   magic[5] | metric u8 | dim u32 | n u32 | n_categories u32 |
+//!   coords f32 * (n*dim) | per point: n_cats u8, cat u32 * n_cats
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::{Dataset, Metric};
+
+const MAGIC: &[u8; 5] = b"DMMC1";
+
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref()).context("create dataset file")?);
+    w.write_all(MAGIC)?;
+    w.write_all(&[match ds.metric {
+        Metric::Euclidean => 0u8,
+        Metric::Cosine => 1u8,
+    }])?;
+    w.write_all(&(ds.dim as u32).to_le_bytes())?;
+    w.write_all(&(ds.n() as u32).to_le_bytes())?;
+    w.write_all(&ds.n_categories.to_le_bytes())?;
+    for &v in &ds.coords {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for cats in &ds.categories {
+        assert!(cats.len() < 256);
+        w.write_all(&[cats.len() as u8])?;
+        for &c in cats {
+            w.write_all(&c.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(File::open(path).context("open dataset file")?);
+    let mut magic = [0u8; 5];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a DMMC1 dataset: {}", path.display());
+    }
+    let mut b1 = [0u8; 1];
+    r.read_exact(&mut b1)?;
+    let metric = match b1[0] {
+        0 => Metric::Euclidean,
+        1 => Metric::Cosine,
+        x => bail!("unknown metric tag {x}"),
+    };
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let dim = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+    r.read_exact(&mut b4)?;
+    let n_categories = u32::from_le_bytes(b4);
+    let mut coords = vec![0.0f32; n * dim];
+    for v in coords.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *v = f32::from_le_bytes(b4);
+    }
+    let mut categories = Vec::with_capacity(n);
+    for _ in 0..n {
+        r.read_exact(&mut b1)?;
+        let m = b1[0] as usize;
+        let mut cats = Vec::with_capacity(m);
+        for _ in 0..m {
+            r.read_exact(&mut b4)?;
+            cats.push(u32::from_le_bytes(b4));
+        }
+        categories.push(cats);
+    }
+    Ok(Dataset::new(
+        dim,
+        metric,
+        coords,
+        categories,
+        n_categories,
+        path.display().to_string(),
+    ))
+}
+
+/// CSV loader: each row `x1,...,xd,cat[;cat...]` — numeric features followed
+/// by one semicolon-separated category-id list column.
+pub fn load_csv(path: impl AsRef<Path>, metric: Metric) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path.as_ref()).context("read csv")?;
+    let mut coords = Vec::new();
+    let mut categories: Vec<Vec<u32>> = Vec::new();
+    let mut dim = None;
+    let mut max_cat = 0u32;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() < 2 {
+            bail!("line {}: need >=1 feature and a category column", lineno + 1);
+        }
+        let (feat, cat_field) = fields.split_at(fields.len() - 1);
+        match dim {
+            None => dim = Some(feat.len()),
+            Some(d) if d == feat.len() => {}
+            Some(d) => bail!("line {}: dim {} != {}", lineno + 1, feat.len(), d),
+        }
+        for f in feat {
+            coords.push(f.trim().parse::<f32>().with_context(|| format!("line {}", lineno + 1))?);
+        }
+        let cats: Vec<u32> = cat_field[0]
+            .split(';')
+            .map(|c| c.trim().parse::<u32>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("line {}: bad category list", lineno + 1))?;
+        if cats.is_empty() {
+            bail!("line {}: empty category list", lineno + 1);
+        }
+        for &c in &cats {
+            max_cat = max_cat.max(c);
+        }
+        categories.push(cats);
+    }
+    let dim = dim.context("empty csv")?;
+    Ok(Dataset::new(
+        dim,
+        metric,
+        coords,
+        categories,
+        max_cat + 1,
+        path.as_ref().display().to_string(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn binary_roundtrip() {
+        let ds = synth::wikisim(50, 1);
+        let path = std::env::temp_dir().join("mc_io_roundtrip.dmmc");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.dim, ds.dim);
+        assert_eq!(back.metric, ds.metric);
+        assert_eq!(back.coords, ds.coords);
+        assert_eq!(back.categories, ds.categories);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("mc_io_bad.dmmc");
+        std::fs::write(&path, b"WRONG....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = std::env::temp_dir().join("mc_io_test.csv");
+        std::fs::write(&path, "# comment\n1.0,2.0,0\n3.0,4.0,1;2\n").unwrap();
+        let ds = load_csv(&path, Metric::Euclidean).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.dim, 2);
+        assert_eq!(ds.categories[1], vec![1, 2]);
+        assert_eq!(ds.n_categories, 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged_rows() {
+        let path = std::env::temp_dir().join("mc_io_ragged.csv");
+        std::fs::write(&path, "1.0,2.0,0\n1.0,0\n").unwrap();
+        assert!(load_csv(&path, Metric::Euclidean).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

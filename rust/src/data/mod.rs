@@ -1,0 +1,4 @@
+//! Dataset generation and (de)serialization.
+
+pub mod io;
+pub mod synth;

@@ -1,0 +1,257 @@
+//! Synthetic dataset generators — the environment-substitution layer.
+//!
+//! The paper evaluates on two real datasets (Table 2) that are not
+//! available in this environment (see DESIGN.md §1); these generators build
+//! synthetic equivalents that exercise the same code paths:
+//!
+//! * [`wikisim`]  — Wikipedia stand-in: GloVe-like 25-d embeddings from a
+//!   Gaussian mixture (bounded doubling dimension), 100 overlapping topics
+//!   with Zipf popularity (1..=4 per page)  ->  transversal matroid.
+//! * [`songsim`]  — Songs stand-in: nonnegative count-like 48-d vectors,
+//!   16 disjoint Zipf-sized genres  ->  partition matroid with caps
+//!   proportional to genre frequency.
+//! * [`clustered`] / [`uniform_cube`] / [`grid`] — controlled-geometry
+//!   inputs for unit tests and doubling-dimension experiments.
+
+use crate::core::{Dataset, Metric};
+use crate::matroid::{Matroid, PartitionMatroid};
+use crate::util::rng::Rng;
+
+/// Wikipedia-like dataset: `n` points, 25-d, cosine metric, 100 topics,
+/// 1..=4 topics per point with Zipf(1.1) popularity.
+pub fn wikisim(n: usize, seed: u64) -> Dataset {
+    mixture_with_topics(n, 25, 100, 200, 0.15, 4, 1.1, Metric::Cosine, seed, "wikisim")
+}
+
+/// Songs-like dataset: `n` points, 48-d nonnegative count-like vectors,
+/// cosine metric, 16 disjoint genres with Zipf(1.0) sizes.
+pub fn songsim(n: usize, seed: u64) -> Dataset {
+    let dim = 48;
+    let n_genres = 16u32;
+    let mut rng = Rng::new(seed ^ 0x50_4E_47);
+    // genre "style" centers: sparse nonnegative profiles
+    let n_styles = n_genres as usize;
+    let mut styles = vec![0.0f32; n_styles * dim];
+    for s in styles.iter_mut() {
+        if rng.f64() < 0.4 {
+            *s = (rng.f64() * 4.0) as f32;
+        }
+    }
+    let mut coords = Vec::with_capacity(n * dim);
+    let mut categories = Vec::with_capacity(n);
+    for _ in 0..n {
+        let g = rng.zipf(n_styles, 1.0);
+        categories.push(vec![g as u32]);
+        let style = &styles[g * dim..(g + 1) * dim];
+        for &sv in style.iter().take(dim) {
+            // counts: style profile + nonnegative noise, some sparsity
+            let noise = (rng.normal().abs() * 0.8) as f32;
+            let v = if rng.f64() < 0.25 { 0.0 } else { sv + noise };
+            coords.push(v);
+        }
+    }
+    // guard: all-zero rows break nothing (cosine has an EPS guard) but are
+    // unrealistic; give them one unit count.
+    for i in 0..n {
+        let row = &mut coords[i * dim..(i + 1) * dim];
+        if row.iter().all(|&v| v == 0.0) {
+            row[0] = 1.0;
+        }
+    }
+    Dataset::new(dim, Metric::Cosine, coords, categories, n_genres, format!("songsim(n={n})"))
+}
+
+/// Partition matroid for a songsim-style dataset with rank close to
+/// `target_rank` (caps proportional to genre frequency, minimum 1 — the
+/// paper's construction).  Binary-searches the proportionality factor.
+pub fn songsim_matroid(ds: &Dataset, target_rank: usize) -> PartitionMatroid {
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    let mut best = PartitionMatroid::proportional(ds, 1e-9);
+    for _ in 0..40 {
+        let mid = (lo + hi) / 2.0;
+        let m = PartitionMatroid::proportional(ds, mid);
+        let rank = m.rank_bound(ds);
+        if rank >= target_rank {
+            best = m;
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    best
+}
+
+/// Gaussian-mixture embedding cloud with multi-label Zipf topics.
+#[allow(clippy::too_many_arguments)]
+fn mixture_with_topics(
+    n: usize,
+    dim: usize,
+    n_topics: u32,
+    n_clusters: usize,
+    spread: f64,
+    max_topics: usize,
+    zipf_s: f64,
+    metric: Metric,
+    seed: u64,
+    tag: &str,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut centers = vec![0.0f64; n_clusters * dim];
+    for c in centers.iter_mut() {
+        *c = rng.normal();
+    }
+    let mut coords = Vec::with_capacity(n * dim);
+    let mut categories = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(n_clusters);
+        for j in 0..dim {
+            coords.push((centers[c * dim + j] + rng.normal() * spread) as f32);
+        }
+        let n_cats = 1 + rng.below(max_topics);
+        let mut cats: Vec<u32> = (0..n_cats)
+            .map(|_| rng.zipf(n_topics as usize, zipf_s) as u32)
+            .collect();
+        cats.sort_unstable();
+        cats.dedup();
+        categories.push(cats);
+    }
+    Dataset::new(dim, metric, coords, categories, n_topics, format!("{tag}(n={n})"))
+}
+
+/// `n` points uniform in `[0,1]^dim` — doubling dimension ~ dim.
+pub fn uniform_cube(n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let coords: Vec<f32> = (0..n * dim).map(|_| rng.f32()).collect();
+    Dataset::new(
+        dim,
+        Metric::Euclidean,
+        coords,
+        vec![vec![0]; n],
+        1,
+        format!("cube(n={n},d={dim})"),
+    )
+}
+
+/// `n` points around `n_clusters` well-separated centers in `dim`
+/// dimensions, `n_labels` single categories assigned round-robin per
+/// cluster (so partition constraints interact with geometry).
+pub fn clustered(
+    n: usize,
+    dim: usize,
+    n_clusters: usize,
+    spread: f64,
+    n_labels: u32,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut centers = vec![0.0f64; n_clusters * dim];
+    for c in centers.iter_mut() {
+        *c = rng.f64() * 10.0;
+    }
+    let mut coords = Vec::with_capacity(n * dim);
+    let mut categories = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % n_clusters;
+        for j in 0..dim {
+            coords.push((centers[c * dim + j] + rng.normal() * spread) as f32);
+        }
+        categories.push(vec![(c as u32) % n_labels]);
+    }
+    Dataset::new(
+        dim,
+        Metric::Euclidean,
+        coords,
+        categories,
+        n_labels,
+        format!("clustered(n={n},c={n_clusters})"),
+    )
+}
+
+/// Regular grid in `[0,1]^2` (n = side^2) — known geometry for exact
+/// assertions (diameter, GMM radius) in tests.
+pub fn grid(side: usize) -> Dataset {
+    let mut coords = Vec::with_capacity(side * side * 2);
+    for i in 0..side {
+        for j in 0..side {
+            coords.push(i as f32 / (side.max(2) - 1) as f32);
+            coords.push(j as f32 / (side.max(2) - 1) as f32);
+        }
+    }
+    let n = side * side;
+    Dataset::new(
+        2,
+        Metric::Euclidean,
+        coords,
+        vec![vec![0]; n],
+        1,
+        format!("grid({side}x{side})"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matroid::{Matroid, TransversalMatroid};
+
+    #[test]
+    fn wikisim_shape_and_categories() {
+        let ds = wikisim(500, 1);
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.dim, 25);
+        assert_eq!(ds.metric, Metric::Cosine);
+        assert_eq!(ds.n_categories, 100);
+        assert!(ds.categories.iter().all(|c| (1..=4).contains(&c.len())));
+        // topic popularity must be skewed (Zipf)
+        let hist = ds.category_histogram();
+        assert!(hist[0] > hist[99]);
+    }
+
+    #[test]
+    fn wikisim_deterministic() {
+        let a = wikisim(100, 7);
+        let b = wikisim(100, 7);
+        assert_eq!(a.coords, b.coords);
+        assert_eq!(a.categories, b.categories);
+        let c = wikisim(100, 8);
+        assert_ne!(a.coords, c.coords);
+    }
+
+    #[test]
+    fn songsim_nonnegative_and_partition_ready() {
+        let ds = songsim(500, 2);
+        assert!(ds.coords.iter().all(|&v| v >= 0.0));
+        assert!(ds.categories.iter().all(|c| c.len() == 1));
+        assert_eq!(ds.n_categories, 16);
+    }
+
+    #[test]
+    fn songsim_matroid_hits_target_rank() {
+        let ds = songsim(2000, 3);
+        let m = songsim_matroid(&ds, 89);
+        let rank = m.rank_bound(&ds);
+        assert!((89..=105).contains(&rank), "rank {rank}");
+    }
+
+    #[test]
+    fn wikisim_transversal_nontrivial() {
+        let ds = wikisim(300, 4);
+        let m = TransversalMatroid::new();
+        // a full-dataset rank bound exists and small sets are independent
+        assert!(m.is_independent(&ds, &[0, 1]) || !m.is_independent(&ds, &[0, 1]));
+        assert_eq!(m.rank_bound(&ds), 100);
+    }
+
+    #[test]
+    fn grid_diameter_is_sqrt2() {
+        let ds = grid(5);
+        assert!((ds.diameter_exact() - (2.0f64).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clustered_labels_within_range() {
+        let ds = clustered(120, 4, 6, 0.05, 3, 5);
+        assert!(ds.categories.iter().all(|c| c[0] < 3));
+        assert_eq!(ds.n(), 120);
+    }
+}

@@ -1,0 +1,221 @@
+//! Diversity objectives (paper Table 1) and average-farness machinery (§3).
+//!
+//! Every objective is a sum of `f(k)` pairwise distances; the coreset radius
+//! bound `r <= (eps/4) * rho_{S,k}` of Lemma 2 is expressed through
+//! [`farness_lower_bound`] (Lemma 1).
+
+use crate::core::Dataset;
+
+pub mod bipartition;
+pub mod mst;
+pub mod tsp;
+
+/// The five DMMC instantiations of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// sum-DMMC: sum of all pairwise distances (a.k.a. max-sum dispersion).
+    Sum,
+    /// star-DMMC: min over centers c of the star weight around c.
+    Star,
+    /// tree-DMMC: weight of a minimum spanning tree.
+    Tree,
+    /// cycle-DMMC: weight of a minimum Hamiltonian cycle (TSP).
+    Cycle,
+    /// bipartition-DMMC: minimum weight balanced-cut.
+    Bipartition,
+}
+
+pub const ALL_OBJECTIVES: [Objective; 5] = [
+    Objective::Sum,
+    Objective::Star,
+    Objective::Tree,
+    Objective::Cycle,
+    Objective::Bipartition,
+];
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Sum => "sum",
+            Objective::Star => "star",
+            Objective::Tree => "tree",
+            Objective::Cycle => "cycle",
+            Objective::Bipartition => "bipartition",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Objective> {
+        ALL_OBJECTIVES.into_iter().find(|o| o.name() == s)
+    }
+
+    /// `f(k)`: the number of distances contributing to the objective (§3).
+    pub fn f_k(self, k: usize) -> f64 {
+        match self {
+            Objective::Sum => (k * k.saturating_sub(1)) as f64 / 2.0,
+            Objective::Star | Objective::Tree => k.saturating_sub(1) as f64,
+            Objective::Cycle => k as f64,
+            Objective::Bipartition => ((k / 2) * k.div_ceil(2)) as f64,
+        }
+    }
+
+    /// Lemma 1 lower bound on the average farness `rho_{S,k}` as a multiple
+    /// of the dataset diameter: returns `c` with `rho >= c * diameter`.
+    pub fn farness_coefficient(self, k: usize) -> f64 {
+        assert!(k > 1, "farness defined for k > 1");
+        match self {
+            Objective::Sum => 1.0 / (2.0 * k as f64),
+            Objective::Star => 1.0 / (4.0 * (k as f64 - 1.0)),
+            Objective::Tree => 1.0 / (2.0 * (k as f64 - 1.0)),
+            Objective::Cycle => 1.0 / k as f64,
+            Objective::Bipartition => 1.0 / (2.0 * (k as f64 + 1.0)),
+        }
+    }
+}
+
+/// Lemma 1: `rho_{S,k} >= farness_coefficient * Delta_S`.
+pub fn farness_lower_bound(obj: Objective, k: usize, diameter: f64) -> f64 {
+    obj.farness_coefficient(k) * diameter
+}
+
+/// Evaluate the diversity of `set` under `obj` (exact solvers; see the
+/// sub-modules for the cycle/bipartition algorithms and their size guards).
+pub fn diversity(ds: &Dataset, set: &[usize], obj: Objective) -> f64 {
+    match obj {
+        Objective::Sum => sum_diversity(ds, set),
+        Objective::Star => star_diversity(ds, set),
+        Objective::Tree => mst::mst_weight(ds, set),
+        Objective::Cycle => tsp::tsp_weight(ds, set),
+        Objective::Bipartition => bipartition::min_bipartition_weight(ds, set),
+    }
+}
+
+/// Sum of all pairwise distances.
+pub fn sum_diversity(ds: &Dataset, set: &[usize]) -> f64 {
+    let mut acc = 0.0;
+    for (a, &i) in set.iter().enumerate() {
+        for &j in &set[a + 1..] {
+            acc += ds.dist(i, j);
+        }
+    }
+    acc
+}
+
+/// min over c in X of sum_{u != c} d(c, u).
+pub fn star_diversity(ds: &Dataset, set: &[usize]) -> f64 {
+    if set.len() < 2 {
+        return 0.0;
+    }
+    let mut best = f64::INFINITY;
+    for &c in set {
+        let mut s = 0.0;
+        for &u in set {
+            if u != c {
+                s += ds.dist(c, u);
+            }
+        }
+        best = best.min(s);
+    }
+    best
+}
+
+/// Dense distance matrix over `set` (row-major `set.len()^2`), shared by
+/// the exact solvers and the local search on coresets.
+pub fn distance_submatrix(ds: &Dataset, set: &[usize]) -> Vec<f64> {
+    let k = set.len();
+    let mut m = vec![0.0f64; k * k];
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let d = ds.dist(set[a], set[b]);
+            m[a * k + b] = d;
+            m[b * k + a] = d;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dataset, Metric};
+
+    /// 4 points on a line: 0, 1, 3, 7.
+    fn line() -> Dataset {
+        Dataset::new(
+            1,
+            Metric::Euclidean,
+            vec![0.0, 1.0, 3.0, 7.0],
+            vec![vec![0]; 4],
+            1,
+            "line",
+        )
+    }
+
+    #[test]
+    fn f_k_values() {
+        assert_eq!(Objective::Sum.f_k(5), 10.0);
+        assert_eq!(Objective::Star.f_k(5), 4.0);
+        assert_eq!(Objective::Tree.f_k(5), 4.0);
+        assert_eq!(Objective::Cycle.f_k(5), 5.0);
+        assert_eq!(Objective::Bipartition.f_k(5), 6.0); // 2*3
+        assert_eq!(Objective::Bipartition.f_k(4), 4.0); // 2*2
+    }
+
+    #[test]
+    fn sum_diversity_line() {
+        let ds = line();
+        // pairs: 1+3+7 + 2+6 + 4 = 23
+        assert!((sum_diversity(&ds, &[0, 1, 2, 3]) - 23.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_diversity_line() {
+        let ds = line();
+        // center 1 minimizes: d(1,0)+d(1,3)+d(1,7) = 1+2+6 = 9
+        assert!((star_diversity(&ds, &[0, 1, 2, 3]) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diversity_dispatch_matches_directs() {
+        let ds = line();
+        let set = [0usize, 1, 2, 3];
+        assert_eq!(diversity(&ds, &set, Objective::Sum), sum_diversity(&ds, &set));
+        assert_eq!(
+            diversity(&ds, &set, Objective::Tree),
+            mst::mst_weight(&ds, &set)
+        );
+    }
+
+    #[test]
+    fn farness_coefficients_positive_and_ordered() {
+        for obj in ALL_OBJECTIVES {
+            for k in 2..20 {
+                let c = obj.farness_coefficient(k);
+                assert!(c > 0.0 && c <= 1.0);
+            }
+        }
+        // tree bound is twice the star bound (Lemma 1)
+        assert!(
+            (Objective::Tree.farness_coefficient(5)
+                - 2.0 * Objective::Star.farness_coefficient(5))
+            .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn submatrix_symmetric_zero_diag() {
+        let ds = line();
+        let m = distance_submatrix(&ds, &[0, 2, 3]);
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m[1], m[3]);
+        assert!((m[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_small_sets() {
+        let ds = line();
+        assert_eq!(sum_diversity(&ds, &[0]), 0.0);
+        assert_eq!(star_diversity(&ds, &[0]), 0.0);
+        assert_eq!(diversity(&ds, &[], Objective::Sum), 0.0);
+    }
+}

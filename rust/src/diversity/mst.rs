@@ -1,0 +1,146 @@
+//! Exact minimum spanning tree weight (tree-DMMC objective) via Prim's
+//! algorithm in O(k^2) — k is a solution size, so dense Prim beats any
+//! heap-based variant here.
+
+use crate::core::Dataset;
+
+/// Weight of the MST of the complete graph on `set` with pairwise-distance
+/// edge weights.  Returns 0 for |set| < 2.
+pub fn mst_weight(ds: &Dataset, set: &[usize]) -> f64 {
+    let k = set.len();
+    if k < 2 {
+        return 0.0;
+    }
+    let mut in_tree = vec![false; k];
+    let mut best = vec![f64::INFINITY; k];
+    in_tree[0] = true;
+    for j in 1..k {
+        best[j] = ds.dist(set[0], set[j]);
+    }
+    let mut total = 0.0;
+    for _ in 1..k {
+        let mut pick = usize::MAX;
+        let mut pick_d = f64::INFINITY;
+        for j in 0..k {
+            if !in_tree[j] && best[j] < pick_d {
+                pick = j;
+                pick_d = best[j];
+            }
+        }
+        debug_assert_ne!(pick, usize::MAX);
+        in_tree[pick] = true;
+        total += pick_d;
+        for j in 0..k {
+            if !in_tree[j] {
+                let d = ds.dist(set[pick], set[j]);
+                if d < best[j] {
+                    best[j] = d;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// MST weight from a precomputed dense matrix (row-major k*k), used by the
+/// exhaustive search to avoid re-deriving distances per candidate subset.
+pub fn mst_weight_matrix(m: &[f64], k: usize, members: &[usize]) -> f64 {
+    let s = members.len();
+    if s < 2 {
+        return 0.0;
+    }
+    let mut in_tree = vec![false; s];
+    let mut best = vec![f64::INFINITY; s];
+    in_tree[0] = true;
+    for j in 1..s {
+        best[j] = m[members[0] * k + members[j]];
+    }
+    let mut total = 0.0;
+    for _ in 1..s {
+        let mut pick = usize::MAX;
+        let mut pick_d = f64::INFINITY;
+        for j in 0..s {
+            if !in_tree[j] && best[j] < pick_d {
+                pick = j;
+                pick_d = best[j];
+            }
+        }
+        in_tree[pick] = true;
+        total += pick_d;
+        for j in 0..s {
+            if !in_tree[j] {
+                let d = m[members[pick] * k + members[j]];
+                if d < best[j] {
+                    best[j] = d;
+                }
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dataset, Metric};
+    use crate::diversity::distance_submatrix;
+
+    fn square() -> Dataset {
+        // unit square corners
+        Dataset::new(
+            2,
+            Metric::Euclidean,
+            vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+            vec![vec![0]; 4],
+            1,
+            "square",
+        )
+    }
+
+    #[test]
+    fn unit_square_mst_is_three() {
+        let ds = square();
+        assert!((mst_weight(&ds, &[0, 1, 2, 3]) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn line_mst() {
+        let ds = Dataset::new(
+            1,
+            Metric::Euclidean,
+            vec![0.0, 1.0, 3.0, 7.0],
+            vec![vec![0]; 4],
+            1,
+            "line",
+        );
+        // MST on a line = span = 7
+        assert!((mst_weight(&ds, &[0, 1, 2, 3]) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_variant_agrees() {
+        let ds = square();
+        let set = [0usize, 1, 2, 3];
+        let m = distance_submatrix(&ds, &set);
+        let via_matrix = mst_weight_matrix(&m, 4, &[0, 1, 2, 3]);
+        assert!((via_matrix - mst_weight(&ds, &set)).abs() < 1e-12);
+        // and on a sub-selection
+        let sub = mst_weight_matrix(&m, 4, &[0, 3]);
+        assert!((sub - ds.dist(0, 3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate() {
+        let ds = square();
+        assert_eq!(mst_weight(&ds, &[0]), 0.0);
+        assert_eq!(mst_weight(&ds, &[]), 0.0);
+    }
+
+    #[test]
+    fn mst_leq_any_spanning_path() {
+        let ds = square();
+        let set = [0usize, 1, 3, 2];
+        let path: f64 = (0..3).map(|i| ds.dist(set[i], set[i + 1])).sum();
+        assert!(mst_weight(&ds, &set) <= path + 1e-12);
+    }
+}

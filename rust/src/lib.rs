@@ -1,0 +1,40 @@
+//! # matroid-coreset
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *"A General
+//! Coreset-Based Approach to Diversity Maximization under Matroid
+//! Constraints"* (Ceccarello, Pietracaprina, Pucci — CS.DC 2020).
+//!
+//! The crate implements the paper's full system surface:
+//!
+//! * **coreset constructions** for partition / transversal / general
+//!   matroids ([`algo::seq_coreset`], [`algo::stream_coreset`],
+//!   [`mapreduce`]),
+//! * the **five DMMC objectives** of Table 1 ([`diversity`]),
+//! * **final-solution extractors**: AMT local search for sum-DMMC
+//!   ([`algo::local_search`]) and matroid-pruned exhaustive search for the
+//!   other variants ([`algo::exhaustive`]),
+//! * the **PJRT runtime** that executes the AOT-compiled Pallas distance
+//!   kernels from the Rust hot path ([`runtime`]),
+//! * and the experiment substrate: synthetic datasets ([`data`]),
+//!   a thread-based MapReduce simulator ([`mapreduce`]), a streaming
+//!   harness ([`streaming`]), an experiment coordinator ([`coordinator`]),
+//!   a bench harness ([`bench`]) and a mini property-testing framework
+//!   ([`proptest`]).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod algo;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod diversity;
+pub mod mapreduce;
+pub mod matroid;
+pub mod proptest;
+pub mod runtime;
+pub mod streaming;
+pub mod util;

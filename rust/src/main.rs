@@ -1,0 +1,377 @@
+//! `dmmc` — the CLI launcher for the matroid-coreset system.
+//!
+//! Subcommands:
+//!
+//! * `gen-data`        — generate a synthetic dataset to a `.dmmc` file
+//! * `stats`           — Table-2-style dataset statistics
+//! * `run`             — full pipeline: coreset setting + finisher
+//! * `sweep`           — config-driven experiment grid (configs/*.toml)
+//! * `artifacts-check` — load + smoke-run the AOT artifacts vs the scalar oracle
+//! * `help`            — usage
+//!
+//! Examples:
+//!
+//! ```text
+//! dmmc gen-data --kind wikisim --n 100000 --seed 1 --out wiki.dmmc
+//! dmmc run --data wikisim:20000 --algo seq --tau 64 --k 25 --finisher local-search
+//! dmmc run --data songsim:20000 --algo mr --workers 8 --tau 64 --k 22
+//! dmmc run --data cube:5000x8 --algo stream --tau 32 --k 6 --objective tree --finisher exhaustive
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use matroid_coreset::algo::Budget;
+use matroid_coreset::cli::Args;
+use matroid_coreset::coordinator::{
+    build_dataset, build_matroid, run_pipeline, DatasetSpec, Finisher, MatroidSpec, Pipeline,
+    Setting,
+};
+use matroid_coreset::data::{io, synth};
+use matroid_coreset::diversity::Objective;
+use matroid_coreset::matroid::Matroid;
+use matroid_coreset::runtime::{
+    default_artifact_dir, EngineKind, Manifest, PjrtEngine, ScalarEngine,
+};
+use matroid_coreset::runtime::engine::DistanceEngine;
+use matroid_coreset::streaming::StreamMode;
+
+const USAGE: &str = "\
+dmmc — coreset-based diversity maximization under matroid constraints
+
+USAGE: dmmc <subcommand> [options]
+
+SUBCOMMANDS
+  gen-data   --kind wikisim|songsim|cube|clustered --n N [--seed S] --out F [--stats]
+  stats      --data <file|kind:n>
+  run        --data <file|kind:n> --algo seq|stream|mr|full
+             [--k K] [--tau T | --eps E] [--workers L] [--objective sum|star|tree|cycle|bipartition]
+             [--finisher local-search|exhaustive|greedy] [--gamma G]
+             [--engine scalar|pjrt] [--matroid transversal|partition:R|uniform:R] [--seed S]
+  sweep      --config configs/<file>.toml [--csv out.csv]
+  artifacts-check  [--data <kind:n>]
+  help
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(2);
+    }
+    match run(argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "gen-data" => cmd_gen_data(&args),
+        "stats" => cmd_stats(&args),
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other}\n{USAGE}"),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    args.expect_known(&["kind", "n", "seed", "out", "stats", "dim"])?;
+    let kind = args.require("kind")?;
+    let n = args.usize_or("n", 10_000)?;
+    let seed = args.u64_or("seed", 1)?;
+    let ds = match kind {
+        "wikisim" => synth::wikisim(n, seed),
+        "songsim" => synth::songsim(n, seed),
+        "cube" => synth::uniform_cube(n, args.usize_or("dim", 8)?, seed),
+        "clustered" => synth::clustered(n, args.usize_or("dim", 8)?, 16, 0.1, 8, seed),
+        other => bail!("unknown kind {other}"),
+    };
+    if args.flag("stats") {
+        print_stats(&ds);
+    }
+    let out = args.require("out")?;
+    io::save(&ds, out)?;
+    println!("wrote {} points to {out}", ds.n());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    args.expect_known(&["data", "seed"])?;
+    let seed = args.u64_or("seed", 1)?;
+    let spec = DatasetSpec::parse(args.require("data")?, seed)?;
+    let ds = build_dataset(&spec)?;
+    print_stats(&ds);
+    Ok(())
+}
+
+fn print_stats(ds: &matroid_coreset::core::Dataset) {
+    println!("dataset         {}", ds.name);
+    println!("n               {}", ds.n());
+    println!("dim             {}", ds.dim);
+    println!("metric          {}", ds.metric.name());
+    println!("categories      {}", ds.n_categories);
+    let hist = ds.category_histogram();
+    let nonzero = hist.iter().filter(|&&c| c > 0).count();
+    let maxc = hist.iter().copied().max().unwrap_or(0);
+    println!("nonempty cats   {nonzero}");
+    println!("largest cat     {maxc}");
+    let avg =
+        ds.categories.iter().map(|c| c.len()).sum::<usize>() as f64 / ds.n().max(1) as f64;
+    println!("cats per point  {avg:.2}");
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "data", "algo", "k", "tau", "eps", "workers", "objective", "finisher", "gamma",
+        "engine", "matroid", "seed", "second-round-tau",
+    ])?;
+    let seed = args.u64_or("seed", 1)?;
+    let spec = DatasetSpec::parse(args.require("data")?, seed)?;
+    let ds = build_dataset(&spec)?;
+    let mspec = match args.opt("matroid") {
+        Some(s) => MatroidSpec::parse(s)?,
+        None => MatroidSpec::default_for(&spec),
+    };
+    let matroid = build_matroid(&mspec, &ds);
+    let rank = matroid.rank_bound(&ds);
+    let k = args.usize_or("k", (rank / 4).max(2))?;
+
+    let budget = if let Some(eps) = args.opt("eps") {
+        Budget::Epsilon(eps.parse().context("--eps")?)
+    } else {
+        Budget::Clusters(args.usize_or("tau", 64)?)
+    };
+    let setting = match args.str_or("algo", "seq") {
+        "seq" => Setting::Seq { budget },
+        "stream" => Setting::Stream {
+            mode: match budget {
+                Budget::Epsilon(e) => StreamMode::Epsilon(e),
+                Budget::Clusters(t) => StreamMode::Tau(t),
+            },
+        },
+        "mr" => Setting::MapReduce {
+            workers: args.usize_or("workers", 4)?,
+            budget,
+            second_round_tau: match args.opt("second-round-tau") {
+                Some(v) => Some(v.parse().context("--second-round-tau")?),
+                None => None,
+            },
+        },
+        "full" => Setting::Full,
+        other => bail!("unknown --algo {other}"),
+    };
+    let objective = Objective::parse(args.str_or("objective", "sum"))
+        .context("bad --objective")?;
+    let finisher = match args.str_or("finisher", "local-search") {
+        "local-search" | "ls" => Finisher::LocalSearch {
+            gamma: args.f64_or("gamma", 0.0)?,
+        },
+        "exhaustive" => Finisher::Exhaustive,
+        "greedy" => Finisher::Greedy,
+        other => bail!("unknown --finisher {other}"),
+    };
+    let engine = EngineKind::parse(args.str_or("engine", "scalar"))
+        .context("bad --engine (scalar|pjrt)")?;
+
+    println!(
+        "run: data={} n={} matroid={} rank={} k={k} objective={} algo={:?} engine={}",
+        ds.name,
+        ds.n(),
+        matroid.describe(),
+        rank,
+        objective.name(),
+        setting,
+        engine.name(),
+    );
+    let out = run_pipeline(
+        &ds,
+        &matroid,
+        k,
+        objective,
+        Pipeline {
+            setting,
+            finisher,
+            engine,
+        },
+        seed,
+    )?;
+    println!("diversity       {:.6}", out.diversity);
+    println!("solution size   {}", out.solution.len());
+    println!("coreset size    {}", out.coreset_size);
+    println!("coreset time    {:.3}s", out.coreset_time.as_secs_f64());
+    println!("finish time     {:.3}s", out.finish_time.as_secs_f64());
+    println!("total time      {:.3}s", out.total_time().as_secs_f64());
+    for (key, value) in &out.extra {
+        println!("  {key} = {value}");
+    }
+    Ok(())
+}
+
+/// Config-driven experiment grid: algos x taus x seeds x k from a TOML
+/// file (see configs/*.toml).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use matroid_coreset::bench::{time_once, Table};
+    use matroid_coreset::config::Config;
+    use matroid_coreset::csv_row;
+    use matroid_coreset::util::csv::CsvWriter;
+
+    args.expect_known(&["config", "csv"])?;
+    let cfg = Config::load(args.require("config")?)?;
+    let title = cfg.str_or("title", "sweep");
+
+    // dataset + matroid
+    let kind = cfg.str("dataset.kind")?;
+    let n = cfg.usize("dataset.n")?;
+    let base_seed = 1u64;
+    let ds = match kind {
+        "wikisim" => synth::wikisim(n, base_seed),
+        "songsim" => synth::songsim(n, base_seed),
+        "cube" => synth::uniform_cube(n, cfg.usize_or("dataset.dim", 8), base_seed),
+        other => bail!("dataset.kind {other} unknown"),
+    };
+    let mspec = match kind {
+        "wikisim" => MatroidSpec::Transversal,
+        "songsim" => MatroidSpec::PartitionProportional { target_rank: 89 },
+        _ => MatroidSpec::Uniform(cfg.usize_or("run.k", 8)),
+    };
+    let matroid = build_matroid(&mspec, &ds);
+    let rank = matroid.rank_bound(&ds);
+
+    let algos: Vec<String> = match cfg.get("sweep.algos") {
+        Some(matroid_coreset::config::Value::List(items)) => items
+            .iter()
+            .map(|v| match v {
+                matroid_coreset::config::Value::Str(s) => Ok(s.clone()),
+                other => bail!("sweep.algos entry {other:?} not a string"),
+            })
+            .collect::<Result<_>>()?,
+        _ => bail!("sweep.algos must be a list of strings"),
+    };
+    let taus = cfg.usize_list("sweep.taus")?;
+    let seeds = cfg.usize_list("sweep.seeds")?;
+    let k_fracs = cfg.usize_list("sweep.k_fractions")?;
+    let objective =
+        Objective::parse(cfg.str_or("run.objective", "sum")).context("run.objective")?;
+    let finisher = match cfg.str_or("run.finisher", "local-search") {
+        "local-search" => Finisher::LocalSearch {
+            gamma: cfg.f64_or("run.gamma", 0.0),
+        },
+        "exhaustive" => Finisher::Exhaustive,
+        "greedy" => Finisher::Greedy,
+        other => bail!("run.finisher {other} unknown"),
+    };
+    let engine = EngineKind::parse(cfg.str_or("run.engine", "scalar")).context("run.engine")?;
+
+    println!("sweep '{title}': {} n={} rank={rank}", ds.name, ds.n());
+    let mut table = Table::new(&["algo", "tau", "k", "seed", "diversity", "coreset_s", "finish_s", "|T|"]);
+    let mut csv = CsvWriter::create(
+        args.str_or("csv", &format!("bench_results/sweep_{title}.csv")),
+        &["algo", "tau", "k", "seed", "diversity", "coreset_s", "finish_s", "coreset_size"],
+    )?;
+    for algo in &algos {
+        for &tau in &taus {
+            for &frac in &k_fracs {
+                let k = if frac == 0 {
+                    cfg.usize_or("run.k", 8)
+                } else {
+                    (rank / frac).max(2)
+                };
+                for &seed in &seeds {
+                    let setting = match algo.as_str() {
+                        "seq" => Setting::Seq { budget: Budget::Clusters(tau) },
+                        "stream" => Setting::Stream { mode: StreamMode::Tau(tau) },
+                        "full" => Setting::Full,
+                        mr if mr.starts_with("mr") => {
+                            let workers: usize = mr[2..].parse().context("mrN algo")?;
+                            Setting::MapReduce {
+                                workers,
+                                budget: Budget::Clusters((tau / workers).max(1)),
+                                second_round_tau: None,
+                            }
+                        }
+                        other => bail!("sweep algo {other} unknown"),
+                    };
+                    let (out, _) = time_once(|| {
+                        run_pipeline(
+                            &ds,
+                            &matroid,
+                            k,
+                            objective,
+                            Pipeline { setting, finisher, engine },
+                            seed as u64,
+                        )
+                    });
+                    let out = out?;
+                    table.row(csv_row![
+                        algo,
+                        tau,
+                        k,
+                        seed,
+                        format!("{:.4}", out.diversity),
+                        format!("{:.3}", out.coreset_time.as_secs_f64()),
+                        format!("{:.3}", out.finish_time.as_secs_f64()),
+                        out.coreset_size
+                    ]);
+                    csv.row(&csv_row![
+                        algo, tau, k, seed, out.diversity,
+                        out.coreset_time.as_secs_f64(),
+                        out.finish_time.as_secs_f64(),
+                        out.coreset_size
+                    ])?;
+                }
+            }
+        }
+    }
+    csv.flush()?;
+    table.print();
+    Ok(())
+}
+
+/// Compile every artifact and cross-check PJRT numerics vs the scalar oracle.
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    args.expect_known(&["data", "seed"])?;
+    let seed = args.u64_or("seed", 1)?;
+    let spec = DatasetSpec::parse(args.str_or("data", "wikisim:2000"), seed)?;
+    let ds = build_dataset(&spec)?;
+    let manifest = Manifest::load(default_artifact_dir())?;
+    println!(
+        "manifest ok: np={} tp={} tc={} entries={}",
+        manifest.np,
+        manifest.tp,
+        manifest.tc,
+        manifest.entries.len()
+    );
+    let engine = PjrtEngine::for_dataset(&manifest, &ds)?;
+    println!("pjrt engine: platform={} padded_dim={}", engine.platform(), engine.padded_dim());
+
+    // cross-check update_min against the scalar engine on a few centers
+    let scalar = ScalarEngine::new();
+    let n = ds.n();
+    let mut mind_p = vec![f32::INFINITY; n];
+    let mut arg_p = vec![u32::MAX; n];
+    let mut mind_s = vec![f32::INFINITY; n];
+    let mut arg_s = vec![u32::MAX; n];
+    for (id, &c) in [0usize, n / 3, n / 2, n - 1].iter().enumerate() {
+        engine.update_min(&ds, c, id as u32, &mut mind_p, &mut arg_p)?;
+        scalar.update_min(&ds, c, id as u32, &mut mind_s, &mut arg_s)?;
+    }
+    let mut max_err = 0.0f64;
+    for i in 0..n {
+        max_err = max_err.max((mind_p[i] as f64 - mind_s[i] as f64).abs());
+    }
+    println!("update_min max |pjrt - scalar| = {max_err:.3e}");
+    if max_err > 1e-3 {
+        bail!("artifact numerics diverge from scalar oracle");
+    }
+    println!("artifacts-check OK");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! MapReduce coreset construction (paper §4.2) on a thread-based simulator.
+//!
+//! The construction is *composable* (Theorem 6): partition `S` arbitrarily
+//! into `ell` shards, build a `(1-eps)`-coreset per shard with SeqCoreset,
+//! and take the union.  Round 2 gathers the union in one "reducer" where
+//! the final sequential algorithm runs; an optional intermediate
+//! re-compression (SeqCoreset on the round-1 union) bounds the final
+//! coreset size independently of `ell` (§4.4.2).
+//!
+//! The simulator runs one OS thread per shard ("machine") and accounts for
+//! the quantities the paper's MR model cares about: rounds, per-reducer
+//! local memory (`M_L = O(n / ell)`), per-worker wall time, and the
+//! simulated cluster makespan (max over workers) — see DESIGN.md §1 for
+//! why this substitutes for the paper's 16-node Spark cluster.
+
+pub mod runner;
+
+pub use runner::{mr_coreset, MapReduceConfig, MrReport};

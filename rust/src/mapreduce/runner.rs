@@ -1,0 +1,219 @@
+//! The MapReduce simulator runner.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::algo::seq_coreset::seq_coreset;
+use crate::algo::{Budget, Coreset};
+use crate::core::Dataset;
+use crate::matroid::Matroid;
+use crate::runtime::engine::ScalarEngine;
+use crate::util::rng::Rng;
+
+/// Configuration of one MR coreset job.
+#[derive(Clone, Copy, Debug)]
+pub struct MapReduceConfig {
+    /// Degree of parallelism `ell` (shards == worker threads).
+    pub workers: usize,
+    /// Per-worker coreset budget.  The paper's Fig. 3 setup fixes a global
+    /// tau and gives each worker `tau / ell` clusters; express that here by
+    /// passing `Budget::Clusters(tau / ell)`.
+    pub budget: Budget,
+    /// Optional round-2 re-compression: run SeqCoreset with this cluster
+    /// budget on the round-1 union (paper §4.4.2).
+    pub second_round_tau: Option<usize>,
+    /// Seed for the arbitrary (random) partition of `S`.
+    pub seed: u64,
+}
+
+/// Outcome + accounting of an MR run.
+#[derive(Clone, Debug)]
+pub struct MrReport {
+    /// The final coreset (indices into the input dataset).
+    pub coreset: Coreset,
+    /// MR rounds used (1, or 2 with re-compression).
+    pub rounds: usize,
+    /// Max shard size = the paper's local-memory bound `M_L` for round 1.
+    pub local_memory_points: usize,
+    /// Per-worker wall-clock times (round 1).
+    pub worker_times: Vec<Duration>,
+    /// Simulated cluster makespan: max over worker times.
+    pub makespan_round1: Duration,
+    /// Wall-clock of the whole job as actually executed (threads overlap).
+    pub wall_time: Duration,
+    /// Per-worker coreset sizes.
+    pub shard_coreset_sizes: Vec<usize>,
+}
+
+/// Build a coreset of `ds` in (simulated) MapReduce.
+pub fn mr_coreset<M: Matroid + Sync>(
+    ds: &Dataset,
+    m: &M,
+    k: usize,
+    cfg: MapReduceConfig,
+) -> Result<MrReport> {
+    assert!(cfg.workers >= 1);
+    let t0 = Instant::now();
+    let n = ds.n();
+    // map phase: random even partition into `workers` shards
+    let mut rng = Rng::new(cfg.seed);
+    let perm = rng.permutation(n);
+    let mut shards: Vec<Vec<usize>> = vec![Vec::with_capacity(n / cfg.workers + 1); cfg.workers];
+    for (pos, &idx) in perm.iter().enumerate() {
+        shards[pos % cfg.workers].push(idx);
+    }
+    let local_memory_points = shards.iter().map(|s| s.len()).max().unwrap_or(0);
+
+    // reduce phase, one thread per shard
+    type ShardOut = Result<(Vec<usize>, Coreset, Duration)>;
+    let results: Vec<ShardOut> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .map(|shard| {
+                scope.spawn(move || -> ShardOut {
+                    let w0 = Instant::now();
+                    let local = ds.subset(shard);
+                    let engine = ScalarEngine::new();
+                    let cs = seq_coreset(&local, m, k, cfg.budget, &engine)?;
+                    // map local coreset indices back to global ids
+                    let global: Vec<usize> = cs.indices.iter().map(|&i| shard[i]).collect();
+                    Ok((global, cs, w0.elapsed()))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let mut union: Vec<usize> = Vec::new();
+    let mut worker_times = Vec::with_capacity(cfg.workers);
+    let mut shard_coreset_sizes = Vec::with_capacity(cfg.workers);
+    let mut n_clusters = 0;
+    let mut radius = 0.0f64;
+    for r in results {
+        let (global, cs, dt) = r?;
+        shard_coreset_sizes.push(global.len());
+        union.extend(global);
+        worker_times.push(dt);
+        n_clusters += cs.n_clusters;
+        radius = radius.max(cs.radius);
+    }
+    union.sort_unstable();
+    union.dedup();
+    let makespan_round1 = worker_times.iter().copied().max().unwrap_or_default();
+
+    let mut rounds = 1;
+    let coreset = if let Some(tau2) = cfg.second_round_tau {
+        rounds = 2;
+        let sub = ds.subset(&union);
+        let engine = ScalarEngine::new();
+        let cs2 = seq_coreset(&sub, m, k, Budget::Clusters(tau2), &engine)?;
+        let indices: Vec<usize> = cs2.indices.iter().map(|&i| union[i]).collect();
+        Coreset {
+            indices,
+            n_clusters: cs2.n_clusters,
+            radius: radius.max(cs2.radius),
+            timer: cs2.timer,
+        }
+    } else {
+        Coreset {
+            indices: union,
+            n_clusters,
+            radius,
+            timer: Default::default(),
+        }
+    };
+
+    Ok(MrReport {
+        coreset,
+        rounds,
+        local_memory_points,
+        worker_times,
+        makespan_round1,
+        wall_time: t0.elapsed(),
+        shard_coreset_sizes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
+
+    fn cfg(workers: usize, tau: usize) -> MapReduceConfig {
+        MapReduceConfig {
+            workers,
+            budget: Budget::Clusters(tau),
+            second_round_tau: None,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn single_worker_equals_sequential_shape() {
+        let ds = synth::clustered(400, 2, 6, 0.1, 3, 1);
+        let m = PartitionMatroid::new(vec![2; 3]);
+        let rep = mr_coreset(&ds, &m, 5, cfg(1, 16)).unwrap();
+        assert_eq!(rep.rounds, 1);
+        assert_eq!(rep.local_memory_points, 400);
+        assert!(rep.coreset.len() <= 5 * 16);
+    }
+
+    #[test]
+    fn shards_are_even_and_memory_sublinear() {
+        let ds = synth::uniform_cube(1000, 2, 2);
+        let m = UniformMatroid::new(4);
+        let rep = mr_coreset(&ds, &m, 4, cfg(8, 4)).unwrap();
+        assert_eq!(rep.worker_times.len(), 8);
+        assert!(rep.local_memory_points <= 1000usize.div_ceil(8));
+        // union of 8 shard coresets
+        assert!(rep.coreset.len() <= 8 * 4 * 4);
+    }
+
+    #[test]
+    fn coreset_contains_feasible_solution_any_parallelism() {
+        let ds = synth::clustered(600, 2, 5, 0.15, 4, 3);
+        let m = PartitionMatroid::new(vec![2; 4]);
+        let k = 6;
+        for ell in [1usize, 2, 4, 8] {
+            let rep = mr_coreset(&ds, &m, k, cfg(ell, 16 / ell.min(16))).unwrap();
+            let sol = maximal_independent(&m, &ds, &rep.coreset.indices, k);
+            assert_eq!(sol.len(), k, "ell={ell}");
+        }
+    }
+
+    #[test]
+    fn second_round_compresses() {
+        let ds = synth::uniform_cube(800, 2, 4);
+        let m = UniformMatroid::new(4);
+        let mut c = cfg(8, 8);
+        let rep1 = mr_coreset(&ds, &m, 4, c).unwrap();
+        c.second_round_tau = Some(8);
+        let rep2 = mr_coreset(&ds, &m, 4, c).unwrap();
+        assert_eq!(rep2.rounds, 2);
+        assert!(rep2.coreset.len() <= rep1.coreset.len());
+        assert!(rep2.coreset.len() <= 8 * 4 + 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = synth::uniform_cube(300, 2, 5);
+        let m = UniformMatroid::new(3);
+        let a = mr_coreset(&ds, &m, 3, cfg(4, 6)).unwrap();
+        let b = mr_coreset(&ds, &m, 3, cfg(4, 6)).unwrap();
+        assert_eq!(a.coreset.indices, b.coreset.indices);
+    }
+
+    #[test]
+    fn indices_global_and_valid() {
+        let ds = synth::uniform_cube(500, 3, 6);
+        let m = UniformMatroid::new(3);
+        let rep = mr_coreset(&ds, &m, 3, cfg(4, 8)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for &i in &rep.coreset.indices {
+            assert!(i < ds.n());
+            assert!(seen.insert(i), "duplicate index {i}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Graphic matroid: ground-set elements are edges of a graph, a set is
+//! independent iff it is a forest (union-find cycle check).
+//!
+//! This is a *test instance* of a genuinely non-partition, non-transversal
+//! matroid, used to exercise the general coreset construction (§3.1.3) and
+//! the `other` branches of EXTRACT / HANDLE.  Point `i` of the dataset is
+//! edge `edges[i]`; the geometric coordinates are independent of the graph
+//! structure (synthetic generators assign both).
+
+use crate::core::Dataset;
+use crate::matroid::{Matroid, MatroidKind};
+
+#[derive(Clone, Debug)]
+pub struct GraphicMatroid {
+    /// Edge of the underlying graph per dataset point.
+    edges: Vec<(u32, u32)>,
+    n_vertices: u32,
+}
+
+impl GraphicMatroid {
+    pub fn new(edges: Vec<(u32, u32)>, n_vertices: u32) -> Self {
+        assert!(edges
+            .iter()
+            .all(|&(u, v)| u < n_vertices && v < n_vertices && u != v));
+        GraphicMatroid { edges, n_vertices }
+    }
+
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+}
+
+/// Tiny union-find over vertices (path halving + union by size).
+struct Dsu {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl Dsu {
+    fn new(n: u32) -> Dsu {
+        Dsu {
+            parent: (0..n).collect(),
+            size: vec![1; n as usize],
+        }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    /// Returns false if `u` and `v` were already connected (cycle).
+    fn union(&mut self, u: u32, v: u32) -> bool {
+        let (ru, rv) = (self.find(u), self.find(v));
+        if ru == rv {
+            return false;
+        }
+        let (big, small) = if self.size[ru as usize] >= self.size[rv as usize] {
+            (ru, rv)
+        } else {
+            (rv, ru)
+        };
+        self.parent[small as usize] = big;
+        self.size[big as usize] += self.size[small as usize];
+        true
+    }
+}
+
+impl Matroid for GraphicMatroid {
+    fn is_independent(&self, _ds: &Dataset, set: &[usize]) -> bool {
+        let mut dsu = Dsu::new(self.n_vertices);
+        for &i in set {
+            let (u, v) = self.edges[i];
+            if !dsu.union(u, v) {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn rank_bound(&self, ds: &Dataset) -> usize {
+        (self.n_vertices as usize).saturating_sub(1).min(ds.n())
+    }
+
+    fn kind(&self) -> MatroidKind {
+        MatroidKind::General
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "graphic(V={}, E={})",
+            self.n_vertices,
+            self.edges.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Metric;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new(
+            1,
+            Metric::Euclidean,
+            (0..n).map(|i| i as f32).collect(),
+            vec![vec![0]; n],
+            1,
+            "test",
+        )
+    }
+
+    #[test]
+    fn forest_independent_cycle_not() {
+        // triangle 0-1, 1-2, 2-0 plus pendant 2-3
+        let m = GraphicMatroid::new(vec![(0, 1), (1, 2), (2, 0), (2, 3)], 4);
+        let d = ds(4);
+        assert!(m.is_independent(&d, &[0, 1]));
+        assert!(m.is_independent(&d, &[0, 1, 3]));
+        assert!(!m.is_independent(&d, &[0, 1, 2])); // the triangle
+    }
+
+    #[test]
+    fn augmentation_property_holds_here() {
+        let m = GraphicMatroid::new(vec![(0, 1), (1, 2), (2, 0), (2, 3)], 4);
+        let d = ds(4);
+        // |A|=3 spanning tree, |B|=1 -> some edge of A extends B
+        let a = [0usize, 1, 3];
+        let b = [2usize];
+        assert!(m.is_independent(&d, &a) && m.is_independent(&d, &b));
+        let extendable = a
+            .iter()
+            .filter(|&&x| !b.contains(&x) && m.can_extend(&d, &b, x))
+            .count();
+        assert!(extendable > 0);
+    }
+
+    #[test]
+    fn rank_is_vertices_minus_one() {
+        let m = GraphicMatroid::new(vec![(0, 1), (1, 2), (2, 0)], 3);
+        let d = ds(3);
+        assert_eq!(m.rank_bound(&d), 2);
+    }
+}

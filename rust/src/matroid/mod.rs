@@ -1,0 +1,169 @@
+//! Matroid abstraction (paper §2.1).
+//!
+//! A matroid `M = (S, I(S))` is exposed to the algorithms exclusively
+//! through an independence oracle, exactly as the paper assumes
+//! ("constant-time oracles ... to check whether a subset of S is an
+//! independent set").  The coreset EXTRACT / HANDLE procedures additionally
+//! dispatch on [`MatroidKind`]: partition and transversal matroids get the
+//! small-coreset constructions of §3.1.1-3.1.2, everything else falls back
+//! to the general construction of §3.1.3.
+
+use crate::core::Dataset;
+
+pub mod graphic;
+pub mod laminar;
+pub mod partition;
+pub mod transversal;
+pub mod uniform;
+
+pub use graphic::GraphicMatroid;
+pub use laminar::{LaminarMatroid, LaminarSet};
+pub use partition::PartitionMatroid;
+pub use transversal::TransversalMatroid;
+pub use uniform::UniformMatroid;
+
+/// Which coreset construction applies (paper §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatroidKind {
+    Partition,
+    Transversal,
+    /// Any other matroid: the general construction (§3.1.3) is used.
+    General,
+}
+
+impl MatroidKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MatroidKind::Partition => "partition",
+            MatroidKind::Transversal => "transversal",
+            MatroidKind::General => "general",
+        }
+    }
+}
+
+/// Independence oracle over subsets of a dataset's point indices.
+///
+/// Implementations must satisfy the matroid axioms; the mini property-test
+/// framework checks hereditary + augmentation on enumerable instances
+/// (`rust/tests/property_invariants.rs`).
+pub trait Matroid: Send + Sync {
+    /// Is `set` (distinct indices into `ds`) an independent set?
+    fn is_independent(&self, ds: &Dataset, set: &[usize]) -> bool;
+
+    /// Can `x` extend the independent set `set`?  (`set` is trusted to be
+    /// independent; `x` must not already be in it.)  Default: full check.
+    fn can_extend(&self, ds: &Dataset, set: &[usize], x: usize) -> bool {
+        let mut ext = set.to_vec();
+        ext.push(x);
+        self.is_independent(ds, &ext)
+    }
+
+    /// An upper bound on the rank of the matroid (exact where cheap).
+    fn rank_bound(&self, ds: &Dataset) -> usize;
+
+    /// Which coreset construction this matroid gets.
+    fn kind(&self) -> MatroidKind;
+
+    /// Display name for reports.
+    fn describe(&self) -> String;
+}
+
+impl<T: Matroid + ?Sized> Matroid for &T {
+    fn is_independent(&self, ds: &Dataset, set: &[usize]) -> bool {
+        (**self).is_independent(ds, set)
+    }
+    fn can_extend(&self, ds: &Dataset, set: &[usize], x: usize) -> bool {
+        (**self).can_extend(ds, set, x)
+    }
+    fn rank_bound(&self, ds: &Dataset) -> usize {
+        (**self).rank_bound(ds)
+    }
+    fn kind(&self) -> MatroidKind {
+        (**self).kind()
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
+impl<T: Matroid + ?Sized> Matroid for Box<T> {
+    fn is_independent(&self, ds: &Dataset, set: &[usize]) -> bool {
+        (**self).is_independent(ds, set)
+    }
+    fn can_extend(&self, ds: &Dataset, set: &[usize], x: usize) -> bool {
+        (**self).can_extend(ds, set, x)
+    }
+    fn rank_bound(&self, ds: &Dataset) -> usize {
+        (**self).rank_bound(ds)
+    }
+    fn kind(&self) -> MatroidKind {
+        (**self).kind()
+    }
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
+/// Greedily grow a maximum-cardinality independent subset of `items`,
+/// stopping early at `cap` elements.  By the matroid augmentation property
+/// greedy attains maximum cardinality, so if the result has fewer than
+/// `cap` elements it is a *maximum* independent subset of `items`.
+pub fn maximal_independent(
+    m: &dyn Matroid,
+    ds: &Dataset,
+    items: &[usize],
+    cap: usize,
+) -> Vec<usize> {
+    let mut out: Vec<usize> = Vec::with_capacity(cap.min(items.len()));
+    for &x in items {
+        if out.len() >= cap {
+            break;
+        }
+        if m.can_extend(ds, &out, x) {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// Exact rank of `items` under `m` (size of a maximum independent subset),
+/// computed greedily.  O(|items|) oracle calls.
+pub fn subset_rank(m: &dyn Matroid, ds: &Dataset, items: &[usize]) -> usize {
+    maximal_independent(m, ds, items, items.len()).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Dataset, Metric};
+
+    fn ds_with_categories(cats: Vec<Vec<u32>>, n_categories: u32) -> Dataset {
+        let n = cats.len();
+        Dataset::new(
+            1,
+            Metric::Euclidean,
+            (0..n).map(|i| i as f32).collect(),
+            cats,
+            n_categories,
+            "test",
+        )
+    }
+
+    #[test]
+    fn maximal_independent_respects_cap() {
+        let ds = ds_with_categories(vec![vec![0]; 10], 1);
+        let m = UniformMatroid::new(7);
+        let items: Vec<usize> = (0..10).collect();
+        assert_eq!(maximal_independent(&m, &ds, &items, 3).len(), 3);
+        assert_eq!(maximal_independent(&m, &ds, &items, 9).len(), 7);
+    }
+
+    #[test]
+    fn subset_rank_partition() {
+        // categories 0,0,0,1 with caps [2,1] -> rank 3
+        let ds = ds_with_categories(vec![vec![0], vec![0], vec![0], vec![1]], 2);
+        let m = PartitionMatroid::new(vec![2, 1]);
+        let items: Vec<usize> = (0..4).collect();
+        assert_eq!(subset_rank(&m, &ds, &items), 3);
+    }
+}

@@ -1,0 +1,171 @@
+//! Partition matroid (paper Definition 1).
+//!
+//! The ground set is partitioned into `h` disjoint categories `A_1..A_h`
+//! with cardinality caps `k_1..k_h`; a set is independent iff it holds at
+//! most `k_i` points of each category.  The *first* category label of each
+//! point is used (partition-matroid datasets are generated with exactly one
+//! label per point; see `data::synth`).
+
+use crate::core::Dataset;
+use crate::matroid::{Matroid, MatroidKind};
+
+#[derive(Clone, Debug)]
+pub struct PartitionMatroid {
+    /// Cap per category id; categories beyond the vec have cap 0.
+    caps: Vec<usize>,
+}
+
+impl PartitionMatroid {
+    pub fn new(caps: Vec<usize>) -> Self {
+        PartitionMatroid { caps }
+    }
+
+    /// Caps proportional to category frequency (the paper's Songs setup:
+    /// "minimal nonzero value proportional to the number of songs of the
+    /// genre"): `cap_i = max(1, round(frac * count_i))`.
+    pub fn proportional(ds: &Dataset, frac: f64) -> Self {
+        let hist = ds.category_histogram();
+        let caps = hist
+            .iter()
+            .map(|&c| if c == 0 { 0 } else { ((c as f64 * frac).round() as usize).max(1) })
+            .collect();
+        PartitionMatroid { caps }
+    }
+
+    #[inline]
+    pub fn cap(&self, category: u32) -> usize {
+        self.caps.get(category as usize).copied().unwrap_or(0)
+    }
+
+    pub fn caps(&self) -> &[usize] {
+        &self.caps
+    }
+
+    #[inline]
+    fn category_of(ds: &Dataset, x: usize) -> u32 {
+        ds.categories[x][0]
+    }
+}
+
+impl Matroid for PartitionMatroid {
+    fn is_independent(&self, ds: &Dataset, set: &[usize]) -> bool {
+        let mut counts = vec![0usize; self.caps.len()];
+        for &x in set {
+            let c = Self::category_of(ds, x) as usize;
+            if c >= counts.len() {
+                return false;
+            }
+            counts[c] += 1;
+            if counts[c] > self.caps[c] {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn can_extend(&self, ds: &Dataset, set: &[usize], x: usize) -> bool {
+        let cx = Self::category_of(ds, x);
+        let cap = self.cap(cx);
+        if cap == 0 {
+            return false;
+        }
+        let in_cat = set
+            .iter()
+            .filter(|&&y| Self::category_of(ds, y) == cx)
+            .count();
+        in_cat < cap
+    }
+
+    fn rank_bound(&self, ds: &Dataset) -> usize {
+        // exact: sum over categories of min(cap, |A_i|)
+        let hist = ds.category_histogram();
+        self.caps
+            .iter()
+            .enumerate()
+            .map(|(i, &cap)| cap.min(hist.get(i).copied().unwrap_or(0)))
+            .sum()
+    }
+
+    fn kind(&self) -> MatroidKind {
+        MatroidKind::Partition
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "partition(h={}, rank<={})",
+            self.caps.len(),
+            self.caps.iter().sum::<usize>()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Metric;
+
+    fn ds(labels: &[u32], n_categories: u32) -> Dataset {
+        Dataset::new(
+            1,
+            Metric::Euclidean,
+            (0..labels.len()).map(|i| i as f32).collect(),
+            labels.iter().map(|&c| vec![c]).collect(),
+            n_categories,
+            "test",
+        )
+    }
+
+    #[test]
+    fn empty_set_independent() {
+        let d = ds(&[0, 1], 2);
+        let m = PartitionMatroid::new(vec![1, 1]);
+        assert!(m.is_independent(&d, &[]));
+    }
+
+    #[test]
+    fn caps_enforced() {
+        let d = ds(&[0, 0, 0, 1], 2);
+        let m = PartitionMatroid::new(vec![2, 1]);
+        assert!(m.is_independent(&d, &[0, 1, 3]));
+        assert!(!m.is_independent(&d, &[0, 1, 2]));
+        assert!(m.can_extend(&d, &[0], 1));
+        assert!(!m.can_extend(&d, &[0, 1], 2));
+    }
+
+    #[test]
+    fn zero_cap_category_never_independent() {
+        let d = ds(&[0, 1], 2);
+        let m = PartitionMatroid::new(vec![0, 1]);
+        assert!(!m.is_independent(&d, &[0]));
+        assert!(!m.can_extend(&d, &[], 0));
+        assert!(m.can_extend(&d, &[], 1));
+    }
+
+    #[test]
+    fn rank_bound_exact() {
+        let d = ds(&[0, 0, 0, 1, 2], 3);
+        let m = PartitionMatroid::new(vec![2, 5, 1]);
+        // min(2,3) + min(5,1) + min(1,1) = 4
+        assert_eq!(m.rank_bound(&d), 4);
+    }
+
+    #[test]
+    fn proportional_caps() {
+        let d = ds(&[0, 0, 0, 0, 0, 0, 0, 0, 1, 1], 2);
+        let m = PartitionMatroid::proportional(&d, 0.25);
+        assert_eq!(m.caps(), &[2, 1]); // 8*0.25=2, max(1, round(0.5))=1
+    }
+
+    #[test]
+    fn hereditary_property_samples() {
+        let d = ds(&[0, 0, 1, 1, 2], 3);
+        let m = PartitionMatroid::new(vec![1, 2, 1]);
+        let indep = [1usize, 2, 4];
+        assert!(m.is_independent(&d, &indep));
+        // every subset must be independent
+        for mask in 0u32..8 {
+            let sub: Vec<usize> = (0..3).filter(|&i| mask >> i & 1 == 1).map(|i| indep[i]).collect();
+            assert!(m.is_independent(&d, &sub));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Transversal matroid (paper Definition 2).
+//!
+//! Categories `A_1..A_h` may overlap; a set `X` is independent iff the
+//! bipartite graph `(X, A; {x - A_j : x in A_j})` has a matching saturating
+//! `X`.  Independence is decided with Kuhn's augmenting-path algorithm: the
+//! sets the algorithms test are small (|X| <= k), and each element touches
+//! O(1) categories (the paper's standing assumption), so a check costs
+//! O(|X|^2) in the worst case and is near-linear in practice.
+
+use std::collections::HashMap;
+
+use crate::core::Dataset;
+use crate::matroid::{Matroid, MatroidKind};
+
+#[derive(Clone, Debug, Default)]
+pub struct TransversalMatroid;
+
+impl TransversalMatroid {
+    pub fn new() -> Self {
+        TransversalMatroid
+    }
+
+    /// Maximum matching size between `set` and their categories.
+    /// Returns `set.len()` iff `set` is independent.
+    pub fn matching_size(ds: &Dataset, set: &[usize]) -> usize {
+        // category id -> matched element position (in `set`), built lazily:
+        // only categories adjacent to `set` are ever touched.
+        let mut matched_cat: HashMap<u32, usize> = HashMap::new();
+        let mut size = 0;
+        for (pos, &x) in set.iter().enumerate() {
+            let mut visited: HashMap<u32, bool> = HashMap::new();
+            if Self::augment(ds, set, pos, x, &mut matched_cat, &mut visited) {
+                size += 1;
+            }
+        }
+        size
+    }
+
+    /// DFS augmenting path from element `x` (at position `pos` of `set`).
+    fn augment(
+        ds: &Dataset,
+        set: &[usize],
+        pos: usize,
+        x: usize,
+        matched_cat: &mut HashMap<u32, usize>,
+        visited: &mut HashMap<u32, bool>,
+    ) -> bool {
+        for &c in &ds.categories[x] {
+            if visited.insert(c, true).is_some() {
+                continue;
+            }
+            match matched_cat.get(&c).copied() {
+                None => {
+                    matched_cat.insert(c, pos);
+                    return true;
+                }
+                Some(other_pos) => {
+                    let other_x = set[other_pos];
+                    if Self::augment(ds, set, other_pos, other_x, matched_cat, visited) {
+                        matched_cat.insert(c, pos);
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// A matching witnessing independence: element position -> category id.
+    /// Only meaningful when `set` is independent.
+    pub fn matching_witness(ds: &Dataset, set: &[usize]) -> Option<Vec<u32>> {
+        let mut matched_cat: HashMap<u32, usize> = HashMap::new();
+        for (pos, &x) in set.iter().enumerate() {
+            let mut visited: HashMap<u32, bool> = HashMap::new();
+            if !Self::augment(ds, set, pos, x, &mut matched_cat, &mut visited) {
+                return None;
+            }
+        }
+        let mut witness = vec![u32::MAX; set.len()];
+        for (c, pos) in matched_cat {
+            witness[pos] = c;
+        }
+        Some(witness)
+    }
+}
+
+impl Matroid for TransversalMatroid {
+    fn is_independent(&self, ds: &Dataset, set: &[usize]) -> bool {
+        Self::matching_size(ds, set) == set.len()
+    }
+
+    fn rank_bound(&self, ds: &Dataset) -> usize {
+        // rank = max matching size of the whole ground set <= #categories
+        ds.n_categories as usize
+    }
+
+    fn kind(&self) -> MatroidKind {
+        MatroidKind::Transversal
+    }
+
+    fn describe(&self) -> String {
+        "transversal".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Metric;
+    use crate::matroid::{maximal_independent, subset_rank};
+
+    fn ds(cats: Vec<Vec<u32>>, n_categories: u32) -> Dataset {
+        let n = cats.len();
+        Dataset::new(
+            1,
+            Metric::Euclidean,
+            (0..n).map(|i| i as f32).collect(),
+            cats,
+            n_categories,
+            "test",
+        )
+    }
+
+    #[test]
+    fn disjoint_categories_behave_like_partition() {
+        let d = ds(vec![vec![0], vec![0], vec![1]], 2);
+        let m = TransversalMatroid::new();
+        assert!(m.is_independent(&d, &[0, 2]));
+        assert!(!m.is_independent(&d, &[0, 1])); // both need category 0
+    }
+
+    #[test]
+    fn overlapping_categories_allow_rerouting() {
+        // x0:{0}, x1:{0,1}, x2:{1} -> {x0,x1} ok (x1 takes cat 1)
+        let d = ds(vec![vec![0], vec![0, 1], vec![1]], 2);
+        let m = TransversalMatroid::new();
+        assert!(m.is_independent(&d, &[0, 1]));
+        assert!(m.is_independent(&d, &[1, 2]));
+        assert!(!m.is_independent(&d, &[0, 1, 2])); // 3 elements, 2 categories
+    }
+
+    #[test]
+    fn augmenting_path_needed() {
+        // x0:{0,1}, x1:{0}, x2:{1}: greedy might match x0->0 first;
+        // independence of all three requires rerouting and must fail
+        // (3 elements, 2 categories), but any pair is independent.
+        let d = ds(vec![vec![0, 1], vec![0], vec![1]], 2);
+        let m = TransversalMatroid::new();
+        assert!(m.is_independent(&d, &[0, 1]));
+        assert!(m.is_independent(&d, &[0, 2]));
+        assert!(m.is_independent(&d, &[1, 2]));
+        assert!(!m.is_independent(&d, &[0, 1, 2]));
+    }
+
+    #[test]
+    fn witness_is_a_valid_matching() {
+        let d = ds(vec![vec![0, 1], vec![0], vec![2]], 3);
+        let m = TransversalMatroid::new();
+        let set = [0usize, 1, 2];
+        assert!(m.is_independent(&d, &set));
+        let w = TransversalMatroid::matching_witness(&d, &set).unwrap();
+        // distinct categories, each adjacent to its element
+        let mut seen = std::collections::HashSet::new();
+        for (pos, &c) in w.iter().enumerate() {
+            assert!(d.categories[set[pos]].contains(&c));
+            assert!(seen.insert(c));
+        }
+    }
+
+    #[test]
+    fn greedy_maximal_is_maximum() {
+        // rank of {x0..x3} with cats {0},{0},{1},{1} is 2
+        let d = ds(vec![vec![0], vec![0], vec![1], vec![1]], 2);
+        let m = TransversalMatroid::new();
+        let items: Vec<usize> = (0..4).collect();
+        assert_eq!(subset_rank(&m, &d, &items), 2);
+        let got = maximal_independent(&m, &d, &items, 10);
+        assert_eq!(got.len(), 2);
+        assert!(m.is_independent(&d, &got));
+    }
+
+    #[test]
+    fn empty_always_independent() {
+        let d = ds(vec![vec![0]], 1);
+        let m = TransversalMatroid::new();
+        assert!(m.is_independent(&d, &[]));
+    }
+}

@@ -1,0 +1,80 @@
+//! Uniform matroid U_{r,n}: a set is independent iff it has at most `r`
+//! elements.  With r = k this reduces DMMC to *unconstrained* diversity
+//! maximization — the baseline regime of the earlier coreset literature
+//! [4, 10, 21] — and it exercises the "general matroid" coreset path
+//! (§3.1.3), since we deliberately do not special-case it.
+
+use crate::core::Dataset;
+use crate::matroid::{Matroid, MatroidKind};
+
+#[derive(Clone, Copy, Debug)]
+pub struct UniformMatroid {
+    rank: usize,
+}
+
+impl UniformMatroid {
+    pub fn new(rank: usize) -> Self {
+        UniformMatroid { rank }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+}
+
+impl Matroid for UniformMatroid {
+    fn is_independent(&self, _ds: &Dataset, set: &[usize]) -> bool {
+        set.len() <= self.rank
+    }
+
+    fn can_extend(&self, _ds: &Dataset, set: &[usize], _x: usize) -> bool {
+        set.len() < self.rank
+    }
+
+    fn rank_bound(&self, ds: &Dataset) -> usize {
+        self.rank.min(ds.n())
+    }
+
+    fn kind(&self) -> MatroidKind {
+        MatroidKind::General
+    }
+
+    fn describe(&self) -> String {
+        format!("uniform(r={})", self.rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Metric;
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new(
+            1,
+            Metric::Euclidean,
+            (0..n).map(|i| i as f32).collect(),
+            vec![vec![0]; n],
+            1,
+            "test",
+        )
+    }
+
+    #[test]
+    fn cardinality_rule() {
+        let d = ds(5);
+        let m = UniformMatroid::new(2);
+        assert!(m.is_independent(&d, &[0]));
+        assert!(m.is_independent(&d, &[0, 3]));
+        assert!(!m.is_independent(&d, &[0, 1, 2]));
+        assert!(m.can_extend(&d, &[0], 4));
+        assert!(!m.can_extend(&d, &[0, 1], 4));
+    }
+
+    #[test]
+    fn rank_bound_clamped_by_n() {
+        let d = ds(3);
+        assert_eq!(UniformMatroid::new(10).rank_bound(&d), 3);
+        assert_eq!(UniformMatroid::new(2).rank_bound(&d), 2);
+    }
+}

@@ -1,0 +1,140 @@
+//! Mini property-testing framework (the offline image has no proptest).
+//!
+//! Deterministic: each named property derives its base seed from the
+//! property name, and every failing case reports `(name, case, seed)` so a
+//! failure is reproducible by rerunning the same test binary.  Shrinking is
+//! size-scheduling rather than counterexample-driven: cases start tiny and
+//! grow, so the first failure is usually near-minimal already.
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Current size class (grows with the case index).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    /// A "sized" count in [1, max(1, size)] — drives near-minimal failures.
+    pub fn sized(&mut self, cap: usize) -> usize {
+        let hi = self.size.clamp(1, cap.max(1));
+        self.usize_in(1, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (self.rng.normal() as f32) * scale).collect()
+    }
+
+    /// Random subset of `0..n` of size `m`.
+    pub fn subset(&mut self, n: usize, m: usize) -> Vec<usize> {
+        self.rng.sample_indices(n, m)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run `cases` random cases of the property; panic with a reproducible
+/// report on the first failure (`Err(reason)`).
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            // grow the size class: first cases are tiny
+            size: 2 + case * 2,
+        };
+        if let Err(reason) = f(&mut g) {
+            panic!(
+                "property {name} failed at case {case} (seed {seed:#x}, size {}): {reason}",
+                g.size
+            );
+        }
+    }
+}
+
+/// Convenience: assert-like helper producing the Err format `check` wants.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($msg:tt)+) => {
+        if !$cond {
+            return Err(format!($($msg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0);
+        check("always-true", 50, |g| {
+            counter.set(counter.get() + 1);
+            let x = g.usize_in(0, 10);
+            if x <= 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(counter.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-false failed")]
+    fn failing_property_panics_with_context() {
+        check("always-false", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("det", 5, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("det", 5, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut sizes = Vec::new();
+        check("size-growth", 5, |g| {
+            sizes.push(g.size);
+            Ok(())
+        });
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,54 @@
+//! Runtime layer: the [`engine::DistanceEngine`] abstraction, the scalar
+//! backend, and the PJRT backend that executes the AOT-compiled Pallas
+//! kernels (`artifacts/*.hlo.txt`) on the request path.
+//!
+//! Python never runs here: `make artifacts` is the only python invocation,
+//! and the Rust binary is self-contained afterwards.
+
+pub mod engine;
+pub mod pjrt;
+pub mod shapes;
+
+pub use engine::{DistanceEngine, ScalarEngine};
+pub use pjrt::PjrtEngine;
+pub use shapes::{default_artifact_dir, Manifest};
+
+use anyhow::Result;
+
+use crate::core::Dataset;
+
+/// Engine selection for CLI/config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Scalar,
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "scalar" => Some(EngineKind::Scalar),
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Scalar => "scalar",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Build an engine of the requested kind for `ds` (PJRT loads artifacts
+/// from the default artifact dir).
+pub fn build_engine(kind: EngineKind, ds: &Dataset) -> Result<Box<dyn DistanceEngine>> {
+    match kind {
+        EngineKind::Scalar => Ok(Box::new(ScalarEngine::new())),
+        EngineKind::Pjrt => {
+            let manifest = Manifest::load(default_artifact_dir())?;
+            Ok(Box::new(PjrtEngine::for_dataset(&manifest, ds)?))
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! PJRT execution of the AOT-compiled Pallas distance kernels.
+//!
+//! `PjrtEngine` loads `artifacts/*.hlo.txt` (HLO *text* — see
+//! `python/compile/aot.py` for why not serialized protos), compiles each
+//! once on the CPU PJRT client, and serves the [`DistanceEngine`] hot-path
+//! primitive plus batch helpers (`assign_all`, `pairwise_block`).
+//!
+//! Padding protocol (mirrors `kernels/distance.py`): the feature dim is
+//! zero-padded to the artifact dim, point blocks are padded to `NP` rows
+//! (garbage rows ignored on readback), and center tiles are masked via the
+//! `n_centers` operand so sentinel rows never win the argmin.
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::core::{Dataset, Metric};
+use crate::runtime::engine::DistanceEngine;
+use crate::runtime::shapes::{padded_dim, Manifest, NP, TC};
+
+/// Distance engine backed by the AOT Pallas kernels.
+pub struct PjrtEngine {
+    client: PjRtClient,
+    update_exec: PjRtLoadedExecutable,
+    assign_exec: PjRtLoadedExecutable,
+    pairwise_exec: PjRtLoadedExecutable,
+    metric: Metric,
+    /// Padded feature dim (one of `shapes::DIMS`).
+    d: usize,
+    /// Dataset row count the padded buffer was prepared for.
+    n: usize,
+    /// Device-resident point chunks (one `NP x d` buffer per chunk),
+    /// uploaded once at construction — the §Perf fix that removes the
+    /// ~1 MB host->device literal copy from every `update_min` call.
+    point_buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl PjrtEngine {
+    /// Load + compile the artifacts that match `ds` (metric + padded dim)
+    /// and pre-pad its coordinates.
+    pub fn for_dataset(manifest: &Manifest, ds: &Dataset) -> Result<PjrtEngine> {
+        let d = padded_dim(ds.dim)
+            .with_context(|| format!("dataset dim {} exceeds artifact dims", ds.dim))?;
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        let load = |kernel: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.entry_path(kernel, ds.metric, d)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compile {kernel}"))
+        };
+        let update_exec = load("gmm_update")?;
+        let assign_exec = load("gmm_assign")?;
+        let pairwise_exec = load("pairwise")?;
+
+        let n = ds.n();
+        let rows = n.div_ceil(NP).max(1) * NP;
+        let mut padded = vec![0.0f32; rows * d];
+        for i in 0..n {
+            padded[i * d..i * d + ds.dim].copy_from_slice(ds.point(i));
+        }
+        // upload every point chunk to the device once
+        let mut point_buffers = Vec::with_capacity(rows / NP);
+        for chunk_start in (0..rows).step_by(NP) {
+            let chunk = &padded[chunk_start * d..(chunk_start + NP) * d];
+            point_buffers.push(client.buffer_from_host_buffer(chunk, &[NP, d], None)?);
+        }
+        Ok(PjrtEngine {
+            client,
+            update_exec,
+            assign_exec,
+            pairwise_exec,
+            metric: ds.metric,
+            d,
+            n,
+            point_buffers,
+        })
+    }
+
+    pub fn padded_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn check_dataset(&self, ds: &Dataset) {
+        assert_eq!(ds.n(), self.n, "engine prepared for a different dataset");
+        assert_eq!(ds.metric, self.metric);
+    }
+
+    fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    /// Pad an arbitrary row set into a `rows x d` f32 block.
+    fn pad_rows(&self, ds: &Dataset, rows: &[usize], out_rows: usize) -> Vec<f32> {
+        let mut buf = vec![0.0f32; out_rows * self.d];
+        for (slot, &i) in rows.iter().enumerate() {
+            buf[slot * self.d..slot * self.d + ds.dim].copy_from_slice(ds.point(i));
+        }
+        buf
+    }
+
+    /// One-shot assignment of every point against `centers` (<= TC per
+    /// inner call; more centers are folded tile by tile).  Returns
+    /// (min-dist, argmin-position) per point — the `gmm_assign` artifact.
+    pub fn assign_all(&self, ds: &Dataset, centers: &[usize]) -> Result<(Vec<f32>, Vec<u32>)> {
+        self.check_dataset(ds);
+        let mut mind = vec![f32::INFINITY; self.n];
+        let mut arg = vec![u32::MAX; self.n];
+        for (tile_idx, tile) in centers.chunks(TC).enumerate() {
+            let ctile = self.pad_rows(ds, tile, TC);
+            let ncdev = self
+                .client
+                .buffer_from_host_buffer(&[tile.len() as i32], &[1, 1], None)?;
+            let cdev = self
+                .client
+                .buffer_from_host_buffer(&ctile, &[TC, self.d], None)?;
+            for (chunk_idx, chunk_start) in (0..self.n).step_by(NP).enumerate() {
+                let chunk_rows = (self.n - chunk_start).min(NP);
+                let result = self.assign_exec.execute_b(&[
+                    &self.point_buffers[chunk_idx],
+                    &cdev,
+                    &ncdev,
+                ])?[0][0]
+                    .to_literal_sync()?;
+                let (dmin_l, amin_l) = result.to_tuple2()?;
+                let dmin: Vec<f32> = dmin_l.to_vec()?;
+                let amin: Vec<i32> = amin_l.to_vec()?;
+                for r in 0..chunk_rows {
+                    let i = chunk_start + r;
+                    if dmin[r] < mind[i] {
+                        mind[i] = dmin[r];
+                        arg[i] = (tile_idx * TC + amin[r] as usize) as u32;
+                    }
+                }
+            }
+        }
+        Ok((mind, arg))
+    }
+
+    /// Distance block between `rows_a` and `rows_b` (`rows_b.len() <= TC`),
+    /// row-major `rows_a.len() x rows_b.len()` — the `pairwise` artifact.
+    pub fn pairwise_block(
+        &self,
+        ds: &Dataset,
+        rows_a: &[usize],
+        rows_b: &[usize],
+    ) -> Result<Vec<f32>> {
+        self.check_dataset(ds);
+        assert!(rows_b.len() <= TC, "pairwise_block: cols > TC");
+        let btile = self.pad_rows(ds, rows_b, TC);
+        let blit = Self::lit_f32(&btile, &[TC, self.d])?;
+        let mut out = vec![0.0f32; rows_a.len() * rows_b.len()];
+        for (chunk_idx, chunk) in rows_a.chunks(NP).enumerate() {
+            let atile = self.pad_rows(ds, chunk, NP);
+            let alit = Self::lit_f32(&atile, &[NP, self.d])?;
+            let result = self.pairwise_exec.execute::<Literal>(&[alit, blit.clone()])?[0][0]
+                .to_literal_sync()?;
+            let tile = result.to_tuple1()?;
+            let vals: Vec<f32> = tile.to_vec()?;
+            for (r, _) in chunk.iter().enumerate() {
+                let dst = (chunk_idx * NP + r) * rows_b.len();
+                for (c, _) in rows_b.iter().enumerate() {
+                    out[dst + c] = vals[r * TC + c];
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl DistanceEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn update_min(
+        &self,
+        ds: &Dataset,
+        center: usize,
+        center_id: u32,
+        mind: &mut [f32],
+        arg: &mut [u32],
+    ) -> Result<()> {
+        self.check_dataset(ds);
+        let mut cbuf = vec![0.0f32; self.d];
+        cbuf[..ds.dim].copy_from_slice(ds.point(center));
+        let cdev = self.client.buffer_from_host_buffer(&cbuf, &[1, self.d], None)?;
+        let idev = self
+            .client
+            .buffer_from_host_buffer(&[center_id as i32], &[1, 1], None)?;
+        let mut dstate = vec![f32::INFINITY; NP];
+        let mut astate = vec![0i32; NP];
+        for (chunk_idx, chunk_start) in (0..self.n).step_by(NP).enumerate() {
+            let chunk_rows = (self.n - chunk_start).min(NP);
+            // running state for this chunk, padded to NP
+            dstate[..chunk_rows].copy_from_slice(&mind[chunk_start..chunk_start + chunk_rows]);
+            dstate[chunk_rows..].fill(f32::INFINITY);
+            for r in 0..chunk_rows {
+                astate[r] = arg[chunk_start + r] as i32;
+            }
+            let ddev = self.client.buffer_from_host_buffer(&dstate, &[NP], None)?;
+            let adev = self.client.buffer_from_host_buffer(&astate, &[NP], None)?;
+            let result = self.update_exec.execute_b(&[
+                &self.point_buffers[chunk_idx],
+                &cdev,
+                &ddev,
+                &adev,
+                &idev,
+            ])?[0][0]
+                .to_literal_sync()?;
+            let (ndmin_l, namin_l) = result.to_tuple2()?;
+            let ndmin: Vec<f32> = ndmin_l.to_vec()?;
+            let namin: Vec<i32> = namin_l.to_vec()?;
+            for r in 0..chunk_rows {
+                mind[chunk_start + r] = ndmin[r];
+                arg[chunk_start + r] = namin[r] as u32;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,181 @@
+//! Artifact tile geometry — the Rust mirror of
+//! `python/compile/kernels/distance.py` — and the `manifest.txt` parser.
+//!
+//! The AOT artifacts have fixed shapes; the runtime pads every call to
+//! them.  `Manifest::load` cross-checks that the artifacts on disk were
+//! built with the geometry this binary was compiled against, failing fast
+//! on drift instead of producing shape errors deep inside PJRT.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::Metric;
+
+/// Points per executable call (grid = NP / TP).
+pub const NP: usize = 8192;
+/// Points per Pallas tile (CPU-interpret tuning; see kernels/distance.py).
+pub const TP: usize = 8192;
+/// Centers per call (VMEM-resident tile).
+pub const TC: usize = 256;
+/// Supported padded feature dims.
+pub const DIMS: [usize; 2] = [32, 64];
+
+/// Pick the smallest supported padded dim >= `dim`.
+pub fn padded_dim(dim: usize) -> Option<usize> {
+    DIMS.into_iter().find(|&d| d >= dim)
+}
+
+/// Artifact entry name, mirroring the python naming convention.
+pub fn entry_name(kernel: &str, metric: Metric, d: usize) -> String {
+    format!("{kernel}_{}_d{d}", metric.name())
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub np: usize,
+    pub tp: usize,
+    pub tc: usize,
+    pub dims: Vec<usize>,
+    pub entries: BTreeSet<String>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let mut np = None;
+        let mut tp = None;
+        let mut tc = None;
+        let mut dims = Vec::new();
+        let mut entries = BTreeSet::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("bad manifest line: {line}"))?;
+            match key {
+                "np" => np = Some(value.parse()?),
+                "tp" => tp = Some(value.parse()?),
+                "tc" => tc = Some(value.parse()?),
+                "dims" => {
+                    dims = value
+                        .split(',')
+                        .map(|v| v.parse())
+                        .collect::<std::result::Result<_, _>>()?
+                }
+                "metrics" => {}
+                "entry" => {
+                    entries.insert(value.to_string());
+                }
+                other => bail!("unknown manifest key {other}"),
+            }
+        }
+        let m = Manifest {
+            np: np.context("manifest missing np")?,
+            tp: tp.context("manifest missing tp")?,
+            tc: tc.context("manifest missing tc")?,
+            dims,
+            entries,
+            dir,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check the on-disk geometry matches this binary's constants.
+    pub fn validate(&self) -> Result<()> {
+        if self.np != NP || self.tp != TP || self.tc != TC {
+            bail!(
+                "artifact geometry mismatch: manifest np/tp/tc = {}/{}/{} vs binary {}/{}/{} — rebuild with `make artifacts`",
+                self.np, self.tp, self.tc, NP, TP, TC
+            );
+        }
+        if self.dims != DIMS {
+            bail!("artifact dims {:?} != binary dims {:?}", self.dims, DIMS);
+        }
+        Ok(())
+    }
+
+    /// Path of an entry's HLO text, verifying it is listed and on disk.
+    pub fn entry_path(&self, kernel: &str, metric: Metric, d: usize) -> Result<PathBuf> {
+        let name = entry_name(kernel, metric, d);
+        if !self.entries.contains(&name) {
+            bail!("artifact entry {name} not in manifest");
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact file missing: {}", path.display());
+        }
+        Ok(path)
+    }
+}
+
+/// Default artifact directory: `$DMMC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("DMMC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_dim_picks_smallest_fit() {
+        assert_eq!(padded_dim(2), Some(32));
+        assert_eq!(padded_dim(32), Some(32));
+        assert_eq!(padded_dim(33), Some(64));
+        assert_eq!(padded_dim(64), Some(64));
+        assert_eq!(padded_dim(65), None);
+    }
+
+    #[test]
+    fn entry_names_match_python_convention() {
+        assert_eq!(
+            entry_name("gmm_update", Metric::Cosine, 32),
+            "gmm_update_cosine_d32"
+        );
+        assert_eq!(
+            entry_name("pairwise", Metric::Euclidean, 64),
+            "pairwise_euclidean_d64"
+        );
+    }
+
+    #[test]
+    fn manifest_parses_and_validates() {
+        let dir = std::env::temp_dir().join("mc_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "np=8192\ntp=8192\ntc=256\ndims=32,64\nmetrics=euclidean,cosine\nentry=gmm_update_cosine_d32\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.np, 8192);
+        assert!(m.entries.contains("gmm_update_cosine_d32"));
+        // listed but file missing
+        assert!(m.entry_path("gmm_update", Metric::Cosine, 32).is_err());
+        // not listed at all
+        assert!(m.entry_path("pairwise", Metric::Cosine, 32).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_geometry_drift() {
+        let dir = std::env::temp_dir().join("mc_manifest_drift");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "np=4096\ntp=256\ntc=256\ndims=32,64\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,74 @@
+//! Minimal CSV writer for bench results (`bench_results/*.csv`).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (parent dirs included) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            columns: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.columns,
+            "CSV row width mismatch: {} vs header {}",
+            fields.len(),
+            self.columns
+        );
+        writeln!(self.out, "{}", fields.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Convenience macro for building a CSV row out of Display-able values.
+#[macro_export]
+macro_rules! csv_row {
+    ($($x:expr),* $(,)?) => {
+        vec![$(format!("{}", $x)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("mc_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&csv_row![1, 2.5]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let dir = std::env::temp_dir().join("mc_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        w.row(&csv_row![1]).unwrap();
+    }
+}

@@ -1,0 +1,6 @@
+//! Support utilities: PRNG, summary statistics, phase timing, CSV output.
+
+pub mod csv;
+pub mod rng;
+pub mod stats;
+pub mod timer;

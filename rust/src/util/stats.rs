@@ -1,0 +1,100 @@
+//! Small summary-statistics helpers used by the bench harness and the
+//! experiment reports (boxplot quantiles of Figures 2-3).
+
+/// Summary of a sample: mean / std / min / quartiles / max.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+/// Linear-interpolation quantile on a sorted slice (type-7, numpy default).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p25: quantile_sorted(&sorted, 0.25),
+            p50: quantile_sorted(&sorted, 0.50),
+            p75: quantile_sorted(&sorted, 0.75),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// One-line boxplot-style rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "n={} mean={:.4} std={:.4} min={:.4} p25={:.4} p50={:.4} p75={:.4} max={:.4}",
+            self.n, self.mean, self.std, self.min, self.p25, self.p50, self.p75, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_constant() {
+        let s = Summary::of(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn summary_simple() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_match_numpy_type7() {
+        let sorted = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&sorted, 1.0), 5.0);
+        assert_eq!(quantile_sorted(&sorted, 0.5), 3.0);
+        assert!((quantile_sorted(&sorted, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Summary::of(&[]);
+    }
+}

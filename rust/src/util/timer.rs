@@ -1,0 +1,95 @@
+//! Wall-clock timing + phase breakdown accounting.
+//!
+//! The paper reports per-phase runtime breakdowns (coreset construction vs
+//! local search, Figures 1-3); `PhaseTimer` is the single accounting object
+//! threaded through all algorithms so benches and the CLI report identical
+//! breakdowns.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Measure one closure.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Named-phase wall-clock accumulator.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    phases: BTreeMap<String, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` accounted under `phase` (accumulates across calls).
+    pub fn phase<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_it(f);
+        self.add(phase, dt);
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, dt: Duration) {
+        *self.phases.entry(phase.to_string()).or_default() += dt;
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.phases.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.phases {
+            self.add(k, *v);
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.phases.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn render(&self) -> String {
+        let mut parts: Vec<String> = self
+            .phases
+            .iter()
+            .map(|(k, v)| format!("{k}={:.3}s", v.as_secs_f64()))
+            .collect();
+        parts.push(format!("total={:.3}s", self.total().as_secs_f64()));
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut t = PhaseTimer::new();
+        t.phase("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.phase("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.phase("b", || ());
+        assert!(t.get("a") >= Duration::from_millis(4));
+        assert!(t.total() >= t.get("a"));
+        assert_eq!(t.get("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(5));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(7));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(12));
+        assert_eq!(a.get("y"), Duration::from_millis(1));
+    }
+}

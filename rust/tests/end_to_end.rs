@@ -1,0 +1,163 @@
+//! Integration: full pipelines (coreset setting x finisher x matroid x
+//! objective) through the coordinator — the protocol of paper §5 end to end.
+
+use matroid_coreset::algo::Budget;
+use matroid_coreset::coordinator::{
+    build_dataset, build_matroid, run_pipeline, DatasetSpec, Finisher, MatroidSpec, Pipeline,
+    Setting,
+};
+use matroid_coreset::diversity::Objective;
+use matroid_coreset::matroid::Matroid;
+use matroid_coreset::runtime::EngineKind;
+use matroid_coreset::streaming::StreamMode;
+
+fn pipe(setting: Setting, finisher: Finisher) -> Pipeline {
+    Pipeline {
+        setting,
+        finisher,
+        engine: EngineKind::Scalar,
+    }
+}
+
+#[test]
+fn wikisim_transversal_all_settings_consistent_quality() {
+    let spec = DatasetSpec::Wikisim { n: 1500, seed: 1 };
+    let ds = build_dataset(&spec).unwrap();
+    let m = build_matroid(&MatroidSpec::Transversal, &ds);
+    let k = 8;
+    let seq = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(Setting::Seq { budget: Budget::Clusters(32) }, Finisher::LocalSearch { gamma: 0.0 }),
+        1,
+    ).unwrap();
+    let stream = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(Setting::Stream { mode: StreamMode::Tau(32) }, Finisher::LocalSearch { gamma: 0.0 }),
+        1,
+    ).unwrap();
+    let mr = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(
+            Setting::MapReduce { workers: 4, budget: Budget::Clusters(8), second_round_tau: None },
+            Finisher::LocalSearch { gamma: 0.0 },
+        ),
+        1,
+    ).unwrap();
+    for (name, out) in [("seq", &seq), ("stream", &stream), ("mr", &mr)] {
+        assert_eq!(out.solution.len(), k, "{name}");
+        assert!(m.is_independent(&ds, &out.solution), "{name}");
+        assert!(out.diversity > 0.0, "{name}");
+    }
+    // all three coreset routes land within a reasonable band of each other
+    let best = seq.diversity.max(stream.diversity).max(mr.diversity);
+    let worst = seq.diversity.min(stream.diversity).min(mr.diversity);
+    assert!(worst >= 0.6 * best, "settings disagree too much: {worst} vs {best}");
+}
+
+#[test]
+fn songsim_partition_rank_and_pipeline() {
+    let spec = DatasetSpec::Songsim { n: 2000, seed: 2 };
+    let ds = build_dataset(&spec).unwrap();
+    let m = build_matroid(&MatroidSpec::default_for(&spec), &ds);
+    let rank = m.rank_bound(&ds);
+    assert!((80..=110).contains(&rank), "rank {rank} out of Table-2 band");
+    let k = rank / 4;
+    let out = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(Setting::Seq { budget: Budget::Clusters(16) }, Finisher::LocalSearch { gamma: 0.0 }),
+        2,
+    ).unwrap();
+    assert_eq!(out.solution.len(), k);
+    assert!(m.is_independent(&ds, &out.solution));
+}
+
+#[test]
+fn coreset_pipeline_beats_greedy_matches_full_ls() {
+    // coreset + LS must come close to full-input LS and beat plain greedy
+    let spec = DatasetSpec::Cube { n: 400, dim: 4, seed: 3 };
+    let ds = build_dataset(&spec).unwrap();
+    let m = build_matroid(&MatroidSpec::Uniform(6), &ds);
+    let k = 6;
+    let full = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(Setting::Full, Finisher::LocalSearch { gamma: 0.0 }), 3,
+    ).unwrap();
+    let coreset = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(Setting::Seq { budget: Budget::Clusters(32) }, Finisher::LocalSearch { gamma: 0.0 }),
+        3,
+    ).unwrap();
+    let greedy = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(Setting::Full, Finisher::Greedy), 3,
+    ).unwrap();
+    assert!(
+        coreset.diversity >= 0.9 * full.diversity,
+        "coreset LS {} far below full LS {}", coreset.diversity, full.diversity
+    );
+    assert!(coreset.diversity >= 0.95 * greedy.diversity);
+}
+
+#[test]
+fn non_sum_objectives_via_exhaustive_on_coreset() {
+    let spec = DatasetSpec::Cube { n: 300, dim: 3, seed: 4 };
+    let ds = build_dataset(&spec).unwrap();
+    let m = build_matroid(&MatroidSpec::Uniform(4), &ds);
+    for obj in [Objective::Star, Objective::Tree, Objective::Cycle, Objective::Bipartition] {
+        let out = run_pipeline(
+            &ds, &m, 4, obj,
+            pipe(Setting::Seq { budget: Budget::Clusters(8) }, Finisher::Exhaustive),
+            5,
+        ).unwrap();
+        assert_eq!(out.solution.len(), 4, "{obj:?}");
+        assert!(out.diversity > 0.0, "{obj:?}");
+    }
+}
+
+#[test]
+fn second_round_recompression_keeps_quality() {
+    let spec = DatasetSpec::Cube { n: 1200, dim: 3, seed: 6 };
+    let ds = build_dataset(&spec).unwrap();
+    let m = build_matroid(&MatroidSpec::Uniform(5), &ds);
+    let k = 5;
+    let one_round = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(
+            Setting::MapReduce { workers: 8, budget: Budget::Clusters(8), second_round_tau: None },
+            Finisher::LocalSearch { gamma: 0.0 },
+        ),
+        7,
+    ).unwrap();
+    let two_round = run_pipeline(
+        &ds, &m, k, Objective::Sum,
+        pipe(
+            Setting::MapReduce { workers: 8, budget: Budget::Clusters(8), second_round_tau: Some(16) },
+            Finisher::LocalSearch { gamma: 0.0 },
+        ),
+        7,
+    ).unwrap();
+    assert!(two_round.coreset_size <= one_round.coreset_size);
+    assert!(two_round.diversity >= 0.8 * one_round.diversity);
+    assert_eq!(two_round.extra["rounds"], 2.0);
+}
+
+#[test]
+fn dataset_permutation_stability() {
+    // the paper permutes the input before every run; quality must be stable
+    let spec = DatasetSpec::Wikisim { n: 800, seed: 8 };
+    let ds = build_dataset(&spec).unwrap();
+    let m = build_matroid(&MatroidSpec::Transversal, &ds);
+    let k = 6;
+    let mut divs = Vec::new();
+    for seed in 0..4u64 {
+        let out = run_pipeline(
+            &ds, &m, k, Objective::Sum,
+            pipe(Setting::Stream { mode: StreamMode::Tau(24) }, Finisher::LocalSearch { gamma: 0.0 }),
+            seed,
+        ).unwrap();
+        divs.push(out.diversity);
+    }
+    let max = divs.iter().cloned().fold(f64::MIN, f64::max);
+    let min = divs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(min >= 0.7 * max, "unstable across permutations: {divs:?}");
+}

@@ -1,0 +1,104 @@
+//! Integration: MapReduce composability (Theorem 6) and scaling behaviour.
+
+use matroid_coreset::algo::exhaustive::exhaustive_best;
+use matroid_coreset::algo::Budget;
+use matroid_coreset::data::synth;
+use matroid_coreset::diversity::Objective;
+use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
+use matroid_coreset::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
+
+fn cfg(workers: usize, tau: usize, seed: u64) -> MapReduceConfig {
+    MapReduceConfig {
+        workers,
+        budget: Budget::Clusters(tau),
+        second_round_tau: None,
+        seed,
+    }
+}
+
+#[test]
+fn composability_preserves_near_optimal_solutions() {
+    // union-of-shard-coresets must still contain a near-optimal k-set
+    let ds = synth::clustered(240, 2, 6, 0.05, 3, 1);
+    let m = PartitionMatroid::new(vec![2, 2, 2]);
+    let k = 4;
+    let all: Vec<usize> = (0..ds.n()).collect();
+    let opt = exhaustive_best(&ds, &m, k, &all, Objective::Sum).diversity;
+    for ell in [2usize, 4, 8] {
+        let rep = mr_coreset(&ds, &m, k, cfg(ell, 8, 3)).unwrap();
+        let got = exhaustive_best(&ds, &m, k, &rep.coreset.indices, Objective::Sum).diversity;
+        assert!(
+            got >= 0.5 * opt,
+            "ell={ell}: coreset optimum {got} below half of {opt}"
+        );
+    }
+}
+
+#[test]
+fn paper_tau_split_protocol() {
+    // Fig. 3 protocol: global tau fixed, each worker gets tau/ell clusters
+    let ds = synth::uniform_cube(2000, 3, 2);
+    let m = UniformMatroid::new(8);
+    let k = 8;
+    let tau = 32;
+    let mut sizes = Vec::new();
+    for ell in [1usize, 2, 4, 8] {
+        let rep = mr_coreset(&ds, &m, k, cfg(ell, tau / ell, 5)).unwrap();
+        // total clusters across shards stays ~tau -> coreset size stays flat
+        sizes.push(rep.coreset.len());
+        assert!(rep.coreset.len() <= tau * k + tau, "ell={ell}: {}", rep.coreset.len());
+        let sol = maximal_independent(&m, &ds, &rep.coreset.indices, k);
+        assert_eq!(sol.len(), k);
+    }
+    let max = *sizes.iter().max().unwrap() as f64;
+    let min = *sizes.iter().min().unwrap() as f64;
+    assert!(max / min < 2.5, "coreset size unstable across ell: {sizes:?}");
+}
+
+#[test]
+fn local_memory_shrinks_with_parallelism() {
+    let ds = synth::uniform_cube(4000, 2, 3);
+    let m = UniformMatroid::new(4);
+    let mut prev = usize::MAX;
+    for ell in [1usize, 2, 4, 8, 16] {
+        let rep = mr_coreset(&ds, &m, 4, cfg(ell, 4, 7)).unwrap();
+        assert!(rep.local_memory_points <= prev);
+        assert!(rep.local_memory_points <= 4000usize.div_ceil(ell));
+        prev = rep.local_memory_points;
+    }
+}
+
+#[test]
+fn makespan_not_worse_than_single_worker() {
+    // coarse scaling check (thread scheduling noise tolerated by margin)
+    let ds = synth::uniform_cube(6000, 4, 4);
+    let m = UniformMatroid::new(6);
+    let r1 = mr_coreset(&ds, &m, 6, cfg(1, 16, 9)).unwrap();
+    let r8 = mr_coreset(&ds, &m, 6, cfg(8, 2, 9)).unwrap();
+    assert!(
+        r8.makespan_round1 <= r1.makespan_round1,
+        "8-worker makespan {:?} > 1-worker {:?}",
+        r8.makespan_round1,
+        r1.makespan_round1
+    );
+}
+
+#[test]
+fn different_seeds_shuffle_shards() {
+    let ds = synth::uniform_cube(500, 2, 5);
+    let m = UniformMatroid::new(4);
+    let a = mr_coreset(&ds, &m, 4, cfg(4, 4, 1)).unwrap();
+    let b = mr_coreset(&ds, &m, 4, cfg(4, 4, 2)).unwrap();
+    assert_ne!(a.coreset.indices, b.coreset.indices);
+}
+
+#[test]
+fn worker_times_reported_for_each_shard() {
+    let ds = synth::uniform_cube(1000, 2, 6);
+    let m = UniformMatroid::new(4);
+    let rep = mr_coreset(&ds, &m, 4, cfg(5, 4, 11)).unwrap();
+    assert_eq!(rep.worker_times.len(), 5);
+    assert_eq!(rep.shard_coreset_sizes.len(), 5);
+    assert_eq!(rep.rounds, 1);
+    assert!(rep.wall_time >= std::time::Duration::ZERO);
+}

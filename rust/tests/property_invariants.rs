@@ -1,0 +1,233 @@
+//! Property-based invariants (mini-proptest): matroid axioms, coreset
+//! feasibility, metric axioms, diversity-function relations, and
+//! local-search postconditions — all over randomized instances.
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::algo::seq_coreset::seq_coreset;
+use matroid_coreset::algo::stream_coreset::stream_coreset_tau;
+use matroid_coreset::algo::Budget;
+use matroid_coreset::core::{Dataset, Metric};
+use matroid_coreset::diversity::{diversity, mst, tsp, Objective};
+use matroid_coreset::matroid::{
+    maximal_independent, Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid,
+};
+use matroid_coreset::prop_assert;
+use matroid_coreset::proptest::{check, Gen};
+use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::util::rng::Rng;
+
+fn random_multilabel_dataset(g: &mut Gen, max_n: usize) -> Dataset {
+    let n = g.usize_in(4, max_n);
+    let dim = g.usize_in(1, 6);
+    let ncat = g.usize_in(2, 6) as u32;
+    let coords = g.vec_f32(n * dim, 2.0);
+    let categories = (0..n)
+        .map(|_| {
+            let c = g.usize_in(1, 2);
+            (0..c).map(|_| g.rng.below(ncat as usize) as u32).collect()
+        })
+        .collect();
+    Dataset::new(dim, Metric::Euclidean, coords, categories, ncat, "prop")
+}
+
+fn random_single_label_dataset(g: &mut Gen, max_n: usize) -> Dataset {
+    let n = g.usize_in(4, max_n);
+    let dim = g.usize_in(1, 6);
+    let ncat = g.usize_in(2, 5) as u32;
+    let coords = g.vec_f32(n * dim, 2.0);
+    let categories = (0..n)
+        .map(|_| vec![g.rng.below(ncat as usize) as u32])
+        .collect();
+    Dataset::new(dim, Metric::Euclidean, coords, categories, ncat, "prop")
+}
+
+/// Hereditary + augmentation axioms for a matroid on a random instance.
+fn check_matroid_axioms(g: &mut Gen, ds: &Dataset, m: &dyn Matroid) -> Result<(), String> {
+    let n = ds.n();
+    // hereditary: random independent set -> every one-element-removed subset
+    let size = g.usize_in(1, n.min(6));
+    let candidate = g.subset(n, size);
+    if m.is_independent(ds, &candidate) {
+        for drop in 0..candidate.len() {
+            let sub: Vec<usize> = candidate
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != drop)
+                .map(|(_, &x)| x)
+                .collect();
+            prop_assert!(
+                m.is_independent(ds, &sub),
+                "hereditary violated: {candidate:?} indep but {sub:?} not"
+            );
+        }
+    }
+    // augmentation: |A| > |B| both independent -> some x in A\B extends B
+    let a = maximal_independent(m, ds, &g.rng.permutation(n), 5);
+    let b = maximal_independent(
+        m,
+        ds,
+        &g.rng.permutation(n),
+        a.len().saturating_sub(1).max(1),
+    );
+    if a.len() > b.len() && m.is_independent(ds, &a) && m.is_independent(ds, &b) {
+        let found = a.iter().any(|&x| !b.contains(&x) && m.can_extend(ds, &b, x));
+        prop_assert!(found, "augmentation violated: |A|={} |B|={}", a.len(), b.len());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_partition_matroid_axioms() {
+    check("partition-axioms", 60, |g| {
+        let ds = random_single_label_dataset(g, 30);
+        let caps: Vec<usize> = (0..ds.n_categories).map(|_| g.usize_in(0, 3)).collect();
+        let m = PartitionMatroid::new(caps);
+        check_matroid_axioms(g, &ds, &m)
+    });
+}
+
+#[test]
+fn prop_transversal_matroid_axioms() {
+    check("transversal-axioms", 60, |g| {
+        let ds = random_multilabel_dataset(g, 25);
+        let m = TransversalMatroid::new();
+        check_matroid_axioms(g, &ds, &m)
+    });
+}
+
+#[test]
+fn prop_coreset_contains_feasible_kset() {
+    // if the input contains an independent k-set, so must the coreset
+    check("coreset-feasible", 30, |g| {
+        let ds = random_single_label_dataset(g, 60);
+        let caps: Vec<usize> = (0..ds.n_categories).map(|_| g.usize_in(1, 3)).collect();
+        let m = PartitionMatroid::new(caps);
+        let k = g.usize_in(2, 5);
+        let full_rank = maximal_independent(&m, &ds, &(0..ds.n()).collect::<Vec<_>>(), k).len();
+        let tau = g.usize_in(2, 10);
+        let cs = seq_coreset(&ds, &m, k, Budget::Clusters(tau), &ScalarEngine::new())
+            .map_err(|e| e.to_string())?;
+        let cs_rank = maximal_independent(&m, &ds, &cs.indices, k).len();
+        prop_assert!(
+            cs_rank >= full_rank.min(k),
+            "coreset rank {cs_rank} < min(full rank {full_rank}, k {k})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stream_coreset_feasible_and_bounded() {
+    check("stream-coreset-feasible", 25, |g| {
+        let ds = random_single_label_dataset(g, 60);
+        let caps: Vec<usize> = (0..ds.n_categories).map(|_| g.usize_in(1, 3)).collect();
+        let m = PartitionMatroid::new(caps);
+        let k = g.usize_in(2, 5);
+        let tau = g.usize_in(2, 8);
+        let order = g.rng.permutation(ds.n());
+        let (cs, _stats) = stream_coreset_tau(&ds, &m, k, tau, &order);
+        prop_assert!(cs.n_clusters <= tau, "centers {} > tau {tau}", cs.n_clusters);
+        let full_rank = maximal_independent(&m, &ds, &(0..ds.n()).collect::<Vec<_>>(), k).len();
+        let cs_rank = maximal_independent(&m, &ds, &cs.indices, k).len();
+        prop_assert!(cs_rank >= full_rank.min(k), "{cs_rank} < {full_rank}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mst_leq_tsp_leq_twice_mst() {
+    check("mst-tsp-sandwich", 40, |g| {
+        let n = g.usize_in(3, 11);
+        let dim = g.usize_in(1, 4);
+        let coords = g.vec_f32(n * dim, 3.0);
+        let ds = Dataset::new(dim, Metric::Euclidean, coords, vec![vec![0]; n], 1, "p");
+        let set: Vec<usize> = (0..n).collect();
+        let w_mst = mst::mst_weight(&ds, &set);
+        let w_tsp = tsp::tsp_weight(&ds, &set);
+        prop_assert!(w_tsp >= w_mst - 1e-9, "tsp {w_tsp} < mst {w_mst}");
+        prop_assert!(w_tsp <= 2.0 * w_mst + 1e-9, "tsp {w_tsp} > 2 mst {w_mst}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diversity_linear_under_scaling() {
+    // scaling all coordinates by c > 1 scales every diversity linearly
+    check("diversity-scaling", 30, |g| {
+        let n = g.usize_in(4, 10);
+        let coords = g.vec_f32(n * 2, 1.0);
+        let scale = g.f64_in(1.5, 4.0) as f32;
+        let scaled: Vec<f32> = coords.iter().map(|&v| v * scale).collect();
+        let ds1 = Dataset::new(2, Metric::Euclidean, coords, vec![vec![0]; n], 1, "a");
+        let ds2 = Dataset::new(2, Metric::Euclidean, scaled, vec![vec![0]; n], 1, "b");
+        let set: Vec<usize> = (0..n).collect();
+        for obj in [Objective::Sum, Objective::Star, Objective::Tree, Objective::Cycle] {
+            let d1 = diversity(&ds1, &set, obj);
+            let d2 = diversity(&ds2, &set, obj);
+            prop_assert!(
+                (d2 - scale as f64 * d1).abs() <= 1e-4 * d2.abs().max(1.0),
+                "{obj:?} not linear under scaling: {d1} -> {d2} (x{scale})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_local_search_postconditions() {
+    check("local-search-post", 25, |g| {
+        let ds = random_single_label_dataset(g, 40);
+        let caps: Vec<usize> = (0..ds.n_categories).map(|_| g.usize_in(1, 3)).collect();
+        let m = PartitionMatroid::new(caps);
+        let k = g.usize_in(2, 4);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let mut rng = Rng::new(g.rng.next_u64());
+        let res = local_search_sum(
+            &ds,
+            &m,
+            k,
+            &cands,
+            LocalSearchParams::default(),
+            None,
+            &mut rng,
+        );
+        prop_assert!(m.is_independent(&ds, &res.solution), "solution not independent");
+        // local optimality: no single swap improves (spot-check a few)
+        let div = res.diversity;
+        for _ in 0..10 {
+            if res.solution.is_empty() {
+                break;
+            }
+            let v = g.rng.below(ds.n());
+            if res.solution.contains(&v) {
+                continue;
+            }
+            let upos = g.rng.below(res.solution.len());
+            let mut cand = res.solution.clone();
+            cand[upos] = v;
+            if m.is_independent(&ds, &cand) {
+                let nd = matroid_coreset::diversity::sum_diversity(&ds, &cand);
+                prop_assert!(
+                    nd <= div + 1e-6 * div.max(1.0),
+                    "improving swap left: {nd} > {div}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_matroid_unconstrained_equivalence() {
+    // under U_{k,n}, greedy maximal always reaches exactly k elements
+    check("uniform-equiv", 20, |g| {
+        let n = g.usize_in(5, 30);
+        let coords = g.vec_f32(n * 2, 1.0);
+        let ds = Dataset::new(2, Metric::Euclidean, coords, vec![vec![0]; n], 1, "u");
+        let k = g.usize_in(1, n.min(5));
+        let m = UniformMatroid::new(k);
+        let picked = maximal_independent(&m, &ds, &g.rng.permutation(n), n);
+        prop_assert!(picked.len() == k, "uniform rank not reached: {}", picked.len());
+        Ok(())
+    });
+}

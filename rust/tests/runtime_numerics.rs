@@ -1,0 +1,153 @@
+//! Integration: PJRT artifacts vs. the Rust scalar oracle.
+//!
+//! Closes the correctness triangle pallas == jnp-ref == rust-scalar from
+//! the Rust side: every AOT artifact (gmm_update / gmm_assign / pairwise,
+//! both metrics, both padded dims) is executed through the `xla` crate and
+//! compared elementwise against `ScalarEngine` / `Dataset::dist`.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise, so plain
+//! `cargo test` works in a fresh checkout).
+
+use matroid_coreset::algo::gmm::{gmm, GmmStop};
+use matroid_coreset::core::{Dataset, Metric};
+use matroid_coreset::data::synth;
+use matroid_coreset::runtime::engine::{DistanceEngine, ScalarEngine};
+use matroid_coreset::runtime::{default_artifact_dir, Manifest, PjrtEngine};
+use matroid_coreset::util::rng::Rng;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(default_artifact_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_numerics: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// A dataset with both metrics exercised and a dim that forces padding.
+fn dataset(metric: Metric, n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let coords: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    Dataset::new(dim, metric, coords, vec![vec![0]; n], 1, "rt")
+}
+
+#[test]
+fn update_min_matches_scalar_both_metrics() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        // n deliberately NOT a multiple of NP; dim 25 pads to 32
+        let ds = dataset(metric, 3000, 25, 1);
+        let pjrt = PjrtEngine::for_dataset(&manifest, &ds).unwrap();
+        let scalar = ScalarEngine::new();
+        let n = ds.n();
+        let mut mp = vec![f32::INFINITY; n];
+        let mut ap = vec![u32::MAX; n];
+        let mut ms = vec![f32::INFINITY; n];
+        let mut as_ = vec![u32::MAX; n];
+        for (id, c) in [0usize, 17, n - 1, n / 2].into_iter().enumerate() {
+            pjrt.update_min(&ds, c, id as u32, &mut mp, &mut ap).unwrap();
+            scalar.update_min(&ds, c, id as u32, &mut ms, &mut as_).unwrap();
+        }
+        for i in 0..n {
+            // the kernel's MXU-friendly expanded form |x|^2+|c|^2-2xc has
+            // O(sqrt(eps_f32)*|x|) residue at d ~ 0 (see python tests):
+            // allow ~1e-2 absolute on top of the relative band
+            assert!(
+                (mp[i] - ms[i]).abs() < 2e-3 * ms[i].max(1.0) + 1e-2,
+                "{metric:?} point {i}: pjrt {} vs scalar {}",
+                mp[i],
+                ms[i]
+            );
+        }
+        // argmins agree wherever the two nearest centers are not borderline
+        let mismatches = (0..n).filter(|&i| ap[i] != as_[i]).count();
+        assert!(mismatches < n / 100, "{metric:?}: {mismatches} argmin mismatches");
+    }
+}
+
+#[test]
+fn assign_all_matches_scalar() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let ds = dataset(Metric::Euclidean, 2500, 40, 2); // pads to 64
+    let pjrt = PjrtEngine::for_dataset(&manifest, &ds).unwrap();
+    assert_eq!(pjrt.padded_dim(), 64);
+    let centers: Vec<usize> = (0..300).map(|i| i * 7 % ds.n()).collect(); // > TC: 2 tiles
+    let (mind, arg) = pjrt.assign_all(&ds, &centers).unwrap();
+    for i in (0..ds.n()).step_by(97) {
+        let mut best = f64::INFINITY;
+        for &c in &centers {
+            best = best.min(ds.dist(i, c));
+        }
+        assert!(
+            (mind[i] as f64 - best).abs() < 2e-3 * best.max(1.0) + 1e-2,
+            "point {i}: {} vs {}",
+            mind[i],
+            best
+        );
+        // the reported argmin must point at a center achieving ~best
+        let picked = centers[arg[i] as usize];
+        assert!((ds.dist(i, picked) - best).abs() < 2e-3 * best.max(1.0) + 1e-2);
+    }
+}
+
+#[test]
+fn pairwise_block_matches_dataset_dist() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 600, 25, 3);
+        let pjrt = PjrtEngine::for_dataset(&manifest, &ds).unwrap();
+        let rows: Vec<usize> = (0..40).collect();
+        let cols: Vec<usize> = (100..160).collect();
+        let block = pjrt.pairwise_block(&ds, &rows, &cols).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                let expect = ds.dist(i, j);
+                let got = block[r * cols.len() + c] as f64;
+                assert!(
+                    (got - expect).abs() < 2e-3 * expect.max(1.0) + 2e-3,
+                    "{metric:?} ({i},{j}): {got} vs {expect}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gmm_with_pjrt_engine_matches_scalar_centers() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let ds = synth::clustered(2000, 8, 10, 0.05, 1, 4);
+    let pjrt = PjrtEngine::for_dataset(&manifest, &ds).unwrap();
+    let scalar = ScalarEngine::new();
+    let c_pjrt = gmm(&ds, &pjrt, 0, GmmStop::Clusters(10)).unwrap();
+    let c_scalar = gmm(&ds, &scalar, 0, GmmStop::Clusters(10)).unwrap();
+    // identical farthest-point trajectories modulo fp ties: radii must agree
+    assert!(
+        (c_pjrt.radius - c_scalar.radius).abs() < 2e-3 * c_scalar.radius.max(1e-9),
+        "radius {} vs {}",
+        c_pjrt.radius,
+        c_scalar.radius
+    );
+    assert_eq!(c_pjrt.centers.len(), c_scalar.centers.len());
+}
+
+#[test]
+fn engine_rejects_wrong_dataset() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let ds = dataset(Metric::Euclidean, 500, 8, 5);
+    let other = dataset(Metric::Euclidean, 400, 8, 6);
+    let pjrt = PjrtEngine::for_dataset(&manifest, &ds).unwrap();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut m = vec![f32::INFINITY; other.n()];
+        let mut a = vec![u32::MAX; other.n()];
+        let _ = pjrt.update_min(&other, 0, 0, &mut m, &mut a);
+    }));
+    assert!(result.is_err(), "mismatched dataset must be rejected");
+}
+
+#[test]
+fn oversize_dim_rejected() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let ds = dataset(Metric::Euclidean, 10, 100, 7); // 100 > max dim 64
+    assert!(PjrtEngine::for_dataset(&manifest, &ds).is_err());
+}

@@ -1,0 +1,164 @@
+//! Integration: streaming semantics — one pass, sublinear memory, order
+//! robustness, and the quality/size trade governed by tau (paper §5.2).
+
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::coordinator::{build_dataset, build_matroid, DatasetSpec, MatroidSpec};
+use matroid_coreset::data::synth;
+use matroid_coreset::diversity::sum_diversity;
+use matroid_coreset::matroid::{Matroid, UniformMatroid};
+use matroid_coreset::streaming::{run_stream, StreamMode};
+use matroid_coreset::util::rng::Rng;
+
+#[test]
+fn quality_improves_with_tau_fig2_shape() {
+    // Figure 2's headline: larger tau -> better (and more concentrated)
+    // solution quality. Checked as a trend over tau in {4, 16, 64}.
+    let ds = synth::clustered(3000, 4, 32, 0.15, 1, 1);
+    let m = UniformMatroid::new(8);
+    let k = 8;
+    let mut rng = Rng::new(7);
+    let mut means = Vec::new();
+    for tau in [4usize, 16, 64] {
+        let mut divs = Vec::new();
+        for _ in 0..3 {
+            let order = rng.permutation(ds.n());
+            let rep = run_stream(&ds, &m, k, StreamMode::Tau(tau), &order);
+            let mut rng2 = Rng::new(42);
+            let res = local_search_sum(
+                &ds,
+                &m,
+                k,
+                &rep.coreset.indices,
+                LocalSearchParams::default(),
+                None,
+                &mut rng2,
+            );
+            divs.push(res.diversity);
+        }
+        means.push(divs.iter().sum::<f64>() / divs.len() as f64);
+    }
+    assert!(
+        means[2] >= means[0] * 0.999,
+        "quality did not improve with tau: {means:?}"
+    );
+}
+
+#[test]
+fn memory_grows_with_tau_but_stays_sublinear() {
+    let ds = synth::uniform_cube(5000, 3, 2);
+    let m = UniformMatroid::new(6);
+    let order: Vec<usize> = (0..ds.n()).collect();
+    let mut prev_mem = 0;
+    for tau in [8usize, 32, 128] {
+        let rep = run_stream(&ds, &m, 6, StreamMode::Tau(tau), &order);
+        assert!(rep.stats.peak_memory_points >= prev_mem / 2); // roughly monotone
+        assert!(
+            rep.stats.peak_memory_points < ds.n() / 4,
+            "tau={tau}: memory {} not sublinear",
+            rep.stats.peak_memory_points
+        );
+        prev_mem = rep.stats.peak_memory_points;
+    }
+}
+
+#[test]
+fn adversarial_orders_keep_feasibility() {
+    let spec = DatasetSpec::Wikisim { n: 1000, seed: 3 };
+    let ds = build_dataset(&spec).unwrap();
+    let m = build_matroid(&MatroidSpec::Transversal, &ds);
+    let k = 6;
+    // sorted-by-first-coordinate order (worst case for diameter estimates)
+    let mut sorted: Vec<usize> = (0..ds.n()).collect();
+    sorted.sort_by(|&a, &b| {
+        ds.point(a)[0]
+            .partial_cmp(&ds.point(b)[0])
+            .unwrap()
+    });
+    let reversed: Vec<usize> = sorted.iter().rev().copied().collect();
+    for order in [&sorted, &reversed] {
+        let rep = run_stream(&ds, &m, k, StreamMode::Tau(24), order);
+        let sol = matroid_coreset::matroid::maximal_independent(&m, &ds, &rep.coreset.indices, k);
+        assert_eq!(sol.len(), k, "stream order broke feasibility");
+    }
+}
+
+#[test]
+fn stream_vs_seq_quality_band() {
+    // StreamCoreset uses an 8-approx clustering vs GMM's 2-approx, so its
+    // quality may trail SeqCoreset slightly — but not collapse (Fig. 3).
+    use matroid_coreset::algo::seq_coreset::seq_coreset;
+    use matroid_coreset::algo::Budget;
+    use matroid_coreset::runtime::ScalarEngine;
+
+    let ds = synth::clustered(4000, 4, 24, 0.1, 1, 5);
+    let m = UniformMatroid::new(6);
+    let k = 6;
+    let tau = 24;
+    let seq = seq_coreset(&ds, &m, k, Budget::Clusters(tau), &ScalarEngine::new()).unwrap();
+    let order: Vec<usize> = (0..ds.n()).collect();
+    let stream = run_stream(&ds, &m, k, StreamMode::Tau(tau), &order);
+    let finish = |cands: &[usize]| {
+        let mut rng = Rng::new(1);
+        local_search_sum(&ds, &m, k, cands, LocalSearchParams::default(), None, &mut rng)
+            .diversity
+    };
+    let d_seq = finish(&seq.indices);
+    let d_stream = finish(&stream.coreset.indices);
+    assert!(
+        d_stream >= 0.75 * d_seq,
+        "stream {d_stream} collapsed vs seq {d_seq}"
+    );
+}
+
+#[test]
+fn throughput_and_distance_eval_accounting() {
+    let ds = synth::uniform_cube(2000, 2, 6);
+    let m = UniformMatroid::new(4);
+    let order: Vec<usize> = (0..ds.n()).collect();
+    let rep = run_stream(&ds, &m, 4, StreamMode::Tau(16), &order);
+    assert!(rep.throughput > 0.0);
+    // distance evals ~ n * |Z| at most (plus restructures)
+    let bound = (ds.n() * (16 + 4)) as u64 * 2;
+    assert!(
+        rep.stats.distance_evals <= bound,
+        "evals {} exceed model bound {bound}",
+        rep.stats.distance_evals
+    );
+}
+
+#[test]
+fn duplicate_heavy_stream_terminates_small() {
+    // many duplicates: centers stay tiny, delegates bounded
+    let mut coords = Vec::new();
+    for i in 0..1000 {
+        let v = (i % 5) as f32;
+        coords.push(v);
+        coords.push(-v);
+    }
+    let ds = matroid_coreset::core::Dataset::new(
+        2,
+        matroid_coreset::core::Metric::Euclidean,
+        coords,
+        vec![vec![0]; 1000],
+        1,
+        "dups",
+    );
+    let m = UniformMatroid::new(3);
+    let order: Vec<usize> = (0..ds.n()).collect();
+    let rep = run_stream(&ds, &m, 3, StreamMode::Tau(8), &order);
+    assert!(rep.coreset.n_clusters <= 8);
+    assert!(rep.coreset.len() <= 8 * 3 + 8);
+    let sol = maximal_ind(&ds, &m, &rep.coreset.indices, 3);
+    assert_eq!(sol.len(), 3);
+    let div = sum_diversity(&ds, &sol);
+    assert!(div > 0.0);
+}
+
+fn maximal_ind(
+    ds: &matroid_coreset::core::Dataset,
+    m: &dyn Matroid,
+    items: &[usize],
+    k: usize,
+) -> Vec<usize> {
+    matroid_coreset::matroid::maximal_independent(m, ds, items, k)
+}
