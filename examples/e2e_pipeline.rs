@@ -33,8 +33,12 @@ fn main() -> anyhow::Result<()> {
     let n_amt = 5_000.min(n); // paper §5.1 runs AMT on 5k samples
     let tau = 64;
 
-    let pjrt_available = Manifest::load(default_artifact_dir()).is_ok();
-    println!("e2e: n={n} tau={tau} | PJRT artifacts: {}", if pjrt_available { "found" } else { "MISSING (scalar only)" });
+    let pjrt_available =
+        cfg!(feature = "pjrt") && Manifest::load(default_artifact_dir()).is_ok();
+    println!(
+        "e2e: n={n} tau={tau} | PJRT: {}",
+        if pjrt_available { "found" } else { "unavailable (scalar + batch only)" }
+    );
 
     for (label, dspec) in [
         ("wikisim/transversal", DatasetSpec::Wikisim { n, seed: 1 }),
@@ -62,9 +66,9 @@ fn main() -> anyhow::Result<()> {
         );
 
         let engines: &[EngineKind] = if pjrt_available {
-            &[EngineKind::Scalar, EngineKind::Pjrt]
+            &[EngineKind::Scalar, EngineKind::Batch, EngineKind::Pjrt]
         } else {
-            &[EngineKind::Scalar]
+            &[EngineKind::Scalar, EngineKind::Batch]
         };
         for &engine in engines {
             let seq = run_pipeline(
@@ -92,7 +96,7 @@ fn main() -> anyhow::Result<()> {
             Pipeline {
                 setting: Setting::Stream { mode: StreamMode::Tau(tau) },
                 finisher: Finisher::LocalSearch { gamma: 0.0 },
-                engine: EngineKind::Scalar,
+                engine: EngineKind::Batch,
             },
             1,
         )?;
@@ -115,7 +119,7 @@ fn main() -> anyhow::Result<()> {
                         second_round_tau: None,
                     },
                     finisher: Finisher::LocalSearch { gamma: 0.0 },
-                    engine: EngineKind::Scalar,
+                    engine: EngineKind::Batch,
                 },
                 1,
             )?;
@@ -139,7 +143,7 @@ fn main() -> anyhow::Result<()> {
         Pipeline {
             setting: Setting::Seq { budget: Budget::Clusters(12) },
             finisher: Finisher::Exhaustive,
-            engine: EngineKind::Scalar,
+            engine: EngineKind::Batch,
         },
         3,
     )?;

@@ -13,7 +13,7 @@ use matroid_coreset::algo::Budget;
 use matroid_coreset::data::synth;
 use matroid_coreset::diversity::{diversity, Objective};
 use matroid_coreset::matroid::{Matroid, PartitionMatroid};
-use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::util::rng::Rng;
 use matroid_coreset::util::timer::time_it;
 
@@ -27,8 +27,9 @@ fn main() -> anyhow::Result<()> {
     let k = 8;
     println!("matroid: {} | k = {k}", matroid.describe());
 
-    // 3. build a (1-eps)-coreset with SeqCoreset (Algorithm 1)
-    let engine = ScalarEngine::new();
+    // 3. build a (1-eps)-coreset with SeqCoreset (Algorithm 1), on the
+    //    default multi-threaded batch engine
+    let engine = BatchEngine::for_dataset(&ds);
     let (coreset, t_coreset) =
         time_it(|| seq_coreset(&ds, &matroid, k, Budget::Clusters(64), &engine));
     let coreset = coreset?;
@@ -48,11 +49,13 @@ fn main() -> anyhow::Result<()> {
             &matroid,
             k,
             &coreset.indices,
+            &engine,
             LocalSearchParams::default(),
             None,
             &mut rng,
         )
     });
+    let result = result?;
     println!(
         "solution: {:?}\n  sum-diversity = {:.4} ({} swaps, {:.3}s)",
         result.solution,
@@ -71,11 +74,13 @@ fn main() -> anyhow::Result<()> {
             &matroid,
             k,
             &all,
+            &engine,
             LocalSearchParams::default(),
             None,
             &mut rng2,
         )
     });
+    let full = full?;
     println!(
         "baseline (AMT on full input): diversity = {:.4} in {:.3}s",
         full.diversity,

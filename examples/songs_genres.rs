@@ -10,6 +10,7 @@ use matroid_coreset::algo::Budget;
 use matroid_coreset::data::synth;
 use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
 use matroid_coreset::matroid::Matroid;
+use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::util::rng::Rng;
 use matroid_coreset::util::timer::time_it;
 
@@ -24,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let rank = matroid.rank_bound(&ds);
     let k = rank / 4;
     println!("matroid: {} (rank {rank}), k = {k}", matroid.describe());
+    let engine = BatchEngine::for_dataset(&ds);
 
     println!("\n ell  makespan_r1  wall      coreset  diversity  (tau/ell clusters per worker)");
     for ell in [1usize, 2, 4, 8] {
@@ -42,11 +44,13 @@ fn main() -> anyhow::Result<()> {
                 &matroid,
                 k,
                 &rep.coreset.indices,
+                &engine,
                 LocalSearchParams::default(),
                 None,
                 &mut rng,
             )
         });
+        let res = res?;
         assert!(matroid.is_independent(&ds, &res.solution));
         println!(
             "  {ell:2}  {:>9.3}s  {:>7.3}s  {:>7}  {:>9.3}  (+{:.2}s local search)",
@@ -72,10 +76,11 @@ fn main() -> anyhow::Result<()> {
         &matroid,
         k,
         &rep.coreset.indices,
+        &engine,
         LocalSearchParams::default(),
         None,
         &mut rng,
-    );
+    )?;
     let mut per_genre = vec![0usize; ds.n_categories as usize];
     for &i in &res.solution {
         per_genre[ds.categories[i][0] as usize] += 1;

@@ -8,6 +8,7 @@
 use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
 use matroid_coreset::data::synth;
 use matroid_coreset::matroid::{Matroid, TransversalMatroid};
+use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::streaming::{run_stream, StreamMode};
 use matroid_coreset::util::rng::Rng;
 use matroid_coreset::util::timer::time_it;
@@ -41,7 +42,8 @@ fn main() -> anyhow::Result<()> {
         rep.stats.restructures,
     );
 
-    // final solution on the coreset
+    // final solution on the coreset (engine built outside the timed block)
+    let engine = BatchEngine::for_dataset(&ds);
     let (res, t_ls) = time_it(|| {
         let mut r2 = Rng::new(5);
         local_search_sum(
@@ -49,11 +51,13 @@ fn main() -> anyhow::Result<()> {
             &matroid,
             k,
             &rep.coreset.indices,
+            &engine,
             LocalSearchParams::default(),
             None,
             &mut r2,
         )
     });
+    let res = res?;
     println!(
         "local search on coreset: diversity {:.4} in {:.2}s ({} swaps)",
         res.diversity,

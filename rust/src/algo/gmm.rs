@@ -62,16 +62,11 @@ pub fn gmm(
     let mut assign = vec![0u32; n];
     engine.update_min(ds, first, 0, &mut mindist, &mut assign)?;
 
-    // second center = farthest point; delta = d(z1, z2)
-    let mut delta = 0.0f64;
-    if n > 1 {
-        let far = argmax(&mindist);
-        delta = mindist[far] as f64;
-        if delta > 0.0 {
-            centers.push(far);
-            engine.update_min(ds, far, 1, &mut mindist, &mut assign)?;
-        }
-    }
+    // delta = d(z1, z2) where z2 is the farthest point from z1 — the
+    // paper's diameter proxy, fixed after the first fold whether or not
+    // z2 is ever promoted to a center (the stop rule is checked *before*
+    // every push, so e.g. GmmStop::Clusters(1) really returns 1 center).
+    let delta = mindist[argmax(&mindist)] as f64;
 
     loop {
         let far = argmax(&mindist);
@@ -174,6 +169,38 @@ mod tests {
         let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(25)).unwrap();
         assert_eq!(c.radius, 0.0);
         assert_eq!(c.centers.len(), 25);
+    }
+
+    #[test]
+    fn tau_one_returns_exactly_one_center() {
+        // regression: the second (farthest) center used to be pushed before
+        // any stop check, so Clusters(1) returned 2 centers
+        let ds = synth::uniform_cube(100, 2, 9);
+        let c = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(1)).unwrap();
+        assert_eq!(c.centers.len(), 1);
+        assert_eq!(c.centers[0], 0);
+        assert!(c.assign.iter().all(|&a| a == 0));
+        // delta must still report the diameter proxy, not collapse to 0
+        assert!(c.delta > 0.0);
+        assert!((c.radius - c.delta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_engine_matches_scalar_trajectory() {
+        // BatchEngine is bit-identical on update_min, so the greedy center
+        // sequence — argmax over f32 min-dists — must match exactly.
+        let ds = synth::clustered(3000, 4, 6, 0.2, 2, 17);
+        let s = gmm(&ds, &ScalarEngine::new(), 0, GmmStop::Clusters(24)).unwrap();
+        let b = gmm(
+            &ds,
+            &crate::runtime::BatchEngine::for_dataset(&ds),
+            0,
+            GmmStop::Clusters(24),
+        )
+        .unwrap();
+        assert_eq!(s.centers, b.centers);
+        assert_eq!(s.assign, b.assign);
+        assert_eq!(s.mindist, b.mindist);
     }
 
     #[test]

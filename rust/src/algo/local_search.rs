@@ -4,14 +4,21 @@
 //!
 //! Start from an independent set of size k, then repeatedly apply a
 //! feasible swap (u out, v in) that improves the sum-diversity by a factor
-//! of at least `1 + gamma`; stop when no such swap exists.  The swap scan
-//! is O(n k) per pass using incrementally maintained distance sums, and
-//! every improving candidate costs one independence-oracle call.
+//! of at least `1 + gamma`; after an accepted swap the pass restarts from
+//! the first candidate (the AMT scan); stop when a full pass finds no such
+//! swap.  The O(n k) per-pass distance work — every candidate's distance
+//! sum to the current solution — goes through one batched
+//! [`DistanceEngine::sums_to_set`] call per pass, so the default batch
+//! backend both blocks and multi-threads it; only improving candidates pay
+//! the k exact per-member distances and one independence-oracle call.
+
+use anyhow::Result;
 
 use crate::algo::greedy::greedy_matroid_gonzalez;
 use crate::core::Dataset;
 use crate::diversity::sum_diversity;
 use crate::matroid::Matroid;
+use crate::runtime::engine::DistanceEngine;
 use crate::util::rng::Rng;
 
 /// Outcome of a local-search run.
@@ -49,15 +56,21 @@ impl Default for LocalSearchParams {
 
 /// Run AMT local search over `candidates` (e.g. a coreset or the full
 /// dataset).  `init`: optional warm start (must be independent).
+///
+/// All O(n k) per-pass distance work is batched through `engine`
+/// ([`DistanceEngine::sums_to_set`]); acceptance decisions stay in exact
+/// f64 with the oracle formulas, so the trajectory is engine-independent
+/// across `scalar` and `batch`.
 pub fn local_search_sum(
     ds: &Dataset,
     m: &dyn Matroid,
     k: usize,
     candidates: &[usize],
+    engine: &dyn DistanceEngine,
     params: LocalSearchParams,
     init: Option<Vec<usize>>,
     rng: &mut Rng,
-) -> LocalSearchResult {
+) -> Result<LocalSearchResult> {
     let mut oracle_calls: u64 = 0;
     let mut sol = match init {
         Some(s) => s,
@@ -66,70 +79,70 @@ pub fn local_search_sum(
     debug_assert!(m.is_independent(ds, &sol));
     if sol.len() < 2 {
         let diversity = sum_diversity(ds, &sol);
-        return LocalSearchResult {
+        return Ok(LocalSearchResult {
             solution: sol,
             diversity,
             swaps: 0,
             oracle_calls,
-        };
+        });
     }
 
-    // per-member total distance to the rest of the solution
-    let recompute_sums = |sol: &[usize]| -> Vec<f64> {
-        sol.iter()
-            .map(|&u| sol.iter().map(|&w| ds.dist(u, w)).sum())
-            .collect()
-    };
-    let mut sums = recompute_sums(&sol);
+    // per-member total distance to the whole solution (self term = 0)
+    let mut sums = engine.sums_to_set(ds, &sol, &sol)?;
     let mut div: f64 = sums.iter().sum::<f64>() / 2.0;
     let mut swaps = 0;
 
-    loop {
-        let mut improved = false;
-        'pass: for &v in candidates {
+    // AMT scan: accept the first improving feasible swap, then restart the
+    // pass from the first candidate — the swap changed every member sum,
+    // so each pass recomputes the candidate sums in one batched call.
+    'outer: loop {
+        let cand_sums = engine.sums_to_set(ds, candidates, &sol)?;
+        let min_sums = sums.iter().copied().fold(f64::INFINITY, f64::min);
+        for (ci, &v) in candidates.iter().enumerate() {
             if sol.contains(&v) {
                 continue;
             }
-            // sum of distances from v to the whole solution
-            let sumv: f64 = sol.iter().map(|&w| ds.dist(v, w)).sum();
+            let sumv = cand_sums[ci];
+            let threshold = div * (1.0 + params.gamma) + 1e-12 * div.max(1.0);
+            // exact screen: even evicting the weakest member and ignoring
+            // the d(v, u) correction cannot beat the threshold
+            if div - min_sums + sumv <= threshold {
+                continue;
+            }
             for upos in 0..sol.len() {
                 let u = sol[upos];
                 // div' = div - sum_d(u, sol\{u}) + sum_d(v, sol\{u})
                 let new_div = div - sums[upos] + (sumv - ds.dist(v, u));
-                let threshold = div * (1.0 + params.gamma);
-                if new_div > threshold + 1e-12 * div.max(1.0) {
+                if new_div > threshold {
                     // feasibility check only for improving candidates
                     let mut cand = sol.clone();
                     cand[upos] = v;
                     oracle_calls += 1;
                     if m.is_independent(ds, &cand) {
                         sol = cand;
-                        sums = recompute_sums(&sol);
+                        sums = engine.sums_to_set(ds, &sol, &sol)?;
                         div = new_div;
                         swaps += 1;
-                        improved = true;
                         if swaps >= params.max_swaps {
-                            break 'pass;
+                            break 'outer;
                         }
-                        // restart the v-scan with updated solution state
-                        continue 'pass;
+                        continue 'outer;
                     }
                 }
             }
         }
-        if !improved || swaps >= params.max_swaps {
-            break;
-        }
+        // a full pass without an accepted swap: local optimum reached
+        break;
     }
 
     // recompute exactly to wash out incremental fp drift
     let diversity = sum_diversity(ds, &sol);
-    LocalSearchResult {
+    Ok(LocalSearchResult {
         solution: sol,
         diversity,
         swaps,
         oracle_calls,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -137,6 +150,8 @@ mod tests {
     use super::*;
     use crate::data::synth;
     use crate::matroid::{Matroid, PartitionMatroid, UniformMatroid};
+    use crate::runtime::engine::ScalarEngine;
+    use crate::runtime::BatchEngine;
 
     fn brute_force_best_sum(
         ds: &Dataset,
@@ -178,11 +193,35 @@ mod tests {
         let m = UniformMatroid::new(4);
         let mut rng = Rng::new(1);
         let cands: Vec<usize> = (0..ds.n()).collect();
-        let res = local_search_sum(&ds, &m, 4, &cands, LocalSearchParams::default(), None, &mut rng);
+        let res = local_search_sum(
+            &ds, &m, 4, &cands,
+            &BatchEngine::for_dataset(&ds),
+            LocalSearchParams::default(), None, &mut rng,
+        )
+        .unwrap();
         let (_, opt) = brute_force_best_sum(&ds, &m, 4);
         assert!(res.diversity >= 0.5 * opt - 1e-9,
             "{} < half of {}", res.diversity, opt);
         assert_eq!(res.solution.len(), 4);
+    }
+
+    #[test]
+    fn trajectory_engine_independent() {
+        // sums_to_set is bit-identical between scalar and batch, and all
+        // acceptance decisions are exact f64 — so the full swap trajectory
+        // (not just the endpoint) must agree across engines.
+        let ds = synth::uniform_cube(150, 3, 21);
+        let m = UniformMatroid::new(6);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = local_search_sum(&ds, &m, 6, &cands, &ScalarEngine::new(),
+            LocalSearchParams::default(), None, &mut r1).unwrap();
+        let b = local_search_sum(&ds, &m, 6, &cands, &BatchEngine::for_dataset(&ds),
+            LocalSearchParams::default(), None, &mut r2).unwrap();
+        assert_eq!(a.solution, b.solution);
+        assert_eq!(a.swaps, b.swaps);
+        assert_eq!(a.oracle_calls, b.oracle_calls);
     }
 
     #[test]
@@ -191,7 +230,12 @@ mod tests {
         let m = PartitionMatroid::new(vec![2, 2, 2]);
         let mut rng = Rng::new(2);
         let cands: Vec<usize> = (0..ds.n()).collect();
-        let res = local_search_sum(&ds, &m, 5, &cands, LocalSearchParams::default(), None, &mut rng);
+        let res = local_search_sum(
+            &ds, &m, 5, &cands,
+            &BatchEngine::for_dataset(&ds),
+            LocalSearchParams::default(), None, &mut rng,
+        )
+        .unwrap();
         assert!(m.is_independent(&ds, &res.solution));
         assert_eq!(res.solution.len(), 5);
     }
@@ -203,10 +247,11 @@ mod tests {
         let cands: Vec<usize> = (0..ds.n()).collect();
         let mut r1 = Rng::new(3);
         let mut r2 = Rng::new(3);
-        let tight = local_search_sum(&ds, &m, 6, &cands,
-            LocalSearchParams { gamma: 0.0, max_swaps: 10_000 }, None, &mut r1);
-        let loose = local_search_sum(&ds, &m, 6, &cands,
-            LocalSearchParams { gamma: 0.5, max_swaps: 10_000 }, None, &mut r2);
+        let e = ScalarEngine::new();
+        let tight = local_search_sum(&ds, &m, 6, &cands, &e,
+            LocalSearchParams { gamma: 0.0, max_swaps: 10_000 }, None, &mut r1).unwrap();
+        let loose = local_search_sum(&ds, &m, 6, &cands, &e,
+            LocalSearchParams { gamma: 0.5, max_swaps: 10_000 }, None, &mut r2).unwrap();
         assert!(tight.diversity >= loose.diversity - 1e-9);
         assert!(loose.swaps <= tight.swaps);
     }
@@ -219,8 +264,8 @@ mod tests {
         let init: Vec<usize> = (0..5).collect();
         let init_div = sum_diversity(&ds, &init);
         let cands: Vec<usize> = (0..ds.n()).collect();
-        let res = local_search_sum(&ds, &m, 5, &cands,
-            LocalSearchParams::default(), Some(init), &mut rng);
+        let res = local_search_sum(&ds, &m, 5, &cands, &ScalarEngine::new(),
+            LocalSearchParams::default(), Some(init), &mut rng).unwrap();
         assert!(res.diversity >= init_div - 1e-9);
     }
 
@@ -231,8 +276,8 @@ mod tests {
         let mut rng = Rng::new(6);
         let init: Vec<usize> = (0..5).collect(); // adversarially bad start
         let cands: Vec<usize> = (0..ds.n()).collect();
-        let res = local_search_sum(&ds, &m, 5, &cands,
-            LocalSearchParams { gamma: 0.0, max_swaps: 2 }, Some(init), &mut rng);
+        let res = local_search_sum(&ds, &m, 5, &cands, &ScalarEngine::new(),
+            LocalSearchParams { gamma: 0.0, max_swaps: 2 }, Some(init), &mut rng).unwrap();
         assert!(res.swaps <= 2);
     }
 
@@ -242,7 +287,14 @@ mod tests {
         let m = UniformMatroid::new(4);
         let mut rng = Rng::new(7);
         let cands: Vec<usize> = (0..ds.n()).collect();
-        let res = local_search_sum(&ds, &m, 4, &cands, LocalSearchParams::default(), None, &mut rng);
+        // the restart-after-swap scan must keep the incremental `div`
+        // consistent with the exact recomputation at the end
+        let res = local_search_sum(
+            &ds, &m, 4, &cands,
+            &BatchEngine::for_dataset(&ds),
+            LocalSearchParams::default(), None, &mut rng,
+        )
+        .unwrap();
         assert!((res.diversity - sum_diversity(&ds, &res.solution)).abs() < 1e-9);
     }
 }

@@ -21,6 +21,7 @@
 use crate::algo::Coreset;
 use crate::core::Dataset;
 use crate::matroid::{maximal_independent, Matroid, MatroidKind};
+use crate::runtime::engine::{DistanceEngine, ScalarEngine};
 use crate::util::timer::PhaseTimer;
 
 /// Lemma 3 constant.
@@ -63,6 +64,14 @@ pub struct StreamCoreset<'a> {
     delegates: Vec<Vec<usize>>,
     seen: usize,
     stats: StreamStats,
+    /// Engine for the restructure re-assignment tile (the only
+    /// super-constant distance block in the one-pass algorithm).  Scalar,
+    /// not batch: the tile is bounded by the center count (far below any
+    /// fan-out threshold), and a per-dataset engine would add the O(n)
+    /// precompute and memory the streaming model exists to avoid.  The
+    /// per-point `push` scan stays point-at-a-time — that is the
+    /// streaming cost model §5.2 measures.
+    engine: ScalarEngine,
 }
 
 impl<'a> StreamCoreset<'a> {
@@ -90,6 +99,7 @@ impl<'a> StreamCoreset<'a> {
             delegates: Vec::new(),
             seen: 0,
             stats: StreamStats::default(),
+            engine: ScalarEngine::new(),
         }
     }
 
@@ -214,18 +224,47 @@ impl<'a> StreamCoreset<'a> {
                 dropped.push((pos, dz));
             }
         }
-        for (pos, dz) in dropped {
-            // dropped center: re-handle each delegate into nearest kept
-            let z_old = old_centers[pos];
+        if dropped.is_empty() {
+            return;
+        }
+        // re-assignment: each dropped center's delegates move to the kept
+        // center nearest the *dropped* center — one engine tile of
+        // |dropped| x |kept| distances instead of a scalar scan per drop
+        // (same eval count as the scan, so the §5.2 cost model is unchanged)
+        let dropped_centers: Vec<usize> =
+            dropped.iter().map(|&(pos, _)| old_centers[pos]).collect();
+        let width = self.centers.len();
+        let tile = self
+            .engine
+            .pairwise_block(self.ds, &dropped_centers, &self.centers)
+            .expect("pairwise tile");
+        self.stats.distance_evals += (dropped_centers.len() * width) as u64;
+        for (row, (_, dz)) in dropped.into_iter().enumerate() {
+            let row_tile = &tile[row * width..(row + 1) * width];
             let mut best = 0;
-            let mut best_d = f64::INFINITY;
-            for npos in 0..self.centers.len() {
-                let nz = self.centers[npos];
-                self.stats.distance_evals += 1;
-                let d = self.ds.dist(z_old, nz);
-                if d < best_d {
-                    best_d = d;
+            for npos in 1..width {
+                if row_tile[npos] < row_tile[best] {
                     best = npos;
+                }
+            }
+            // the tile is f32; only when other centers land within f32
+            // rounding of the winner re-decide the tie in exact f64 so the
+            // choice matches the old all-f64 scan (rare: costs 0 extra
+            // evals on the common unique-winner path)
+            let band = 1e-6f32 * (row_tile[best] + 1.0);
+            let near: Vec<usize> = (0..width)
+                .filter(|&npos| row_tile[npos] <= row_tile[best] + band)
+                .collect();
+            if near.len() > 1 {
+                let z_old = dropped_centers[row];
+                let mut exact_d = f64::INFINITY;
+                for npos in near {
+                    self.stats.distance_evals += 1;
+                    let d = self.ds.dist(z_old, self.centers[npos]);
+                    if d < exact_d {
+                        exact_d = d;
+                        best = npos;
+                    }
                 }
             }
             for x in dz {

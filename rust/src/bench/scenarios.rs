@@ -12,6 +12,7 @@ use crate::core::Dataset;
 use crate::coordinator::spec::MatroidBox;
 use crate::data::synth;
 use crate::matroid::{maximal_independent, Matroid};
+use crate::runtime::BatchEngine;
 use crate::util::rng::Rng;
 
 pub fn bench_n() -> usize {
@@ -87,6 +88,7 @@ pub fn amt_baseline(
         m,
         k,
         candidates,
+        &BatchEngine::for_dataset(ds),
         LocalSearchParams {
             gamma,
             max_swaps: 100_000,
@@ -94,6 +96,7 @@ pub fn amt_baseline(
         Some(init),
         &mut rng,
     )
+    .expect("AMT local search")
 }
 
 #[cfg(test)]

@@ -84,12 +84,24 @@ pub fn run_pipeline<M: Matroid + Sync>(
 ) -> Result<RunOutcome> {
     let mut extra = BTreeMap::new();
     let mut rng = Rng::new(seed);
+    // one engine shared by the SeqCoreset folds and the local-search sum
+    // scans — but only built when some phase actually dispatches distance
+    // work through it, so e.g. a stream + exhaustive pipeline neither pays
+    // construction nor requires PJRT artifacts on disk
+    let needs_engine = matches!(pipeline.setting, Setting::Seq { .. })
+        || matches!(pipeline.finisher, Finisher::LocalSearch { .. });
+    let engine = if needs_engine {
+        Some(build_engine(pipeline.engine, ds)?)
+    } else {
+        None
+    };
+    let engine = engine.as_deref();
 
     // ---- phase 1: candidate set ----
     let (candidates, coreset_time) = match pipeline.setting {
         Setting::Seq { budget } => {
-            let engine = build_engine(pipeline.engine, ds)?;
-            let (cs, dt) = time_it(|| seq_coreset(ds, m, k, budget, engine.as_ref()));
+            let eng = engine.expect("engine built for Seq setting");
+            let (cs, dt) = time_it(|| seq_coreset(ds, m, k, budget, eng));
             let cs = cs?;
             extra.insert("n_clusters".into(), cs.n_clusters as f64);
             extra.insert("radius".into(), cs.radius);
@@ -139,8 +151,11 @@ pub fn run_pipeline<M: Matroid + Sync>(
                 gamma,
                 ..Default::default()
             };
-            let (res, dt) =
-                time_it(|| local_search_sum(ds, m, k, &candidates, params, None, &mut rng));
+            let eng = engine.expect("engine built for local-search finisher");
+            let (res, dt) = time_it(|| {
+                local_search_sum(ds, m, k, &candidates, eng, params, None, &mut rng)
+            });
+            let res = res?;
             extra.insert("swaps".into(), res.swaps as f64);
             extra.insert("oracle_calls".into(), res.oracle_calls as f64);
             (res.solution, dt)

@@ -32,8 +32,9 @@ impl Dataset {
         n_categories: u32,
         name: impl Into<String>,
     ) -> Dataset {
-        assert_eq!(coords.len() % dim.max(1), 0, "coords not a multiple of dim");
-        let n = coords.len() / dim.max(1);
+        assert!(dim > 0, "Dataset dim must be >= 1 (a 0-dim point set has no geometry)");
+        assert_eq!(coords.len() % dim, 0, "coords not a multiple of dim");
+        let n = coords.len() / dim;
         assert_eq!(categories.len(), n, "one category list per point");
         let mut categories = categories;
         for cats in &mut categories {
@@ -52,13 +53,11 @@ impl Dataset {
         }
     }
 
+    /// Number of points.  `new` rejects `dim == 0`, so the division is
+    /// always meaningful and agrees with the validation in `new`.
     #[inline]
     pub fn n(&self) -> usize {
-        if self.dim == 0 {
-            0
-        } else {
-            self.coords.len() / self.dim
-        }
+        self.coords.len() / self.dim
     }
 
     #[inline]
@@ -181,6 +180,15 @@ mod tests {
     fn category_histogram_counts_multi() {
         let ds = tiny();
         assert_eq!(ds.category_histogram(), vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim must be >= 1")]
+    fn zero_dim_rejected() {
+        // regression: `new` used to validate categories against
+        // coords.len()/max(dim,1) while n() returned 0 for dim == 0 —
+        // the two disagreed; dim == 0 is now rejected outright
+        Dataset::new(0, Metric::Euclidean, vec![], vec![], 1, "bad");
     }
 
     #[test]

@@ -46,6 +46,23 @@ impl Metric {
 
 const EPS: f64 = 1.0e-12;
 
+/// f64 dot product of two f32 vectors, accumulated left to right.
+///
+/// The accumulation order is load-bearing: [`cosine_angular`] and the
+/// batched engine's fast paths all build their `<a,b>` term with exactly
+/// this loop, which is what keeps the batch backend bit-identical to the
+/// scalar oracle.  Any change here (unrolling, SIMD) changes results
+/// everywhere at once — never in only one path.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ab = 0.0f64;
+    for i in 0..a.len() {
+        ab += a[i] as f64 * b[i] as f64;
+    }
+    ab
+}
+
 /// Exact-difference Euclidean distance (not the expanded form): precise at
 /// d ~ 0, which matters for duplicate detection and radius accounting.
 #[inline]
@@ -59,6 +76,10 @@ pub fn euclidean(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// Angular distance in [0, 1]: `arccos(clip(cos_sim)) / pi`.
+///
+/// One fused pass for speed; each accumulator's per-index order matches a
+/// standalone [`dot`] over the same pair, so precomputing `<a,a>`/`<b,b>`
+/// with `dot` and feeding [`cosine_angular_from_parts`] is bit-identical.
 #[inline]
 pub fn cosine_angular(a: &[f32], b: &[f32]) -> f64 {
     let (mut ab, mut aa, mut bb) = (0.0f64, 0.0f64, 0.0f64);
@@ -68,6 +89,15 @@ pub fn cosine_angular(a: &[f32], b: &[f32]) -> f64 {
         aa += x * x;
         bb += y * y;
     }
+    cosine_angular_from_parts(ab, aa, bb)
+}
+
+/// Angular distance from the inner products `ab = <a,b>`, `aa = <a,a>`,
+/// `bb = <b,b>`.  The batched engine precomputes the squared norms once per
+/// dataset and feeds them here, which keeps its output bit-identical to
+/// [`cosine_angular`] (the parts are accumulated in the same order).
+#[inline]
+pub fn cosine_angular_from_parts(ab: f64, aa: f64, bb: f64) -> f64 {
     let denom = (aa.sqrt() * bb.sqrt()).max(EPS);
     let sim = (ab / denom).clamp(-1.0, 1.0);
     sim.acos() / std::f64::consts::PI

@@ -13,13 +13,42 @@
 //! * **final-solution extractors**: AMT local search for sum-DMMC
 //!   ([`algo::local_search`]) and matroid-pruned exhaustive search for the
 //!   other variants ([`algo::exhaustive`]),
-//! * the **PJRT runtime** that executes the AOT-compiled Pallas distance
-//!   kernels from the Rust hot path ([`runtime`]),
+//! * the **distance-engine runtime** ([`runtime`]): a widened
+//!   [`runtime::DistanceEngine`] trait (min-folds, pairwise tiles,
+//!   per-candidate sums) with three backends — see below,
 //! * and the experiment substrate: synthetic datasets ([`data`]),
 //!   a thread-based MapReduce simulator ([`mapreduce`]), a streaming
 //!   harness ([`streaming`]), an experiment coordinator ([`coordinator`]),
 //!   a bench harness ([`bench`]) and a mini property-testing framework
 //!   ([`proptest`]).
+//!
+//! ## Building and testing
+//!
+//! ```text
+//! cargo build --release          # default features: scalar + batch engines
+//! cargo test                     # full suite incl. the engine-equivalence pins
+//! cargo test --features pjrt     # PJRT backend (extra setup below)
+//! cargo bench --bench micro_core # perf counters (fold speedup batch vs scalar)
+//! ```
+//!
+//! The `pjrt` feature needs two manual steps first: uncomment the `xla`
+//! path dependency in `rust/Cargo.toml` (it points at an xla-rs checkout
+//! with a local XLA C++ toolchain, and is not declared by default so the
+//! plain build never tries to resolve it) and run `make artifacts` for
+//! the AOT kernels (see `python/compile/aot.py`).  Everything else is
+//! dependency-light pure Rust.
+//!
+//! ## Choosing an engine
+//!
+//! * [`runtime::BatchEngine`] — the default (`--engine batch`): chunked,
+//!   `std::thread::scope`-parallel CPU kernels with precomputed norms.
+//!   Bit-identical to the scalar oracle on `update_min`/`sums_to_set`, so
+//!   switching engines never changes a result — only the wall clock.
+//! * [`runtime::ScalarEngine`] — the portable point-at-a-time oracle
+//!   (`--engine scalar`); use it as the reference in equivalence tests.
+//! * `runtime::PjrtEngine` (`--engine pjrt`, feature `pjrt`) — executes the
+//!   AOT-compiled Pallas kernels through the PJRT CPU client; validated
+//!   against the oracle by `tests/runtime_numerics.rs`.
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.

@@ -29,10 +29,7 @@ use matroid_coreset::coordinator::{
 use matroid_coreset::data::{io, synth};
 use matroid_coreset::diversity::Objective;
 use matroid_coreset::matroid::Matroid;
-use matroid_coreset::runtime::{
-    default_artifact_dir, EngineKind, Manifest, PjrtEngine, ScalarEngine,
-};
-use matroid_coreset::runtime::engine::DistanceEngine;
+use matroid_coreset::runtime::EngineKind;
 use matroid_coreset::streaming::StreamMode;
 
 const USAGE: &str = "\
@@ -46,7 +43,7 @@ SUBCOMMANDS
   run        --data <file|kind:n> --algo seq|stream|mr|full
              [--k K] [--tau T | --eps E] [--workers L] [--objective sum|star|tree|cycle|bipartition]
              [--finisher local-search|exhaustive|greedy] [--gamma G]
-             [--engine scalar|pjrt] [--matroid transversal|partition:R|uniform:R] [--seed S]
+             [--engine batch|scalar|pjrt] [--matroid transversal|partition:R|uniform:R] [--seed S]
   sweep      --config configs/<file>.toml [--csv out.csv]
   artifacts-check  [--data <kind:n>]
   help
@@ -179,8 +176,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "greedy" => Finisher::Greedy,
         other => bail!("unknown --finisher {other}"),
     };
-    let engine = EngineKind::parse(args.str_or("engine", "scalar"))
-        .context("bad --engine (scalar|pjrt)")?;
+    let engine = EngineKind::parse(args.str_or("engine", EngineKind::default().name()))
+        .context("bad --engine (batch|scalar|pjrt)")?;
 
     println!(
         "run: data={} n={} matroid={} rank={} k={k} objective={} algo={:?} engine={}",
@@ -269,7 +266,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "greedy" => Finisher::Greedy,
         other => bail!("run.finisher {other} unknown"),
     };
-    let engine = EngineKind::parse(cfg.str_or("run.engine", "scalar")).context("run.engine")?;
+    let engine = EngineKind::parse(cfg.str_or("run.engine", EngineKind::default().name()))
+        .context("run.engine")?;
 
     println!("sweep '{title}': {} n={} rank={rank}", ds.name, ds.n());
     let mut table = Table::new(&["algo", "tau", "k", "seed", "diversity", "coreset_s", "finish_s", "|T|"]);
@@ -336,8 +334,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Without the `pjrt` feature there is nothing to check against.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts_check(_args: &Args) -> Result<()> {
+    bail!(
+        "artifacts-check needs the PJRT backend; \
+         rebuild with `cargo build --features pjrt` (and run `make artifacts`)"
+    )
+}
+
 /// Compile every artifact and cross-check PJRT numerics vs the scalar oracle.
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    use matroid_coreset::runtime::engine::DistanceEngine;
+    use matroid_coreset::runtime::{default_artifact_dir, Manifest, PjrtEngine, ScalarEngine};
+
     args.expect_known(&["data", "seed"])?;
     let seed = args.u64_or("seed", 1)?;
     let spec = DatasetSpec::parse(args.str_or("data", "wikisim:2000"), seed)?;

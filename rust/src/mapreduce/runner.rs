@@ -8,7 +8,7 @@ use crate::algo::seq_coreset::seq_coreset;
 use crate::algo::{Budget, Coreset};
 use crate::core::Dataset;
 use crate::matroid::Matroid;
-use crate::runtime::engine::ScalarEngine;
+use crate::runtime::BatchEngine;
 use crate::util::rng::Rng;
 
 /// Configuration of one MR coreset job.
@@ -65,7 +65,12 @@ pub fn mr_coreset<M: Matroid + Sync>(
     }
     let local_memory_points = shards.iter().map(|s| s.len()).max().unwrap_or(0);
 
-    // reduce phase, one thread per shard
+    // reduce phase, one thread per shard; each worker builds its own
+    // engine (the DistanceEngine contract is per-thread construction, not
+    // sharing) with the machine's cores divided between the shards so the
+    // engines' scoped fan-out does not oversubscribe
+    let machine = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let threads_per_shard = (machine / cfg.workers).max(1);
     type ShardOut = Result<(Vec<usize>, Coreset, Duration)>;
     let results: Vec<ShardOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = shards
@@ -74,7 +79,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
                 scope.spawn(move || -> ShardOut {
                     let w0 = Instant::now();
                     let local = ds.subset(shard);
-                    let engine = ScalarEngine::new();
+                    let engine = BatchEngine::with_threads(&local, threads_per_shard);
                     let cs = seq_coreset(&local, m, k, cfg.budget, &engine)?;
                     // map local coreset indices back to global ids
                     let global: Vec<usize> = cs.indices.iter().map(|&i| shard[i]).collect();
@@ -106,7 +111,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
     let coreset = if let Some(tau2) = cfg.second_round_tau {
         rounds = 2;
         let sub = ds.subset(&union);
-        let engine = ScalarEngine::new();
+        let engine = BatchEngine::for_dataset(&sub);
         let cs2 = seq_coreset(&sub, m, k, Budget::Clusters(tau2), &engine)?;
         let indices: Vec<usize> = cs2.indices.iter().map(|&i| union[i]).collect();
         Coreset {

@@ -1,24 +1,43 @@
 //! The distance-engine abstraction between the algorithms (L3) and the
 //! compute backends.
 //!
-//! GMM and the streaming assignment only need one primitive: *fold a new
-//! center into a running (min-dist, argmin) state* — exactly the
-//! `gmm_update` AOT artifact.  Two implementations exist:
+//! The hot paths of the whole system are O(n)-per-round distance folds:
+//! GMM/SeqCoreset fold a new center into a running (min-dist, argmin)
+//! state, the streaming restructure re-assigns delegates across center
+//! tiles, and AMT local search scans per-candidate distance *sums* to the
+//! current solution.  The trait exposes all three shapes:
 //!
-//! * [`ScalarEngine`] — portable Rust loops (also the correctness oracle
-//!   for the PJRT path);
-//! * [`runtime::pjrt::PjrtEngine`](crate::runtime::pjrt::PjrtEngine) — runs
-//!   the AOT-compiled Pallas kernels through the PJRT CPU client.
+//! * [`DistanceEngine::update_min`] / [`DistanceEngine::update_min_block`]
+//!   — fold one / several centers into a (min-dist, argmin) state;
+//! * [`DistanceEngine::pairwise_block`] — a row-major tile of pairwise
+//!   distances;
+//! * [`DistanceEngine::sums_to_set`] — per-candidate distance sums against
+//!   a solution set.
+//!
+//! Three implementations exist:
+//!
+//! * [`ScalarEngine`] — portable point-at-a-time Rust loops, the
+//!   correctness oracle every other backend is pinned against;
+//! * [`runtime::batch::BatchEngine`](crate::runtime::batch::BatchEngine) —
+//!   chunked, multi-threaded CPU backend (the default);
+//! * `runtime::pjrt::PjrtEngine` (feature `pjrt`) — runs the AOT-compiled
+//!   Pallas kernels through the PJRT CPU client.
 
 use anyhow::Result;
 
 use crate::core::Dataset;
 
-/// Backend for the O(n)-per-iteration GMM/streaming distance hot path.
+/// Backend for the O(n)-per-iteration distance hot path.
 ///
 /// Deliberately NOT `Send + Sync`: the PJRT client wraps raw C pointers.
 /// Parallel consumers (the MapReduce simulator) construct one engine per
-/// worker thread instead of sharing one.
+/// worker thread instead of sharing one; backends that want intra-call
+/// parallelism (the batch engine) spawn scoped workers per call.
+///
+/// The default method bodies are the scalar reference semantics; backends
+/// override them with batched kernels but must preserve the fold order:
+/// per point, centers are folded left-to-right with a strict `<`, so ties
+/// keep the earliest center.
 pub trait DistanceEngine {
     /// Human-readable backend name (reports / bench CSV).
     fn name(&self) -> &'static str;
@@ -34,9 +53,49 @@ pub trait DistanceEngine {
         mind: &mut [f32],
         arg: &mut [u32],
     ) -> Result<()>;
+
+    /// Fold several `(center, center_id)` pairs at once, in order.
+    /// Equivalent to calling [`Self::update_min`] per pair, but backends
+    /// get one traversal of the points for the whole tile.
+    fn update_min_block(
+        &self,
+        ds: &Dataset,
+        centers: &[(usize, u32)],
+        mind: &mut [f32],
+        arg: &mut [u32],
+    ) -> Result<()> {
+        for &(c, id) in centers {
+            self.update_min(ds, c, id, mind, arg)?;
+        }
+        Ok(())
+    }
+
+    /// Row-major `rows.len() x cols.len()` tile of pairwise distances
+    /// (`out[r * cols.len() + c] = d(rows[r], cols[c])`), in f32 — the
+    /// throughput representation shared with the PJRT artifacts.
+    fn pairwise_block(&self, ds: &Dataset, rows: &[usize], cols: &[usize]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; rows.len() * cols.len()];
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                out[r * cols.len() + c] = ds.dist(i, j) as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// For every candidate `v`, the sum of distances to every member of
+    /// `set` (members of `set` appearing in `candidates` include their own
+    /// zero self-distance).  Kept in f64 because AMT swap acceptance
+    /// compares against a `1e-12`-relative improvement threshold.
+    fn sums_to_set(&self, ds: &Dataset, candidates: &[usize], set: &[usize]) -> Result<Vec<f64>> {
+        Ok(candidates
+            .iter()
+            .map(|&v| set.iter().map(|&w| ds.dist(v, w)).sum())
+            .collect())
+    }
 }
 
-/// Plain-Rust scalar backend.
+/// Plain-Rust scalar backend — the correctness oracle.
 #[derive(Default, Debug, Clone, Copy)]
 pub struct ScalarEngine;
 
@@ -94,5 +153,41 @@ mod tests {
         }
         assert_eq!(arg[7], 1);
         assert_eq!(mind[7], 0.0);
+    }
+
+    #[test]
+    fn default_update_min_block_matches_sequential_folds() {
+        let ds = synth::uniform_cube(100, 3, 2);
+        let e = ScalarEngine::new();
+        let centers: Vec<(usize, u32)> = vec![(0, 0), (31, 1), (99, 2)];
+        let mut mind_b = vec![f32::INFINITY; 100];
+        let mut arg_b = vec![u32::MAX; 100];
+        e.update_min_block(&ds, &centers, &mut mind_b, &mut arg_b).unwrap();
+        let mut mind_s = vec![f32::INFINITY; 100];
+        let mut arg_s = vec![u32::MAX; 100];
+        for &(c, id) in &centers {
+            e.update_min(&ds, c, id, &mut mind_s, &mut arg_s).unwrap();
+        }
+        assert_eq!(mind_b, mind_s);
+        assert_eq!(arg_b, arg_s);
+    }
+
+    #[test]
+    fn default_pairwise_and_sums_match_dataset_dist() {
+        let ds = synth::uniform_cube(40, 2, 3);
+        let e = ScalarEngine::new();
+        let rows: Vec<usize> = vec![0, 5, 39];
+        let cols: Vec<usize> = vec![1, 2, 3, 4];
+        let tile = e.pairwise_block(&ds, &rows, &cols).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                assert_eq!(tile[r * cols.len() + c], ds.dist(i, j) as f32);
+            }
+        }
+        let sums = e.sums_to_set(&ds, &rows, &cols).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            let want: f64 = cols.iter().map(|&j| ds.dist(i, j)).sum();
+            assert!((sums[r] - want).abs() < 1e-12);
+        }
     }
 }

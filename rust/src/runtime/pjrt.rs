@@ -185,6 +185,70 @@ impl DistanceEngine for PjrtEngine {
         "pjrt"
     }
 
+    /// Batched fold: one fresh [`PjrtEngine::assign_all`] pass over the
+    /// new centers (it already tiles by `TC` and chunks by `NP`), merged
+    /// into the running state with the tile positions mapped back to the
+    /// callers' logical center ids.
+    fn update_min_block(
+        &self,
+        ds: &Dataset,
+        centers: &[(usize, u32)],
+        mind: &mut [f32],
+        arg: &mut [u32],
+    ) -> Result<()> {
+        if centers.is_empty() {
+            return Ok(());
+        }
+        let rows: Vec<usize> = centers.iter().map(|&(c, _)| c).collect();
+        let (tmind, targ) = self.assign_all(ds, &rows)?;
+        for i in 0..self.n {
+            if tmind[i] < mind[i] {
+                mind[i] = tmind[i];
+                arg[i] = centers[targ[i] as usize].1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Tile of pairwise distances via the `pairwise` artifact, stitching
+    /// column tiles of `TC` when `cols` exceeds one artifact call.
+    fn pairwise_block(&self, ds: &Dataset, rows: &[usize], cols: &[usize]) -> Result<Vec<f32>> {
+        let width = cols.len();
+        let mut out = vec![0.0f32; rows.len() * width];
+        for (tile_idx, ctile) in cols.chunks(TC).enumerate() {
+            let t = PjrtEngine::pairwise_block(self, ds, rows, ctile)?;
+            for r in 0..rows.len() {
+                let dst = r * width + tile_idx * TC;
+                out[dst..dst + ctile.len()]
+                    .copy_from_slice(&t[r * ctile.len()..(r + 1) * ctile.len()]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-candidate distance sums via the `pairwise` artifact: one tile
+    /// per `TC` solution members, accumulated in f64 on the host.
+    ///
+    /// Documented exemption from the trait's f64-exactness expectation:
+    /// the artifact computes f32 distances on-device, so the sums carry
+    /// ~1e-7-relative noise per term.  AMT swap trajectories under this
+    /// backend may therefore diverge from the scalar/batch oracle near
+    /// zero-improvement ties (each accepted swap still strictly improves
+    /// the f32-observed objective); `tests/runtime_numerics.rs` pins the
+    /// backend at tolerance, not bit-exactness, for exactly this reason.
+    fn sums_to_set(&self, ds: &Dataset, candidates: &[usize], set: &[usize]) -> Result<Vec<f64>> {
+        let mut out = vec![0.0f64; candidates.len()];
+        for ctile in set.chunks(TC) {
+            let t = PjrtEngine::pairwise_block(self, ds, candidates, ctile)?;
+            for (r, acc) in out.iter_mut().enumerate() {
+                for c in 0..ctile.len() {
+                    *acc += t[r * ctile.len() + c] as f64;
+                }
+            }
+        }
+        Ok(out)
+    }
+
     fn update_min(
         &self,
         ds: &Dataset,

@@ -14,7 +14,7 @@ use crate::algo::seq_coreset::seq_coreset;
 use crate::algo::Budget;
 use crate::core::Dataset;
 use crate::matroid::Matroid;
-use crate::runtime::engine::ScalarEngine;
+use crate::runtime::BatchEngine;
 
 /// Blocked sliding-window coreset maintainer.
 pub struct SlidingWindowCoreset<'a, M: Matroid> {
@@ -71,12 +71,14 @@ impl<'a, M: Matroid> SlidingWindowCoreset<'a, M> {
         let block = std::mem::take(&mut self.pending);
         let start = self.seen - block.len();
         let local = self.ds.subset(&block);
+        // blocks are small, so the batch engine usually stays on one
+        // thread; past its fan-out threshold the block seal parallelizes
         let cs = seq_coreset(
             &local,
             self.m,
             self.k,
             Budget::Clusters(self.tau),
-            &ScalarEngine::new(),
+            &BatchEngine::for_dataset(&local),
         )?;
         let global: Vec<usize> = cs.indices.iter().map(|&i| block[i]).collect();
         self.blocks.push_back((start, global));

@@ -1,0 +1,167 @@
+//! Engine equivalence: `BatchEngine` vs the `ScalarEngine` oracle.
+//!
+//! The batch backend's contract is stronger than tolerance: on the
+//! min-fold (`update_min` / `update_min_block`) and sum (`sums_to_set`)
+//! paths it must reproduce the oracle's `mind` / `arg` arrays **exactly**
+//! — same f32 per-distance values (same f64 formulas, same accumulation
+//! order) and the same left-to-right fold over centers within any chunk —
+//! regardless of chunk boundaries or worker count.  Only the expanded-form
+//! `pairwise_block` tile is tolerance-checked.
+
+use matroid_coreset::core::{Dataset, Metric};
+use matroid_coreset::data::synth;
+use matroid_coreset::runtime::engine::{DistanceEngine, ScalarEngine};
+use matroid_coreset::runtime::BatchEngine;
+use matroid_coreset::util::rng::Rng;
+
+/// A dataset under `metric` with an awkward n (not a multiple of the
+/// batch point block) and a nontrivial dim.
+fn dataset(metric: Metric, n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let coords: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    Dataset::new(dim, metric, coords, vec![vec![0]; n], 1, "equiv")
+}
+
+fn fold_centers(n: usize) -> Vec<(usize, u32)> {
+    // spread across the dataset, including both ends and repeats of id order
+    vec![
+        (0, 0),
+        (n / 7, 1),
+        (n / 3, 2),
+        (n / 2, 3),
+        (n - 2, 4),
+        (n - 1, 5),
+        (17.min(n - 1), 6),
+        (n / 5, 7),
+    ]
+}
+
+#[test]
+fn update_min_exact_equality_both_metrics() {
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        // 20_011 is prime: never a multiple of the 1024-point cache block
+        // or any worker span, so every chunk boundary case is exercised
+        let ds = dataset(metric, 20_011, 19, 1);
+        let batch = BatchEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
+        let n = ds.n();
+        let (mut mb, mut ab) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        let (mut ms, mut as_) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        for &(c, id) in &fold_centers(n) {
+            batch.update_min(&ds, c, id, &mut mb, &mut ab).unwrap();
+            scalar.update_min(&ds, c, id, &mut ms, &mut as_).unwrap();
+            assert_eq!(mb, ms, "mind diverged on {metric:?} after center {id}");
+            assert_eq!(ab, as_, "arg diverged on {metric:?} after center {id}");
+        }
+    }
+}
+
+#[test]
+fn update_min_block_equals_sequential_folds() {
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 9_973, 11, 2);
+        let batch = BatchEngine::for_dataset(&ds);
+        let centers = fold_centers(ds.n());
+        let n = ds.n();
+        let (mut mb, mut ab) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        batch.update_min_block(&ds, &centers, &mut mb, &mut ab).unwrap();
+        let scalar = ScalarEngine::new();
+        let (mut ms, mut as_) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        for &(c, id) in &centers {
+            scalar.update_min(&ds, c, id, &mut ms, &mut as_).unwrap();
+        }
+        assert_eq!(mb, ms);
+        assert_eq!(ab, as_);
+    }
+}
+
+#[test]
+fn thread_count_cannot_change_output() {
+    // points are independent under the fold, so 1-thread and many-thread
+    // runs must agree bit-for-bit — the determinism guarantee the GMM
+    // trajectory (argmax over mind) relies on
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 30_011, 13, 3);
+        let single = BatchEngine::with_threads(&ds, 1);
+        let many = BatchEngine::with_threads(&ds, 8);
+        let n = ds.n();
+        let centers = fold_centers(n);
+        let (mut m1, mut a1) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        let (mut m8, mut a8) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        single.update_min_block(&ds, &centers, &mut m1, &mut a1).unwrap();
+        many.update_min_block(&ds, &centers, &mut m8, &mut a8).unwrap();
+        assert_eq!(m1, m8);
+        assert_eq!(a1, a8);
+
+        let cands: Vec<usize> = (0..n).step_by(3).collect();
+        let set: Vec<usize> = centers.iter().map(|&(c, _)| c).collect();
+        let s1 = single.sums_to_set(&ds, &cands, &set).unwrap();
+        let s8 = many.sums_to_set(&ds, &cands, &set).unwrap();
+        assert_eq!(s1, s8);
+    }
+}
+
+#[test]
+fn sums_to_set_exactly_matches_oracle() {
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 4_001, 23, 4);
+        let batch = BatchEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let set: Vec<usize> = vec![5, 1_000, 2_000, 4_000, 5]; // repeat allowed
+        let sb = batch.sums_to_set(&ds, &cands, &set).unwrap();
+        let ss = scalar.sums_to_set(&ds, &cands, &set).unwrap();
+        assert_eq!(sb, ss, "sums diverged on {metric:?}");
+    }
+}
+
+#[test]
+fn pairwise_block_within_tolerance_of_oracle() {
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 2_003, 27, 5);
+        let batch = BatchEngine::for_dataset(&ds);
+        let rows: Vec<usize> = (0..ds.n()).step_by(7).collect();
+        let cols: Vec<usize> = vec![0, 3, 500, 1_000, 2_002];
+        let tile = batch.pairwise_block(&ds, &rows, &cols).unwrap();
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                let want = ds.dist(i, j);
+                let got = tile[r * cols.len() + c] as f64;
+                // expanded form + f32 narrowing: loose near 0, tight elsewhere
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.max(1e-2),
+                    "{metric:?} d({i},{j}): batch {got} vs oracle {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pairwise_block_self_distance_clamps_to_zero() {
+    // the expanded Euclidean form can go (slightly) negative under
+    // cancellation; the clamp must keep d(i, i) finite and ~0
+    let ds = dataset(Metric::Euclidean, 257, 33, 6);
+    let batch = BatchEngine::for_dataset(&ds);
+    let idx: Vec<usize> = (0..ds.n()).collect();
+    let tile = batch.pairwise_block(&ds, &idx, &idx).unwrap();
+    for i in 0..ds.n() {
+        let d = tile[i * ds.n() + i];
+        assert!(d.is_finite() && d >= 0.0 && d < 1e-3, "d({i},{i}) = {d}");
+    }
+}
+
+#[test]
+fn seq_coreset_identical_across_engines() {
+    use matroid_coreset::algo::seq_coreset::seq_coreset;
+    use matroid_coreset::algo::Budget;
+    use matroid_coreset::matroid::PartitionMatroid;
+
+    let ds = synth::clustered(5_000, 6, 10, 0.12, 4, 7);
+    let m = PartitionMatroid::new(vec![3; 4]);
+    let a = seq_coreset(&ds, &m, 6, Budget::Clusters(20), &ScalarEngine::new()).unwrap();
+    let b = seq_coreset(&ds, &m, 6, Budget::Clusters(20), &BatchEngine::for_dataset(&ds)).unwrap();
+    assert_eq!(a.indices, b.indices);
+    assert_eq!(a.n_clusters, b.n_clusters);
+    assert_eq!(a.radius, b.radius);
+}

@@ -187,10 +187,12 @@ fn prop_local_search_postconditions() {
             &m,
             k,
             &cands,
+            &ScalarEngine::new(),
             LocalSearchParams::default(),
             None,
             &mut rng,
-        );
+        )
+        .unwrap();
         prop_assert!(m.is_independent(&ds, &res.solution), "solution not independent");
         // local optimality: no single swap improves (spot-check a few)
         let div = res.diversity;

@@ -6,6 +6,7 @@ use matroid_coreset::coordinator::{build_dataset, build_matroid, DatasetSpec, Ma
 use matroid_coreset::data::synth;
 use matroid_coreset::diversity::sum_diversity;
 use matroid_coreset::matroid::{Matroid, UniformMatroid};
+use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::streaming::{run_stream, StreamMode};
 use matroid_coreset::util::rng::Rng;
 
@@ -29,10 +30,12 @@ fn quality_improves_with_tau_fig2_shape() {
                 &m,
                 k,
                 &rep.coreset.indices,
+                &BatchEngine::for_dataset(&ds),
                 LocalSearchParams::default(),
                 None,
                 &mut rng2,
-            );
+            )
+            .unwrap();
             divs.push(res.diversity);
         }
         means.push(divs.iter().sum::<f64>() / divs.len() as f64);
@@ -99,8 +102,13 @@ fn stream_vs_seq_quality_band() {
     let stream = run_stream(&ds, &m, k, StreamMode::Tau(tau), &order);
     let finish = |cands: &[usize]| {
         let mut rng = Rng::new(1);
-        local_search_sum(&ds, &m, k, cands, LocalSearchParams::default(), None, &mut rng)
-            .diversity
+        local_search_sum(
+            &ds, &m, k, cands,
+            &ScalarEngine::new(),
+            LocalSearchParams::default(), None, &mut rng,
+        )
+        .unwrap()
+        .diversity
     };
     let d_seq = finish(&seq.indices);
     let d_stream = finish(&stream.coreset.indices);
