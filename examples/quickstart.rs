@@ -93,14 +93,16 @@ fn main() -> anyhow::Result<()> {
         t_full.as_secs_f64() / total
     );
 
-    // other objectives work via exhaustive search on the coreset:
+    // other objectives work via exhaustive search on the coreset (the
+    // same engine supplies the candidate tile and the final evaluation):
     let tree = matroid_coreset::algo::exhaustive::exhaustive_best(
         &ds,
         &&matroid,
         4,
         &coreset.indices,
         Objective::Tree,
-    );
+        &engine,
+    )?;
     println!(
         "tree-DMMC (k=4, exhaustive on coreset): {:.4} (={:.4} recomputed)",
         tree.diversity,

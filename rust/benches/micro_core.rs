@@ -9,7 +9,7 @@ use matroid_coreset::bench::{bench_header, bench_repeat, Table};
 use matroid_coreset::core::Metric;
 use matroid_coreset::csv_row;
 use matroid_coreset::data::synth;
-use matroid_coreset::diversity::{diversity, Objective};
+use matroid_coreset::diversity::{diversity, star_diversity_with_engine, Evaluator, Objective};
 use matroid_coreset::matroid::{Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid};
 use matroid_coreset::runtime::{BatchEngine, DistanceEngine, ScalarEngine};
 use matroid_coreset::util::csv::CsvWriter;
@@ -120,6 +120,23 @@ fn main() -> anyhow::Result<()> {
         });
         emit(&format!("diversity/{}/k=12 x100", obj.name()), s.p50, 100.0, &mut table);
     }
+
+    // engine-backed evaluator primitives at k=512: the pairwise tile that
+    // feeds tree/cycle/bipartition and the batched sums behind sum/star —
+    // scalar oracle vs the multi-threaded batch backend (bit-identical
+    // outputs, different wall clock)
+    let eset: Vec<usize> = (0..512).collect();
+    let scalar_eval = ScalarEngine::new();
+    let s = bench_repeat(3, 20, || {
+        Evaluator::new(&scalar_eval).submatrix(&ds, &eset).unwrap().len()
+    });
+    emit("evaluator/submatrix/scalar/k=512", s.p50, (512 * 511 / 2) as f64, &mut table);
+    let s = bench_repeat(3, 20, || {
+        Evaluator::new(&batch).submatrix(&ds, &eset).unwrap().len()
+    });
+    emit("evaluator/submatrix/batch/k=512", s.p50, (512 * 511 / 2) as f64, &mut table);
+    let s = bench_repeat(3, 20, || star_diversity_with_engine(&ds, &eset, &batch).unwrap());
+    emit("evaluator/star/batch/k=512", s.p50, (512 * 511) as f64, &mut table);
 
     // streaming push throughput
     let u = UniformMatroid::new(8);

@@ -18,7 +18,7 @@ use matroid_coreset::csv_row;
 use matroid_coreset::data::synth;
 use matroid_coreset::diversity::ALL_OBJECTIVES;
 use matroid_coreset::matroid::PartitionMatroid;
-use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::runtime::{BatchEngine, ScalarEngine};
 use matroid_coreset::util::csv::CsvWriter;
 
 fn main() -> anyhow::Result<()> {
@@ -38,13 +38,18 @@ fn main() -> anyhow::Result<()> {
     let m = PartitionMatroid::new(vec![2; 4]);
     let k = 4;
     let engine = ScalarEngine::new();
+    // the search's candidate tile + final evaluation run on the default
+    // batch backend (bit-identical to the scalar oracle, so the reported
+    // numbers are engine-independent)
+    let search_engine = BatchEngine::for_dataset(&ds);
     let all: Vec<usize> = (0..ds.n()).collect();
 
     let mut table = Table::new(&[
         "objective", "tau", "diversity", "ratio_vs_opt", "coreset_s", "search_s", "nodes",
     ]);
     for obj in ALL_OBJECTIVES {
-        let (opt, opt_s) = time_once(|| exhaustive_best(&ds, &m, k, &all, obj).diversity);
+        let (opt, opt_s) =
+            time_once(|| exhaustive_best(&ds, &m, k, &all, obj, &search_engine).unwrap().diversity);
         table.row(csv_row![
             obj.name(), "- (full)", format!("{opt:.3}"), "1.0000", "-",
             format!("{opt_s:.3}"), "-"
@@ -52,7 +57,8 @@ fn main() -> anyhow::Result<()> {
         for tau in [4usize, 8, 12] {
             let (cs, cs_s) =
                 time_once(|| seq_coreset(&ds, &m, k, Budget::Clusters(tau), &engine).unwrap());
-            let (res, se_s) = time_once(|| exhaustive_best(&ds, &m, k, &cs.indices, obj));
+            let (res, se_s) =
+                time_once(|| exhaustive_best(&ds, &m, k, &cs.indices, obj, &search_engine).unwrap());
             let ratio = res.diversity / opt;
             table.row(csv_row![
                 obj.name(),
@@ -76,13 +82,15 @@ fn main() -> anyhow::Result<()> {
     // C(20000, 5) ~ 2.7e19 directly vs O(|T|^k) on a ~40-point coreset
     let big = synth::songsim(20_000, seed);
     let pm = synth::songsim_matroid(&big, 89);
+    let big_engine = BatchEngine::for_dataset(&big);
     let mut table2 = Table::new(&["objective", "k", "tau", "|T|", "coreset_s", "search_s", "diversity"]);
     for obj in ALL_OBJECTIVES {
         for k in [3usize, 4, 5] {
             let tau = 8;
             let (cs, cs_s) =
                 time_once(|| seq_coreset(&big, &pm, k, Budget::Clusters(tau), &engine).unwrap());
-            let (res, se_s) = time_once(|| exhaustive_best(&big, &pm, k, &cs.indices, obj));
+            let (res, se_s) =
+                time_once(|| exhaustive_best(&big, &pm, k, &cs.indices, obj, &big_engine).unwrap());
             table2.row(csv_row![
                 obj.name(),
                 k,

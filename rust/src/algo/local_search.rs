@@ -16,7 +16,6 @@ use anyhow::Result;
 
 use crate::algo::greedy::greedy_matroid_gonzalez;
 use crate::core::Dataset;
-use crate::diversity::sum_diversity;
 use crate::matroid::Matroid;
 use crate::runtime::engine::DistanceEngine;
 use crate::util::rng::Rng;
@@ -78,10 +77,10 @@ pub fn local_search_sum(
     };
     debug_assert!(m.is_independent(ds, &sol));
     if sol.len() < 2 {
-        let diversity = sum_diversity(ds, &sol);
+        // fewer than two members -> no pairs -> zero sum-diversity
         return Ok(LocalSearchResult {
             solution: sol,
-            diversity,
+            diversity: 0.0,
             swaps: 0,
             oracle_calls,
         });
@@ -135,8 +134,12 @@ pub fn local_search_sum(
         break;
     }
 
-    // recompute exactly to wash out incremental fp drift
-    let diversity = sum_diversity(ds, &sol);
+    // `sums` is re-derived from a fresh engine pass after every accepted
+    // swap, so summing it washes out the incremental `div` drift exactly
+    // like a from-scratch recompute — and matches
+    // `sum_diversity_with_engine(ds, &sol, engine)` bit for bit with zero
+    // extra distance work
+    let diversity = sums.iter().sum::<f64>() / 2.0;
     Ok(LocalSearchResult {
         solution: sol,
         diversity,
@@ -149,6 +152,7 @@ pub fn local_search_sum(
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::diversity::sum_diversity;
     use crate::matroid::{Matroid, PartitionMatroid, UniformMatroid};
     use crate::runtime::engine::ScalarEngine;
     use crate::runtime::BatchEngine;

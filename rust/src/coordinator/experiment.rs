@@ -11,7 +11,7 @@ use crate::algo::local_search::{local_search_sum, LocalSearchParams};
 use crate::algo::seq_coreset::seq_coreset;
 use crate::algo::Budget;
 use crate::core::Dataset;
-use crate::diversity::{diversity, Objective};
+use crate::diversity::{diversity_with_engine, Objective};
 use crate::mapreduce::{mr_coreset, MapReduceConfig};
 use crate::matroid::Matroid;
 use crate::runtime::{build_engine, EngineKind};
@@ -84,24 +84,19 @@ pub fn run_pipeline<M: Matroid + Sync>(
 ) -> Result<RunOutcome> {
     let mut extra = BTreeMap::new();
     let mut rng = Rng::new(seed);
-    // one engine shared by the SeqCoreset folds and the local-search sum
-    // scans — but only built when some phase actually dispatches distance
-    // work through it, so e.g. a stream + exhaustive pipeline neither pays
-    // construction nor requires PJRT artifacts on disk
-    let needs_engine = matches!(pipeline.setting, Setting::Seq { .. })
-        || matches!(pipeline.finisher, Finisher::LocalSearch { .. });
-    let engine = if needs_engine {
-        Some(build_engine(pipeline.engine, ds)?)
-    } else {
-        None
-    };
-    let engine = engine.as_deref();
+    // one engine shared by every phase that computes distances: the
+    // SeqCoreset folds, the local-search sum scans, the exhaustive
+    // finisher's candidate tile, and the final objective evaluation.
+    // Built unconditionally — every pipeline ends in an engine-backed
+    // diversity evaluation (so `--engine pjrt` now needs artifacts even
+    // for stream/greedy pipelines; construction is O(n) norms otherwise)
+    let engine = build_engine(pipeline.engine, ds)?;
+    let engine = &*engine;
 
     // ---- phase 1: candidate set ----
     let (candidates, coreset_time) = match pipeline.setting {
         Setting::Seq { budget } => {
-            let eng = engine.expect("engine built for Seq setting");
-            let (cs, dt) = time_it(|| seq_coreset(ds, m, k, budget, eng));
+            let (cs, dt) = time_it(|| seq_coreset(ds, m, k, budget, engine));
             let cs = cs?;
             extra.insert("n_clusters".into(), cs.n_clusters as f64);
             extra.insert("radius".into(), cs.radius);
@@ -151,9 +146,8 @@ pub fn run_pipeline<M: Matroid + Sync>(
                 gamma,
                 ..Default::default()
             };
-            let eng = engine.expect("engine built for local-search finisher");
             let (res, dt) = time_it(|| {
-                local_search_sum(ds, m, k, &candidates, eng, params, None, &mut rng)
+                local_search_sum(ds, m, k, &candidates, engine, params, None, &mut rng)
             });
             let res = res?;
             extra.insert("swaps".into(), res.swaps as f64);
@@ -161,7 +155,8 @@ pub fn run_pipeline<M: Matroid + Sync>(
             (res.solution, dt)
         }
         Finisher::Exhaustive => {
-            let (res, dt) = time_it(|| exhaustive_best(ds, m, k, &candidates, obj));
+            let (res, dt) = time_it(|| exhaustive_best(ds, m, k, &candidates, obj, engine));
+            let res = res?;
             extra.insert("search_nodes".into(), res.nodes as f64);
             extra.insert("search_leaves".into(), res.leaves as f64);
             (res.solution, dt)
@@ -172,7 +167,7 @@ pub fn run_pipeline<M: Matroid + Sync>(
         }
     };
 
-    let div = diversity(ds, &solution, obj);
+    let div = diversity_with_engine(ds, &solution, obj, engine)?;
     Ok(RunOutcome {
         solution,
         diversity: div,

@@ -3,8 +3,37 @@
 //! Every objective is a sum of `f(k)` pairwise distances; the coreset radius
 //! bound `r <= (eps/4) * rho_{S,k}` of Lemma 2 is expressed through
 //! [`farness_lower_bound`] (Lemma 1).
+//!
+//! ## Engine-backed evaluation
+//!
+//! Evaluation runs through the [`DistanceEngine`] runtime, never through
+//! point-at-a-time `Dataset::dist` walks.  Backend-dispatch rules:
+//!
+//! * **sum / star** are one [`DistanceEngine::sums_to_set`] call over the
+//!   set.  Those sums use the exact f64 oracle formulas on every CPU
+//!   backend (a pinned bit-identity contract) and exclude self-pairs
+//!   exactly, so both objectives keep full f64 precision and the Table-1
+//!   definitions — `sum = Σ sums / 2`, `star = min sums`.
+//! * **tree / cycle / bipartition** consume the dense submatrix
+//!   materialized by one [`DistanceEngine::pairwise_block`] tile.  Tiles
+//!   are f32 (the PJRT artifact representation), upcast to f64 for the
+//!   matrix solvers; CPU backends must produce bit-identical tiles (with
+//!   a true-zero diagonal, computed as an upper triangle + mirror), so
+//!   these objective values are also engine-independent.
+//!
+//! [`Evaluator`] carries the engine and exposes the per-objective methods
+//! plus [`Evaluator::diversity_all`], which scores all five objectives
+//! from a single sums pass + a single tile (no duplicate distance work —
+//! pinned by an evaluation-count regression test).  The free functions
+//! ([`diversity`], [`sum_diversity`], [`star_diversity`],
+//! [`distance_submatrix`]) run the same code paths on a fresh scalar
+//! engine, so `diversity(..) == diversity_with_engine(.., scalar)` holds
+//! bit for bit.
+
+use anyhow::Result;
 
 use crate::core::Dataset;
+use crate::runtime::engine::{DistanceEngine, ScalarEngine};
 
 pub mod bipartition;
 pub mod mst;
@@ -77,60 +106,213 @@ pub fn farness_lower_bound(obj: Objective, k: usize, diameter: f64) -> f64 {
     obj.farness_coefficient(k) * diameter
 }
 
-/// Evaluate the diversity of `set` under `obj` (exact solvers; see the
-/// sub-modules for the cycle/bipartition algorithms and their size guards).
-pub fn diversity(ds: &Dataset, set: &[usize], obj: Objective) -> f64 {
-    match obj {
-        Objective::Sum => sum_diversity(ds, set),
-        Objective::Star => star_diversity(ds, set),
-        Objective::Tree => mst::mst_weight(ds, set),
-        Objective::Cycle => tsp::tsp_weight(ds, set),
-        Objective::Bipartition => bipartition::min_bipartition_weight(ds, set),
+/// Engine-backed evaluator for the five Table-1 objectives.
+///
+/// Wraps a [`DistanceEngine`] and dispatches every objective to the
+/// batched engine shapes (see the module docs for the dispatch rules).
+/// Construct one per evaluation site — it holds no per-dataset state, the
+/// engine does.
+pub struct Evaluator<'e> {
+    engine: &'e dyn DistanceEngine,
+}
+
+impl<'e> Evaluator<'e> {
+    pub fn new(engine: &'e dyn DistanceEngine) -> Evaluator<'e> {
+        Evaluator { engine }
+    }
+
+    pub fn engine(&self) -> &'e dyn DistanceEngine {
+        self.engine
+    }
+
+    /// Dense distance matrix over `set` (row-major `set.len()^2`) from one
+    /// [`DistanceEngine::pairwise_block`] tile, upcast to f64 for the
+    /// matrix solvers.
+    pub fn submatrix(&self, ds: &Dataset, set: &[usize]) -> Result<Vec<f64>> {
+        let tile = self.engine.pairwise_block(ds, set, set)?;
+        Ok(tile.into_iter().map(f64::from).collect())
+    }
+
+    /// Sum of all pairwise distances (exact f64 via one batched sums pass).
+    pub fn sum(&self, ds: &Dataset, set: &[usize]) -> Result<f64> {
+        if set.len() < 2 {
+            return Ok(0.0);
+        }
+        let sums = self.engine.sums_to_set(ds, set, set)?;
+        Ok(sums.iter().sum::<f64>() / 2.0)
+    }
+
+    /// min over c in X of sum_{u != c} d(c, u).  The engine contract
+    /// excludes self-pairs from the sums exactly, so the batched
+    /// per-member sums are exactly the star weights.
+    pub fn star(&self, ds: &Dataset, set: &[usize]) -> Result<f64> {
+        if set.len() < 2 {
+            return Ok(0.0);
+        }
+        let sums = self.engine.sums_to_set(ds, set, set)?;
+        Ok(sums.iter().copied().fold(f64::INFINITY, f64::min))
+    }
+
+    /// MST weight over `set` from an engine-built submatrix.
+    pub fn tree(&self, ds: &Dataset, set: &[usize]) -> Result<f64> {
+        let m = self.submatrix(ds, set)?;
+        Ok(mst::mst_weight_matrix(&m, set.len(), &positions(set.len())))
+    }
+
+    /// Minimum Hamiltonian cycle weight over `set` from an engine-built
+    /// submatrix.
+    pub fn cycle(&self, ds: &Dataset, set: &[usize]) -> Result<f64> {
+        let m = self.submatrix(ds, set)?;
+        Ok(tsp::tsp_weight_matrix(&m, set.len(), &positions(set.len())))
+    }
+
+    /// Minimum balanced-cut weight over `set` from an engine-built
+    /// submatrix.
+    pub fn bipartition(&self, ds: &Dataset, set: &[usize]) -> Result<f64> {
+        let m = self.submatrix(ds, set)?;
+        Ok(bipartition::min_bipartition_matrix(
+            &m,
+            set.len(),
+            &positions(set.len()),
+        ))
+    }
+
+    /// Evaluate one objective.
+    pub fn diversity(&self, ds: &Dataset, set: &[usize], obj: Objective) -> Result<f64> {
+        match obj {
+            Objective::Sum => self.sum(ds, set),
+            Objective::Star => self.star(ds, set),
+            Objective::Tree => self.tree(ds, set),
+            Objective::Cycle => self.cycle(ds, set),
+            Objective::Bipartition => self.bipartition(ds, set),
+        }
+    }
+
+    /// All five objective values (in [`ALL_OBJECTIVES`] order) from one
+    /// sums pass (`k(k-1)` distance evaluations) + one symmetric tile
+    /// (`k(k-1)/2` more), where scoring the objectives one by one would
+    /// re-walk the pairwise distances per objective.
+    pub fn diversity_all(&self, ds: &Dataset, set: &[usize]) -> Result<[f64; 5]> {
+        let k = set.len();
+        let (sum, star) = if k < 2 {
+            (0.0, 0.0)
+        } else {
+            let sums = self.engine.sums_to_set(ds, set, set)?;
+            (
+                sums.iter().sum::<f64>() / 2.0,
+                sums.iter().copied().fold(f64::INFINITY, f64::min),
+            )
+        };
+        let m = self.submatrix(ds, set)?;
+        let members = positions(k);
+        Ok([
+            sum,
+            star,
+            mst::mst_weight_matrix(&m, k, &members),
+            tsp::tsp_weight_matrix(&m, k, &members),
+            bipartition::min_bipartition_matrix(&m, k, &members),
+        ])
     }
 }
 
-/// Sum of all pairwise distances.
+/// `[0, 1, .., k)` — the identity member list for whole-matrix solvers.
+fn positions(k: usize) -> Vec<usize> {
+    (0..k).collect()
+}
+
+/// Evaluate the diversity of `set` under `obj` through `engine` (see the
+/// sub-modules for the cycle/bipartition algorithms and their size guards).
+pub fn diversity_with_engine(
+    ds: &Dataset,
+    set: &[usize],
+    obj: Objective,
+    engine: &dyn DistanceEngine,
+) -> Result<f64> {
+    Evaluator::new(engine).diversity(ds, set, obj)
+}
+
+/// Evaluate the diversity of `set` under `obj` on a fresh scalar engine —
+/// bit-identical to [`diversity_with_engine`] on any CPU backend.
+pub fn diversity(ds: &Dataset, set: &[usize], obj: Objective) -> f64 {
+    diversity_with_engine(ds, set, obj, &ScalarEngine::new())
+        .expect("scalar engine evaluation cannot fail")
+}
+
+/// Sum of all pairwise distances, through `engine`.
+pub fn sum_diversity_with_engine(
+    ds: &Dataset,
+    set: &[usize],
+    engine: &dyn DistanceEngine,
+) -> Result<f64> {
+    Evaluator::new(engine).sum(ds, set)
+}
+
+/// Sum of all pairwise distances (scalar engine).
 pub fn sum_diversity(ds: &Dataset, set: &[usize]) -> f64 {
+    sum_diversity_with_engine(ds, set, &ScalarEngine::new())
+        .expect("scalar engine evaluation cannot fail")
+}
+
+/// min over c in X of sum_{u != c} d(c, u), through `engine`.
+pub fn star_diversity_with_engine(
+    ds: &Dataset,
+    set: &[usize],
+    engine: &dyn DistanceEngine,
+) -> Result<f64> {
+    Evaluator::new(engine).star(ds, set)
+}
+
+/// min over c in X of sum_{u != c} d(c, u) (scalar engine).
+pub fn star_diversity(ds: &Dataset, set: &[usize]) -> f64 {
+    star_diversity_with_engine(ds, set, &ScalarEngine::new())
+        .expect("scalar engine evaluation cannot fail")
+}
+
+/// Dense distance matrix over `set` (row-major `set.len()^2`), shared by
+/// the exact solvers and the exhaustive search on coresets — the scalar
+/// engine's [`Evaluator::submatrix`].
+pub fn distance_submatrix(ds: &Dataset, set: &[usize]) -> Vec<f64> {
+    Evaluator::new(&ScalarEngine::new())
+        .submatrix(ds, set)
+        .expect("scalar engine evaluation cannot fail")
+}
+
+/// Evaluate `obj` over the `members` positions of a precomputed `k * k`
+/// distance matrix (e.g. one built by [`Evaluator::submatrix`] over a
+/// candidate pool) — zero distance evaluations.
+pub fn diversity_from_matrix(m: &[f64], k: usize, members: &[usize], obj: Objective) -> f64 {
+    match obj {
+        Objective::Sum => sum_from_matrix(m, k, members),
+        Objective::Star => star_from_matrix(m, k, members),
+        Objective::Tree => mst::mst_weight_matrix(m, k, members),
+        Objective::Cycle => tsp::tsp_weight_matrix(m, k, members),
+        Objective::Bipartition => bipartition::min_bipartition_matrix(m, k, members),
+    }
+}
+
+/// Sum objective over matrix positions.
+pub fn sum_from_matrix(m: &[f64], k: usize, members: &[usize]) -> f64 {
     let mut acc = 0.0;
-    for (a, &i) in set.iter().enumerate() {
-        for &j in &set[a + 1..] {
-            acc += ds.dist(i, j);
+    for (a, &i) in members.iter().enumerate() {
+        for &j in &members[a + 1..] {
+            acc += m[i * k + j];
         }
     }
     acc
 }
 
-/// min over c in X of sum_{u != c} d(c, u).
-pub fn star_diversity(ds: &Dataset, set: &[usize]) -> f64 {
-    if set.len() < 2 {
+/// Star objective over matrix positions (the zero diagonal makes each row
+/// sum a star weight).
+pub fn star_from_matrix(m: &[f64], k: usize, members: &[usize]) -> f64 {
+    if members.len() < 2 {
         return 0.0;
     }
     let mut best = f64::INFINITY;
-    for &c in set {
-        let mut s = 0.0;
-        for &u in set {
-            if u != c {
-                s += ds.dist(c, u);
-            }
-        }
+    for &c in members {
+        let s: f64 = members.iter().map(|&u| m[c * k + u]).sum();
         best = best.min(s);
     }
     best
-}
-
-/// Dense distance matrix over `set` (row-major `set.len()^2`), shared by
-/// the exact solvers and the local search on coresets.
-pub fn distance_submatrix(ds: &Dataset, set: &[usize]) -> Vec<f64> {
-    let k = set.len();
-    let mut m = vec![0.0f64; k * k];
-    for a in 0..k {
-        for b in (a + 1)..k {
-            let d = ds.dist(set[a], set[b]);
-            m[a * k + b] = d;
-            m[b * k + a] = d;
-        }
-    }
-    m
 }
 
 #[cfg(test)]
@@ -217,5 +399,75 @@ mod tests {
         assert_eq!(sum_diversity(&ds, &[0]), 0.0);
         assert_eq!(star_diversity(&ds, &[0]), 0.0);
         assert_eq!(diversity(&ds, &[], Objective::Sum), 0.0);
+        for obj in ALL_OBJECTIVES {
+            assert_eq!(diversity(&ds, &[], obj), 0.0, "{obj:?} on empty set");
+            assert_eq!(diversity(&ds, &[2], obj), 0.0, "{obj:?} on singleton");
+        }
+    }
+
+    #[test]
+    fn evaluator_matches_free_functions_bitwise() {
+        let ds = line();
+        let e = ScalarEngine::new();
+        let ev = Evaluator::new(&e);
+        let set = [0usize, 1, 2, 3];
+        for obj in ALL_OBJECTIVES {
+            let via_ev = ev.diversity(&ds, &set, obj).unwrap();
+            let via_free = diversity(&ds, &set, obj);
+            assert!(
+                via_ev.to_bits() == via_free.to_bits(),
+                "{obj:?}: {via_ev} != {via_free}"
+            );
+        }
+        assert_eq!(ev.submatrix(&ds, &set).unwrap(), distance_submatrix(&ds, &set));
+    }
+
+    #[test]
+    fn diversity_all_consistent_with_single_objective_paths() {
+        let ds = line();
+        let e = ScalarEngine::new();
+        let ev = Evaluator::new(&e);
+        let set = [0usize, 1, 2, 3];
+        let all = ev.diversity_all(&ds, &set).unwrap();
+        for (i, obj) in ALL_OBJECTIVES.into_iter().enumerate() {
+            let single = ev.diversity(&ds, &set, obj).unwrap();
+            assert!(
+                all[i].to_bits() == single.to_bits(),
+                "{obj:?}: batched {} != single {}",
+                all[i],
+                single
+            );
+        }
+    }
+
+    #[test]
+    fn diversity_all_deduplicates_distance_work() {
+        // one sums pass (k(k-1)) + one symmetric tile (k(k-1)/2) for all
+        // five objectives; the pre-evaluator code re-walked Dataset::dist
+        // per objective (and per star center)
+        let ds = line();
+        let e = ScalarEngine::new();
+        let ev = Evaluator::new(&e);
+        let set = [0usize, 1, 2, 3];
+        ev.diversity_all(&ds, &set).unwrap();
+        assert_eq!(e.dist_evals(), 12 + 6);
+        e.reset_dist_evals();
+        ev.submatrix(&ds, &set).unwrap();
+        assert_eq!(e.dist_evals(), 6);
+    }
+
+    #[test]
+    fn matrix_sum_star_match_engine_paths() {
+        let ds = line();
+        let set = [0usize, 1, 2, 3];
+        let m = distance_submatrix(&ds, &set);
+        let members = [0usize, 1, 2, 3];
+        // the line() distances are small integers: exact in f32, so the
+        // matrix path reproduces the sums path exactly here
+        assert!((sum_from_matrix(&m, 4, &members) - sum_diversity(&ds, &set)).abs() < 1e-12);
+        assert!((star_from_matrix(&m, 4, &members) - star_diversity(&ds, &set)).abs() < 1e-12);
+        // sub-selection: positions 0 and 3 (points 0 and 7)
+        assert!((sum_from_matrix(&m, 4, &[0, 3]) - 7.0).abs() < 1e-12);
+        assert!((star_from_matrix(&m, 4, &[0, 3]) - 7.0).abs() < 1e-12);
     }
 }

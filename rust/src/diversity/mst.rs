@@ -3,43 +3,15 @@
 //! heap-based variant here.
 
 use crate::core::Dataset;
+use crate::diversity::distance_submatrix;
 
 /// Weight of the MST of the complete graph on `set` with pairwise-distance
-/// edge weights.  Returns 0 for |set| < 2.
+/// edge weights (engine-built submatrix; see the module docs of
+/// [`crate::diversity`] for the dispatch rules).  Returns 0 for |set| < 2.
 pub fn mst_weight(ds: &Dataset, set: &[usize]) -> f64 {
     let k = set.len();
-    if k < 2 {
-        return 0.0;
-    }
-    let mut in_tree = vec![false; k];
-    let mut best = vec![f64::INFINITY; k];
-    in_tree[0] = true;
-    for j in 1..k {
-        best[j] = ds.dist(set[0], set[j]);
-    }
-    let mut total = 0.0;
-    for _ in 1..k {
-        let mut pick = usize::MAX;
-        let mut pick_d = f64::INFINITY;
-        for j in 0..k {
-            if !in_tree[j] && best[j] < pick_d {
-                pick = j;
-                pick_d = best[j];
-            }
-        }
-        debug_assert_ne!(pick, usize::MAX);
-        in_tree[pick] = true;
-        total += pick_d;
-        for j in 0..k {
-            if !in_tree[j] {
-                let d = ds.dist(set[pick], set[j]);
-                if d < best[j] {
-                    best[j] = d;
-                }
-            }
-        }
-    }
-    total
+    let m = distance_submatrix(ds, set);
+    mst_weight_matrix(&m, k, &(0..k).collect::<Vec<_>>())
 }
 
 /// MST weight from a precomputed dense matrix (row-major k*k), used by the
@@ -124,9 +96,10 @@ mod tests {
         let m = distance_submatrix(&ds, &set);
         let via_matrix = mst_weight_matrix(&m, 4, &[0, 1, 2, 3]);
         assert!((via_matrix - mst_weight(&ds, &set)).abs() < 1e-12);
-        // and on a sub-selection
+        // and on a sub-selection; the tile is f32, so compare against the
+        // f32-narrowed oracle distance
         let sub = mst_weight_matrix(&m, 4, &[0, 3]);
-        assert!((sub - ds.dist(0, 3)).abs() < 1e-12);
+        assert!((sub - ds.dist(0, 3) as f32 as f64).abs() < 1e-12);
     }
 
     #[test]

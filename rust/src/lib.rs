@@ -9,7 +9,8 @@
 //! * **coreset constructions** for partition / transversal / general
 //!   matroids ([`algo::seq_coreset`], [`algo::stream_coreset`],
 //!   [`mapreduce`]),
-//! * the **five DMMC objectives** of Table 1 ([`diversity`]),
+//! * the **five DMMC objectives** of Table 1 ([`diversity`]), scored
+//!   through the engine-backed [`diversity::Evaluator`] (see below),
 //! * **final-solution extractors**: AMT local search for sum-DMMC
 //!   ([`algo::local_search`]) and matroid-pruned exhaustive search for the
 //!   other variants ([`algo::exhaustive`]),
@@ -42,13 +43,36 @@
 //!
 //! * [`runtime::BatchEngine`] — the default (`--engine batch`): chunked,
 //!   `std::thread::scope`-parallel CPU kernels with precomputed norms.
-//!   Bit-identical to the scalar oracle on `update_min`/`sums_to_set`, so
-//!   switching engines never changes a result — only the wall clock.
+//!   Bit-identical to the scalar oracle on every path (`update_min`,
+//!   `pairwise_block`, `sums_to_set`), so switching engines never changes
+//!   a result — only the wall clock.
 //! * [`runtime::ScalarEngine`] — the portable point-at-a-time oracle
-//!   (`--engine scalar`); use it as the reference in equivalence tests.
+//!   (`--engine scalar`); use it as the reference in equivalence tests
+//!   (its distance-evaluation counter also powers work-count regressions).
 //! * `runtime::PjrtEngine` (`--engine pjrt`, feature `pjrt`) — executes the
 //!   AOT-compiled Pallas kernels through the PJRT CPU client; validated
-//!   against the oracle by `tests/runtime_numerics.rs`.
+//!   against the oracle by `tests/runtime_numerics.rs` (tolerance, not
+//!   bit-identity).
+//!
+//! ## Evaluator API and backend dispatch
+//!
+//! Diversity evaluation never walks `Dataset::dist` point-at-a-time; it
+//! goes through [`diversity::Evaluator`] over whichever engine the
+//! pipeline selected:
+//!
+//! * **sum / star** — one batched `sums_to_set` pass over the set (exact
+//!   f64 oracle formulas on every CPU backend, self-pairs excluded
+//!   exactly so cosine fp self-noise never contaminates the objectives);
+//! * **tree / cycle / bipartition** — the dense submatrix from one
+//!   `pairwise_block` tile (f32, upcast to f64 for the matrix solvers;
+//!   computed as a strict upper triangle + mirror with a true-zero
+//!   diagonal); CPU backends must produce bit-identical tiles, making
+//!   every objective value engine-independent
+//!   (`tests/engine_equivalence.rs`);
+//! * [`diversity::Evaluator::diversity_all`] scores all five objectives
+//!   from one sums pass + one tile, and the exhaustive finisher evaluates
+//!   every DFS leaf from a single candidate tile — no duplicate distance
+//!   work (pinned by an evaluation-count regression).
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.

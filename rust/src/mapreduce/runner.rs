@@ -7,6 +7,7 @@ use anyhow::Result;
 use crate::algo::seq_coreset::seq_coreset;
 use crate::algo::{Budget, Coreset};
 use crate::core::Dataset;
+use crate::diversity::sum_diversity_with_engine;
 use crate::matroid::Matroid;
 use crate::runtime::BatchEngine;
 use crate::util::rng::Rng;
@@ -44,6 +45,10 @@ pub struct MrReport {
     pub wall_time: Duration,
     /// Per-worker coreset sizes.
     pub shard_coreset_sizes: Vec<usize>,
+    /// Per-worker coreset sum-diversities — reducer-side quality
+    /// accounting, scored through each shard's engine (one batched sums
+    /// pass per shard; detects skewed shards before the finisher runs).
+    pub shard_coreset_diversities: Vec<f64>,
 }
 
 /// Build a coreset of `ds` in (simulated) MapReduce.
@@ -71,7 +76,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
     // engines' scoped fan-out does not oversubscribe
     let machine = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
     let threads_per_shard = (machine / cfg.workers).max(1);
-    type ShardOut = Result<(Vec<usize>, Coreset, Duration)>;
+    type ShardOut = Result<(Vec<usize>, Coreset, f64, Duration)>;
     let results: Vec<ShardOut> = std::thread::scope(|scope| {
         let handles: Vec<_> = shards
             .iter()
@@ -81,9 +86,12 @@ pub fn mr_coreset<M: Matroid + Sync>(
                     let local = ds.subset(shard);
                     let engine = BatchEngine::with_threads(&local, threads_per_shard);
                     let cs = seq_coreset(&local, m, k, cfg.budget, &engine)?;
+                    // reducer-side accounting: score the shard coreset
+                    // through the same engine before handing it upstream
+                    let shard_div = sum_diversity_with_engine(&local, &cs.indices, &engine)?;
                     // map local coreset indices back to global ids
                     let global: Vec<usize> = cs.indices.iter().map(|&i| shard[i]).collect();
-                    Ok((global, cs, w0.elapsed()))
+                    Ok((global, cs, shard_div, w0.elapsed()))
                 })
             })
             .collect();
@@ -93,11 +101,13 @@ pub fn mr_coreset<M: Matroid + Sync>(
     let mut union: Vec<usize> = Vec::new();
     let mut worker_times = Vec::with_capacity(cfg.workers);
     let mut shard_coreset_sizes = Vec::with_capacity(cfg.workers);
+    let mut shard_coreset_diversities = Vec::with_capacity(cfg.workers);
     let mut n_clusters = 0;
     let mut radius = 0.0f64;
     for r in results {
-        let (global, cs, dt) = r?;
+        let (global, cs, shard_div, dt) = r?;
         shard_coreset_sizes.push(global.len());
+        shard_coreset_diversities.push(shard_div);
         union.extend(global);
         worker_times.push(dt);
         n_clusters += cs.n_clusters;
@@ -137,6 +147,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
         makespan_round1,
         wall_time: t0.elapsed(),
         shard_coreset_sizes,
+        shard_coreset_diversities,
     })
 }
 

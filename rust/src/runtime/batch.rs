@@ -9,26 +9,36 @@
 //!
 //! Numerics contract, pinned by `rust/tests/engine_equivalence.rs`:
 //!
-//! * `update_min` / `update_min_block` / `sums_to_set` are **bit-identical**
-//!   to the scalar oracle.  Per point the center fold is a left fold in the
-//!   caller's order, each distance is evaluated with the exact same f64
-//!   formulas as [`crate::core::metric`], and the cosine path feeds the
-//!   squared norms precomputed at construction through
-//!   [`cosine_angular_from_parts`] (same accumulation order, same value).
-//!   Chunk boundaries and worker count therefore cannot change a single
-//!   output bit — points are independent under all three operations.
-//! * `pairwise_block` is the throughput path: Euclidean uses the expanded
-//!   form `d^2 = |a|^2 + |b|^2 - 2<a,b>` over the precomputed squared
-//!   norms, which turns the inner loop into a pure dot product.  Output is
-//!   f32 and agrees with the oracle to ~1e-5 relative (cancellation near
-//!   d = 0), which is why threshold-sensitive consumers (stream center
-//!   separation, AMT acceptance) never read it for accept/reject decisions.
+//! * **every operation is bit-identical to the scalar oracle** —
+//!   `update_min` / `update_min_block` / `sums_to_set` / `pairwise_block`.
+//!   Per point the center fold is a left fold in the caller's order, each
+//!   distance is evaluated with the exact same f64 formulas as
+//!   [`crate::core::metric`], and the cosine path feeds the squared norms
+//!   precomputed at construction through [`cosine_angular_from_parts`]
+//!   (same accumulation order, same value).  Chunk boundaries and worker
+//!   count cannot change a single output bit — outputs are element-wise
+//!   independent under all four operations.
+//!
+//! `pairwise_block` used to be the one tolerance-only path (expanded-form
+//! Euclidean `d^2 = |a|^2 + |b|^2 - 2<a,b>` over precomputed norms).  The
+//! diversity evaluators now consume its tiles for the tree/cycle/
+//! bipartition objectives, whose engine-independence requires exact tile
+//! identity, so the tile kernel runs the exact difference form too; the
+//! backend's win on this path is the scoped multi-thread fan-out over row
+//! chunks.  An expanded-form fast tile can come back behind a separate,
+//! tolerance-gated method if a profile ever justifies it.
+//!
+//! Per the trait contract, self-pairs are pinned to exactly zero (the
+//! angular cosine metric's raw `d(x, x)` carries ~1e-8 fp noise), and the
+//! symmetric same-slice tile computes only the strict upper triangle and
+//! mirrors it — `d` is bit-symmetric under both metrics, so the output
+//! matches the rectangular walk while the distance work halves.
 
 use anyhow::Result;
 
 use crate::core::metric::{cosine_angular_from_parts, dot, euclidean};
 use crate::core::{Dataset, Metric};
-use crate::runtime::engine::DistanceEngine;
+use crate::runtime::engine::{same_index_slice, DistanceEngine};
 
 /// Points per cache sub-block: the center tile stays register/L1-resident
 /// while `POINT_BLOCK` point rows stream through.
@@ -49,6 +59,7 @@ pub struct BatchEngine {
     threads: usize,
     /// Per-point squared L2 norms, accumulated in the same order as the
     /// scalar cosine kernel so the cosine fast path stays bit-identical.
+    /// Empty for Euclidean datasets — only the cosine kernels read it.
     sqnorms: Vec<f64>,
 }
 
@@ -66,11 +77,21 @@ impl BatchEngine {
     /// to divide the machine between shards.
     pub fn with_threads(ds: &Dataset, threads: usize) -> BatchEngine {
         let n = ds.n();
-        let mut sqnorms = vec![0.0f64; n];
-        for (i, sq) in sqnorms.iter_mut().enumerate() {
-            let p = ds.point(i);
-            *sq = dot(p, p);
-        }
+        // the squared norms feed only the cosine kernels; Euclidean paths
+        // use the exact difference form, so skip the O(n d) precompute
+        // (per-block/per-shard constructors would otherwise pay it on
+        // every engine)
+        let sqnorms = match ds.metric {
+            Metric::Cosine => {
+                let mut sq = vec![0.0f64; n];
+                for (i, s) in sq.iter_mut().enumerate() {
+                    let p = ds.point(i);
+                    *s = dot(p, p);
+                }
+                sq
+            }
+            Metric::Euclidean => Vec::new(),
+        };
         BatchEngine {
             metric: ds.metric,
             n,
@@ -162,7 +183,8 @@ impl BatchEngine {
     }
 
     /// Sums worker: `out[slot] = sum_w d(cands[slot], w)` over `set`, with
-    /// the exact oracle formulas and summation order.
+    /// the exact oracle formulas and summation order.  Self-pairs are
+    /// excluded, matching the trait contract (exactly zero by definition).
     fn sums_chunk(&self, ds: &Dataset, cands: &[usize], set: &[usize], out: &mut [f64]) {
         for (slot, &v) in cands.iter().enumerate() {
             let vp = ds.point(v);
@@ -170,13 +192,21 @@ impl BatchEngine {
             match self.metric {
                 Metric::Euclidean => {
                     for &w in set {
-                        s += euclidean(vp, ds.point(w));
+                        if w != v {
+                            s += euclidean(vp, ds.point(w));
+                        }
                     }
                 }
                 Metric::Cosine => {
                     let aa = self.sqnorms[v];
                     for &w in set {
-                        s += cosine_angular_from_parts(dot(vp, ds.point(w)), aa, self.sqnorms[w]);
+                        if w != v {
+                            s += cosine_angular_from_parts(
+                                dot(vp, ds.point(w)),
+                                aa,
+                                self.sqnorms[w],
+                            );
+                        }
                     }
                 }
             }
@@ -185,18 +215,62 @@ impl BatchEngine {
     }
 
     /// Pairwise worker over a row chunk (`out` is the chunk's tile slice).
+    /// Exact oracle formulas per entry, self-pairs pinned to zero — tile
+    /// identity with the scalar engine is load-bearing for the diversity
+    /// evaluators.  `out` arrives zeroed, so self-pairs are skips.
     fn pairwise_chunk(&self, ds: &Dataset, rows: &[usize], cols: &[usize], out: &mut [f32]) {
         let width = cols.len();
         for (r, &i) in rows.iter().enumerate() {
             let ip = ds.point(i);
-            let aa = self.sqnorms[i];
-            for (c, &j) in cols.iter().enumerate() {
-                let ab = dot(ip, ds.point(j));
-                let d = match self.metric {
-                    Metric::Euclidean => (aa + self.sqnorms[j] - 2.0 * ab).max(0.0).sqrt(),
-                    Metric::Cosine => cosine_angular_from_parts(ab, aa, self.sqnorms[j]),
-                };
-                out[r * width + c] = d as f32;
+            match self.metric {
+                Metric::Euclidean => {
+                    for (c, &j) in cols.iter().enumerate() {
+                        if i != j {
+                            out[r * width + c] = euclidean(ip, ds.point(j)) as f32;
+                        }
+                    }
+                }
+                Metric::Cosine => {
+                    let aa = self.sqnorms[i];
+                    for (c, &j) in cols.iter().enumerate() {
+                        if i != j {
+                            let d = cosine_angular_from_parts(
+                                dot(ip, ds.point(j)),
+                                aa,
+                                self.sqnorms[j],
+                            );
+                            out[r * width + c] = d as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Upper-triangle worker for the symmetric tile: for each global row
+    /// `a` in this chunk, fill the entries `b > a` only (the rest stays
+    /// zero; the caller mirrors the strict upper triangle afterwards).
+    fn pairwise_upper_chunk(&self, ds: &Dataset, set: &[usize], base: usize, out: &mut [f32]) {
+        let k = set.len();
+        for (r, row) in out.chunks_mut(k).enumerate() {
+            let a = base + r;
+            let i = set[a];
+            let ip = ds.point(i);
+            match self.metric {
+                Metric::Euclidean => {
+                    for b in (a + 1)..k {
+                        row[b] = euclidean(ip, ds.point(set[b])) as f32;
+                    }
+                }
+                Metric::Cosine => {
+                    let aa = self.sqnorms[i];
+                    for b in (a + 1)..k {
+                        let j = set[b];
+                        row[b] =
+                            cosine_angular_from_parts(dot(ip, ds.point(j)), aa, self.sqnorms[j])
+                                as f32;
+                    }
+                }
             }
         }
     }
@@ -235,6 +309,29 @@ impl DistanceEngine for BatchEngine {
         let width = cols.len();
         let mut out = vec![0.0f32; rows.len() * width];
         if rows.is_empty() || width == 0 {
+            return Ok(out);
+        }
+        if same_index_slice(rows, cols) {
+            // symmetric k x k tile: fill the strict upper triangle in
+            // parallel (row chunks are imbalanced — row a has k-1-a
+            // entries — but the tile stays one engine call), then mirror
+            let k = rows.len();
+            let workers = self.workers_for(k * k.saturating_sub(1) / 2);
+            if workers <= 1 {
+                self.pairwise_upper_chunk(ds, rows, 0, &mut out);
+            } else {
+                let span = k.div_ceil(workers);
+                std::thread::scope(|scope| {
+                    for (idx, out_chunk) in out.chunks_mut(span * k).enumerate() {
+                        scope.spawn(move || self.pairwise_upper_chunk(ds, rows, idx * span, out_chunk));
+                    }
+                });
+            }
+            for a in 1..k {
+                for b in 0..a {
+                    out[a * k + b] = out[b * k + a];
+                }
+            }
             return Ok(out);
         }
         let workers = self.workers_for(rows.len().saturating_mul(width));
@@ -303,15 +400,20 @@ mod tests {
         let set: Vec<usize> = vec![3, 77, 150, 299];
         let sums = batch.sums_to_set(&ds, &cands, &set).unwrap();
         for (i, &v) in cands.iter().enumerate() {
-            let want: f64 = set.iter().map(|&w| ds.dist(v, w)).sum();
+            // oracle semantics: self-pairs excluded exactly
+            let want: f64 = set
+                .iter()
+                .filter(|&&w| w != v)
+                .map(|&w| ds.dist(v, w))
+                .sum();
             assert_eq!(sums[i], want, "sums_to_set must be bit-identical");
         }
         let tile = batch.pairwise_block(&ds, &cands, &set).unwrap();
         for (r, &i) in cands.iter().enumerate() {
             for (c, &j) in set.iter().enumerate() {
-                let want = ds.dist(i, j);
-                let got = tile[r * set.len() + c] as f64;
-                assert!((got - want).abs() <= 1e-5 * want.max(1e-3), "{got} vs {want}");
+                let want = if i == j { 0.0 } else { ds.dist(i, j) as f32 };
+                let got = tile[r * set.len() + c];
+                assert_eq!(got, want, "pairwise tile must be bit-identical");
             }
         }
     }

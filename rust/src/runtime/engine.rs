@@ -14,14 +14,24 @@
 //! * [`DistanceEngine::sums_to_set`] — per-candidate distance sums against
 //!   a solution set.
 //!
+//! The diversity evaluators (`crate::diversity::Evaluator`) are the fourth
+//! consumer: they materialize objective submatrices through
+//! [`DistanceEngine::pairwise_block`] and batched sum/star scans through
+//! [`DistanceEngine::sums_to_set`], so every Table-1 objective inherits
+//! whatever backend the pipeline selected.
+//!
 //! Three implementations exist:
 //!
 //! * [`ScalarEngine`] — portable point-at-a-time Rust loops, the
-//!   correctness oracle every other backend is pinned against;
+//!   correctness oracle every other backend is pinned against (it also
+//!   counts distance evaluations, which regression tests use to pin the
+//!   amount of distance work a code path performs);
 //! * [`runtime::batch::BatchEngine`](crate::runtime::batch::BatchEngine) —
 //!   chunked, multi-threaded CPU backend (the default);
 //! * `runtime::pjrt::PjrtEngine` (feature `pjrt`) — runs the AOT-compiled
 //!   Pallas kernels through the PJRT CPU client.
+
+use std::cell::Cell;
 
 use anyhow::Result;
 
@@ -73,35 +83,93 @@ pub trait DistanceEngine {
     /// Row-major `rows.len() x cols.len()` tile of pairwise distances
     /// (`out[r * cols.len() + c] = d(rows[r], cols[c])`), in f32 — the
     /// throughput representation shared with the PJRT artifacts.
+    ///
+    /// Contract for the CPU backends, on which the diversity evaluators'
+    /// engine-independence rests (pinned by
+    /// `rust/tests/engine_equivalence.rs`):
+    ///
+    /// * every off-diagonal entry must equal `ds.dist(i, j) as f32`
+    ///   **bit for bit**;
+    /// * self-pairs (`rows[r] == cols[c]`) are **exactly 0** — the metric
+    ///   identity is pinned rather than trusting fp self-noise (the
+    ///   angular cosine metric evaluates `d(x, x)` at ~1e-8);
+    /// * when `rows` and `cols` are the *same slice* (the symmetric
+    ///   `k x k` case the evaluators produce), backends may — and the CPU
+    ///   backends do — compute only the strict upper triangle and mirror
+    ///   it: `d` is bit-symmetric under both metrics, so the output is
+    ///   unchanged while the distance work halves.
+    ///
+    /// The feature-gated PJRT backend remains tolerance-validated instead.
     fn pairwise_block(&self, ds: &Dataset, rows: &[usize], cols: &[usize]) -> Result<Vec<f32>> {
         let mut out = vec![0.0f32; rows.len() * cols.len()];
         for (r, &i) in rows.iter().enumerate() {
             for (c, &j) in cols.iter().enumerate() {
-                out[r * cols.len() + c] = ds.dist(i, j) as f32;
+                if i != j {
+                    out[r * cols.len() + c] = ds.dist(i, j) as f32;
+                }
             }
         }
         Ok(out)
     }
 
     /// For every candidate `v`, the sum of distances to every member of
-    /// `set` (members of `set` appearing in `candidates` include their own
-    /// zero self-distance).  Kept in f64 because AMT swap acceptance
-    /// compares against a `1e-12`-relative improvement threshold.
+    /// `set`.  Self-pairs (a member of `set` appearing as the candidate)
+    /// are excluded — `d(v, v)` is exactly zero by definition, never the
+    /// metric's fp self-noise — which makes the member sums exactly the
+    /// star weights of the diversity layer.  Kept in f64 because AMT swap
+    /// acceptance compares against a `1e-12`-relative improvement
+    /// threshold.
     fn sums_to_set(&self, ds: &Dataset, candidates: &[usize], set: &[usize]) -> Result<Vec<f64>> {
         Ok(candidates
             .iter()
-            .map(|&v| set.iter().map(|&w| ds.dist(v, w)).sum())
+            .map(|&v| {
+                set.iter()
+                    .filter(|&&w| w != v)
+                    .map(|&w| ds.dist(v, w))
+                    .sum()
+            })
             .collect())
     }
 }
 
+/// True when `a` and `b` are literally the same slice — the symmetric
+/// tile case [`DistanceEngine::pairwise_block`] backends fast-path.
+pub(crate) fn same_index_slice(a: &[usize], b: &[usize]) -> bool {
+    a.len() == b.len() && std::ptr::eq(a.as_ptr(), b.as_ptr())
+}
+
 /// Plain-Rust scalar backend — the correctness oracle.
-#[derive(Default, Debug, Clone, Copy)]
-pub struct ScalarEngine;
+///
+/// Each instance carries a counter of individual distance evaluations
+/// ([`ScalarEngine::dist_evals`]).  Regression tests use it to pin the
+/// *amount* of distance work a code path performs — e.g. that the
+/// diversity evaluator builds its submatrix once and reuses it instead of
+/// re-walking `Dataset::dist` per objective or per star center.  The
+/// counter lives in a `Cell`, so counting needs no `&mut`: the engine
+/// stays usable behind the shared `&dyn DistanceEngine` the algorithms
+/// pass around.
+#[derive(Default, Debug, Clone)]
+pub struct ScalarEngine {
+    dist_evals: Cell<u64>,
+}
 
 impl ScalarEngine {
     pub fn new() -> Self {
-        ScalarEngine
+        ScalarEngine::default()
+    }
+
+    /// Individual distance evaluations performed through this instance
+    /// since construction or the last [`ScalarEngine::reset_dist_evals`].
+    pub fn dist_evals(&self) -> u64 {
+        self.dist_evals.get()
+    }
+
+    pub fn reset_dist_evals(&self) {
+        self.dist_evals.set(0);
+    }
+
+    fn count(&self, evals: usize) {
+        self.dist_evals.set(self.dist_evals.get() + evals as u64);
     }
 }
 
@@ -118,6 +186,7 @@ impl DistanceEngine for ScalarEngine {
         mind: &mut [f32],
         arg: &mut [u32],
     ) -> Result<()> {
+        self.count(ds.n());
         let c = ds.point(center);
         for i in 0..ds.n() {
             let d = ds.metric.dist(ds.point(i), c) as f32;
@@ -127,6 +196,57 @@ impl DistanceEngine for ScalarEngine {
             }
         }
         Ok(())
+    }
+
+    // The two batched shapes repeat the trait's default (oracle)
+    // semantics — overridden so the instance counter sees the distances
+    // actually computed, and to take the symmetric-tile fast path.
+
+    fn pairwise_block(&self, ds: &Dataset, rows: &[usize], cols: &[usize]) -> Result<Vec<f32>> {
+        let width = cols.len();
+        let mut out = vec![0.0f32; rows.len() * width];
+        if same_index_slice(rows, cols) {
+            // symmetric k x k tile: strict upper triangle + mirror — the
+            // pre-engine `distance_submatrix` work of k(k-1)/2 distances
+            let k = rows.len();
+            self.count(k * k.saturating_sub(1) / 2);
+            for a in 0..k {
+                for b in (a + 1)..k {
+                    let d = ds.dist(rows[a], rows[b]) as f32;
+                    out[a * k + b] = d;
+                    out[b * k + a] = d;
+                }
+            }
+            return Ok(out);
+        }
+        let mut evals = 0usize;
+        for (r, &i) in rows.iter().enumerate() {
+            for (c, &j) in cols.iter().enumerate() {
+                if i != j {
+                    evals += 1;
+                    out[r * width + c] = ds.dist(i, j) as f32;
+                }
+            }
+        }
+        self.count(evals);
+        Ok(out)
+    }
+
+    fn sums_to_set(&self, ds: &Dataset, candidates: &[usize], set: &[usize]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(candidates.len());
+        let mut evals = 0usize;
+        for &v in candidates {
+            let mut s = 0.0f64;
+            for &w in set {
+                if w != v {
+                    evals += 1;
+                    s += ds.dist(v, w);
+                }
+            }
+            out.push(s);
+        }
+        self.count(evals);
+        Ok(out)
     }
 }
 
@@ -189,5 +309,51 @@ mod tests {
             let want: f64 = cols.iter().map(|&j| ds.dist(i, j)).sum();
             assert!((sums[r] - want).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn scalar_engine_counts_distance_evaluations() {
+        let ds = synth::uniform_cube(50, 2, 4);
+        let e = ScalarEngine::new();
+        assert_eq!(e.dist_evals(), 0);
+        let mut mind = vec![f32::INFINITY; 50];
+        let mut arg = vec![u32::MAX; 50];
+        e.update_min(&ds, 0, 0, &mut mind, &mut arg).unwrap();
+        assert_eq!(e.dist_evals(), 50);
+        e.pairwise_block(&ds, &[0, 1, 2], &[3, 4]).unwrap();
+        assert_eq!(e.dist_evals(), 50 + 6);
+        e.sums_to_set(&ds, &[0, 1], &[2, 3, 4]).unwrap();
+        assert_eq!(e.dist_evals(), 50 + 6 + 6);
+        e.reset_dist_evals();
+        // symmetric k x k tile costs only the strict upper triangle
+        let set = [0usize, 1, 2, 3];
+        e.pairwise_block(&ds, &set, &set).unwrap();
+        assert_eq!(e.dist_evals(), 6);
+        // member self-pairs are excluded from the sums
+        e.reset_dist_evals();
+        e.sums_to_set(&ds, &[0, 1], &[0, 1, 2]).unwrap();
+        assert_eq!(e.dist_evals(), 4);
+    }
+
+    #[test]
+    fn self_pairs_are_exactly_zero() {
+        // wikisim is cosine, whose raw d(x, x) carries ~1e-8 fp noise —
+        // the engine contract pins self-pairs (and the symmetric-tile
+        // diagonal) to a true zero
+        let ds = synth::wikisim(30, 5);
+        let e = ScalarEngine::new();
+        let set: Vec<usize> = (0..10).collect();
+        let tile = e.pairwise_block(&ds, &set, &set).unwrap();
+        for i in 0..10 {
+            assert_eq!(tile[i * 10 + i], 0.0);
+        }
+        // rectangular call with overlapping indices: same guarantee.
+        // rows [3, 4] x cols [4, 5] -> [d(3,4), d(3,5), d(4,4), d(4,5)]
+        let tile = e.pairwise_block(&ds, &[3, 4], &[4, 5]).unwrap();
+        assert_eq!(tile[2], 0.0, "self-pair d(4,4) must be a true zero");
+        assert!(tile[0] > 0.0);
+        let sums = e.sums_to_set(&ds, &[4], &[3, 4, 5]).unwrap();
+        let want = ds.dist(4, 3) + ds.dist(4, 5); // no self term
+        assert!((sums[0] - want).abs() < 1e-12);
     }
 }

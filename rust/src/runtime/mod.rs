@@ -25,10 +25,12 @@ use crate::core::Dataset;
 
 /// Engine selection for CLI/config.
 ///
-/// `Batch` is the default: bit-identical to `Scalar` on the min-fold and
-/// sum paths, several times faster on multi-core.  `Scalar` stays the
-/// oracle for equivalence tests, and `Pjrt` needs both the `pjrt` cargo
-/// feature and the AOT artifacts on disk (`make artifacts`).
+/// `Batch` is the default: bit-identical to `Scalar` on every path
+/// (min-folds, pairwise tiles, sums — so switching engines never changes
+/// a result, including the five diversity objectives that evaluate
+/// through the tiles), several times faster on multi-core.  `Scalar`
+/// stays the oracle for equivalence tests, and `Pjrt` needs both the
+/// `pjrt` cargo feature and the AOT artifacts on disk (`make artifacts`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     Scalar,

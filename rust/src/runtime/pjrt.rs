@@ -242,7 +242,12 @@ impl DistanceEngine for PjrtEngine {
             let t = PjrtEngine::pairwise_block(self, ds, candidates, ctile)?;
             for (r, acc) in out.iter_mut().enumerate() {
                 for c in 0..ctile.len() {
-                    *acc += t[r * ctile.len() + c] as f64;
+                    // honor the trait's self-pair exclusion on the host:
+                    // the artifact's d(v,v) is fp noise (expanded-form
+                    // cancellation), never exactly zero
+                    if candidates[r] != ctile[c] {
+                        *acc += t[r * ctile.len() + c] as f64;
+                    }
                 }
             }
         }

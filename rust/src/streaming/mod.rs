@@ -9,10 +9,14 @@ pub use window::SlidingWindowCoreset;
 
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
 use crate::algo::stream_coreset::{StreamCoreset, StreamStats, DEFAULT_C};
 use crate::algo::Coreset;
 use crate::core::Dataset;
+use crate::diversity::{diversity_with_engine, Objective};
 use crate::matroid::Matroid;
+use crate::runtime::engine::DistanceEngine;
 
 /// How the streaming algorithm is parameterized.
 #[derive(Clone, Copy, Debug)]
@@ -32,6 +36,21 @@ pub struct StreamReport {
     pub elapsed: Duration,
     /// Points per second.
     pub throughput: f64,
+}
+
+impl StreamReport {
+    /// Score the finished coreset under `obj` through the engine-backed
+    /// diversity evaluator — the scoring half of a streaming finisher
+    /// (solution *selection* still runs local search / exhaustive over
+    /// the coreset; see the coordinator).
+    pub fn coreset_diversity(
+        &self,
+        ds: &Dataset,
+        obj: Objective,
+        engine: &dyn DistanceEngine,
+    ) -> Result<f64> {
+        diversity_with_engine(ds, &self.coreset.indices, obj, engine)
+    }
 }
 
 /// Run one streaming pass over `order` (a permutation of `0..ds.n()`, or
@@ -71,6 +90,8 @@ mod tests {
 
     #[test]
     fn single_pass_reported() {
+        use crate::runtime::engine::ScalarEngine;
+
         let ds = synth::uniform_cube(500, 2, 1);
         let m = UniformMatroid::new(4);
         let order: Vec<usize> = (0..ds.n()).collect();
@@ -79,6 +100,11 @@ mod tests {
         assert_eq!(rep.stats.points_processed, 500);
         assert!(rep.throughput > 0.0);
         assert!(!rep.coreset.is_empty());
+        // engine-backed scoring of the finished coreset
+        let d = rep
+            .coreset_diversity(&ds, Objective::Sum, &ScalarEngine::new())
+            .unwrap();
+        assert!(d > 0.0);
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! On instances small enough to brute-force, the (1-eps)-coreset property
 //! (Definition 3) is checked directly: for every diversity function and
-//! matroid type, the best independent k-set inside the coreset must be
-//! within (1 - eps) of the best independent k-set of the whole input.
+//! matroid type — the full Lemma-2 grid of all five Table-1 objectives
+//! under partition and transversal matroids, seeded deterministically —
+//! the best independent k-set inside the coreset must be within (1 - eps)
+//! of the best independent k-set of the whole input.
 
 use matroid_coreset::algo::exhaustive::exhaustive_best;
 use matroid_coreset::algo::seq_coreset::seq_coreset;
@@ -18,7 +20,9 @@ use matroid_coreset::runtime::ScalarEngine;
 /// Optimum over the FULL dataset by exhaustive search (small n only).
 fn brute_optimum(ds: &Dataset, m: &dyn Matroid, k: usize, obj: Objective) -> f64 {
     let all: Vec<usize> = (0..ds.n()).collect();
-    exhaustive_best(ds, &m, k, &all, obj).diversity
+    exhaustive_best(ds, &m, k, &all, obj, &ScalarEngine::new())
+        .unwrap()
+        .diversity
 }
 
 fn coreset_optimum(
@@ -28,7 +32,9 @@ fn coreset_optimum(
     obj: Objective,
     coreset: &[usize],
 ) -> f64 {
-    exhaustive_best(ds, &m, k, coreset, obj).diversity
+    exhaustive_best(ds, &m, k, coreset, obj, &ScalarEngine::new())
+        .unwrap()
+        .diversity
 }
 
 #[test]
@@ -60,6 +66,42 @@ fn seq_coreset_guarantee_all_objectives_uniform() {
         assert!(
             cs_opt >= (1.0 - eps) * opt - 1e-9,
             "{obj:?}: {cs_opt} < (1-eps) * {opt}"
+        );
+    }
+}
+
+#[test]
+fn seq_coreset_guarantee_all_objectives_partition() {
+    // Lemma 2 for every Table-1 objective under a partition matroid
+    let ds = synth::clustered(42, 2, 5, 0.05, 3, 11);
+    let m = PartitionMatroid::new(vec![2, 2, 2]);
+    let k = 4;
+    let eps = 0.5;
+    let cs = seq_coreset(&ds, &m, k, Budget::Epsilon(eps), &ScalarEngine::new()).unwrap();
+    for obj in ALL_OBJECTIVES {
+        let opt = brute_optimum(&ds, &m, k, obj);
+        let cs_opt = coreset_optimum(&ds, &m, k, obj, &cs.indices);
+        assert!(
+            cs_opt >= (1.0 - eps) * opt - 1e-9,
+            "partition {obj:?}: {cs_opt} < (1-eps) * {opt}"
+        );
+    }
+}
+
+#[test]
+fn seq_coreset_guarantee_all_objectives_transversal() {
+    // Lemma 2 for every Table-1 objective under a transversal matroid
+    let ds = synth::wikisim(50, 3);
+    let m = TransversalMatroid::new();
+    let k = 3;
+    let eps = 0.5;
+    let cs = seq_coreset(&ds, &m, k, Budget::Epsilon(eps), &ScalarEngine::new()).unwrap();
+    for obj in ALL_OBJECTIVES {
+        let opt = brute_optimum(&ds, &m, k, obj);
+        let cs_opt = coreset_optimum(&ds, &m, k, obj, &cs.indices);
+        assert!(
+            cs_opt >= (1.0 - eps) * opt - 1e-9,
+            "transversal {obj:?}: {cs_opt} < (1-eps) * {opt}"
         );
     }
 }

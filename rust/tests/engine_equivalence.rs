@@ -1,15 +1,25 @@
 //! Engine equivalence: `BatchEngine` vs the `ScalarEngine` oracle.
 //!
-//! The batch backend's contract is stronger than tolerance: on the
-//! min-fold (`update_min` / `update_min_block`) and sum (`sums_to_set`)
-//! paths it must reproduce the oracle's `mind` / `arg` arrays **exactly**
-//! — same f32 per-distance values (same f64 formulas, same accumulation
-//! order) and the same left-to-right fold over centers within any chunk —
-//! regardless of chunk boundaries or worker count.  Only the expanded-form
-//! `pairwise_block` tile is tolerance-checked.
+//! The batch backend's contract is stronger than tolerance: on **every**
+//! path — min-fold (`update_min` / `update_min_block`), sums
+//! (`sums_to_set`), and pairwise tiles (`pairwise_block`) — it must
+//! reproduce the oracle **exactly**: same f32 per-distance values (same
+//! f64 formulas, same accumulation order) and the same left-to-right fold
+//! over centers within any chunk, regardless of chunk boundaries or
+//! worker count.
+//!
+//! The diversity-evaluator section extends the pin to the consumer layer:
+//! the `pairwise_block`-built submatrix and all five Table-1 objective
+//! values must be bit-identical between the scalar oracle and the batch
+//! backend (odd sizes and the k = 0/1/2 edge cases included), and an
+//! evaluation-count regression pins that the evaluator does no duplicate
+//! distance work.
 
+use matroid_coreset::algo::exhaustive::exhaustive_best;
 use matroid_coreset::core::{Dataset, Metric};
 use matroid_coreset::data::synth;
+use matroid_coreset::diversity::{Evaluator, Objective, ALL_OBJECTIVES};
+use matroid_coreset::matroid::UniformMatroid;
 use matroid_coreset::runtime::engine::{DistanceEngine, ScalarEngine};
 use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::util::rng::Rng;
@@ -116,39 +126,128 @@ fn sums_to_set_exactly_matches_oracle() {
 }
 
 #[test]
-fn pairwise_block_within_tolerance_of_oracle() {
+fn pairwise_block_bit_identical_to_oracle() {
     for metric in [Metric::Euclidean, Metric::Cosine] {
         let ds = dataset(metric, 2_003, 27, 5);
         let batch = BatchEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
         let rows: Vec<usize> = (0..ds.n()).step_by(7).collect();
         let cols: Vec<usize> = vec![0, 3, 500, 1_000, 2_002];
-        let tile = batch.pairwise_block(&ds, &rows, &cols).unwrap();
-        for (r, &i) in rows.iter().enumerate() {
-            for (c, &j) in cols.iter().enumerate() {
-                let want = ds.dist(i, j);
-                let got = tile[r * cols.len() + c] as f64;
-                // expanded form + f32 narrowing: loose near 0, tight elsewhere
-                assert!(
-                    (got - want).abs() <= 1e-4 * want.max(1e-2),
-                    "{metric:?} d({i},{j}): batch {got} vs oracle {want}"
-                );
-            }
-        }
+        let tb = batch.pairwise_block(&ds, &rows, &cols).unwrap();
+        let ts = scalar.pairwise_block(&ds, &rows, &cols).unwrap();
+        assert_eq!(tb, ts, "pairwise tile diverged on {metric:?}");
     }
 }
 
 #[test]
-fn pairwise_block_self_distance_clamps_to_zero() {
-    // the expanded Euclidean form can go (slightly) negative under
-    // cancellation; the clamp must keep d(i, i) finite and ~0
+fn pairwise_block_self_distance_exactly_zero() {
+    // the exact difference form makes d(i, i) a true zero on the Euclidean
+    // path (the old expanded form only guaranteed ~0 under a clamp)
     let ds = dataset(Metric::Euclidean, 257, 33, 6);
     let batch = BatchEngine::for_dataset(&ds);
     let idx: Vec<usize> = (0..ds.n()).collect();
     let tile = batch.pairwise_block(&ds, &idx, &idx).unwrap();
     for i in 0..ds.n() {
-        let d = tile[i * ds.n() + i];
-        assert!(d.is_finite() && d >= 0.0 && d < 1e-3, "d({i},{i}) = {d}");
+        assert_eq!(tile[i * ds.n() + i], 0.0, "d({i},{i}) not exactly zero");
     }
+}
+
+// ---- diversity-evaluator section -------------------------------------
+
+#[test]
+fn diversity_evaluator_bit_identical_across_engines() {
+    // random datasets and sets, both metrics, odd sizes and the k = 0/1/2
+    // edge cases: the submatrix and every Table-1 objective value must be
+    // bit-identical between the scalar oracle and the batch backend
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 601, 9, 7);
+        let batch = BatchEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
+        let es = Evaluator::new(&scalar);
+        let eb = Evaluator::new(&batch);
+        let mut rng = Rng::new(11);
+        for k in [0usize, 1, 2, 3, 5, 8, 13, 17] {
+            let set = rng.sample_indices(ds.n(), k);
+            assert_eq!(
+                es.submatrix(&ds, &set).unwrap(),
+                eb.submatrix(&ds, &set).unwrap(),
+                "submatrix diverged on {metric:?} k={k}"
+            );
+            for obj in ALL_OBJECTIVES {
+                let a = es.diversity(&ds, &set, obj).unwrap();
+                let b = eb.diversity(&ds, &set, obj).unwrap();
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{metric:?} {obj:?} k={k}: scalar {a} vs batch {b}"
+                );
+            }
+            let alla = es.diversity_all(&ds, &set).unwrap();
+            let allb = eb.diversity_all(&ds, &set).unwrap();
+            assert_eq!(alla, allb, "diversity_all diverged on {metric:?} k={k}");
+        }
+    }
+}
+
+#[test]
+fn diversity_evaluator_threaded_tile_bit_identical() {
+    // k^2 large enough that the batch tile fans out over worker threads;
+    // chunk boundaries must not change a bit of the submatrix or of the
+    // objectives evaluated from it (bipartition is skipped: its heuristic
+    // is O(k^4) at this size, and it reads the same tile anyway)
+    let ds = dataset(Metric::Euclidean, 2_011, 15, 8);
+    let batch = BatchEngine::for_dataset(&ds);
+    let scalar = ScalarEngine::new();
+    let es = Evaluator::new(&scalar);
+    let eb = Evaluator::new(&batch);
+    let mut rng = Rng::new(13);
+    let set = rng.sample_indices(ds.n(), 131);
+    assert_eq!(
+        es.submatrix(&ds, &set).unwrap(),
+        eb.submatrix(&ds, &set).unwrap()
+    );
+    for obj in [Objective::Sum, Objective::Star, Objective::Tree, Objective::Cycle] {
+        let a = es.diversity(&ds, &set, obj).unwrap();
+        let b = eb.diversity(&ds, &set, obj).unwrap();
+        assert!(a.to_bits() == b.to_bits(), "{obj:?}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn evaluator_distance_evaluation_counts() {
+    // the dedup regression: the submatrix is built once and reused —
+    // counted through the scalar engine's call counter
+    let ds = dataset(Metric::Euclidean, 60, 3, 9);
+    let e = ScalarEngine::new();
+    let ev = Evaluator::new(&e);
+    let set: Vec<usize> = (0..9).collect();
+
+    ev.submatrix(&ds, &set).unwrap();
+    assert_eq!(
+        e.dist_evals(),
+        9 * 8 / 2,
+        "submatrix is one symmetric tile: strict upper triangle only"
+    );
+
+    e.reset_dist_evals();
+    ev.diversity_all(&ds, &set).unwrap();
+    assert_eq!(
+        e.dist_evals(),
+        9 * 8 + 9 * 8 / 2,
+        "all five objectives = one sums pass + one symmetric tile; the \
+         pre-evaluator code re-walked Dataset::dist per objective and per \
+         star center"
+    );
+
+    e.reset_dist_evals();
+    let m = UniformMatroid::new(4);
+    let cands: Vec<usize> = (0..ds.n()).collect();
+    exhaustive_best(&ds, &m, 4, &cands, Objective::Tree, &e).unwrap();
+    assert_eq!(
+        e.dist_evals(),
+        (60 * 59 / 2 + 4 * 3 / 2) as u64,
+        "exhaustive = one symmetric t x t candidate tile (every leaf \
+         evaluates from it) + one k x k re-score of the winner"
+    );
 }
 
 #[test]

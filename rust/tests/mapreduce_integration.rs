@@ -6,6 +6,7 @@ use matroid_coreset::data::synth;
 use matroid_coreset::diversity::Objective;
 use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
 use matroid_coreset::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
+use matroid_coreset::runtime::ScalarEngine;
 
 fn cfg(workers: usize, tau: usize, seed: u64) -> MapReduceConfig {
     MapReduceConfig {
@@ -23,10 +24,15 @@ fn composability_preserves_near_optimal_solutions() {
     let m = PartitionMatroid::new(vec![2, 2, 2]);
     let k = 4;
     let all: Vec<usize> = (0..ds.n()).collect();
-    let opt = exhaustive_best(&ds, &m, k, &all, Objective::Sum).diversity;
+    let engine = ScalarEngine::new();
+    let opt = exhaustive_best(&ds, &m, k, &all, Objective::Sum, &engine)
+        .unwrap()
+        .diversity;
     for ell in [2usize, 4, 8] {
         let rep = mr_coreset(&ds, &m, k, cfg(ell, 8, 3)).unwrap();
-        let got = exhaustive_best(&ds, &m, k, &rep.coreset.indices, Objective::Sum).diversity;
+        let got = exhaustive_best(&ds, &m, k, &rep.coreset.indices, Objective::Sum, &engine)
+            .unwrap()
+            .diversity;
         assert!(
             got >= 0.5 * opt,
             "ell={ell}: coreset optimum {got} below half of {opt}"
@@ -99,6 +105,10 @@ fn worker_times_reported_for_each_shard() {
     let rep = mr_coreset(&ds, &m, 4, cfg(5, 4, 11)).unwrap();
     assert_eq!(rep.worker_times.len(), 5);
     assert_eq!(rep.shard_coreset_sizes.len(), 5);
+    // reducer-side quality accounting: one engine-backed sum-diversity per
+    // shard coreset, strictly positive on spread-out random shards
+    assert_eq!(rep.shard_coreset_diversities.len(), 5);
+    assert!(rep.shard_coreset_diversities.iter().all(|&d| d > 0.0));
     assert_eq!(rep.rounds, 1);
     assert!(rep.wall_time >= std::time::Duration::ZERO);
 }

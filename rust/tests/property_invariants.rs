@@ -7,13 +7,13 @@ use matroid_coreset::algo::seq_coreset::seq_coreset;
 use matroid_coreset::algo::stream_coreset::stream_coreset_tau;
 use matroid_coreset::algo::Budget;
 use matroid_coreset::core::{Dataset, Metric};
-use matroid_coreset::diversity::{diversity, mst, tsp, Objective};
+use matroid_coreset::diversity::{diversity, diversity_with_engine, mst, tsp, Objective, ALL_OBJECTIVES};
 use matroid_coreset::matroid::{
     maximal_independent, Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid,
 };
 use matroid_coreset::prop_assert;
 use matroid_coreset::proptest::{check, Gen};
-use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::runtime::{BatchEngine, ScalarEngine};
 use matroid_coreset::util::rng::Rng;
 
 fn random_multilabel_dataset(g: &mut Gen, max_n: usize) -> Dataset {
@@ -146,6 +146,82 @@ fn prop_mst_leq_tsp_leq_twice_mst() {
         let w_tsp = tsp::tsp_weight(&ds, &set);
         prop_assert!(w_tsp >= w_mst - 1e-9, "tsp {w_tsp} < mst {w_mst}");
         prop_assert!(w_tsp <= 2.0 * w_mst + 1e-9, "tsp {w_tsp} > 2 mst {w_mst}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cross_objective_relations() {
+    // star and bipartition both count a subset of the pairwise distances
+    // that sum counts (a star is k-1 of them, a balanced cut at most
+    // floor(k/2)*ceil(k/2)), so neither can exceed the sum objective
+    check("cross-objective-relations", 40, |g| {
+        let n = g.usize_in(4, 12);
+        let dim = g.usize_in(1, 4);
+        let coords = g.vec_f32(n * dim, 2.0);
+        let ds = Dataset::new(dim, Metric::Euclidean, coords, vec![vec![0]; n], 1, "p");
+        let set: Vec<usize> = (0..n).collect();
+        let sum = diversity(&ds, &set, Objective::Sum);
+        let star = diversity(&ds, &set, Objective::Star);
+        let bip = diversity(&ds, &set, Objective::Bipartition);
+        let tol = 1e-9 * sum.max(1.0);
+        prop_assert!(star <= sum + tol, "star {star} > sum {sum}");
+        prop_assert!(bip <= sum + tol, "bipartition {bip} > sum {sum}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_objectives_permutation_invariant() {
+    // every objective is a function of the *set*: feeding the members in
+    // any order must give the same value (up to f64 accumulation order)
+    check("objective-permutation-invariance", 30, |g| {
+        let n = g.usize_in(3, 10);
+        let dim = g.usize_in(1, 4);
+        let coords = g.vec_f32(n * dim, 2.0);
+        let ds = Dataset::new(dim, Metric::Euclidean, coords, vec![vec![0]; n], 1, "p");
+        let set: Vec<usize> = (0..n).collect();
+        let shuffled = g.rng.permutation(n);
+        for obj in ALL_OBJECTIVES {
+            let a = diversity(&ds, &set, obj);
+            let b = diversity(&ds, &shuffled, obj);
+            prop_assert!(
+                (a - b).abs() <= 1e-9 * a.abs().max(1.0),
+                "{obj:?} not permutation-invariant: {a} vs {b}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diversity_equals_engine_paths() {
+    // the free function IS the scalar-engine path (bit-equal), and the
+    // batch backend must agree bit for bit on every objective — the
+    // consumer-level restatement of the engine bit-identity contracts
+    check("diversity-engine-equivalence", 20, |g| {
+        let n = g.usize_in(2, 12);
+        let dim = g.usize_in(1, 4);
+        let coords = g.vec_f32(n * dim, 2.0);
+        let ds = Dataset::new(dim, Metric::Euclidean, coords, vec![vec![0]; n], 1, "p");
+        let batch = BatchEngine::for_dataset(&ds);
+        let size = g.usize_in(1, n);
+        let set = g.subset(n, size);
+        for obj in ALL_OBJECTIVES {
+            let base = diversity(&ds, &set, obj);
+            let scalar = diversity_with_engine(&ds, &set, obj, &ScalarEngine::new())
+                .map_err(|e| e.to_string())?;
+            let batched =
+                diversity_with_engine(&ds, &set, obj, &batch).map_err(|e| e.to_string())?;
+            prop_assert!(
+                base.to_bits() == scalar.to_bits(),
+                "{obj:?}: free fn {base} != scalar engine {scalar}"
+            );
+            prop_assert!(
+                base.to_bits() == batched.to_bits(),
+                "{obj:?}: scalar {base} != batch {batched}"
+            );
+        }
         Ok(())
     });
 }
