@@ -11,10 +11,10 @@
 //! magnitude faster; larger tau -> higher diversity, more time; coreset
 //! construction does not dominate at 5k.
 
-use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchMode, LocalSearchParams};
 use matroid_coreset::algo::seq_coreset::seq_coreset;
 use matroid_coreset::algo::Budget;
-use matroid_coreset::bench::scenarios::{amt_baseline, bench_seed, testbeds};
+use matroid_coreset::bench::scenarios::{amt_baseline_with_mode, bench_seed, testbeds};
 use matroid_coreset::bench::{bench_header, time_once, Table};
 use matroid_coreset::csv_row;
 use matroid_coreset::runtime::BatchEngine;
@@ -29,7 +29,10 @@ fn main() -> anyhow::Result<()> {
     );
     let mut csv = CsvWriter::create(
         "bench_results/fig1.csv",
-        &["dataset", "k", "algo", "param", "diversity", "coreset_s", "search_s", "total_s", "coreset_size"],
+        &[
+            "dataset", "k", "algo", "param", "diversity", "coreset_s", "search_s", "total_s",
+            "coreset_size", "passes", "dist_evals",
+        ],
     )?;
 
     for bed in testbeds(5_000, seed) {
@@ -37,23 +40,36 @@ fn main() -> anyhow::Result<()> {
             let k = k.max(2);
             let mut table = Table::new(&[
                 "algo", "param", "diversity", "coreset_s", "search_s", "total_s", "|T|",
+                "passes", "dist_evals",
             ]);
             // --- AMT rows (full 5k input) ---
+            // gamma = 0 runs in both sum-maintenance modes: identical
+            // trajectory (same diversity, same passes), so the time and
+            // dist_evals columns isolate the incremental update's win
             let cands: Vec<usize> = (0..bed.ds.n()).collect();
-            for gamma in [0.0, 0.4] {
-                let (res, secs) =
-                    time_once(|| amt_baseline(&bed.ds, &bed.matroid, k, &cands, gamma, seed));
+            for (gamma, mode) in [
+                (0.0, LocalSearchMode::Incremental),
+                (0.0, LocalSearchMode::ExhaustiveRestart),
+                (0.4, LocalSearchMode::Incremental),
+            ] {
+                let (res, secs) = time_once(|| {
+                    amt_baseline_with_mode(&bed.ds, &bed.matroid, k, &cands, gamma, seed, mode)
+                });
+                let label = format!("g={gamma}/{}", mode.name());
                 table.row(csv_row![
                     "AMT",
-                    format!("g={gamma}"),
+                    label.clone(),
                     format!("{:.3}", res.diversity),
                     "-",
                     format!("{secs:.3}"),
                     format!("{secs:.3}"),
-                    bed.ds.n()
+                    bed.ds.n(),
+                    res.passes,
+                    res.dist_evals
                 ]);
                 csv.row(&csv_row![
-                    bed.name, k, "amt", gamma, res.diversity, 0.0, secs, secs, bed.ds.n()
+                    bed.name, k, "amt", label, res.diversity, 0.0, secs, secs, bed.ds.n(),
+                    res.passes, res.dist_evals
                 ])?;
             }
             // --- SeqCoreset rows ---
@@ -84,11 +100,13 @@ fn main() -> anyhow::Result<()> {
                     format!("{cs_secs:.3}"),
                     format!("{ls_secs:.3}"),
                     format!("{total:.3}"),
-                    cs.len()
+                    cs.len(),
+                    res.passes,
+                    res.dist_evals
                 ]);
                 csv.row(&csv_row![
                     bed.name, k, "seqcoreset", tau, res.diversity, cs_secs, ls_secs, total,
-                    cs.len()
+                    cs.len(), res.passes, res.dist_evals
                 ])?;
             }
             println!("\n[{} k={k}]", bed.name);

@@ -3,6 +3,7 @@
 //! the profile-guided perf counters tracked in EXPERIMENTS.md §Perf.
 
 use matroid_coreset::algo::gmm::{gmm, GmmStop};
+use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchMode, LocalSearchParams};
 use matroid_coreset::algo::stream_coreset::StreamCoreset;
 use matroid_coreset::bench::scenarios::bench_seed;
 use matroid_coreset::bench::{bench_header, bench_repeat, Table};
@@ -137,6 +138,52 @@ fn main() -> anyhow::Result<()> {
     emit("evaluator/submatrix/batch/k=512", s.p50, (512 * 511 / 2) as f64, &mut table);
     let s = bench_repeat(3, 20, || star_diversity_with_engine(&ds, &eset, &batch).unwrap());
     emit("evaluator/star/batch/k=512", s.p50, (512 * 511) as f64, &mut table);
+
+    // the incremental-AMT delta pass: a two-column dists_to_points block
+    // over all 50k points, scalar oracle vs the threaded batch backend
+    let eset_all: Vec<usize> = (0..ds.n()).collect();
+    let two: Vec<usize> = vec![100, 40_000];
+    let s = bench_repeat(3, 20, || {
+        scalar_eval.dists_to_points(&ds, &eset_all, &two).unwrap().len()
+    });
+    emit("dists_to_points/scalar/n=50k x2", s.p50, (2 * ds.n()) as f64, &mut table);
+    let s = bench_repeat(3, 20, || batch.dists_to_points(&ds, &eset_all, &two).unwrap().len());
+    emit("dists_to_points/batch/n=50k x2", s.p50, (2 * ds.n()) as f64, &mut table);
+
+    // incremental vs exhaustive-restart AMT on an identical trajectory:
+    // the wall-clock ratio tracks the O(n k) -> O(n) per-swap distance
+    // work cut (EXPERIMENTS.md §Perf, incremental rows)
+    let amt_ds = synth::uniform_cube(2_000, 16, seed);
+    let amt_m = UniformMatroid::new(16);
+    let amt_cands: Vec<usize> = (0..amt_ds.n()).collect();
+    let amt_engine = BatchEngine::for_dataset(&amt_ds);
+    let run_amt = |mode: LocalSearchMode| {
+        let s = bench_repeat(1, 5, || {
+            let mut rng = Rng::new(seed);
+            let init: Vec<usize> = (0..16).collect(); // bad start -> long trajectory
+            local_search_sum(
+                &amt_ds,
+                &amt_m,
+                16,
+                &amt_cands,
+                &amt_engine,
+                LocalSearchParams { mode, ..Default::default() },
+                Some(init),
+                &mut rng,
+            )
+            .unwrap()
+            .swaps
+        });
+        s.p50
+    };
+    let p_inc = run_amt(LocalSearchMode::Incremental);
+    emit("local_search/incremental/n=2k/k=16", p_inc, 1.0, &mut table);
+    let p_rst = run_amt(LocalSearchMode::ExhaustiveRestart);
+    emit("local_search/restart/n=2k/k=16", p_rst, 1.0, &mut table);
+    println!(
+        "local-search speedup incremental vs restart: {:.2}x",
+        p_rst / p_inc.max(1e-12)
+    );
 
     // streaming push throughput
     let u = UniformMatroid::new(8);

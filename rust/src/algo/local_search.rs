@@ -6,11 +6,52 @@
 //! feasible swap (u out, v in) that improves the sum-diversity by a factor
 //! of at least `1 + gamma`; after an accepted swap the pass restarts from
 //! the first candidate (the AMT scan); stop when a full pass finds no such
-//! swap.  The O(n k) per-pass distance work — every candidate's distance
-//! sum to the current solution — goes through one batched
-//! [`DistanceEngine::sums_to_set`] call per pass, so the default batch
-//! backend both blocks and multi-threads it; only improving candidates pay
-//! the k exact per-member distances and one independence-oracle call.
+//! swap.
+//!
+//! # Incremental vs pass-restart distance work
+//!
+//! The scan's acceptance logic needs, per candidate `v`, the sum of
+//! distances to the current solution.  Two modes maintain those sums, both
+//! producing the same swap trajectory:
+//!
+//! * [`LocalSearchMode::ExhaustiveRestart`] — the reference semantics:
+//!   every pass recomputes all candidate sums in one batched
+//!   [`DistanceEngine::sums_to_set`] call (O(n k) distance evaluations per
+//!   accepted swap), plus a fresh k x k member pass after the swap.
+//! * [`LocalSearchMode::Incremental`] (default) — after an accepted swap
+//!   (u out, v in) every candidate's sum changes by exactly
+//!   `d(c, v) - d(c, u)`, so the search keeps an exact column store
+//!   `cols[c][j] = d(candidates[c], sol[j])` and refreshes it with one
+//!   [`DistanceEngine::dists_to_points`] column pass per swap (O(n)
+//!   distance evaluations): the evicted column is read from the store, the
+//!   incoming column overwrites it, and the candidate sums absorb the
+//!   difference in exact f64.  Member sums take one narrow two-column pass
+//!   over the k - 1 staying members; the incoming member's sum is the
+//!   delta-maintained candidate sum itself.
+//!
+//! # The epoch / re-anchor contract
+//!
+//! Delta-accumulated sums drift from the from-scratch accumulation order
+//! by a few ulps per swap.  Every [`REANCHOR_EPOCH`] accepted swaps the
+//! incremental state is re-anchored: candidate sums are re-summed from the
+//! column store — the columns hold exact engine distances with true-zero
+//! self-pairs, so the row re-summation is **bit-identical** to a fresh
+//! `sums_to_set` pass at zero additional distance evaluations — and the
+//! member sums get one fresh k x k engine pass.  Between anchors the drift
+//! is bounded by ~2 · `REANCHOR_EPOCH` · eps relative to the sums, far
+//! below the `1e-12`-relative swap-acceptance slack, so the two modes make
+//! identical accept/reject decisions; `rust/tests/local_search_incremental.rs`
+//! pins the full (solution, swaps, oracle_calls, passes) trajectory across
+//! modes, engines, and matroid families, and
+//! `rust/tests/property_invariants.rs` pins the drift bound itself.
+//!
+//! The incremental column store costs `candidates.len() * k` f64s of
+//! memory (e.g. ~4 MB for the 5k-point full-input AMT baseline at rank
+//! 100) — the trade for cutting the per-swap distance work from O(n k) to
+//! O(n).
+//!
+//! [1]: Abbassi, Mirrokni, Thakur, "Diversity maximization under matroid
+//!      constraints", KDD 2013.
 
 use anyhow::Result;
 
@@ -19,6 +60,33 @@ use crate::core::Dataset;
 use crate::matroid::Matroid;
 use crate::runtime::engine::DistanceEngine;
 use crate::util::rng::Rng;
+
+/// Accepted swaps between re-anchors of the incremental state (candidate
+/// sums re-summed from the exact column store, member sums refreshed with
+/// one k x k engine pass) — the drift bound of the epoch contract.
+pub const REANCHOR_EPOCH: usize = 32;
+
+/// How the candidate/member sums are maintained across accepted swaps.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LocalSearchMode {
+    /// Column store + per-swap delta updates (O(n) distance evaluations
+    /// per accepted swap), re-anchored every [`REANCHOR_EPOCH`] swaps.
+    #[default]
+    Incremental,
+    /// The pre-incremental reference semantics: every pass re-runs the
+    /// full O(n k) `sums_to_set` scan.  Kept as the trajectory-identity
+    /// oracle the incremental path is pinned against.
+    ExhaustiveRestart,
+}
+
+impl LocalSearchMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            LocalSearchMode::Incremental => "incremental",
+            LocalSearchMode::ExhaustiveRestart => "exhaustive_restart",
+        }
+    }
+}
 
 /// Outcome of a local-search run.
 #[derive(Clone, Debug)]
@@ -31,6 +99,17 @@ pub struct LocalSearchResult {
     pub swaps: usize,
     /// Number of independence-oracle calls made.
     pub oracle_calls: u64,
+    /// Number of scan passes (= swaps + 1 on normal termination: every
+    /// accepted swap restarts the pass, plus the final pass that proves
+    /// local optimality).
+    pub passes: usize,
+    /// Distance evaluations requested from the engine (batched passes,
+    /// net of the self-pairs the engine excludes).  Under `ScalarEngine`
+    /// this equals the engine's own `dist_evals` counter delta — the
+    /// regression tests cross-check the two.  The per-improving-candidate
+    /// `d(v, u)` corrections go through `Dataset::dist` directly and are
+    /// not included.
+    pub dist_evals: u64,
 }
 
 /// Configuration for [`local_search_sum`].
@@ -42,6 +121,13 @@ pub struct LocalSearchParams {
     /// Safety cap on accepted swaps (the gamma = 0 regime has no polynomial
     /// bound; the cap is far above anything observed in practice).
     pub max_swaps: usize,
+    /// Sum-maintenance strategy; [`LocalSearchMode::Incremental`] unless a
+    /// test pins the trajectory against the restart reference.
+    pub mode: LocalSearchMode,
+    /// Accepted swaps between incremental re-anchors ([`REANCHOR_EPOCH`]
+    /// by default; 0 is treated as 1).  Exposed so the trajectory tests
+    /// can pin that the anchor cadence cannot change a decision.
+    pub reanchor_epoch: usize,
 }
 
 impl Default for LocalSearchParams {
@@ -49,17 +135,22 @@ impl Default for LocalSearchParams {
         LocalSearchParams {
             gamma: 0.0,
             max_swaps: 10_000,
+            mode: LocalSearchMode::Incremental,
+            reanchor_epoch: REANCHOR_EPOCH,
         }
     }
 }
 
 /// Run AMT local search over `candidates` (e.g. a coreset or the full
-/// dataset).  `init`: optional warm start (must be independent).
+/// dataset; indices must be distinct).  `init`: optional warm start (must
+/// be independent, need not be a subset of `candidates`).
 ///
-/// All O(n k) per-pass distance work is batched through `engine`
-/// ([`DistanceEngine::sums_to_set`]); acceptance decisions stay in exact
-/// f64 with the oracle formulas, so the trajectory is engine-independent
-/// across `scalar` and `batch`.
+/// All batched distance work goes through `engine`
+/// ([`DistanceEngine::sums_to_set`] / [`DistanceEngine::dists_to_points`]);
+/// acceptance decisions stay in exact f64 with the oracle formulas, so the
+/// trajectory is engine-independent across `scalar` and `batch`, and
+/// mode-independent per the epoch / re-anchor contract (module docs).
+#[allow(clippy::too_many_arguments)]
 pub fn local_search_sum(
     ds: &Dataset,
     m: &dyn Matroid,
@@ -71,6 +162,7 @@ pub fn local_search_sum(
     rng: &mut Rng,
 ) -> Result<LocalSearchResult> {
     let mut oracle_calls: u64 = 0;
+    let mut dist_evals: u64 = 0;
     let mut sol = match init {
         Some(s) => s,
         None => greedy_matroid_gonzalez(ds, m, k, candidates, rng),
@@ -83,22 +175,61 @@ pub fn local_search_sum(
             diversity: 0.0,
             swaps: 0,
             oracle_calls,
+            passes: 0,
+            dist_evals,
         });
     }
+    let kk = sol.len();
+    let n = candidates.len();
+
+    // membership bitmaps over dataset ids: `in_sol` replaces the old O(k)
+    // `sol.contains(&v)` scan per candidate and is refreshed per swap;
+    // `is_cand` keeps the candidate/solution overlap (the self-pairs the
+    // engine excludes) countable in O(1) per swap for the eval ledger
+    let mut in_sol = vec![false; ds.n()];
+    for &u in &sol {
+        in_sol[u] = true;
+    }
+    let mut is_cand = vec![false; ds.n()];
+    for &c in candidates {
+        debug_assert!(!is_cand[c], "local_search_sum: candidates must be distinct");
+        is_cand[c] = true;
+    }
+    let mut overlap: u64 = candidates.iter().filter(|&&c| in_sol[c]).count() as u64;
 
     // per-member total distance to the whole solution (self term = 0)
     let mut sums = engine.sums_to_set(ds, &sol, &sol)?;
+    dist_evals += (kk * (kk - 1)) as u64;
     let mut div: f64 = sums.iter().sum::<f64>() / 2.0;
-    let mut swaps = 0;
+    let mut swaps = 0usize;
+    let mut passes = 0usize;
+
+    // incremental state: `cols[c * kk + j] = d(candidates[c], sol[j])`
+    // (exact f64, true-zero self-pairs) + the delta-maintained candidate
+    // sums; `since_anchor` counts accepted swaps since the last re-anchor
+    let incremental = params.mode == LocalSearchMode::Incremental;
+    let epoch = params.reanchor_epoch.max(1);
+    let mut cols: Vec<f64> = Vec::new();
+    let mut cand_sums: Vec<f64> = Vec::new();
+    let mut since_anchor = 0usize;
+    if incremental {
+        cols = engine.dists_to_points(ds, candidates, &sol)?;
+        dist_evals += (n * kk) as u64 - overlap;
+        cand_sums = cols.chunks(kk).map(|row| row.iter().sum()).collect();
+    }
 
     // AMT scan: accept the first improving feasible swap, then restart the
-    // pass from the first candidate — the swap changed every member sum,
-    // so each pass recomputes the candidate sums in one batched call.
+    // pass from the first candidate (the swap changed every member sum)
     'outer: loop {
-        let cand_sums = engine.sums_to_set(ds, candidates, &sol)?;
+        passes += 1;
+        if !incremental {
+            // pass-restart reference semantics: one fresh batched scan
+            cand_sums = engine.sums_to_set(ds, candidates, &sol)?;
+            dist_evals += (n * kk) as u64 - overlap;
+        }
         let min_sums = sums.iter().copied().fold(f64::INFINITY, f64::min);
         for (ci, &v) in candidates.iter().enumerate() {
-            if sol.contains(&v) {
+            if in_sol[v] {
                 continue;
             }
             let sumv = cand_sums[ci];
@@ -108,7 +239,7 @@ pub fn local_search_sum(
             if div - min_sums + sumv <= threshold {
                 continue;
             }
-            for upos in 0..sol.len() {
+            for upos in 0..kk {
                 let u = sol[upos];
                 // div' = div - sum_d(u, sol\{u}) + sum_d(v, sol\{u})
                 let new_div = div - sums[upos] + (sumv - ds.dist(v, u));
@@ -119,9 +250,63 @@ pub fn local_search_sum(
                     oracle_calls += 1;
                     if m.is_independent(ds, &cand) {
                         sol = cand;
-                        sums = engine.sums_to_set(ds, &sol, &sol)?;
+                        in_sol[u] = false;
+                        in_sol[v] = true;
+                        if is_cand[u] {
+                            overlap -= 1;
+                        }
+                        overlap += 1; // v is a candidate by construction
                         div = new_div;
                         swaps += 1;
+                        if incremental {
+                            // delta update: one incoming column; the
+                            // outgoing column is read from the store
+                            let col =
+                                engine.dists_to_points(ds, candidates, &sol[upos..upos + 1])?;
+                            dist_evals += n as u64 - 1; // v's own self-pair
+                            for (c, s) in cand_sums.iter_mut().enumerate() {
+                                *s += col[c] - cols[c * kk + upos];
+                                cols[c * kk + upos] = col[c];
+                            }
+                            // member sums: one narrow two-column pass over
+                            // the k - 1 staying members ...
+                            let stay: Vec<usize> = sol
+                                .iter()
+                                .enumerate()
+                                .filter_map(|(i, &w)| (i != upos).then_some(w))
+                                .collect();
+                            let duv = engine.dists_to_points(ds, &stay, &[u, v])?;
+                            dist_evals += 2 * (kk as u64 - 1);
+                            let mut slot = 0usize;
+                            for (i, s) in sums.iter_mut().enumerate() {
+                                if i == upos {
+                                    continue;
+                                }
+                                *s += duv[slot * 2 + 1] - duv[slot * 2];
+                                slot += 1;
+                            }
+                            // ... and the incoming member's sum is its own
+                            // delta-maintained candidate sum
+                            sums[upos] = cand_sums[ci];
+                            since_anchor += 1;
+                            if since_anchor >= epoch {
+                                since_anchor = 0;
+                                // re-anchor: the columns hold exact engine
+                                // distances, so row re-summation restores
+                                // the exact from-scratch candidate sums
+                                // (bit-identical to a fresh sums_to_set)
+                                // at zero distance evals; member sums get
+                                // one fresh k x k pass
+                                for (c, s) in cand_sums.iter_mut().enumerate() {
+                                    *s = cols[c * kk..(c + 1) * kk].iter().sum();
+                                }
+                                sums = engine.sums_to_set(ds, &sol, &sol)?;
+                                dist_evals += (kk * (kk - 1)) as u64;
+                            }
+                        } else {
+                            sums = engine.sums_to_set(ds, &sol, &sol)?;
+                            dist_evals += (kk * (kk - 1)) as u64;
+                        }
                         if swaps >= params.max_swaps {
                             break 'outer;
                         }
@@ -134,17 +319,22 @@ pub fn local_search_sum(
         break;
     }
 
-    // `sums` is re-derived from a fresh engine pass after every accepted
-    // swap, so summing it washes out the incremental `div` drift exactly
-    // like a from-scratch recompute — and matches
-    // `sum_diversity_with_engine(ds, &sol, engine)` bit for bit with zero
-    // extra distance work
+    if incremental {
+        // one fresh k x k pass so the reported diversity matches
+        // `sum_diversity_with_engine(ds, &sol, engine)` bit for bit in
+        // both modes (restart's `sums` is already fresh from the last
+        // accepted swap; the delta-maintained one carries epoch drift)
+        sums = engine.sums_to_set(ds, &sol, &sol)?;
+        dist_evals += (kk * (kk - 1)) as u64;
+    }
     let diversity = sums.iter().sum::<f64>() / 2.0;
     Ok(LocalSearchResult {
         solution: sol,
         diversity,
         swaps,
         oracle_calls,
+        passes,
+        dist_evals,
     })
 }
 
@@ -211,9 +401,10 @@ mod tests {
 
     #[test]
     fn trajectory_engine_independent() {
-        // sums_to_set is bit-identical between scalar and batch, and all
-        // acceptance decisions are exact f64 — so the full swap trajectory
-        // (not just the endpoint) must agree across engines.
+        // sums_to_set / dists_to_points are bit-identical between scalar
+        // and batch, and all acceptance decisions are exact f64 — so the
+        // full swap trajectory (not just the endpoint) must agree across
+        // engines.
         let ds = synth::uniform_cube(150, 3, 21);
         let m = UniformMatroid::new(6);
         let cands: Vec<usize> = (0..ds.n()).collect();
@@ -226,6 +417,34 @@ mod tests {
         assert_eq!(a.solution, b.solution);
         assert_eq!(a.swaps, b.swaps);
         assert_eq!(a.oracle_calls, b.oracle_calls);
+        assert_eq!(a.passes, b.passes);
+        assert_eq!(a.dist_evals, b.dist_evals);
+    }
+
+    #[test]
+    fn modes_agree_on_small_instance() {
+        // the full cross-mode / cross-engine / cross-matroid matrix lives
+        // in rust/tests/local_search_incremental.rs; this is the unit-level
+        // smoke check
+        let ds = synth::uniform_cube(80, 2, 14);
+        let m = UniformMatroid::new(5);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let e = ScalarEngine::new();
+        let inc = local_search_sum(&ds, &m, 5, &cands, &e,
+            LocalSearchParams::default(), None, &mut r1).unwrap();
+        let rst = local_search_sum(&ds, &m, 5, &cands, &e,
+            LocalSearchParams {
+                mode: LocalSearchMode::ExhaustiveRestart,
+                ..Default::default()
+            },
+            None, &mut r2).unwrap();
+        assert_eq!(inc.solution, rst.solution);
+        assert_eq!(inc.swaps, rst.swaps);
+        assert_eq!(inc.oracle_calls, rst.oracle_calls);
+        assert_eq!(inc.passes, rst.passes);
+        assert!((inc.diversity - rst.diversity).abs() <= 1e-9 * rst.diversity.max(1.0));
     }
 
     #[test]
@@ -253,9 +472,9 @@ mod tests {
         let mut r2 = Rng::new(3);
         let e = ScalarEngine::new();
         let tight = local_search_sum(&ds, &m, 6, &cands, &e,
-            LocalSearchParams { gamma: 0.0, max_swaps: 10_000 }, None, &mut r1).unwrap();
+            LocalSearchParams { gamma: 0.0, ..Default::default() }, None, &mut r1).unwrap();
         let loose = local_search_sum(&ds, &m, 6, &cands, &e,
-            LocalSearchParams { gamma: 0.5, max_swaps: 10_000 }, None, &mut r2).unwrap();
+            LocalSearchParams { gamma: 0.5, ..Default::default() }, None, &mut r2).unwrap();
         assert!(tight.diversity >= loose.diversity - 1e-9);
         assert!(loose.swaps <= tight.swaps);
     }
@@ -281,8 +500,12 @@ mod tests {
         let init: Vec<usize> = (0..5).collect(); // adversarially bad start
         let cands: Vec<usize> = (0..ds.n()).collect();
         let res = local_search_sum(&ds, &m, 5, &cands, &ScalarEngine::new(),
-            LocalSearchParams { gamma: 0.0, max_swaps: 2 }, Some(init), &mut rng).unwrap();
-        assert!(res.swaps <= 2);
+            LocalSearchParams { max_swaps: 2, ..Default::default() },
+            Some(init), &mut rng).unwrap();
+        // the adversarial start guarantees the cap is reached, and the
+        // cap breaks mid-pass: every counted pass accepted a swap
+        assert_eq!(res.swaps, 2);
+        assert_eq!(res.passes, res.swaps);
     }
 
     #[test]
@@ -291,7 +514,7 @@ mod tests {
         let m = UniformMatroid::new(4);
         let mut rng = Rng::new(7);
         let cands: Vec<usize> = (0..ds.n()).collect();
-        // the restart-after-swap scan must keep the incremental `div`
+        // the delta-maintained scan must keep the incremental `div`
         // consistent with the exact recomputation at the end
         let res = local_search_sum(
             &ds, &m, 4, &cands,
@@ -300,5 +523,20 @@ mod tests {
         )
         .unwrap();
         assert!((res.diversity - sum_diversity(&ds, &res.solution)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn passes_counts_scan_restarts() {
+        let ds = synth::uniform_cube(90, 2, 8);
+        let m = UniformMatroid::new(4);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        for mode in [LocalSearchMode::Incremental, LocalSearchMode::ExhaustiveRestart] {
+            let mut rng = Rng::new(8);
+            let res = local_search_sum(&ds, &m, 4, &cands, &ScalarEngine::new(),
+                LocalSearchParams { mode, ..Default::default() }, None, &mut rng).unwrap();
+            // normal termination: each accepted swap restarts the pass,
+            // plus the final pass that proves local optimality
+            assert_eq!(res.passes, res.swaps + 1, "{mode:?}");
+        }
     }
 }

@@ -7,7 +7,9 @@
 //!   DMMC_BENCH_RUNS   repetitions for boxplot rows   (default 5)
 //!   DMMC_BENCH_SEED   base seed                      (default 1)
 
-use crate::algo::local_search::{local_search_sum, LocalSearchParams, LocalSearchResult};
+use crate::algo::local_search::{
+    local_search_sum, LocalSearchMode, LocalSearchParams, LocalSearchResult,
+};
 use crate::core::Dataset;
 use crate::coordinator::spec::MatroidBox;
 use crate::data::synth;
@@ -70,7 +72,9 @@ pub fn testbeds(n: usize, seed: u64) -> Vec<Testbed> {
 
 /// The paper's AMT baseline, run faithfully: local search over `candidates`
 /// from a RANDOM maximal independent start (not the strong farthest-point
-/// init the coreset route uses) with swap threshold gamma.
+/// init the coreset route uses) with swap threshold gamma.  Runs the
+/// default incremental sum maintenance; [`amt_baseline_with_mode`] lets the
+/// benches put the exhaustive-restart reference on the same footing.
 pub fn amt_baseline(
     ds: &Dataset,
     m: &dyn Matroid,
@@ -78,6 +82,21 @@ pub fn amt_baseline(
     candidates: &[usize],
     gamma: f64,
     seed: u64,
+) -> LocalSearchResult {
+    amt_baseline_with_mode(ds, m, k, candidates, gamma, seed, LocalSearchMode::Incremental)
+}
+
+/// [`amt_baseline`] with an explicit [`LocalSearchMode`] — both modes walk
+/// the identical swap trajectory, so timing them against each other
+/// isolates the incremental update's distance-work savings.
+pub fn amt_baseline_with_mode(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    candidates: &[usize],
+    gamma: f64,
+    seed: u64,
+    mode: LocalSearchMode,
 ) -> LocalSearchResult {
     let mut rng = Rng::new(seed);
     let mut order = candidates.to_vec();
@@ -92,6 +111,8 @@ pub fn amt_baseline(
         LocalSearchParams {
             gamma,
             max_swaps: 100_000,
+            mode,
+            ..Default::default()
         },
         Some(init),
         &mut rng,

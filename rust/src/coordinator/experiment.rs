@@ -130,6 +130,10 @@ pub fn run_pipeline<M: Matroid + Sync>(
                 "makespan_round1".into(),
                 rep.makespan_round1.as_secs_f64(),
             );
+            extra.insert(
+                "mr_score_dist_evals".into(),
+                rep.shard_score_dist_evals.iter().sum::<u64>() as f64,
+            );
             (rep.coreset.indices, dt)
         }
         Setting::Full => ((0..ds.n()).collect(), Duration::ZERO),
@@ -152,6 +156,8 @@ pub fn run_pipeline<M: Matroid + Sync>(
             let res = res?;
             extra.insert("swaps".into(), res.swaps as f64);
             extra.insert("oracle_calls".into(), res.oracle_calls as f64);
+            extra.insert("passes".into(), res.passes as f64);
+            extra.insert("dist_evals".into(), res.dist_evals as f64);
             (res.solution, dt)
         }
         Finisher::Exhaustive => {
@@ -214,6 +220,10 @@ mod tests {
         assert!(m.is_independent(&ds, &out.solution));
         assert!(out.diversity > 0.0);
         assert!(out.coreset_size < 300);
+        // the finisher's work counters surface in the extras
+        assert!(out.extra["passes"] >= 1.0);
+        assert_eq!(out.extra["passes"], out.extra["swaps"] + 1.0);
+        assert!(out.extra["dist_evals"] > 0.0);
     }
 
     #[test]
@@ -261,6 +271,8 @@ mod tests {
         .unwrap();
         assert_eq!(out.extra["rounds"], 1.0);
         assert_eq!(out.solution.len(), 4);
+        assert!(out.extra.contains_key("mr_score_dist_evals"));
+        assert!(out.extra.contains_key("dist_evals"));
     }
 
     #[test]

@@ -44,8 +44,8 @@
 //! * [`runtime::BatchEngine`] — the default (`--engine batch`): chunked,
 //!   `std::thread::scope`-parallel CPU kernels with precomputed norms.
 //!   Bit-identical to the scalar oracle on every path (`update_min`,
-//!   `pairwise_block`, `sums_to_set`), so switching engines never changes
-//!   a result — only the wall clock.
+//!   `pairwise_block`, `sums_to_set`, `dists_to_points`), so switching
+//!   engines never changes a result — only the wall clock.
 //! * [`runtime::ScalarEngine`] — the portable point-at-a-time oracle
 //!   (`--engine scalar`); use it as the reference in equivalence tests
 //!   (its distance-evaluation counter also powers work-count regressions).

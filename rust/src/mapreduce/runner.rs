@@ -49,6 +49,11 @@ pub struct MrReport {
     /// accounting, scored through each shard's engine (one batched sums
     /// pass per shard; detects skewed shards before the finisher runs).
     pub shard_coreset_diversities: Vec<f64>,
+    /// Per-worker distance evaluations spent on that scoring pass
+    /// (`|T_j| * (|T_j| - 1)` each) — the same engine-work ledger the
+    /// local-search finisher reports via `LocalSearchResult::dist_evals`,
+    /// so end-to-end pipelines can account every batched distance pass.
+    pub shard_score_dist_evals: Vec<u64>,
 }
 
 /// Build a coreset of `ds` in (simulated) MapReduce.
@@ -102,12 +107,16 @@ pub fn mr_coreset<M: Matroid + Sync>(
     let mut worker_times = Vec::with_capacity(cfg.workers);
     let mut shard_coreset_sizes = Vec::with_capacity(cfg.workers);
     let mut shard_coreset_diversities = Vec::with_capacity(cfg.workers);
+    let mut shard_score_dist_evals = Vec::with_capacity(cfg.workers);
     let mut n_clusters = 0;
     let mut radius = 0.0f64;
     for r in results {
         let (global, cs, shard_div, dt) = r?;
         shard_coreset_sizes.push(global.len());
         shard_coreset_diversities.push(shard_div);
+        // the scoring pass is one sums_to_set of the shard coreset against
+        // itself: |T_j| * (|T_j| - 1) distances net of self-pairs
+        shard_score_dist_evals.push((global.len() * global.len().saturating_sub(1)) as u64);
         union.extend(global);
         worker_times.push(dt);
         n_clusters += cs.n_clusters;
@@ -148,6 +157,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
         wall_time: t0.elapsed(),
         shard_coreset_sizes,
         shard_coreset_diversities,
+        shard_score_dist_evals,
     })
 }
 
@@ -185,6 +195,11 @@ mod tests {
         assert!(rep.local_memory_points <= 1000usize.div_ceil(8));
         // union of 8 shard coresets
         assert!(rep.coreset.len() <= 8 * 4 * 4);
+        // per-shard scoring ledger: one sums pass over each shard coreset
+        assert_eq!(rep.shard_score_dist_evals.len(), 8);
+        for (evals, size) in rep.shard_score_dist_evals.iter().zip(&rep.shard_coreset_sizes) {
+            assert_eq!(*evals, (size * size.saturating_sub(1)) as u64);
+        }
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! Numerics contract, pinned by `rust/tests/engine_equivalence.rs`:
 //!
 //! * **every operation is bit-identical to the scalar oracle** —
-//!   `update_min` / `update_min_block` / `sums_to_set` / `pairwise_block`.
+//!   `update_min` / `update_min_block` / `sums_to_set` / `pairwise_block` /
+//!   `dists_to_points`.
 //!   Per point the center fold is a left fold in the caller's order, each
 //!   distance is evaluated with the exact same f64 formulas as
 //!   [`crate::core::metric`], and the cosine path feeds the squared norms
@@ -214,6 +215,39 @@ impl BatchEngine {
         }
     }
 
+    /// Column-block worker: `out[slot * targets.len() + c] =
+    /// d(ids[slot], targets[c])` in exact f64, self-pairs pinned to zero —
+    /// the same per-entry formulas and values as the scalar oracle, so the
+    /// incremental AMT deltas built from these columns are bit-identical
+    /// to `ds.dist` (`out` arrives zeroed, so self-pairs are skips).
+    fn dists_chunk(&self, ds: &Dataset, ids: &[usize], targets: &[usize], out: &mut [f64]) {
+        let width = targets.len();
+        for (slot, &i) in ids.iter().enumerate() {
+            let ip = ds.point(i);
+            match self.metric {
+                Metric::Euclidean => {
+                    for (c, &j) in targets.iter().enumerate() {
+                        if i != j {
+                            out[slot * width + c] = euclidean(ip, ds.point(j));
+                        }
+                    }
+                }
+                Metric::Cosine => {
+                    let aa = self.sqnorms[i];
+                    for (c, &j) in targets.iter().enumerate() {
+                        if i != j {
+                            out[slot * width + c] = cosine_angular_from_parts(
+                                dot(ip, ds.point(j)),
+                                aa,
+                                self.sqnorms[j],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Pairwise worker over a row chunk (`out` is the chunk's tile slice).
     /// Exact oracle formulas per entry, self-pairs pinned to zero — tile
     /// identity with the scalar engine is load-bearing for the diversity
@@ -367,6 +401,27 @@ impl DistanceEngine for BatchEngine {
         });
         Ok(out)
     }
+
+    fn dists_to_points(&self, ds: &Dataset, ids: &[usize], targets: &[usize]) -> Result<Vec<f64>> {
+        self.check(ds);
+        let width = targets.len();
+        let mut out = vec![0.0f64; ids.len() * width];
+        if ids.is_empty() || width == 0 {
+            return Ok(out);
+        }
+        let workers = self.workers_for(ids.len().saturating_mul(width));
+        if workers <= 1 {
+            self.dists_chunk(ds, ids, targets, &mut out);
+            return Ok(out);
+        }
+        let span = ids.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            for (id_chunk, out_chunk) in ids.chunks(span).zip(out.chunks_mut(span * width)) {
+                scope.spawn(move || self.dists_chunk(ds, id_chunk, targets, out_chunk));
+            }
+        });
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -416,6 +471,23 @@ mod tests {
                 assert_eq!(got, want, "pairwise tile must be bit-identical");
             }
         }
+    }
+
+    #[test]
+    fn dists_to_points_agrees_with_oracle() {
+        // cosine exercises the precomputed-sqnorm parts path
+        let ds = synth::wikisim(400, 3);
+        let batch = BatchEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
+        let ids: Vec<usize> = (0..400).collect();
+        let targets: Vec<usize> = vec![7, 123, 7, 399]; // duplicate target
+        let db = batch.dists_to_points(&ds, &ids, &targets).unwrap();
+        let so = scalar.dists_to_points(&ds, &ids, &targets).unwrap();
+        assert_eq!(db, so, "dists_to_points must be bit-identical");
+        // self-pairs pinned to a true zero despite cosine fp self-noise
+        assert_eq!(db[7 * 4], 0.0);
+        assert_eq!(db[7 * 4 + 2], 0.0);
+        assert_eq!(db[399 * 4 + 3], 0.0);
     }
 
     #[test]

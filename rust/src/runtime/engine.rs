@@ -12,7 +12,11 @@
 //! * [`DistanceEngine::pairwise_block`] — a row-major tile of pairwise
 //!   distances;
 //! * [`DistanceEngine::sums_to_set`] — per-candidate distance sums against
-//!   a solution set.
+//!   a solution set;
+//! * [`DistanceEngine::dists_to_points`] — a narrow exact-f64 column block
+//!   against a handful of targets, the delta pass of the incremental AMT
+//!   local search (each accepted swap re-reads one or two columns instead
+//!   of re-scanning all O(n k) candidate sums).
 //!
 //! The diversity evaluators (`crate::diversity::Evaluator`) are the fourth
 //! consumer: they materialize objective submatrices through
@@ -129,6 +133,41 @@ pub trait DistanceEngine {
                     .sum()
             })
             .collect())
+    }
+
+    /// Row-major `ids.len() x targets.len()` block of **exact f64**
+    /// distances (`out[r * targets.len() + c] = d(ids[r], targets[c])`) —
+    /// the narrow-column companion of [`Self::sums_to_set`] that powers
+    /// the incremental AMT update: after an accepted swap (`u` out, `v`
+    /// in) every candidate's solution-sum changes by exactly
+    /// `d(c, v) - d(c, u)`, one one- or two-column pass instead of a full
+    /// O(n k) re-scan.
+    ///
+    /// Contract for the CPU backends (pinned by
+    /// `rust/tests/engine_equivalence.rs`):
+    ///
+    /// * every off-diagonal entry must equal `ds.dist(i, j)` **bit for
+    ///   bit** (f64, not the f32 of [`Self::pairwise_block`] — the deltas
+    ///   feed f64 sums compared against a `1e-12`-relative threshold);
+    /// * self-pairs (`ids[r] == targets[c]`) are **exactly 0**, matching
+    ///   the self-pair exclusion of [`Self::sums_to_set`]: summing a row
+    ///   of this block in target order is bit-identical to one
+    ///   `sums_to_set` entry (`x + 0.0 == x` for the non-negative partial
+    ///   sums).
+    ///
+    /// The feature-gated PJRT backend is tolerance-level instead, like its
+    /// `sums_to_set`.
+    fn dists_to_points(&self, ds: &Dataset, ids: &[usize], targets: &[usize]) -> Result<Vec<f64>> {
+        let width = targets.len();
+        let mut out = vec![0.0f64; ids.len() * width];
+        for (r, &i) in ids.iter().enumerate() {
+            for (c, &j) in targets.iter().enumerate() {
+                if i != j {
+                    out[r * width + c] = ds.dist(i, j);
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -248,6 +287,22 @@ impl DistanceEngine for ScalarEngine {
         self.count(evals);
         Ok(out)
     }
+
+    fn dists_to_points(&self, ds: &Dataset, ids: &[usize], targets: &[usize]) -> Result<Vec<f64>> {
+        let width = targets.len();
+        let mut out = vec![0.0f64; ids.len() * width];
+        let mut evals = 0usize;
+        for (r, &i) in ids.iter().enumerate() {
+            for (c, &j) in targets.iter().enumerate() {
+                if i != j {
+                    evals += 1;
+                    out[r * width + c] = ds.dist(i, j);
+                }
+            }
+        }
+        self.count(evals);
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -325,6 +380,10 @@ mod tests {
         e.sums_to_set(&ds, &[0, 1], &[2, 3, 4]).unwrap();
         assert_eq!(e.dist_evals(), 50 + 6 + 6);
         e.reset_dist_evals();
+        // dists_to_points counts entries minus self-pairs
+        e.dists_to_points(&ds, &[0, 1], &[1, 2, 3]).unwrap();
+        assert_eq!(e.dist_evals(), 5);
+        e.reset_dist_evals();
         // symmetric k x k tile costs only the strict upper triangle
         let set = [0usize, 1, 2, 3];
         e.pairwise_block(&ds, &set, &set).unwrap();
@@ -355,5 +414,43 @@ mod tests {
         let sums = e.sums_to_set(&ds, &[4], &[3, 4, 5]).unwrap();
         let want = ds.dist(4, 3) + ds.dist(4, 5); // no self term
         assert!((sums[0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dists_to_points_matches_dataset_dist_with_zero_self_pairs() {
+        // cosine so the raw d(x, x) would carry fp noise without the pin
+        let ds = synth::wikisim(30, 5);
+        let e = ScalarEngine::new();
+        let ids: Vec<usize> = vec![0, 4, 7, 4]; // duplicate id allowed
+        let targets: Vec<usize> = vec![4, 9];
+        let block = e.dists_to_points(&ds, &ids, &targets).unwrap();
+        for (r, &i) in ids.iter().enumerate() {
+            for (c, &j) in targets.iter().enumerate() {
+                let want = if i == j { 0.0 } else { ds.dist(i, j) };
+                assert_eq!(block[r * targets.len() + c], want, "entry ({i},{j})");
+            }
+        }
+        assert_eq!(block[2], 0.0, "self-pair d(4,4) must be a true zero"); // row 1, col 0
+        assert_eq!(block[6], 0.0, "duplicate id keeps the self-pair pin"); // row 3, col 0
+    }
+
+    #[test]
+    fn dists_to_points_row_sums_equal_sums_to_set_bitwise() {
+        // the re-anchor contract of the incremental AMT path: summing a
+        // block row in target order reproduces sums_to_set exactly (the
+        // pinned 0.0 self entries are additive no-ops)
+        let ds = synth::wikisim(40, 6);
+        let e = ScalarEngine::new();
+        let ids: Vec<usize> = (0..40).collect();
+        let set: Vec<usize> = vec![3, 11, 17, 25, 39];
+        let block = e.dists_to_points(&ds, &ids, &set).unwrap();
+        let sums = e.sums_to_set(&ds, &ids, &set).unwrap();
+        for (r, &want) in sums.iter().enumerate() {
+            let resum: f64 = block[r * set.len()..(r + 1) * set.len()].iter().sum();
+            assert!(
+                resum.to_bits() == want.to_bits(),
+                "row {r}: resum {resum} != sums_to_set {want}"
+            );
+        }
     }
 }

@@ -254,6 +254,30 @@ impl DistanceEngine for PjrtEngine {
         Ok(out)
     }
 
+    /// Narrow column block via the `pairwise` artifact (targets always fit
+    /// one `TC` tile on the AMT delta path), upcast to f64 on the host.
+    ///
+    /// Same documented exemption as [`DistanceEngine::sums_to_set`] above:
+    /// the artifact computes f32 distances, so the columns — and the
+    /// incremental AMT deltas built from them — carry ~1e-7-relative
+    /// noise; self-pairs are still pinned to exactly zero host-side.
+    fn dists_to_points(&self, ds: &Dataset, ids: &[usize], targets: &[usize]) -> Result<Vec<f64>> {
+        let width = targets.len();
+        let mut out = vec![0.0f64; ids.len() * width];
+        for (tile_idx, ttile) in targets.chunks(TC).enumerate() {
+            let t = PjrtEngine::pairwise_block(self, ds, ids, ttile)?;
+            for (r, &i) in ids.iter().enumerate() {
+                let dst = r * width + tile_idx * TC;
+                for (c, &j) in ttile.iter().enumerate() {
+                    if i != j {
+                        out[dst + c] = t[r * ttile.len() + c] as f64;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
     fn update_min(
         &self,
         ds: &Dataset,

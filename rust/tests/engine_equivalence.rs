@@ -2,7 +2,8 @@
 //!
 //! The batch backend's contract is stronger than tolerance: on **every**
 //! path — min-fold (`update_min` / `update_min_block`), sums
-//! (`sums_to_set`), and pairwise tiles (`pairwise_block`) — it must
+//! (`sums_to_set`), pairwise tiles (`pairwise_block`), and the exact-f64
+//! column blocks of the incremental AMT path (`dists_to_points`) — it must
 //! reproduce the oracle **exactly**: same f32 per-distance values (same
 //! f64 formulas, same accumulation order) and the same left-to-right fold
 //! over centers within any chunk, regardless of chunk boundaries or
@@ -136,6 +137,77 @@ fn pairwise_block_bit_identical_to_oracle() {
         let tb = batch.pairwise_block(&ds, &rows, &cols).unwrap();
         let ts = scalar.pairwise_block(&ds, &rows, &cols).unwrap();
         assert_eq!(tb, ts, "pairwise tile diverged on {metric:?}");
+    }
+}
+
+// ---- dists_to_points section -----------------------------------------
+
+#[test]
+fn dists_to_points_bit_identical_to_oracle() {
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        // 20_011 is prime, so the threaded id chunks never align with the
+        // worker span; duplicate targets are allowed
+        let ds = dataset(metric, 20_011, 17, 10);
+        let batch = BatchEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
+        // duplicate ids and duplicate targets are both allowed
+        let mut ids: Vec<usize> = (0..ds.n()).collect();
+        ids.push(3);
+        ids.push(500);
+        let targets: Vec<usize> = vec![3, 500, 3, 20_010, 7_777];
+        let b = batch.dists_to_points(&ds, &ids, &targets).unwrap();
+        let s = scalar.dists_to_points(&ds, &ids, &targets).unwrap();
+        assert_eq!(b, s, "dists_to_points diverged on {metric:?}");
+        // the f64 block agrees with the Dataset oracle off-diagonal and
+        // pins self-pairs to a true zero (cosine d(x, x) is ~1e-8 raw)
+        for (c, &t) in targets.iter().enumerate() {
+            assert_eq!(b[t * targets.len() + c], 0.0, "{metric:?}: self-pair ({t},{t})");
+        }
+        for &i in &[0usize, 1, 9_999, 20_010] {
+            for (c, &t) in targets.iter().enumerate() {
+                let want = if i == t { 0.0 } else { ds.dist(i, t) };
+                assert_eq!(b[i * targets.len() + c], want, "{metric:?}: entry ({i},{t})");
+            }
+        }
+        // the duplicated id rows reproduce the original rows exactly
+        // (including their self-pair zeros against targets 3 and 500)
+        let w = targets.len();
+        assert_eq!(&b[ds.n() * w..(ds.n() + 1) * w], &b[3 * w..4 * w]);
+        assert_eq!(&b[(ds.n() + 1) * w..(ds.n() + 2) * w], &b[500 * w..501 * w]);
+    }
+}
+
+#[test]
+fn dists_to_points_thread_count_cannot_change_output() {
+    let ds = dataset(Metric::Cosine, 30_011, 13, 11);
+    let single = BatchEngine::with_threads(&ds, 1);
+    let many = BatchEngine::with_threads(&ds, 8);
+    let ids: Vec<usize> = (0..ds.n()).step_by(2).collect(); // odd count
+    let targets: Vec<usize> = vec![1, 2, 30_000];
+    let a = single.dists_to_points(&ds, &ids, &targets).unwrap();
+    let b = many.dists_to_points(&ds, &ids, &targets).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn dists_to_points_row_sums_match_sums_to_set_bitwise() {
+    // the incremental AMT re-anchor contract at the engine level: summing
+    // a block row in target order (true-zero self entries included) is
+    // bit-identical to the corresponding sums_to_set entry
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 4_001, 9, 12);
+        let batch = BatchEngine::for_dataset(&ds);
+        let ids: Vec<usize> = (0..ds.n()).collect();
+        let set: Vec<usize> = vec![5, 1_000, 2_000, 4_000];
+        let block = batch.dists_to_points(&ds, &ids, &set).unwrap();
+        let sums = batch.sums_to_set(&ds, &ids, &set).unwrap();
+        for (r, &want) in sums.iter().enumerate() {
+            let resum: f64 = block[r * set.len()..(r + 1) * set.len()].iter().sum();
+            assert!(
+                resum.to_bits() == want.to_bits(),
+                "{metric:?} row {r}: resum {resum} != sums_to_set {want}"
+            );
+        }
     }
 }
 

@@ -1,0 +1,338 @@
+//! Trajectory identity of the incremental AMT local search.
+//!
+//! The incremental path (column store + per-swap `dists_to_points` deltas,
+//! re-anchored every epoch) must walk the **identical** swap trajectory —
+//! same (solution, swaps, oracle_calls, passes) — as the retained
+//! `ExhaustiveRestart` reference semantics, across the scalar and batch
+//! engines and across matroid families (uniform, partition, transversal,
+//! graphic, laminar), while cutting the per-accepted-swap distance work
+//! from Theta(n k) to Theta(n).  The distance-work claims are pinned with
+//! the `ScalarEngine` evaluation counter and an exact analytic ledger.
+
+use matroid_coreset::algo::local_search::{
+    local_search_sum, LocalSearchMode, LocalSearchParams, LocalSearchResult, REANCHOR_EPOCH,
+};
+use matroid_coreset::core::Dataset;
+use matroid_coreset::data::synth;
+use matroid_coreset::matroid::{
+    maximal_independent, GraphicMatroid, LaminarMatroid, Matroid, PartitionMatroid,
+    TransversalMatroid, UniformMatroid,
+};
+use matroid_coreset::runtime::engine::{DistanceEngine, ScalarEngine};
+use matroid_coreset::runtime::BatchEngine;
+use matroid_coreset::util::rng::Rng;
+
+const SEED: u64 = 7;
+
+fn run(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    engine: &dyn DistanceEngine,
+    mode: LocalSearchMode,
+    init: Option<Vec<usize>>,
+) -> LocalSearchResult {
+    let cands: Vec<usize> = (0..ds.n()).collect();
+    let mut rng = Rng::new(SEED);
+    local_search_sum(
+        ds,
+        m,
+        k,
+        &cands,
+        engine,
+        LocalSearchParams {
+            mode,
+            ..Default::default()
+        },
+        init,
+        &mut rng,
+    )
+    .unwrap()
+}
+
+/// A deliberately weak warm start — the nearest feasible points to point
+/// 0 — so every test instance walks a non-trivial swap trajectory.
+fn weak_init(ds: &Dataset, m: &dyn Matroid, k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..ds.n()).collect();
+    order.sort_by(|&a, &b| ds.dist(0, a).partial_cmp(&ds.dist(0, b)).unwrap());
+    maximal_independent(m, ds, &order, k)
+}
+
+/// All four (engine x mode) runs must report the same trajectory; the
+/// restart/incremental diversities may differ only in the last ulps.
+fn assert_trajectory_pinned(ds: &Dataset, m: &dyn Matroid, k: usize, label: &str) {
+    let scalar = ScalarEngine::new();
+    let batch = BatchEngine::for_dataset(ds);
+    let engines: [&dyn DistanceEngine; 2] = [&scalar, &batch];
+    let init = weak_init(ds, m, k);
+    let mut base: Option<LocalSearchResult> = None;
+    for engine in engines {
+        for mode in [
+            LocalSearchMode::Incremental,
+            LocalSearchMode::ExhaustiveRestart,
+        ] {
+            let res = run(ds, m, k, engine, mode, Some(init.clone()));
+            assert!(
+                m.is_independent(ds, &res.solution),
+                "{label}/{}/{}: infeasible solution",
+                engine.name(),
+                mode.name()
+            );
+            match &base {
+                None => {
+                    // the instances are chosen so the scan actually swaps —
+                    // a zero-swap trajectory would pin nothing
+                    assert!(res.swaps >= 1, "{label}: trivial trajectory");
+                    base = Some(res);
+                }
+                Some(b) => {
+                    let tag = format!("{label}/{}/{}", engine.name(), mode.name());
+                    assert_eq!(b.solution, res.solution, "{tag}: solution diverged");
+                    assert_eq!(b.swaps, res.swaps, "{tag}: swap count diverged");
+                    assert_eq!(b.oracle_calls, res.oracle_calls, "{tag}: oracle calls diverged");
+                    assert_eq!(b.passes, res.passes, "{tag}: pass count diverged");
+                    assert!(
+                        (b.diversity - res.diversity).abs() <= 1e-9 * b.diversity.max(1.0),
+                        "{tag}: diversity diverged: {} vs {}",
+                        b.diversity,
+                        res.diversity
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn trajectory_identity_uniform_matroid() {
+    let ds = synth::uniform_cube(150, 3, 21);
+    let m = UniformMatroid::new(6);
+    assert_trajectory_pinned(&ds, &m, 6, "uniform");
+}
+
+#[test]
+fn trajectory_identity_partition_matroid() {
+    let ds = synth::clustered(120, 3, 4, 0.3, 4, 11);
+    let m = PartitionMatroid::new(vec![2; 4]);
+    assert_trajectory_pinned(&ds, &m, 6, "partition");
+}
+
+#[test]
+fn trajectory_identity_transversal_matroid() {
+    // wikisim is cosine: the delta columns run through the precomputed
+    // sqnorm parts path of the batch backend
+    let ds = synth::wikisim(130, 5);
+    let m = TransversalMatroid::new();
+    assert_trajectory_pinned(&ds, &m, 5, "transversal");
+}
+
+#[test]
+fn trajectory_identity_graphic_matroid() {
+    // a genuinely general-construction matroid: points are random edges
+    // of a 30-vertex graph, independence = forest
+    let ds = synth::uniform_cube(100, 2, 9);
+    let mut rng = Rng::new(33);
+    let edges: Vec<(u32, u32)> = (0..ds.n())
+        .map(|_| loop {
+            let a = rng.below(30) as u32;
+            let b = rng.below(30) as u32;
+            if a != b {
+                break (a, b);
+            }
+        })
+        .collect();
+    let m = GraphicMatroid::new(edges, 30);
+    assert_trajectory_pinned(&ds, &m, 6, "graphic");
+}
+
+#[test]
+fn trajectory_identity_laminar_matroid() {
+    let ds = synth::clustered(100, 2, 5, 0.3, 5, 13);
+    let m = LaminarMatroid::hierarchy(
+        vec![2; 5],
+        vec![(vec![0, 1], 3), (vec![2, 3, 4], 3)],
+    );
+    assert_trajectory_pinned(&ds, &m, 5, "laminar");
+}
+
+#[test]
+fn trajectory_identity_with_non_subset_warm_start() {
+    // the warm start need not be a subset of the candidate set: the
+    // incremental member pass never assumes solution members have columns
+    let ds = synth::uniform_cube(120, 2, 17);
+    let m = UniformMatroid::new(4);
+    let cands: Vec<usize> = (0..ds.n()).step_by(2).collect();
+    let init = vec![1, 3, 5, 7]; // disjoint from the even-index candidates
+    let scalar = ScalarEngine::new();
+    let batch = BatchEngine::for_dataset(&ds);
+    let engines: [&dyn DistanceEngine; 2] = [&scalar, &batch];
+    let mut base: Option<LocalSearchResult> = None;
+    for engine in engines {
+        for mode in [
+            LocalSearchMode::Incremental,
+            LocalSearchMode::ExhaustiveRestart,
+        ] {
+            let mut rng = Rng::new(SEED);
+            let res = local_search_sum(
+                &ds,
+                &m,
+                4,
+                &cands,
+                engine,
+                LocalSearchParams {
+                    mode,
+                    ..Default::default()
+                },
+                Some(init.clone()),
+                &mut rng,
+            )
+            .unwrap();
+            match &base {
+                None => {
+                    assert!(res.swaps >= 1, "warm start must be improvable");
+                    base = Some(res);
+                }
+                Some(b) => {
+                    assert_eq!(b.solution, res.solution);
+                    assert_eq!(b.swaps, res.swaps);
+                    assert_eq!(b.oracle_calls, res.oracle_calls);
+                    assert_eq!(b.passes, res.passes);
+                }
+            }
+        }
+    }
+}
+
+/// Point 0 plus its k-1 nearest neighbours: a near-zero-diversity start
+/// that forces a long swap trajectory.
+fn tight_cluster_init(ds: &Dataset, k: usize) -> Vec<usize> {
+    let mut by_dist: Vec<usize> = (1..ds.n()).collect();
+    by_dist.sort_by(|&a, &b| ds.dist(0, a).partial_cmp(&ds.dist(0, b)).unwrap());
+    let mut init = vec![0];
+    init.extend_from_slice(&by_dist[..k - 1]);
+    init
+}
+
+#[test]
+fn incremental_cuts_distance_work_3x_on_150pt_k6() {
+    // the ISSUE 3 acceptance instance: 150 points, k = 6, a long
+    // adversarial trajectory, distance work counted by the ScalarEngine
+    let ds = synth::uniform_cube(150, 3, 21);
+    let m = UniformMatroid::new(6);
+    let (n, k) = (150u64, 6u64);
+    let init = tight_cluster_init(&ds, 6);
+
+    let e_inc = ScalarEngine::new();
+    let inc = run(
+        &ds,
+        &m,
+        6,
+        &e_inc,
+        LocalSearchMode::Incremental,
+        Some(init.clone()),
+    );
+    let e_rst = ScalarEngine::new();
+    let rst = run(
+        &ds,
+        &m,
+        6,
+        &e_rst,
+        LocalSearchMode::ExhaustiveRestart,
+        Some(init),
+    );
+
+    // identical trajectory first — the speedup must not buy a different
+    // answer
+    assert_eq!(inc.solution, rst.solution);
+    assert_eq!(inc.swaps, rst.swaps);
+    assert_eq!(inc.oracle_calls, rst.oracle_calls);
+    assert_eq!(inc.passes, rst.passes);
+
+    // the engine-reported ledger equals the engine's own counter
+    assert_eq!(inc.dist_evals, e_inc.dist_evals());
+    assert_eq!(rst.dist_evals, e_rst.dist_evals());
+
+    // premise for the ratio: the tight-cluster start forces a real
+    // trajectory (the ratio approaches k/2 only as swaps accumulate)
+    assert!(
+        inc.swaps >= 5,
+        "adversarial start produced only {} swaps",
+        inc.swaps
+    );
+
+    // the headline: >= 3x fewer distance evaluations end to end
+    assert!(
+        rst.dist_evals >= 3 * inc.dist_evals,
+        "restart {} < 3x incremental {}",
+        rst.dist_evals,
+        inc.dist_evals
+    );
+
+    // per-swap shape: restart re-scans all Theta(n k) candidate sums every
+    // pass ...
+    assert!(rst.dist_evals >= rst.passes as u64 * (n - 1) * k);
+    // ... while the incremental path pays Theta(n) per accepted swap on
+    // top of the one-time column-store build
+    let build = (n * k - k) + k * (k - 1);
+    assert!((inc.dist_evals - build) <= inc.swaps as u64 * 2 * n);
+}
+
+#[test]
+fn incremental_dist_eval_ledger_is_exact() {
+    // close the loop analytically: with candidates = the whole input and
+    // an init inside the candidate set, the incremental eval ledger is
+    //   k(k-1)            initial member sums
+    // + n k - k           column-store build (k self-pairs excluded)
+    // + S (n - 1 + 2(k-1)) one incoming column + one two-column member
+    //                      pass per accepted swap
+    // + floor(S / epoch) k(k-1)   re-anchor member refreshes
+    // + k(k-1)            final fresh member pass
+    // and the anchor cadence must not change the trajectory
+    let ds = synth::uniform_cube(150, 3, 21);
+    let m = UniformMatroid::new(6);
+    let cands: Vec<usize> = (0..ds.n()).collect();
+    let (n, k) = (150u64, 6u64);
+    let init = tight_cluster_init(&ds, 6);
+    let member = k * (k - 1);
+    let mut base: Option<(Vec<usize>, usize)> = None;
+    for epoch in [2usize, REANCHOR_EPOCH] {
+        let e = ScalarEngine::new();
+        let mut rng = Rng::new(SEED);
+        let res = local_search_sum(
+            &ds,
+            &m,
+            6,
+            &cands,
+            &e,
+            LocalSearchParams {
+                reanchor_epoch: epoch,
+                ..Default::default()
+            },
+            Some(init.clone()),
+            &mut rng,
+        )
+        .unwrap();
+        let s = res.swaps as u64;
+        let expected = member
+            + (n * k - k)
+            + s * ((n - 1) + 2 * (k - 1))
+            + (s / epoch as u64) * member
+            + member;
+        assert_eq!(res.dist_evals, expected, "epoch {epoch}: ledger mismatch");
+        assert_eq!(res.dist_evals, e.dist_evals(), "epoch {epoch}: counter mismatch");
+        match &base {
+            None => {
+                assert!(
+                    res.swaps >= 2 * epoch,
+                    "need multiple re-anchors to exercise the epoch contract, got {} swaps",
+                    res.swaps
+                );
+                base = Some((res.solution, res.swaps));
+            }
+            Some((sol, swaps)) => {
+                assert_eq!(*sol, res.solution, "anchor cadence changed the solution");
+                assert_eq!(*swaps, res.swaps, "anchor cadence changed the swap count");
+            }
+        }
+    }
+}

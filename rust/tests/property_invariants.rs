@@ -2,7 +2,9 @@
 //! feasibility, metric axioms, diversity-function relations, and
 //! local-search postconditions — all over randomized instances.
 
-use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
+use matroid_coreset::algo::local_search::{
+    local_search_sum, LocalSearchMode, LocalSearchParams, REANCHOR_EPOCH,
+};
 use matroid_coreset::algo::seq_coreset::seq_coreset;
 use matroid_coreset::algo::stream_coreset::stream_coreset_tau;
 use matroid_coreset::algo::Budget;
@@ -13,7 +15,7 @@ use matroid_coreset::matroid::{
 };
 use matroid_coreset::prop_assert;
 use matroid_coreset::proptest::{check, Gen};
-use matroid_coreset::runtime::{BatchEngine, ScalarEngine};
+use matroid_coreset::runtime::{BatchEngine, DistanceEngine, ScalarEngine};
 use matroid_coreset::util::rng::Rng;
 
 fn random_multilabel_dataset(g: &mut Gen, max_n: usize) -> Dataset {
@@ -291,6 +293,122 @@ fn prop_local_search_postconditions() {
                 );
             }
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delta_candidate_sums_stay_within_reanchor_drift() {
+    // the incremental AMT arithmetic in isolation: candidate sums
+    // maintained by `d(c, v) - d(c, u)` deltas off the exact column store
+    // stay within the re-anchor drift bound of a from-scratch sums_to_set
+    // over a whole epoch of swaps, and the re-anchor row re-summation
+    // restores the from-scratch bits exactly
+    check("incremental-delta-drift", 20, |g| {
+        let n = g.usize_in(12, 50);
+        let dim = g.usize_in(1, 5);
+        let coords = g.vec_f32(n * dim, 2.0);
+        let ds = Dataset::new(dim, Metric::Euclidean, coords, vec![vec![0]; n], 1, "p");
+        let k = g.usize_in(2, 5);
+        let engine = BatchEngine::for_dataset(&ds);
+        let candidates: Vec<usize> = (0..n).collect();
+        let mut sol = g.subset(n, k);
+        let mut cols = engine
+            .dists_to_points(&ds, &candidates, &sol)
+            .map_err(|e| e.to_string())?;
+        let mut cand_sums: Vec<f64> = cols.chunks(k).map(|r| r.iter().sum()).collect();
+        for step in 0..REANCHOR_EPOCH {
+            // a random swap: v in (fresh), sol[upos] out
+            let v = loop {
+                let v = g.rng.below(n);
+                if !sol.contains(&v) {
+                    break v;
+                }
+            };
+            let upos = g.rng.below(k);
+            sol[upos] = v;
+            let col = engine
+                .dists_to_points(&ds, &candidates, &sol[upos..upos + 1])
+                .map_err(|e| e.to_string())?;
+            for (c, s) in cand_sums.iter_mut().enumerate() {
+                *s += col[c] - cols[c * k + upos];
+                cols[c * k + upos] = col[c];
+            }
+            let fresh = engine
+                .sums_to_set(&ds, &candidates, &sol)
+                .map_err(|e| e.to_string())?;
+            for (c, (&delta_s, &fresh_s)) in cand_sums.iter().zip(&fresh).enumerate() {
+                // 2 fp ops per swap over an epoch, on sums of at most 5
+                // normal-scale distances (magnitude ~1e2 worst case):
+                // <= 2 * 32 * ulp(1e2) ~ 1e-12 absolute; 1e-11 leaves a
+                // margin while still pinning the sums to the last digits
+                let bound = 1e-11 * fresh_s.abs().max(1.0);
+                prop_assert!(
+                    (delta_s - fresh_s).abs() <= bound,
+                    "step {step} cand {c}: delta {delta_s} vs fresh {fresh_s}"
+                );
+            }
+        }
+        // re-anchor: the columns hold exact distances with true-zero self
+        // entries, so row re-summation IS the from-scratch sum
+        let fresh = engine
+            .sums_to_set(&ds, &candidates, &sol)
+            .map_err(|e| e.to_string())?;
+        for (c, &want) in fresh.iter().enumerate() {
+            let resum: f64 = cols[c * k..(c + 1) * k].iter().sum();
+            prop_assert!(
+                resum.to_bits() == want.to_bits(),
+                "re-anchor row {c}: {resum} vs {want}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_local_search_modes_identical_trajectory() {
+    // mode-independence restated as a property over random instances and
+    // matroids: incremental and exhaustive-restart walk the same swaps
+    check("local-search-mode-identity", 15, |g| {
+        let ds = random_single_label_dataset(g, 40);
+        let caps: Vec<usize> = (0..ds.n_categories).map(|_| g.usize_in(1, 3)).collect();
+        let m = PartitionMatroid::new(caps);
+        let k = g.usize_in(2, 4);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let seed = g.rng.next_u64();
+        let mut results = Vec::new();
+        for mode in [
+            LocalSearchMode::Incremental,
+            LocalSearchMode::ExhaustiveRestart,
+        ] {
+            let mut rng = Rng::new(seed);
+            let res = local_search_sum(
+                &ds,
+                &m,
+                k,
+                &cands,
+                &ScalarEngine::new(),
+                LocalSearchParams {
+                    mode,
+                    ..Default::default()
+                },
+                None,
+                &mut rng,
+            )
+            .unwrap();
+            results.push(res);
+        }
+        prop_assert!(
+            results[0].solution == results[1].solution,
+            "solutions diverged: {:?} vs {:?}",
+            results[0].solution,
+            results[1].solution
+        );
+        prop_assert!(results[0].swaps == results[1].swaps, "swap counts diverged");
+        prop_assert!(
+            results[0].oracle_calls == results[1].oracle_calls,
+            "oracle calls diverged"
+        );
         Ok(())
     });
 }
