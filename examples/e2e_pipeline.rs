@@ -56,7 +56,11 @@ fn main() -> anyhow::Result<()> {
         let sample = ds.subset(&(0..n_amt).collect::<Vec<_>>());
         let amt = run_pipeline(
             &sample, &m, k, Objective::Sum,
-            Pipeline { setting: Setting::Full, finisher: Finisher::LocalSearch { gamma: 0.0 }, engine: EngineKind::Scalar },
+            Pipeline {
+                setting: Setting::Full,
+                finisher: Finisher::LocalSearch { gamma: 0.0 },
+                engine: EngineKind::Scalar,
+            },
             1,
         )?;
         println!(
@@ -66,9 +70,14 @@ fn main() -> anyhow::Result<()> {
         );
 
         let engines: &[EngineKind] = if pjrt_available {
-            &[EngineKind::Scalar, EngineKind::Batch, EngineKind::Pjrt]
+            &[
+                EngineKind::Scalar,
+                EngineKind::Batch,
+                EngineKind::Simd,
+                EngineKind::Pjrt,
+            ]
         } else {
-            &[EngineKind::Scalar, EngineKind::Batch]
+            &[EngineKind::Scalar, EngineKind::Batch, EngineKind::Simd]
         };
         for &engine in engines {
             let seq = run_pipeline(

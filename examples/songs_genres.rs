@@ -10,7 +10,7 @@ use matroid_coreset::algo::Budget;
 use matroid_coreset::data::synth;
 use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
 use matroid_coreset::matroid::Matroid;
-use matroid_coreset::runtime::BatchEngine;
+use matroid_coreset::runtime::{BatchEngine, EngineKind};
 use matroid_coreset::util::rng::Rng;
 use matroid_coreset::util::timer::time_it;
 
@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             budget: Budget::Clusters((tau / ell).max(1)),
             second_round_tau: None,
             seed: 33,
+            engine: EngineKind::Batch,
         };
         let (rep, _) = time_it(|| mr_coreset(&ds, &matroid, k, cfg));
         let rep = rep?;
@@ -68,6 +69,7 @@ fn main() -> anyhow::Result<()> {
         budget: Budget::Clusters((tau / 4).max(1)),
         second_round_tau: None,
         seed: 33,
+        engine: EngineKind::Batch,
     };
     let rep = mr_coreset(&ds, &matroid, k, cfg)?;
     let mut rng = Rng::new(1);

@@ -46,7 +46,8 @@ fn main() -> anyhow::Result<()> {
             csv.row(&csv_row!["partition", "seq", tau, k, cs.len(), bound,
                 cs.len() as f64 / bound as f64])?;
 
-            let (scs, _) = stream_coreset_tau(&songs, &part, k, tau, &(0..songs.n()).collect::<Vec<_>>());
+            let order: Vec<usize> = (0..songs.n()).collect();
+            let (scs, _) = stream_coreset_tau(&songs, &part, k, tau, &order);
             table.row(csv_row![
                 "partition", "stream", tau, k, scs.len(), bound,
                 format!("{:.1}", 100.0 * scs.len() as f64 / bound as f64)
@@ -64,7 +65,8 @@ fn main() -> anyhow::Result<()> {
             csv.row(&csv_row!["transversal", "seq", tau, k, cs.len(), bound,
                 cs.len() as f64 / bound as f64])?;
 
-            let (scs, _) = stream_coreset_tau(&wiki, &trans, k, tau, &(0..wiki.n()).collect::<Vec<_>>());
+            let order: Vec<usize> = (0..wiki.n()).collect();
+            let (scs, _) = stream_coreset_tau(&wiki, &trans, k, tau, &order);
             table.row(csv_row![
                 "transversal", "stream", tau, k, scs.len(), bound,
                 format!("{:.1}", 100.0 * scs.len() as f64 / bound as f64)

@@ -36,7 +36,8 @@ fn main() -> anyhow::Result<()> {
         &["metric", "n", "dim", "engine", "gmm_s", "radius"],
     )?;
     let tau = 64;
-    let mut table = Table::new(&["metric", "n", "dim", "scalar_s", "pjrt_s", "speedup", "radius_agree"]);
+    let mut table =
+        Table::new(&["metric", "n", "dim", "scalar_s", "pjrt_s", "speedup", "radius_agree"]);
     for metric in [Metric::Euclidean, Metric::Cosine] {
         for (n, dim) in [(20_000usize, 25usize), (50_000, 25), (50_000, 48), (100_000, 25)] {
             let ds = dataset(metric, n, dim, seed);

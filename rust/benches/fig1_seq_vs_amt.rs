@@ -14,10 +14,11 @@
 use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchMode, LocalSearchParams};
 use matroid_coreset::algo::seq_coreset::seq_coreset;
 use matroid_coreset::algo::Budget;
-use matroid_coreset::bench::scenarios::{amt_baseline_with_mode, bench_seed, testbeds};
+use matroid_coreset::bench::scenarios::{
+    amt_baseline_with_mode, bench_engine, bench_engine_kind, bench_seed, testbeds,
+};
 use matroid_coreset::bench::{bench_header, time_once, Table};
 use matroid_coreset::csv_row;
-use matroid_coreset::runtime::BatchEngine;
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
 
@@ -25,7 +26,11 @@ fn main() -> anyhow::Result<()> {
     let seed = bench_seed();
     bench_header(
         "fig1_seq_vs_amt",
-        "Paper Fig. 1: time vs diversity, AMT vs SeqCoreset (5k samples, k in {rank/4, rank})",
+        &format!(
+            "Paper Fig. 1: time vs diversity, AMT vs SeqCoreset (5k samples, \
+             k in {{rank/4, rank}}, engine={})",
+            bench_engine_kind().name()
+        ),
     );
     let mut csv = CsvWriter::create(
         "bench_results/fig1.csv",
@@ -74,9 +79,9 @@ fn main() -> anyhow::Result<()> {
             }
             // --- SeqCoreset rows ---
             for tau in [8usize, 16, 32, 64, 128, 256] {
-                let engine = BatchEngine::for_dataset(&bed.ds);
+                let engine = bench_engine(&bed.ds);
                 let (cs, cs_secs) = time_once(|| {
-                    seq_coreset(&bed.ds, &bed.matroid, k, Budget::Clusters(tau), &engine).unwrap()
+                    seq_coreset(&bed.ds, &bed.matroid, k, Budget::Clusters(tau), &*engine).unwrap()
                 });
                 let mut rng = Rng::new(seed);
                 let (res, ls_secs) = time_once(|| {
@@ -85,7 +90,7 @@ fn main() -> anyhow::Result<()> {
                         &bed.matroid,
                         k,
                         &cs.indices,
-                        &engine,
+                        &*engine,
                         LocalSearchParams::default(),
                         None,
                         &mut rng,

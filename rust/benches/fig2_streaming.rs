@@ -10,11 +10,12 @@
 //! roughly linearly with tau.
 
 use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
-use matroid_coreset::bench::scenarios::{bench_n, bench_runs, bench_seed, testbeds};
+use matroid_coreset::bench::scenarios::{
+    bench_engine, bench_engine_kind, bench_n, bench_runs, bench_seed, testbeds,
+};
 use matroid_coreset::bench::{bench_header, time_once, Table};
 use matroid_coreset::csv_row;
-use matroid_coreset::runtime::BatchEngine;
-use matroid_coreset::streaming::{run_stream, StreamMode};
+use matroid_coreset::streaming::{run_stream_with_engine, StreamMode};
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
 use matroid_coreset::util::stats::Summary;
@@ -23,9 +24,14 @@ fn main() -> anyhow::Result<()> {
     let n = bench_n();
     let runs = bench_runs();
     let seed = bench_seed();
+    let ekind = bench_engine_kind();
     bench_header(
         "fig2_streaming",
-        &format!("Paper Fig. 2: StreamCoreset tau sweep (n={n}, k=rank/4, {runs} permutations)"),
+        &format!(
+            "Paper Fig. 2: StreamCoreset tau sweep (n={n}, k=rank/4, {runs} permutations, \
+             engine={})",
+            ekind.name()
+        ),
     );
     let mut csv = CsvWriter::create(
         "bench_results/fig2.csv",
@@ -35,9 +41,10 @@ fn main() -> anyhow::Result<()> {
     for bed in testbeds(n, seed) {
         let k = (bed.rank / 4).max(2);
         // hoisted: the sqnorm precompute must not count toward search_s
-        let engine = BatchEngine::for_dataset(&bed.ds);
+        let engine = bench_engine(&bed.ds);
         let mut table = Table::new(&[
-            "tau", "stream_s(p50)", "search_s(p50)", "diversity distribution", "|T|(p50)", "ratio(p50)",
+            "tau", "stream_s(p50)", "search_s(p50)", "diversity distribution", "|T|(p50)",
+            "ratio(p50)",
         ]);
         let mut best_ever: f64 = 0.0;
         let mut rows: Vec<(usize, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> = Vec::new();
@@ -46,8 +53,10 @@ fn main() -> anyhow::Result<()> {
             let (mut divs, mut st, mut se, mut sz) = (vec![], vec![], vec![], vec![]);
             for run in 0..runs {
                 let order = rng.permutation(bed.ds.n());
-                let (rep, stream_s) =
-                    time_once(|| run_stream(&bed.ds, &bed.matroid, k, StreamMode::Tau(tau), &order));
+                let (rep, stream_s) = time_once(|| {
+                    let mode = StreamMode::Tau(tau);
+                    run_stream_with_engine(&bed.ds, &bed.matroid, k, mode, &order, ekind).unwrap()
+                });
                 let mut rng2 = Rng::new(seed + run as u64);
                 let (res, search_s) = time_once(|| {
                     local_search_sum(
@@ -55,7 +64,7 @@ fn main() -> anyhow::Result<()> {
                         &bed.matroid,
                         k,
                         &rep.coreset.indices,
-                        &engine,
+                        &*engine,
                         LocalSearchParams::default(),
                         None,
                         &mut rng2,
@@ -82,7 +91,10 @@ fn main() -> anyhow::Result<()> {
                 tau,
                 format!("{:.3}", Summary::of(&st).p50),
                 format!("{:.3}", Summary::of(&se).p50),
-                format!("min {:.2} p25 {:.2} p50 {:.2} p75 {:.2} max {:.2}", d.min, d.p25, d.p50, d.p75, d.max),
+                format!(
+                    "min {:.2} p25 {:.2} p50 {:.2} p75 {:.2} max {:.2}",
+                    d.min, d.p25, d.p50, d.p75, d.max
+                ),
                 format!("{:.0}", Summary::of(&sz).p50),
                 format!("{:.4}", r.p50)
             ]);

@@ -10,12 +10,13 @@
 
 use matroid_coreset::algo::local_search::{local_search_sum, LocalSearchParams};
 use matroid_coreset::algo::Budget;
-use matroid_coreset::bench::scenarios::{bench_n, bench_runs, bench_seed, testbeds};
+use matroid_coreset::bench::scenarios::{
+    bench_engine, bench_engine_kind, bench_n, bench_runs, bench_seed, testbeds,
+};
 use matroid_coreset::bench::{bench_header, time_once, Table};
 use matroid_coreset::csv_row;
 use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
-use matroid_coreset::runtime::BatchEngine;
-use matroid_coreset::streaming::{run_stream, StreamMode};
+use matroid_coreset::streaming::{run_stream_with_engine, StreamMode};
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
 use matroid_coreset::util::stats::Summary;
@@ -26,9 +27,13 @@ fn main() -> anyhow::Result<()> {
     let n = bench_n();
     let runs = bench_runs();
     let seed = bench_seed();
+    let ekind = bench_engine_kind();
     bench_header(
         "fig3_all_settings",
-        &format!("Paper Fig. 3: all settings, tau={TAU}, full datasets (n={n}), k=rank/4"),
+        &format!(
+            "Paper Fig. 3: all settings, tau={TAU}, full datasets (n={n}), k=rank/4, engine={}",
+            ekind.name()
+        ),
     );
     let mut csv = CsvWriter::create(
         "bench_results/fig3.csv",
@@ -38,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     for bed in testbeds(n, seed) {
         let k = (bed.rank / 4).max(2);
         // hoisted: the sqnorm precompute must not count toward search_s
-        let engine = BatchEngine::for_dataset(&bed.ds);
+        let engine = bench_engine(&bed.ds);
         let mut table = Table::new(&[
             "algo", "coreset_s(p50)", "search_s(p50)", "diversity p50 [min..max]", "|T|(p50)",
         ]);
@@ -51,13 +56,14 @@ fn main() -> anyhow::Result<()> {
                 csv.row(&csv_row![bed.name, name, run, div, cs_s, ls_s, size])?;
             }
             let divs: Vec<f64> = samples.iter().map(|s| s.0).collect();
+            let sizes: Vec<f64> = samples.iter().map(|s| s.3 as f64).collect();
             let d = Summary::of(&divs);
             table.row(csv_row![
                 name,
                 format!("{:.3}", Summary::of(&samples.iter().map(|s| s.1).collect::<Vec<_>>()).p50),
                 format!("{:.3}", Summary::of(&samples.iter().map(|s| s.2).collect::<Vec<_>>()).p50),
                 format!("{:.3} [{:.3}..{:.3}]", d.p50, d.min, d.max),
-                format!("{:.0}", Summary::of(&samples.iter().map(|s| s.3 as f64).collect::<Vec<_>>()).p50)
+                format!("{:.0}", Summary::of(&sizes).p50)
             ]);
             Ok(())
         };
@@ -71,6 +77,7 @@ fn main() -> anyhow::Result<()> {
                     budget: Budget::Clusters((TAU / ell).max(1)),
                     second_round_tau: None,
                     seed: seed + run as u64,
+                    engine: ekind,
                 };
                 let (rep, cs_s) = time_once(|| mr_coreset(&bed.ds, &bed.matroid, k, cfg).unwrap());
                 let mut rng = Rng::new(seed + run as u64);
@@ -102,8 +109,10 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(seed ^ 0xBEEF);
         for run in 0..runs {
             let order = rng.permutation(bed.ds.n());
-            let (rep, cs_s) =
-                time_once(|| run_stream(&bed.ds, &bed.matroid, k, StreamMode::Tau(TAU), &order));
+            let (rep, cs_s) = time_once(|| {
+                let mode = StreamMode::Tau(TAU);
+                run_stream_with_engine(&bed.ds, &bed.matroid, k, mode, &order, ekind).unwrap()
+            });
             let mut rng2 = Rng::new(seed + run as u64);
             let (res, ls_s) = time_once(|| {
                 local_search_sum(

@@ -10,9 +10,11 @@ use matroid_coreset::bench::{bench_header, bench_repeat, Table};
 use matroid_coreset::core::Metric;
 use matroid_coreset::csv_row;
 use matroid_coreset::data::synth;
-use matroid_coreset::diversity::{diversity, star_diversity_with_engine, Evaluator, Objective};
+use matroid_coreset::diversity::{
+    diversity, star_diversity_with_engine, Evaluator, ALL_OBJECTIVES,
+};
 use matroid_coreset::matroid::{Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid};
-use matroid_coreset::runtime::{BatchEngine, DistanceEngine, ScalarEngine};
+use matroid_coreset::runtime::{BatchEngine, DistanceEngine, ScalarEngine, SimdEngine};
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
 
@@ -57,10 +59,14 @@ fn main() -> anyhow::Result<()> {
     let batch = BatchEngine::for_dataset(&ds);
     let s = bench_repeat(1, 5, || gmm(&ds, &batch, 0, GmmStop::Clusters(16)).unwrap());
     emit("gmm/batch/tau=16/n=50k", s.p50, (50_000 * 16) as f64, &mut table);
+    let simd = SimdEngine::for_dataset(&ds);
+    let s = bench_repeat(1, 5, || gmm(&ds, &simd, 0, GmmStop::Clusters(16)).unwrap());
+    emit("gmm/simd/tau=16/n=50k", s.p50, (50_000 * 16) as f64, &mut table);
 
-    // the acceptance workload for the batch engine: single-center folds
-    // over 100k points, dim 32, Euclidean — batch must be >= 4x scalar
-    // on an 8-thread machine (the ISSUE 1 criterion)
+    // the acceptance workload for the batched engines: single-center folds
+    // over 100k points, dim 32, Euclidean — batch must be >= 4x scalar on
+    // an 8-thread machine (the ISSUE 1 criterion); the simd row tracks the
+    // additional lane-unrolling win at identical output bits
     let big = synth::uniform_cube(100_000, 32, seed);
     let scalar = ScalarEngine::new();
     let fold = |engine: &dyn DistanceEngine| {
@@ -79,10 +85,16 @@ fn main() -> anyhow::Result<()> {
     let big_batch = BatchEngine::for_dataset(&big);
     let s_batch = bench_repeat(1, 5, || fold(&big_batch));
     emit("fold/batch/n=100k/d=32 x8", s_batch.p50, (100_000 * 8) as f64, &mut table);
+    let big_simd = SimdEngine::for_dataset(&big);
+    let s_simd = bench_repeat(1, 5, || fold(&big_simd));
+    emit("fold/simd/n=100k/d=32 x8", s_simd.p50, (100_000 * 8) as f64, &mut table);
     println!(
-        "fold speedup batch vs scalar: {:.2}x ({} threads)",
+        "fold speedup batch vs scalar: {:.2}x | simd vs scalar: {:.2}x | simd vs batch: {:.2}x \
+         ({} threads)",
         s_scalar.p50 / s_batch.p50.max(1e-12),
-        big_batch.threads()
+        s_scalar.p50 / s_simd.p50.max(1e-12),
+        s_batch.p50 / s_simd.p50.max(1e-12),
+        big_simd.threads()
     );
 
     // matroid oracles
@@ -111,7 +123,7 @@ fn main() -> anyhow::Result<()> {
 
     // diversity evaluators at k=12
     let sset: Vec<usize> = (0..12).collect();
-    for obj in [Objective::Sum, Objective::Star, Objective::Tree, Objective::Cycle, Objective::Bipartition] {
+    for obj in ALL_OBJECTIVES {
         let s = bench_repeat(3, 20, || {
             let mut acc = 0.0;
             for _ in 0..100 {
@@ -136,11 +148,15 @@ fn main() -> anyhow::Result<()> {
         Evaluator::new(&batch).submatrix(&ds, &eset).unwrap().len()
     });
     emit("evaluator/submatrix/batch/k=512", s.p50, (512 * 511 / 2) as f64, &mut table);
+    let s = bench_repeat(3, 20, || {
+        Evaluator::new(&simd).submatrix(&ds, &eset).unwrap().len()
+    });
+    emit("evaluator/submatrix/simd/k=512", s.p50, (512 * 511 / 2) as f64, &mut table);
     let s = bench_repeat(3, 20, || star_diversity_with_engine(&ds, &eset, &batch).unwrap());
     emit("evaluator/star/batch/k=512", s.p50, (512 * 511) as f64, &mut table);
 
     // the incremental-AMT delta pass: a two-column dists_to_points block
-    // over all 50k points, scalar oracle vs the threaded batch backend
+    // over all 50k points — scalar oracle vs batch vs simd
     let eset_all: Vec<usize> = (0..ds.n()).collect();
     let two: Vec<usize> = vec![100, 40_000];
     let s = bench_repeat(3, 20, || {
@@ -149,6 +165,8 @@ fn main() -> anyhow::Result<()> {
     emit("dists_to_points/scalar/n=50k x2", s.p50, (2 * ds.n()) as f64, &mut table);
     let s = bench_repeat(3, 20, || batch.dists_to_points(&ds, &eset_all, &two).unwrap().len());
     emit("dists_to_points/batch/n=50k x2", s.p50, (2 * ds.n()) as f64, &mut table);
+    let s = bench_repeat(3, 20, || simd.dists_to_points(&ds, &eset_all, &two).unwrap().len());
+    emit("dists_to_points/simd/n=50k x2", s.p50, (2 * ds.n()) as f64, &mut table);
 
     // incremental vs exhaustive-restart AMT on an identical trajectory:
     // the wall-clock ratio tracks the O(n k) -> O(n) per-swap distance

@@ -57,8 +57,9 @@ fn main() -> anyhow::Result<()> {
         for tau in [4usize, 8, 12] {
             let (cs, cs_s) =
                 time_once(|| seq_coreset(&ds, &m, k, Budget::Clusters(tau), &engine).unwrap());
-            let (res, se_s) =
-                time_once(|| exhaustive_best(&ds, &m, k, &cs.indices, obj, &search_engine).unwrap());
+            let (res, se_s) = time_once(|| {
+                exhaustive_best(&ds, &m, k, &cs.indices, obj, &search_engine).unwrap()
+            });
             let ratio = res.diversity / opt;
             table.row(csv_row![
                 obj.name(),
@@ -83,7 +84,8 @@ fn main() -> anyhow::Result<()> {
     let big = synth::songsim(20_000, seed);
     let pm = synth::songsim_matroid(&big, 89);
     let big_engine = BatchEngine::for_dataset(&big);
-    let mut table2 = Table::new(&["objective", "k", "tau", "|T|", "coreset_s", "search_s", "diversity"]);
+    let mut table2 =
+        Table::new(&["objective", "k", "tau", "|T|", "coreset_s", "search_s", "diversity"]);
     for obj in ALL_OBJECTIVES {
         for k in [3usize, 4, 5] {
             let tau = 8;

@@ -65,13 +65,15 @@ pub struct StreamCoreset<'a> {
     seen: usize,
     stats: StreamStats,
     /// Engine for the restructure re-assignment tile (the only
-    /// super-constant distance block in the one-pass algorithm).  Scalar,
-    /// not batch: the tile is bounded by the center count (far below any
-    /// fan-out threshold), and a per-dataset engine would add the O(n)
-    /// precompute and memory the streaming model exists to avoid.  The
-    /// per-point `push` scan stays point-at-a-time — that is the
-    /// streaming cost model §5.2 measures.
-    engine: ScalarEngine,
+    /// super-constant distance block in the one-pass algorithm).  Scalar
+    /// by default, not batch: the tile is bounded by the center count
+    /// (far below any fan-out threshold), and a per-dataset engine would
+    /// add the O(n) precompute and memory the streaming model exists to
+    /// avoid.  [`Self::set_engine`] lets the pipeline thread its
+    /// registry-selected backend through anyway (the A/B axis of
+    /// `run_stream_with_engine`).  The per-point `push` scan stays
+    /// point-at-a-time — that is the streaming cost model §5.2 measures.
+    engine: Box<dyn DistanceEngine>,
 }
 
 impl<'a> StreamCoreset<'a> {
@@ -99,8 +101,16 @@ impl<'a> StreamCoreset<'a> {
             delegates: Vec::new(),
             seen: 0,
             stats: StreamStats::default(),
-            engine: ScalarEngine::new(),
+            engine: Box::new(ScalarEngine::new()),
         }
+    }
+
+    /// Replace the restructure-tile engine (see the field docs for why
+    /// the default is scalar).  The engine must be built for `ds`;
+    /// distance accounting is unchanged — the §5.2 eval ledger counts
+    /// tile entries, not backend calls.
+    pub fn set_engine(&mut self, engine: Box<dyn DistanceEngine>) {
+        self.engine = engine;
     }
 
     #[inline]

@@ -6,6 +6,8 @@
 //!   DMMC_BENCH_N      points per full dataset        (default 60_000)
 //!   DMMC_BENCH_RUNS   repetitions for boxplot rows   (default 5)
 //!   DMMC_BENCH_SEED   base seed                      (default 1)
+//!   DMMC_BENCH_ENGINE backend for the fig benches    (default batch;
+//!                     scalar|batch|simd|pjrt — the registry A/B flag)
 
 use crate::algo::local_search::{
     local_search_sum, LocalSearchMode, LocalSearchParams, LocalSearchResult,
@@ -14,7 +16,7 @@ use crate::core::Dataset;
 use crate::coordinator::spec::MatroidBox;
 use crate::data::synth;
 use crate::matroid::{maximal_independent, Matroid};
-use crate::runtime::BatchEngine;
+use crate::runtime::{build_engine, DistanceEngine, EngineKind};
 use crate::util::rng::Rng;
 
 pub fn bench_n() -> usize {
@@ -36,6 +38,20 @@ pub fn bench_seed() -> u64 {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1)
+}
+
+/// Backend the fig benches run on (`DMMC_BENCH_ENGINE`, default batch) —
+/// one env flag A/Bs every scenario across the registry.
+pub fn bench_engine_kind() -> EngineKind {
+    std::env::var("DMMC_BENCH_ENGINE")
+        .ok()
+        .and_then(|v| EngineKind::parse(&v))
+        .unwrap_or_default()
+}
+
+/// Registry-built engine of [`bench_engine_kind`] for `ds`.
+pub fn bench_engine(ds: &Dataset) -> Box<dyn DistanceEngine> {
+    build_engine(bench_engine_kind(), ds).expect("bench engine construction")
 }
 
 /// One experimental testbed: a dataset + its natural matroid (Table 2).
@@ -107,7 +123,7 @@ pub fn amt_baseline_with_mode(
         m,
         k,
         candidates,
-        &BatchEngine::for_dataset(ds),
+        &*bench_engine(ds),
         LocalSearchParams {
             gamma,
             max_swaps: 100_000,

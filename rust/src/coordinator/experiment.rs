@@ -15,7 +15,7 @@ use crate::diversity::{diversity_with_engine, Objective};
 use crate::mapreduce::{mr_coreset, MapReduceConfig};
 use crate::matroid::Matroid;
 use crate::runtime::{build_engine, EngineKind};
-use crate::streaming::{run_stream, StreamMode};
+use crate::streaming::{run_stream_with_engine, StreamMode};
 use crate::util::rng::Rng;
 use crate::util::timer::time_it;
 
@@ -104,7 +104,9 @@ pub fn run_pipeline<M: Matroid + Sync>(
         }
         Setting::Stream { mode } => {
             let order = rng.permutation(ds.n());
-            let (rep, dt) = time_it(|| run_stream(ds, m, k, mode, &order));
+            let (rep, dt) =
+                time_it(|| run_stream_with_engine(ds, m, k, mode, &order, pipeline.engine));
+            let rep = rep?;
             extra.insert("n_clusters".into(), rep.coreset.n_clusters as f64);
             extra.insert("peak_memory".into(), rep.stats.peak_memory_points as f64);
             extra.insert("restructures".into(), rep.stats.restructures as f64);
@@ -121,6 +123,7 @@ pub fn run_pipeline<M: Matroid + Sync>(
                 budget,
                 second_round_tau,
                 seed: rng.next_u64(),
+                engine: pipeline.engine,
             };
             let (rep, dt) = time_it(|| mr_coreset(ds, m, k, cfg));
             let rep = rep?;
@@ -290,6 +293,45 @@ mod tests {
         .unwrap();
         assert_eq!(out.coreset_size, 60);
         assert_eq!(out.coreset_time, Duration::ZERO);
+    }
+
+    #[test]
+    fn engine_kinds_produce_identical_euclidean_pipelines() {
+        // all three CPU backends are bit-identical on Euclidean datasets,
+        // so the full pipeline (coreset, swaps, final objective) must not
+        // move by a bit under the registry flag
+        let ds = synth::uniform_cube(250, 3, 8);
+        let m = UniformMatroid::new(4);
+        let mut base: Option<RunOutcome> = None;
+        for engine in [EngineKind::Scalar, EngineKind::Batch, EngineKind::Simd] {
+            let out = run_pipeline(
+                &ds,
+                &m,
+                4,
+                Objective::Sum,
+                Pipeline {
+                    setting: Setting::Seq {
+                        budget: Budget::Clusters(12),
+                    },
+                    finisher: Finisher::LocalSearch { gamma: 0.0 },
+                    engine,
+                },
+                6,
+            )
+            .unwrap();
+            match &base {
+                None => base = Some(out),
+                Some(b) => {
+                    assert_eq!(b.solution, out.solution, "{}", engine.name());
+                    assert_eq!(
+                        b.diversity.to_bits(),
+                        out.diversity.to_bits(),
+                        "{}: diversity moved",
+                        engine.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

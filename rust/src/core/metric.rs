@@ -51,8 +51,16 @@ const EPS: f64 = 1.0e-12;
 /// The accumulation order is load-bearing: [`cosine_angular`] and the
 /// batched engine's fast paths all build their `<a,b>` term with exactly
 /// this loop, which is what keeps the batch backend bit-identical to the
-/// scalar oracle.  Any change here (unrolling, SIMD) changes results
-/// everywhere at once — never in only one path.
+/// scalar oracle.  This sequential fold is the *definition* backends are
+/// measured against, not a constraint on how they compute: a vectorized
+/// backend may reorder its reductions as long as it honors its declared
+/// determinism contract (`EngineKind::contract`) — e.g. the SIMD engine's
+/// tree-reduced dot (`runtime::simd::dot_tree4`) is tolerance-bounded on
+/// the cosine paths while its Euclidean paths stay bit-identical.  The
+/// conformance suite (`runtime::conformance`, driven by
+/// `rust/tests/engine_conformance.rs`) pins every registered backend to
+/// its contract.  Changing *this* function, by contrast, changes the
+/// definition itself — results move everywhere at once.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());

@@ -16,7 +16,9 @@
 //!   other variants ([`algo::exhaustive`]),
 //! * the **distance-engine runtime** ([`runtime`]): a widened
 //!   [`runtime::DistanceEngine`] trait (min-folds, pairwise tiles,
-//!   per-candidate sums) with three backends — see below,
+//!   per-candidate sums) behind a backend registry
+//!   ([`runtime::EngineKind`]) with four backends and a cross-backend
+//!   conformance harness ([`runtime::conformance`]) — see below,
 //! * and the experiment substrate: synthetic datasets ([`data`]),
 //!   a thread-based MapReduce simulator ([`mapreduce`]), a streaming
 //!   harness ([`streaming`]), an experiment coordinator ([`coordinator`]),
@@ -41,11 +43,27 @@
 //!
 //! ## Choosing an engine
 //!
+//! Backends register in [`runtime::EngineKind`] and are selectable in
+//! every scenario from one flag: `--engine` on the CLI, `run.engine` in
+//! sweep configs, `DMMC_BENCH_ENGINE` for the bench binaries.  The
+//! registry threads through `run_pipeline`, the MapReduce per-shard
+//! engines, and the streaming restructure tile.  Each kind declares a
+//! numerics contract ([`runtime::EngineKind::contract`]) enforced for
+//! all five primitives by the conformance harness
+//! ([`runtime::conformance`], run per backend by
+//! `tests/engine_conformance.rs`).
+//!
 //! * [`runtime::BatchEngine`] — the default (`--engine batch`): chunked,
 //!   `std::thread::scope`-parallel CPU kernels with precomputed norms.
 //!   Bit-identical to the scalar oracle on every path (`update_min`,
 //!   `pairwise_block`, `sums_to_set`, `dists_to_points`), so switching
 //!   engines never changes a result — only the wall clock.
+//! * [`runtime::SimdEngine`] (`--engine simd`) — lane-unrolled inner
+//!   loops with deterministic reductions: Euclidean paths accumulate in
+//!   the oracle's own order across four independent point lanes
+//!   (bit-identical), cosine paths tree-reduce their dot products
+//!   (deterministic, within `runtime::simd::SIMD_COSINE_ABS_TOL` of the
+//!   oracle — the tolerance-mode mirror of how PJRT is handled).
 //! * [`runtime::ScalarEngine`] — the portable point-at-a-time oracle
 //!   (`--engine scalar`); use it as the reference in equivalence tests
 //!   (its distance-evaluation counter also powers work-count regressions).

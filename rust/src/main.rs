@@ -43,7 +43,8 @@ SUBCOMMANDS
   run        --data <file|kind:n> --algo seq|stream|mr|full
              [--k K] [--tau T | --eps E] [--workers L] [--objective sum|star|tree|cycle|bipartition]
              [--finisher local-search|exhaustive|greedy] [--gamma G]
-             [--engine batch|scalar|pjrt] [--matroid transversal|partition:R|uniform:R] [--seed S]
+             [--engine batch|scalar|simd|pjrt] [--matroid transversal|partition:R|uniform:R]
+             [--seed S]
   sweep      --config configs/<file>.toml [--csv out.csv]
   artifacts-check  [--data <kind:n>]
   help
@@ -177,7 +178,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown --finisher {other}"),
     };
     let engine = EngineKind::parse(args.str_or("engine", EngineKind::default().name()))
-        .context("bad --engine (batch|scalar|pjrt)")?;
+        .context("bad --engine (batch|scalar|simd|pjrt)")?;
 
     println!(
         "run: data={} n={} matroid={} rank={} k={k} objective={} algo={:?} engine={}",
@@ -270,7 +271,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .context("run.engine")?;
 
     println!("sweep '{title}': {} n={} rank={rank}", ds.name, ds.n());
-    let mut table = Table::new(&["algo", "tau", "k", "seed", "diversity", "coreset_s", "finish_s", "|T|"]);
+    let mut table =
+        Table::new(&["algo", "tau", "k", "seed", "diversity", "coreset_s", "finish_s", "|T|"]);
     let mut csv = CsvWriter::create(
         args.str_or("csv", &format!("bench_results/sweep_{title}.csv")),
         &["algo", "tau", "k", "seed", "diversity", "coreset_s", "finish_s", "coreset_size"],

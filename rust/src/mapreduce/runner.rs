@@ -9,7 +9,7 @@ use crate::algo::{Budget, Coreset};
 use crate::core::Dataset;
 use crate::diversity::sum_diversity_with_engine;
 use crate::matroid::Matroid;
-use crate::runtime::BatchEngine;
+use crate::runtime::{build_engine, build_engine_with_threads, EngineKind};
 use crate::util::rng::Rng;
 
 /// Configuration of one MR coreset job.
@@ -26,6 +26,10 @@ pub struct MapReduceConfig {
     pub second_round_tau: Option<usize>,
     /// Seed for the arbitrary (random) partition of `S`.
     pub seed: u64,
+    /// Backend for the per-shard engines (and the round-2 engine) —
+    /// `run_pipeline` threads `Pipeline::engine` through here, so the
+    /// MapReduce setting rides the same A/B flag as every other scenario.
+    pub engine: EngineKind,
 }
 
 /// Outcome + accounting of an MR run.
@@ -89,11 +93,12 @@ pub fn mr_coreset<M: Matroid + Sync>(
                 scope.spawn(move || -> ShardOut {
                     let w0 = Instant::now();
                     let local = ds.subset(shard);
-                    let engine = BatchEngine::with_threads(&local, threads_per_shard);
-                    let cs = seq_coreset(&local, m, k, cfg.budget, &engine)?;
+                    let engine = build_engine_with_threads(cfg.engine, &local, threads_per_shard)?;
+                    let engine = &*engine;
+                    let cs = seq_coreset(&local, m, k, cfg.budget, engine)?;
                     // reducer-side accounting: score the shard coreset
                     // through the same engine before handing it upstream
-                    let shard_div = sum_diversity_with_engine(&local, &cs.indices, &engine)?;
+                    let shard_div = sum_diversity_with_engine(&local, &cs.indices, engine)?;
                     // map local coreset indices back to global ids
                     let global: Vec<usize> = cs.indices.iter().map(|&i| shard[i]).collect();
                     Ok((global, cs, shard_div, w0.elapsed()))
@@ -130,8 +135,8 @@ pub fn mr_coreset<M: Matroid + Sync>(
     let coreset = if let Some(tau2) = cfg.second_round_tau {
         rounds = 2;
         let sub = ds.subset(&union);
-        let engine = BatchEngine::for_dataset(&sub);
-        let cs2 = seq_coreset(&sub, m, k, Budget::Clusters(tau2), &engine)?;
+        let engine = build_engine(cfg.engine, &sub)?;
+        let cs2 = seq_coreset(&sub, m, k, Budget::Clusters(tau2), &*engine)?;
         let indices: Vec<usize> = cs2.indices.iter().map(|&i| union[i]).collect();
         Coreset {
             indices,
@@ -173,6 +178,7 @@ mod tests {
             budget: Budget::Clusters(tau),
             second_round_tau: None,
             seed: 7,
+            engine: EngineKind::default(),
         }
     }
 
@@ -225,6 +231,24 @@ mod tests {
         assert_eq!(rep2.rounds, 2);
         assert!(rep2.coreset.len() <= rep1.coreset.len());
         assert!(rep2.coreset.len() <= 8 * 4 + 8);
+    }
+
+    #[test]
+    fn engine_kind_does_not_change_the_coreset() {
+        // Euclidean per-shard work is bit-identical across the CPU
+        // backends, so the registry choice cannot move a single index
+        let ds = synth::uniform_cube(600, 3, 9);
+        let m = UniformMatroid::new(4);
+        let mut base: Option<Vec<usize>> = None;
+        for kind in [EngineKind::Scalar, EngineKind::Batch, EngineKind::Simd] {
+            let mut c = cfg(4, 6);
+            c.engine = kind;
+            let rep = mr_coreset(&ds, &m, 4, c).unwrap();
+            match &base {
+                None => base = Some(rep.coreset.indices),
+                Some(b) => assert_eq!(b, &rep.coreset.indices, "{}", kind.name()),
+            }
+        }
     }
 
     #[test]

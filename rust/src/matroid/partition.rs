@@ -164,7 +164,8 @@ mod tests {
         assert!(m.is_independent(&d, &indep));
         // every subset must be independent
         for mask in 0u32..8 {
-            let sub: Vec<usize> = (0..3).filter(|&i| mask >> i & 1 == 1).map(|i| indep[i]).collect();
+            let sub: Vec<usize> =
+                (0..3).filter(|&i| mask >> i & 1 == 1).map(|i| indep[i]).collect();
             assert!(m.is_independent(&d, &sub));
         }
     }

@@ -39,15 +39,10 @@ use anyhow::Result;
 
 use crate::core::metric::{cosine_angular_from_parts, dot, euclidean};
 use crate::core::{Dataset, Metric};
-use crate::runtime::engine::{same_index_slice, DistanceEngine};
-
-/// Points per cache sub-block: the center tile stays register/L1-resident
-/// while `POINT_BLOCK` point rows stream through.
-const POINT_BLOCK: usize = 1024;
-
-/// Point-center pairs (or row-col pairs) per worker below which fan-out
-/// does not pay for the thread spawns.
-const MIN_PAIRS_PER_WORKER: usize = 8192;
+use crate::runtime::engine::{
+    fanout_fold_state, fanout_row_positions, fanout_rows, mirror_upper_triangle,
+    same_index_slice, workers_for, DistanceEngine, POINT_BLOCK,
+};
 
 /// Chunked, multi-threaded CPU distance engine.
 ///
@@ -110,11 +105,6 @@ impl BatchEngine {
         assert_eq!(ds.metric, self.metric, "engine prepared for a different metric");
     }
 
-    /// Worker count for a call touching `pairs` point-center pairs.
-    fn workers_for(&self, pairs: usize) -> usize {
-        (pairs / MIN_PAIRS_PER_WORKER).clamp(1, self.threads)
-    }
-
     /// Fold `centers` into the state chunk covering global points
     /// `base..base + mind.len()`.  Centers iterate inside each
     /// `POINT_BLOCK` sub-block (center rows hot in L1, point rows
@@ -170,16 +160,9 @@ impl BatchEngine {
         if centers.is_empty() || self.n == 0 {
             return;
         }
-        let workers = self.workers_for(self.n.saturating_mul(centers.len()));
-        if workers <= 1 {
-            self.fold_chunk(ds, centers, 0, mind, arg);
-            return;
-        }
-        let span = self.n.div_ceil(workers);
-        std::thread::scope(|scope| {
-            for (idx, (m, a)) in mind.chunks_mut(span).zip(arg.chunks_mut(span)).enumerate() {
-                scope.spawn(move || self.fold_chunk(ds, centers, idx * span, m, a));
-            }
+        let workers = workers_for(self.threads, self.n.saturating_mul(centers.len()));
+        fanout_fold_state(workers, mind, arg, |base, m, a| {
+            self.fold_chunk(ds, centers, base, m, a)
         });
     }
 
@@ -350,34 +333,16 @@ impl DistanceEngine for BatchEngine {
             // parallel (row chunks are imbalanced — row a has k-1-a
             // entries — but the tile stays one engine call), then mirror
             let k = rows.len();
-            let workers = self.workers_for(k * k.saturating_sub(1) / 2);
-            if workers <= 1 {
-                self.pairwise_upper_chunk(ds, rows, 0, &mut out);
-            } else {
-                let span = k.div_ceil(workers);
-                std::thread::scope(|scope| {
-                    for (idx, out_chunk) in out.chunks_mut(span * k).enumerate() {
-                        scope.spawn(move || self.pairwise_upper_chunk(ds, rows, idx * span, out_chunk));
-                    }
-                });
-            }
-            for a in 1..k {
-                for b in 0..a {
-                    out[a * k + b] = out[b * k + a];
-                }
-            }
+            let workers = workers_for(self.threads, k * k.saturating_sub(1) / 2);
+            fanout_row_positions(workers, k, k, &mut out, |base, out_chunk| {
+                self.pairwise_upper_chunk(ds, rows, base, out_chunk)
+            });
+            mirror_upper_triangle(&mut out, k);
             return Ok(out);
         }
-        let workers = self.workers_for(rows.len().saturating_mul(width));
-        if workers <= 1 {
-            self.pairwise_chunk(ds, rows, cols, &mut out);
-            return Ok(out);
-        }
-        let span = rows.len().div_ceil(workers);
-        std::thread::scope(|scope| {
-            for (row_chunk, out_chunk) in rows.chunks(span).zip(out.chunks_mut(span * width)) {
-                scope.spawn(move || self.pairwise_chunk(ds, row_chunk, cols, out_chunk));
-            }
+        let workers = workers_for(self.threads, rows.len().saturating_mul(width));
+        fanout_rows(workers, rows, width, &mut out, |row_chunk, out_chunk| {
+            self.pairwise_chunk(ds, row_chunk, cols, out_chunk)
         });
         Ok(out)
     }
@@ -388,16 +353,9 @@ impl DistanceEngine for BatchEngine {
         if candidates.is_empty() || set.is_empty() {
             return Ok(out);
         }
-        let workers = self.workers_for(candidates.len().saturating_mul(set.len()));
-        if workers <= 1 {
-            self.sums_chunk(ds, candidates, set, &mut out);
-            return Ok(out);
-        }
-        let span = candidates.len().div_ceil(workers);
-        std::thread::scope(|scope| {
-            for (cand_chunk, out_chunk) in candidates.chunks(span).zip(out.chunks_mut(span)) {
-                scope.spawn(move || self.sums_chunk(ds, cand_chunk, set, out_chunk));
-            }
+        let workers = workers_for(self.threads, candidates.len().saturating_mul(set.len()));
+        fanout_rows(workers, candidates, 1, &mut out, |cand_chunk, out_chunk| {
+            self.sums_chunk(ds, cand_chunk, set, out_chunk)
         });
         Ok(out)
     }
@@ -409,16 +367,9 @@ impl DistanceEngine for BatchEngine {
         if ids.is_empty() || width == 0 {
             return Ok(out);
         }
-        let workers = self.workers_for(ids.len().saturating_mul(width));
-        if workers <= 1 {
-            self.dists_chunk(ds, ids, targets, &mut out);
-            return Ok(out);
-        }
-        let span = ids.len().div_ceil(workers);
-        std::thread::scope(|scope| {
-            for (id_chunk, out_chunk) in ids.chunks(span).zip(out.chunks_mut(span * width)) {
-                scope.spawn(move || self.dists_chunk(ds, id_chunk, targets, out_chunk));
-            }
+        let workers = workers_for(self.threads, ids.len().saturating_mul(width));
+        fanout_rows(workers, ids, width, &mut out, |id_chunk, out_chunk| {
+            self.dists_chunk(ds, id_chunk, targets, out_chunk)
         });
         Ok(out)
     }

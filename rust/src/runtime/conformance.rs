@@ -1,0 +1,392 @@
+//! Cross-backend conformance harness for [`DistanceEngine`] implementations.
+//!
+//! Grown out of the per-primitive identity checks of
+//! `rust/tests/engine_equivalence.rs` (which remain the deep, large-`n`
+//! batch-vs-scalar pins): this module is the *reusable* half — a
+//! contract-driven case matrix that any registered backend runs for free,
+//! and that a future backend (GPU, exact-kernel PJRT) inherits by adding
+//! an [`EngineKind`](crate::runtime::EngineKind) variant and a
+//! [`EngineContract`].
+//!
+//! For every backend the harness exercises **all five primitives**
+//! (`update_min`, `update_min_block`, `pairwise_block`, `sums_to_set`,
+//! `dists_to_points`) over a dataset matrix covering both metrics,
+//! odd/even `n`, `dim = 1` (lane-remainder paths), `n = 1`, zero-distance
+//! (all-duplicate-point) datasets, and one size large enough to engage the
+//! scoped-thread fan-out — with duplicate ids, duplicate targets, and
+//! self-pairs in every index-list shape.  (`dim = 0` is absent by
+//! construction: `Dataset::new` rejects it, see `core/dataset.rs`.)
+//!
+//! Checks per backend, driven by its declared [`EngineContract`]:
+//!
+//! * **oracle agreement** — bit-identity ([`IdentityLevel::BitExact`]) or
+//!   an absolute bound ([`IdentityLevel::AbsTol`]) against
+//!   [`ScalarEngine`], per metric;
+//! * **determinism** — repeated calls on one instance are bit-identical;
+//! * **thread invariance** — a 1-worker and a multi-worker instance emit
+//!   bit-identical outputs (chunk boundaries must never change a bit,
+//!   even on tolerance-level metrics);
+//! * **self-pair pinning** — `d(x, x)` entries are exactly zero and
+//!   excluded from sums, on every backend regardless of tolerance (the
+//!   angular cosine metric's raw `d(x, x)` carries ~1e-8 fp noise);
+//! * **fold consistency** — `update_min_block` equals sequential
+//!   `update_min` folds bit for bit on the same instance;
+//! * **row-sum identity** (contract-gated) — summing a `dists_to_points`
+//!   row in target order reproduces the `sums_to_set` entry bitwise, the
+//!   incremental-AMT re-anchor identity.  All CPU backends guarantee it;
+//!   the PJRT backend's f32 kernels are exempt.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::core::{Dataset, Metric};
+use crate::runtime::engine::{DistanceEngine, ScalarEngine};
+use crate::runtime::{build_engine_with_threads, EngineKind};
+use crate::util::rng::Rng;
+
+/// Absolute tolerance of the feature-gated PJRT backend against the
+/// oracle (f32 kernels + padding; the bound `artifacts-check` enforces).
+pub const PJRT_ABS_TOL: f64 = 1e-3;
+
+/// How closely a backend must reproduce the scalar oracle on one metric.
+#[derive(Clone, Copy, Debug)]
+pub enum IdentityLevel {
+    /// Every emitted value equals the oracle's bit for bit.
+    BitExact,
+    /// Every emitted value is within this absolute bound of the oracle's.
+    /// The backend must still be deterministic — the tolerance is against
+    /// the oracle, never against itself.
+    AbsTol(f64),
+}
+
+/// A backend's documented determinism contract (see
+/// [`EngineKind::contract`](crate::runtime::EngineKind::contract)).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineContract {
+    pub euclidean: IdentityLevel,
+    pub cosine: IdentityLevel,
+    /// `dists_to_points` row sums reproduce `sums_to_set` bitwise.
+    pub row_sum_identity: bool,
+}
+
+impl EngineContract {
+    pub fn for_metric(&self, metric: Metric) -> IdentityLevel {
+        match metric {
+            Metric::Euclidean => self.euclidean,
+            Metric::Cosine => self.cosine,
+        }
+    }
+}
+
+fn dataset(metric: Metric, n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let coords: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    let name = format!("conf-{}-n{n}-d{dim}", metric.name());
+    Dataset::new(dim, metric, coords, vec![vec![0]; n], 1, name)
+}
+
+/// All points identical (nonzero coords): every pairwise distance is a
+/// true zero under Euclidean and fp self-noise under cosine — the
+/// zero-distance edge case of the suite.
+fn duplicate_dataset(metric: Metric, n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let row: Vec<f32> = (0..dim).map(|_| 1.0 + rng.normal().abs() as f32).collect();
+    let coords: Vec<f32> = row.iter().copied().cycle().take(n * dim).collect();
+    let name = format!("conf-dup-{}-n{n}-d{dim}", metric.name());
+    Dataset::new(dim, metric, coords, vec![vec![0]; n], 1, name)
+}
+
+/// The case-matrix datasets every backend is checked on.
+pub fn conformance_datasets() -> Vec<Dataset> {
+    let mut out = Vec::new();
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        out.push(dataset(metric, 96, 7, 11)); // even n
+        out.push(dataset(metric, 101, 5, 12)); // odd n
+        out.push(dataset(metric, 33, 1, 13)); // dim 1: remainder-only lanes
+        out.push(dataset(metric, 1, 3, 14)); // single point
+        out.push(duplicate_dataset(metric, 16, 4, 15)); // zero distances
+        out.push(dataset(metric, 9_001, 6, 16)); // engages thread fan-out
+    }
+    out
+}
+
+fn cmp_f64(tag: &str, got: &[f64], want: &[f64], level: IdentityLevel) -> Result<()> {
+    ensure!(
+        got.len() == want.len(),
+        "{tag}: length {} != oracle {}",
+        got.len(),
+        want.len()
+    );
+    for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+        match level {
+            IdentityLevel::BitExact => ensure!(
+                g.to_bits() == w.to_bits(),
+                "{tag}[{idx}]: {g:e} != oracle {w:e} (bit-exact contract)"
+            ),
+            IdentityLevel::AbsTol(tol) => ensure!(
+                (g - w).abs() <= tol,
+                "{tag}[{idx}]: |{g:e} - {w:e}| > {tol:e}"
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn cmp_f32(tag: &str, got: &[f32], want: &[f32], level: IdentityLevel) -> Result<()> {
+    ensure!(
+        got.len() == want.len(),
+        "{tag}: length {} != oracle {}",
+        got.len(),
+        want.len()
+    );
+    for (idx, (g, w)) in got.iter().zip(want).enumerate() {
+        match level {
+            IdentityLevel::BitExact => ensure!(
+                g.to_bits() == w.to_bits(),
+                "{tag}[{idx}]: {g:e} != oracle {w:e} (bit-exact contract)"
+            ),
+            IdentityLevel::AbsTol(tol) => ensure!(
+                (*g as f64 - *w as f64).abs() <= tol,
+                "{tag}[{idx}]: |{g:e} - {w:e}| > {tol:e}"
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn bitwise_f64(tag: &str, a: &[f64], b: &[f64]) -> Result<()> {
+    ensure!(a.len() == b.len(), "{tag}: lengths differ");
+    for (idx, (x, y)) in a.iter().zip(b).enumerate() {
+        ensure!(
+            x.to_bits() == y.to_bits(),
+            "{tag}[{idx}]: {x:e} != {y:e} (determinism / thread invariance)"
+        );
+    }
+    Ok(())
+}
+
+fn bitwise_f32(tag: &str, a: &[f32], b: &[f32]) -> Result<()> {
+    ensure!(a.len() == b.len(), "{tag}: lengths differ");
+    for (idx, (x, y)) in a.iter().zip(b).enumerate() {
+        ensure!(
+            x.to_bits() == y.to_bits(),
+            "{tag}[{idx}]: {x:e} != {y:e} (determinism / thread invariance)"
+        );
+    }
+    Ok(())
+}
+
+/// Index-list shapes for a dataset of `n` points: spread rows with a
+/// duplicate, and a short overlapping column list with a repeat — so every
+/// primitive sees duplicate ids and self-pairs.
+fn case_indices(n: usize) -> (Vec<usize>, Vec<usize>) {
+    let step = (n / 13).max(1);
+    let mut rows: Vec<usize> = (0..n).step_by(step).collect();
+    rows.push(0); // duplicate id
+    let cols: Vec<usize> = vec![0, n / 2, n - 1, 0]; // repeats + overlaps rows
+    (rows, cols)
+}
+
+fn fold_centers(n: usize) -> Vec<(usize, u32)> {
+    // includes a duplicated point with a later id: the strict-< fold must
+    // keep the earliest center on the exact tie
+    vec![(0, 0), (n / 3, 1), (n - 1, 2), (0, 3)]
+}
+
+/// Run the whole case matrix for one backend kind.  `threads = 1` and
+/// `threads = 4` instances are built per dataset; see the module docs for
+/// the checked properties.
+pub fn check_backend(kind: EngineKind) -> Result<()> {
+    let contract = kind.contract();
+    for ds in conformance_datasets() {
+        let e1 = build_engine_with_threads(kind, &ds, 1)
+            .with_context(|| format!("build {} (1 thread)", kind.name()))?;
+        let e4 = build_engine_with_threads(kind, &ds, 4)
+            .with_context(|| format!("build {} (4 threads)", kind.name()))?;
+        check_engine_on(&ds, contract, &*e1, &*e4)
+            .with_context(|| format!("backend {} on {}", kind.name(), ds.name))?;
+    }
+    Ok(())
+}
+
+/// The per-dataset checks, reusable for backends not in the registry:
+/// `e1` and `e4` are two instances of the same backend (ideally with
+/// different worker caps) built for `ds`.
+pub fn check_engine_on(
+    ds: &Dataset,
+    contract: EngineContract,
+    e1: &dyn DistanceEngine,
+    e4: &dyn DistanceEngine,
+) -> Result<()> {
+    let oracle = ScalarEngine::new();
+    let level = contract.for_metric(ds.metric);
+    let n = ds.n();
+    let (rows, cols) = case_indices(n);
+    let centers = fold_centers(n);
+
+    // ---- update_min / update_min_block -------------------------------
+    let mut mo = vec![f32::INFINITY; n];
+    let mut ao = vec![u32::MAX; n];
+    let mut m1 = mo.clone();
+    let mut a1 = ao.clone();
+    let mut m4 = mo.clone();
+    let mut a4 = ao.clone();
+    for &(c, id) in &centers {
+        oracle.update_min(ds, c, id, &mut mo, &mut ao)?;
+        e1.update_min(ds, c, id, &mut m1, &mut a1)?;
+        e4.update_min(ds, c, id, &mut m4, &mut a4)?;
+        bitwise_f32("update_min mind (1 vs 4 workers)", &m1, &m4)?;
+        ensure!(a1 == a4, "update_min arg: thread count changed the argmin");
+        cmp_f32(&format!("update_min mind after center {id}"), &m1, &mo, level)?;
+        match level {
+            IdentityLevel::BitExact => ensure!(
+                a1 == ao,
+                "update_min arg diverged from oracle after center {id}"
+            ),
+            IdentityLevel::AbsTol(_) => {
+                // near-ties may legitimately resolve differently; the arg
+                // must still be one of the folded centers
+                for (i, &a) in a1.iter().enumerate() {
+                    ensure!(
+                        centers.iter().any(|&(_, id2)| id2 == a),
+                        "update_min arg[{i}] = {a} is not a folded center id"
+                    );
+                }
+            }
+        }
+    }
+    // block fold == sequential folds, bit for bit, on the same instance
+    let mut mb = vec![f32::INFINITY; n];
+    let mut ab = vec![u32::MAX; n];
+    e1.update_min_block(ds, &centers, &mut mb, &mut ab)?;
+    bitwise_f32("update_min_block vs sequential folds (mind)", &mb, &m1)?;
+    ensure!(ab == a1, "update_min_block vs sequential folds (arg)");
+
+    // ---- pairwise_block ----------------------------------------------
+    let rect_o = oracle.pairwise_block(ds, &rows, &cols)?;
+    let rect_1 = e1.pairwise_block(ds, &rows, &cols)?;
+    let rect_4 = e4.pairwise_block(ds, &rows, &cols)?;
+    bitwise_f32("pairwise_block rect (1 vs 4 workers)", &rect_1, &rect_4)?;
+    bitwise_f32(
+        "pairwise_block rect (repeat call)",
+        &rect_1,
+        &e1.pairwise_block(ds, &rows, &cols)?,
+    )?;
+    cmp_f32("pairwise_block rect", &rect_1, &rect_o, level)?;
+    // self-pairs exactly zero regardless of tolerance level
+    let width = cols.len();
+    for (r, &i) in rows.iter().enumerate() {
+        for (c, &j) in cols.iter().enumerate() {
+            if i == j {
+                ensure!(
+                    rect_1[r * width + c] == 0.0,
+                    "pairwise_block self-pair ({i},{j}) not a true zero"
+                );
+            }
+        }
+    }
+    // symmetric same-slice tile with a true-zero diagonal
+    let k = n.min(7);
+    let sym: Vec<usize> = (0..k).map(|a| a * (n - 1) / k.max(1)).collect();
+    let sym_o = oracle.pairwise_block(ds, &sym, &sym)?;
+    let sym_1 = e1.pairwise_block(ds, &sym, &sym)?;
+    let sym_4 = e4.pairwise_block(ds, &sym, &sym)?;
+    bitwise_f32("pairwise_block sym (1 vs 4 workers)", &sym_1, &sym_4)?;
+    cmp_f32("pairwise_block sym", &sym_1, &sym_o, level)?;
+    for a in 0..k {
+        ensure!(
+            sym_1[a * k + a] == 0.0,
+            "symmetric tile diagonal [{a}] not a true zero"
+        );
+    }
+    // 1 x 1 self tile and empty shapes
+    ensure!(
+        e1.pairwise_block(ds, &[0], &[0])? == vec![0.0f32],
+        "1x1 self tile must be [0.0]"
+    );
+    ensure!(
+        e1.pairwise_block(ds, &[], &cols)?.is_empty(),
+        "empty rows must yield an empty tile"
+    );
+    ensure!(
+        e1.pairwise_block(ds, &rows, &[])?.is_empty(),
+        "empty cols must yield an empty tile"
+    );
+
+    // ---- sums_to_set --------------------------------------------------
+    let sums_o = oracle.sums_to_set(ds, &rows, &cols)?;
+    let sums_1 = e1.sums_to_set(ds, &rows, &cols)?;
+    let sums_4 = e4.sums_to_set(ds, &rows, &cols)?;
+    bitwise_f64("sums_to_set (1 vs 4 workers)", &sums_1, &sums_4)?;
+    // sums accumulate cols.len() distances: scale the per-distance bound
+    let sums_level = match level {
+        IdentityLevel::BitExact => IdentityLevel::BitExact,
+        IdentityLevel::AbsTol(tol) => IdentityLevel::AbsTol(tol * cols.len() as f64),
+    };
+    cmp_f64("sums_to_set", &sums_1, &sums_o, sums_level)?;
+    // self-pair exclusion is tolerance-free: a candidate against only
+    // itself sums to exactly zero
+    ensure!(
+        e1.sums_to_set(ds, &[n - 1], &[n - 1])? == vec![0.0f64],
+        "sums_to_set self-only set must be exactly [0.0]"
+    );
+    // empty id set and empty candidate list
+    ensure!(
+        e1.sums_to_set(ds, &rows, &[])? == vec![0.0f64; rows.len()],
+        "sums_to_set over an empty set must be all-zero"
+    );
+    ensure!(
+        e1.sums_to_set(ds, &[], &cols)?.is_empty(),
+        "sums_to_set with no candidates must be empty"
+    );
+
+    // ---- dists_to_points ---------------------------------------------
+    let blk_o = oracle.dists_to_points(ds, &rows, &cols)?;
+    let blk_1 = e1.dists_to_points(ds, &rows, &cols)?;
+    let blk_4 = e4.dists_to_points(ds, &rows, &cols)?;
+    bitwise_f64("dists_to_points (1 vs 4 workers)", &blk_1, &blk_4)?;
+    bitwise_f64(
+        "dists_to_points (repeat call)",
+        &blk_1,
+        &e1.dists_to_points(ds, &rows, &cols)?,
+    )?;
+    cmp_f64("dists_to_points", &blk_1, &blk_o, level)?;
+    for (r, &i) in rows.iter().enumerate() {
+        for (c, &j) in cols.iter().enumerate() {
+            if i == j {
+                ensure!(
+                    blk_1[r * width + c] == 0.0,
+                    "dists_to_points self-pair ({i},{j}) not a true zero"
+                );
+            }
+        }
+    }
+    ensure!(
+        e1.dists_to_points(ds, &rows, &[])?.is_empty(),
+        "dists_to_points with empty targets must be empty"
+    );
+    ensure!(
+        e1.dists_to_points(ds, &[], &cols)?.is_empty(),
+        "dists_to_points with empty ids must be empty"
+    );
+
+    // ---- row-sum identity (contract-gated) ---------------------------
+    if contract.row_sum_identity {
+        for (r, want) in sums_1.iter().enumerate() {
+            let resum: f64 = blk_1[r * width..(r + 1) * width].iter().sum();
+            ensure!(
+                resum.to_bits() == want.to_bits(),
+                "row-sum identity broke at row {r}: resummed {resum:e} vs sums_to_set {want:e}"
+            );
+        }
+    }
+
+    // duplicated id rows must reproduce the original rows exactly (the
+    // last rows entry duplicates rows[0])
+    let last = rows.len() - 1;
+    ensure!(
+        blk_1[last * width..(last + 1) * width] == blk_1[..width],
+        "duplicate id row diverged from its original"
+    );
+
+    Ok(())
+}

@@ -177,6 +177,105 @@ pub(crate) fn same_index_slice(a: &[usize], b: &[usize]) -> bool {
     a.len() == b.len() && std::ptr::eq(a.as_ptr(), b.as_ptr())
 }
 
+// ---- shared CPU-backend scaffolding ----------------------------------
+//
+// The batch and simd backends differ only in their inner distance
+// kernels; the cache blocking, worker gating, scoped fan-out shapes, and
+// the symmetric-tile mirror live here so the two backends cannot drift
+// apart structurally (outputs are element-wise independent under every
+// fan-out below, so chunk boundaries and worker count can never change a
+// bit).
+
+/// Points per cache sub-block in the CPU backends' fold path: the center
+/// tile stays register/L1-resident while a block of point rows streams.
+pub(crate) const POINT_BLOCK: usize = 1024;
+
+/// Point-pair count per worker below which thread fan-out does not pay
+/// for the scoped spawns.
+pub(crate) const MIN_PAIRS_PER_WORKER: usize = 8192;
+
+/// Worker count for a call touching `pairs` point pairs under a
+/// `threads` cap.
+pub(crate) fn workers_for(threads: usize, pairs: usize) -> usize {
+    (pairs / MIN_PAIRS_PER_WORKER).clamp(1, threads.max(1))
+}
+
+/// Fan a row-major `rows.len() x width` output over scoped workers:
+/// `work(row_chunk, out_chunk)` gets the id chunk and its matching
+/// output slice.  `workers <= 1` runs inline (no spawn).
+pub(crate) fn fanout_rows<T, F>(workers: usize, rows: &[usize], width: usize, out: &mut [T], work: F)
+where
+    T: Send,
+    F: Fn(&[usize], &mut [T]) + Sync,
+{
+    if workers <= 1 {
+        work(rows, out);
+        return;
+    }
+    let span = rows.len().div_ceil(workers);
+    let work = &work;
+    std::thread::scope(|scope| {
+        for (row_chunk, out_chunk) in rows.chunks(span).zip(out.chunks_mut(span * width)) {
+            scope.spawn(move || work(row_chunk, out_chunk));
+        }
+    });
+}
+
+/// Fan an `n_rows x width` output over scoped workers by row *position*:
+/// `work(base_row, out_chunk)` — for kernels that need the global row
+/// index rather than an id list (the symmetric upper-triangle tile).
+pub(crate) fn fanout_row_positions<T, F>(
+    workers: usize,
+    n_rows: usize,
+    width: usize,
+    out: &mut [T],
+    work: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if workers <= 1 {
+        work(0, out);
+        return;
+    }
+    let span = n_rows.div_ceil(workers);
+    let work = &work;
+    std::thread::scope(|scope| {
+        for (idx, out_chunk) in out.chunks_mut(span * width).enumerate() {
+            scope.spawn(move || work(idx * span, out_chunk));
+        }
+    });
+}
+
+/// Fan the `(mind, arg)` fold state over scoped workers:
+/// `work(base_point, mind_chunk, arg_chunk)`.
+pub(crate) fn fanout_fold_state<F>(workers: usize, mind: &mut [f32], arg: &mut [u32], work: F)
+where
+    F: Fn(usize, &mut [f32], &mut [u32]) + Sync,
+{
+    if workers <= 1 {
+        work(0, mind, arg);
+        return;
+    }
+    let span = mind.len().div_ceil(workers);
+    let work = &work;
+    std::thread::scope(|scope| {
+        for (idx, (m, a)) in mind.chunks_mut(span).zip(arg.chunks_mut(span)).enumerate() {
+            scope.spawn(move || work(idx * span, m, a));
+        }
+    });
+}
+
+/// Mirror the strict upper triangle of a row-major `k x k` tile into the
+/// lower triangle (the second half of the symmetric-tile fast path).
+pub(crate) fn mirror_upper_triangle(out: &mut [f32], k: usize) {
+    for a in 1..k {
+        for b in 0..a {
+            out[a * k + b] = out[b * k + a];
+        }
+    }
+}
+
 /// Plain-Rust scalar backend — the correctness oracle.
 ///
 /// Each instance carries a counter of individual distance evaluations

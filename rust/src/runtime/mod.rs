@@ -1,40 +1,62 @@
-//! Runtime layer: the [`engine::DistanceEngine`] abstraction and its
-//! backends — the scalar oracle, the chunked multi-threaded
-//! [`batch::BatchEngine`] (default), and (behind the `pjrt` feature) the
-//! PJRT backend that executes the AOT-compiled Pallas kernels
-//! (`artifacts/*.hlo.txt`) on the request path.
+//! Runtime layer: the [`engine::DistanceEngine`] abstraction, its
+//! backends, and the backend registry.
+//!
+//! Backends: the scalar oracle, the chunked multi-threaded
+//! [`batch::BatchEngine`] (default), the lane-unrolled
+//! [`simd::SimdEngine`] (deterministic reductions: Euclidean bit-identical
+//! to the oracle, cosine tolerance-bounded), and (behind the `pjrt`
+//! feature) the PJRT backend that executes the AOT-compiled Pallas
+//! kernels (`artifacts/*.hlo.txt`) on the request path.
+//!
+//! The registry is [`EngineKind`]: parsed from `--engine`/`run.engine`,
+//! threaded through `run_pipeline`, the MapReduce per-shard engines, the
+//! streaming restructure tile, and the bench binaries
+//! (`DMMC_BENCH_ENGINE`), so every scenario can A/B backends from one
+//! flag.  Each kind declares its numerics contract
+//! ([`EngineKind::contract`]); the cross-backend conformance harness
+//! ([`conformance`], driven by `rust/tests/engine_conformance.rs`) pins
+//! every registered backend to its contract — a new backend implements
+//! the trait, registers a kind + contract, and inherits the whole suite.
 //!
 //! Python never runs here: `make artifacts` is the only python invocation,
 //! and the Rust binary is self-contained afterwards.
 
 pub mod batch;
+pub mod conformance;
 pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod shapes;
+pub mod simd;
 
 pub use batch::BatchEngine;
+pub use conformance::{EngineContract, IdentityLevel};
 pub use engine::{DistanceEngine, ScalarEngine};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 pub use shapes::{default_artifact_dir, Manifest};
+pub use simd::SimdEngine;
 
 use anyhow::Result;
 
 use crate::core::Dataset;
 
-/// Engine selection for CLI/config.
+/// Engine selection for CLI/config — the backend registry.
 ///
 /// `Batch` is the default: bit-identical to `Scalar` on every path
 /// (min-folds, pairwise tiles, sums — so switching engines never changes
 /// a result, including the five diversity objectives that evaluate
-/// through the tiles), several times faster on multi-core.  `Scalar`
-/// stays the oracle for equivalence tests, and `Pjrt` needs both the
-/// `pjrt` cargo feature and the AOT artifacts on disk (`make artifacts`).
+/// through the tiles), several times faster on multi-core.  `Simd` adds
+/// lane-unrolled inner loops with deterministic reductions (Euclidean
+/// bit-identical, cosine within [`simd::SIMD_COSINE_ABS_TOL`]).  `Scalar`
+/// stays the oracle for equivalence/conformance tests, and `Pjrt` needs
+/// both the `pjrt` cargo feature and the AOT artifacts on disk
+/// (`make artifacts`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     Scalar,
     Batch,
+    Simd,
     Pjrt,
 }
 
@@ -43,6 +65,7 @@ impl EngineKind {
         match s {
             "scalar" => Some(EngineKind::Scalar),
             "batch" => Some(EngineKind::Batch),
+            "simd" => Some(EngineKind::Simd),
             "pjrt" => Some(EngineKind::Pjrt),
             _ => None,
         }
@@ -52,7 +75,51 @@ impl EngineKind {
         match self {
             EngineKind::Scalar => "scalar",
             EngineKind::Batch => "batch",
+            EngineKind::Simd => "simd",
             EngineKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// The backends this binary can construct — what the conformance
+    /// suite iterates.  `Pjrt` appears only when compiled in (it may
+    /// still fail to build at runtime without the AOT artifacts).
+    pub fn registered() -> &'static [EngineKind] {
+        if cfg!(feature = "pjrt") {
+            &[
+                EngineKind::Scalar,
+                EngineKind::Batch,
+                EngineKind::Simd,
+                EngineKind::Pjrt,
+            ]
+        } else {
+            &[EngineKind::Scalar, EngineKind::Batch, EngineKind::Simd]
+        }
+    }
+
+    /// The backend's documented numerics contract, the single source of
+    /// truth the conformance harness enforces (see [`conformance`]).
+    pub fn contract(self) -> EngineContract {
+        match self {
+            // the oracle and the batch backend are bit-exact on every path
+            EngineKind::Scalar | EngineKind::Batch => EngineContract {
+                euclidean: IdentityLevel::BitExact,
+                cosine: IdentityLevel::BitExact,
+                row_sum_identity: true,
+            },
+            // lane-unrolled kernels: Euclidean keeps the oracle's
+            // summation order per lane; cosine tree-reduces its dots
+            EngineKind::Simd => EngineContract {
+                euclidean: IdentityLevel::BitExact,
+                cosine: IdentityLevel::AbsTol(simd::SIMD_COSINE_ABS_TOL),
+                row_sum_identity: true,
+            },
+            // f32 Pallas kernels with padding: tolerance on both metrics,
+            // and its dists_to_points inherits the f32 exemption
+            EngineKind::Pjrt => EngineContract {
+                euclidean: IdentityLevel::AbsTol(conformance::PJRT_ABS_TOL),
+                cosine: IdentityLevel::AbsTol(conformance::PJRT_ABS_TOL),
+                row_sum_identity: false,
+            },
         }
     }
 }
@@ -63,12 +130,13 @@ impl Default for EngineKind {
     }
 }
 
-/// Build an engine of the requested kind for `ds` (PJRT loads artifacts
-/// from the default artifact dir).
+/// Build an engine of the requested kind for `ds` using every available
+/// core (PJRT loads artifacts from the default artifact dir).
 pub fn build_engine(kind: EngineKind, ds: &Dataset) -> Result<Box<dyn DistanceEngine>> {
     match kind {
         EngineKind::Scalar => Ok(Box::new(ScalarEngine::new())),
         EngineKind::Batch => Ok(Box::new(BatchEngine::for_dataset(ds))),
+        EngineKind::Simd => Ok(Box::new(SimdEngine::for_dataset(ds))),
         #[cfg(feature = "pjrt")]
         EngineKind::Pjrt => {
             let manifest = Manifest::load(default_artifact_dir())?;
@@ -79,5 +147,21 @@ pub fn build_engine(kind: EngineKind, ds: &Dataset) -> Result<Box<dyn DistanceEn
             "this binary was built without the `pjrt` feature; \
              rebuild with `cargo build --features pjrt` (and run `make artifacts`)"
         ),
+    }
+}
+
+/// [`build_engine`] with an explicit worker cap — the per-shard
+/// constructor of the MapReduce simulator (and the conformance suite's
+/// thread-invariance axis).  `Scalar` and `Pjrt` have no intra-call
+/// fan-out; the cap is a no-op for them.
+pub fn build_engine_with_threads(
+    kind: EngineKind,
+    ds: &Dataset,
+    threads: usize,
+) -> Result<Box<dyn DistanceEngine>> {
+    match kind {
+        EngineKind::Batch => Ok(Box::new(BatchEngine::with_threads(ds, threads))),
+        EngineKind::Simd => Ok(Box::new(SimdEngine::with_threads(ds, threads))),
+        other => build_engine(other, ds),
     }
 }

@@ -1,0 +1,692 @@
+//! SimdEngine — lane-unrolled CPU backend with deterministic reductions.
+//!
+//! Where [`BatchEngine`](crate::runtime::batch::BatchEngine) wins by cache
+//! blocking and thread fan-out, this backend additionally restructures the
+//! *inner* distance loops into fixed lane patterns that keep several
+//! independent floating-point dependency chains in flight (the shape
+//! auto-vectorizers and superscalar schedulers want), while pinning the
+//! reduction order of every emitted distance so the output is a pure
+//! function of the two point rows — never of call shape, tile boundaries,
+//! chunk size, or worker count.
+//!
+//! Determinism contract (per metric), pinned for every registered backend
+//! by [`crate::runtime::conformance`] and `rust/tests/engine_conformance.rs`:
+//!
+//! * **Euclidean — bit-identical to the scalar oracle.**  Each distance
+//!   accumulates the exact-difference squares `((a_t - b_t) as f64)^2`
+//!   left to right into a single accumulator — the same degenerate
+//!   (left-comb) reduction tree as [`crate::core::metric::euclidean`] —
+//!   so every lane reproduces the oracle bit for bit.  Instruction-level
+//!   parallelism comes from processing [`DIST_LANES`] *points* at once
+//!   (four independent accumulator chains), not from splitting one
+//!   distance's sum.
+//! * **Cosine — deterministic, tolerance-bounded.**  The `<a,b>` terms use
+//!   [`dot_tree4`]: four strided partial sums reduced in the fixed tree
+//!   `(s0 + s1) + (s2 + s3)`.  That reassociation makes the dot product
+//!   (and hence the angular distance) differ from the oracle's sequential
+//!   fold by at most [`SIMD_COSINE_ABS_TOL`] — the bound accounts for the
+//!   `arccos` amplification near parallel vectors — while staying
+//!   bit-reproducible across calls, engines, and thread counts.  The
+//!   squared norms fed to
+//!   [`cosine_angular_from_parts`](crate::core::metric::cosine_angular_from_parts)
+//!   are precomputed with the same tree kernel, so parts stay
+//!   self-consistent.
+//!
+//! Everything else follows the CPU-backend contract of
+//! [`DistanceEngine`]: self-pairs pinned to exactly zero, symmetric
+//! same-slice tiles computed as strict upper triangle + mirror, and
+//! `dists_to_points` row sums bit-identical to `sums_to_set` (the
+//! incremental-AMT re-anchor identity) under **both** metrics.  The
+//! cache blocking, worker gating, and scoped fan-out shapes are the
+//! scaffolding shared with the batch backend
+//! (`runtime::engine::fanout_*`), so the two CPU backends differ only in
+//! their inner kernels.
+
+use anyhow::Result;
+
+use crate::core::metric::cosine_angular_from_parts;
+use crate::core::{Dataset, Metric};
+use crate::runtime::engine::{
+    fanout_fold_state, fanout_row_positions, fanout_rows, mirror_upper_triangle,
+    same_index_slice, workers_for, DistanceEngine, POINT_BLOCK,
+};
+
+/// Independent distance lanes (point rows) processed per unrolled step of
+/// the Euclidean kernels: four separate accumulator chains, each in the
+/// oracle's own summation order.
+pub const DIST_LANES: usize = 4;
+
+/// Absolute tolerance of the cosine (angular) paths against the scalar
+/// oracle.  The tree-reduced dot differs from the sequential fold by a
+/// relative ~`dim * eps`; `arccos` amplifies a similarity error `e` near
+/// `|sim| = 1` to `sqrt(2 e)`, so with `e <~ 1e-13` the angular distance
+/// stays within ~`1.5e-7 / pi`.  `1e-6` leaves an order of magnitude of
+/// headroom and also covers the f32 cast of `pairwise_block` entries.
+pub const SIMD_COSINE_ABS_TOL: f64 = 1e-6;
+
+/// Euclidean distance with the dimension loop unrolled four-wide but the
+/// squared differences still added left to right into ONE accumulator —
+/// bit-identical to [`crate::core::metric::euclidean`] for every input
+/// (the unroll reorders only the subtract/multiply work, never the adds).
+#[inline]
+fn euclid_unrolled(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let mut acc = 0.0f64;
+    let mut t = 0;
+    while t + 4 <= d {
+        let d0 = (a[t] - b[t]) as f64;
+        acc += d0 * d0;
+        let d1 = (a[t + 1] - b[t + 1]) as f64;
+        acc += d1 * d1;
+        let d2 = (a[t + 2] - b[t + 2]) as f64;
+        acc += d2 * d2;
+        let d3 = (a[t + 3] - b[t + 3]) as f64;
+        acc += d3 * d3;
+        t += 4;
+    }
+    while t < d {
+        let dt = (a[t] - b[t]) as f64;
+        acc += dt * dt;
+        t += 1;
+    }
+    acc.sqrt()
+}
+
+/// Four Euclidean distances against a shared row `q` in one dimension
+/// sweep: four independent accumulator chains (the lanes), each adding its
+/// squared differences in index order — every lane is bit-identical to
+/// [`euclid_unrolled`] / the scalar oracle.  `(p - q)^2 == (q - p)^2`
+/// bitwise (IEEE negation is exact), so lane orientation never matters.
+#[inline]
+fn euclid_lane4(p0: &[f32], p1: &[f32], p2: &[f32], p3: &[f32], q: &[f32]) -> [f64; 4] {
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for t in 0..q.len() {
+        let c = q[t];
+        let d0 = (p0[t] - c) as f64;
+        a0 += d0 * d0;
+        let d1 = (p1[t] - c) as f64;
+        a1 += d1 * d1;
+        let d2 = (p2[t] - c) as f64;
+        a2 += d2 * d2;
+        let d3 = (p3[t] - c) as f64;
+        a3 += d3 * d3;
+    }
+    [a0.sqrt(), a1.sqrt(), a2.sqrt(), a3.sqrt()]
+}
+
+/// f64 dot product of two f32 rows via four strided partial sums reduced
+/// in the fixed tree `(s0 + s1) + (s2 + s3)`.
+///
+/// Deterministic by construction — the value depends only on the two rows
+/// (the remainder elements land in fixed lanes `0..d % 4`) — but NOT
+/// bit-identical to the sequential [`crate::core::metric::dot`]; the
+/// difference is what [`SIMD_COSINE_ABS_TOL`] bounds after `arccos`.
+#[inline]
+pub(crate) fn dot_tree4(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut t = 0;
+    while t + 4 <= d {
+        s0 += a[t] as f64 * b[t] as f64;
+        s1 += a[t + 1] as f64 * b[t + 1] as f64;
+        s2 += a[t + 2] as f64 * b[t + 2] as f64;
+        s3 += a[t + 3] as f64 * b[t + 3] as f64;
+        t += 4;
+    }
+    if t < d {
+        s0 += a[t] as f64 * b[t] as f64;
+    }
+    if t + 1 < d {
+        s1 += a[t + 1] as f64 * b[t + 1] as f64;
+    }
+    if t + 2 < d {
+        s2 += a[t + 2] as f64 * b[t + 2] as f64;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// Lane-unrolled CPU distance engine (see the module docs for the
+/// determinism contract).  Construct once per dataset; like the batch and
+/// PJRT engines it precomputes per-dataset state (tree-reduced squared
+/// norms for cosine) and asserts it is fed the same dataset on every call.
+pub struct SimdEngine {
+    metric: Metric,
+    n: usize,
+    threads: usize,
+    /// Per-point squared L2 norms computed with [`dot_tree4`] so the
+    /// cosine parts are self-consistent.  Empty for Euclidean datasets.
+    sqnorms: Vec<f64>,
+}
+
+impl SimdEngine {
+    /// Engine for `ds` using every available core.
+    pub fn for_dataset(ds: &Dataset) -> SimdEngine {
+        let threads = std::thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1);
+        Self::with_threads(ds, threads)
+    }
+
+    /// Engine for `ds` with an explicit worker cap (`1` = never spawn) —
+    /// the per-shard constructor the MapReduce simulator uses.
+    pub fn with_threads(ds: &Dataset, threads: usize) -> SimdEngine {
+        let n = ds.n();
+        let sqnorms = match ds.metric {
+            Metric::Cosine => {
+                let mut sq = vec![0.0f64; n];
+                for (i, s) in sq.iter_mut().enumerate() {
+                    let p = ds.point(i);
+                    *s = dot_tree4(p, p);
+                }
+                sq
+            }
+            Metric::Euclidean => Vec::new(),
+        };
+        SimdEngine {
+            metric: ds.metric,
+            n,
+            threads: threads.max(1),
+            sqnorms,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn check(&self, ds: &Dataset) {
+        assert_eq!(ds.n(), self.n, "engine prepared for a different dataset");
+        assert_eq!(ds.metric, self.metric, "engine prepared for a different metric");
+    }
+
+    /// Cosine angular distance between dataset rows `i` and `j` from the
+    /// tree-reduced dot and the precomputed tree norms.
+    #[inline]
+    fn cos_dist(&self, ds: &Dataset, i: usize, j: usize) -> f64 {
+        cosine_angular_from_parts(
+            dot_tree4(ds.point(i), ds.point(j)),
+            self.sqnorms[i],
+            self.sqnorms[j],
+        )
+    }
+
+    /// Fold `centers` into the state chunk covering global points
+    /// `base..base + mind.len()`; per point the fold order equals the
+    /// caller's order (centers iterate inside each point block, exactly
+    /// like the batch backend).
+    fn fold_chunk(
+        &self,
+        ds: &Dataset,
+        centers: &[(usize, u32)],
+        base: usize,
+        mind: &mut [f32],
+        arg: &mut [u32],
+    ) {
+        let mut start = 0;
+        while start < mind.len() {
+            let end = (start + POINT_BLOCK).min(mind.len());
+            for &(c, id) in centers {
+                let cp = ds.point(c);
+                match self.metric {
+                    Metric::Euclidean => {
+                        let mut i = start;
+                        while i + DIST_LANES <= end {
+                            let d = euclid_lane4(
+                                ds.point(base + i),
+                                ds.point(base + i + 1),
+                                ds.point(base + i + 2),
+                                ds.point(base + i + 3),
+                                cp,
+                            );
+                            for (lane, &dl) in d.iter().enumerate() {
+                                let df = dl as f32;
+                                if df < mind[i + lane] {
+                                    mind[i + lane] = df;
+                                    arg[i + lane] = id;
+                                }
+                            }
+                            i += DIST_LANES;
+                        }
+                        while i < end {
+                            let df = euclid_unrolled(ds.point(base + i), cp) as f32;
+                            if df < mind[i] {
+                                mind[i] = df;
+                                arg[i] = id;
+                            }
+                            i += 1;
+                        }
+                    }
+                    Metric::Cosine => {
+                        // one tree dot per point: the four strided partial
+                        // sums already form independent chains
+                        let bb = self.sqnorms[c];
+                        for i in start..end {
+                            let p = ds.point(base + i);
+                            let d = cosine_angular_from_parts(
+                                dot_tree4(p, cp),
+                                self.sqnorms[base + i],
+                                bb,
+                            ) as f32;
+                            if d < mind[i] {
+                                mind[i] = d;
+                                arg[i] = id;
+                            }
+                        }
+                    }
+                }
+            }
+            start = end;
+        }
+    }
+
+    fn fold(&self, ds: &Dataset, centers: &[(usize, u32)], mind: &mut [f32], arg: &mut [u32]) {
+        self.check(ds);
+        assert_eq!(mind.len(), self.n, "mind length != n");
+        assert_eq!(arg.len(), self.n, "arg length != n");
+        if centers.is_empty() || self.n == 0 {
+            return;
+        }
+        let workers = workers_for(self.threads, self.n.saturating_mul(centers.len()));
+        fanout_fold_state(workers, mind, arg, |base, m, a| {
+            self.fold_chunk(ds, centers, base, m, a)
+        });
+    }
+
+    /// Sums worker: oracle semantics (self-pairs excluded, distances added
+    /// in set order), Euclidean distances produced four lanes at a time.
+    fn sums_chunk(&self, ds: &Dataset, cands: &[usize], set: &[usize], out: &mut [f64]) {
+        let m = set.len();
+        for (slot, &v) in cands.iter().enumerate() {
+            let vp = ds.point(v);
+            let mut s = 0.0f64;
+            match self.metric {
+                Metric::Euclidean => {
+                    let mut j = 0;
+                    while j + DIST_LANES <= m {
+                        let d = euclid_lane4(
+                            ds.point(set[j]),
+                            ds.point(set[j + 1]),
+                            ds.point(set[j + 2]),
+                            ds.point(set[j + 3]),
+                            vp,
+                        );
+                        // the adds stay in set order, matching the oracle
+                        for (lane, &dl) in d.iter().enumerate() {
+                            if set[j + lane] != v {
+                                s += dl;
+                            }
+                        }
+                        j += DIST_LANES;
+                    }
+                    while j < m {
+                        if set[j] != v {
+                            s += euclid_unrolled(vp, ds.point(set[j]));
+                        }
+                        j += 1;
+                    }
+                }
+                Metric::Cosine => {
+                    for &w in set {
+                        if w != v {
+                            s += self.cos_dist(ds, v, w);
+                        }
+                    }
+                }
+            }
+            out[slot] = s;
+        }
+    }
+
+    /// Column-block worker (`out` arrives zeroed, so self-pairs are
+    /// skips): exact f64 entries, Euclidean rows produced four id-lanes at
+    /// a time per target column.
+    fn dists_chunk(&self, ds: &Dataset, ids: &[usize], targets: &[usize], out: &mut [f64]) {
+        let width = targets.len();
+        match self.metric {
+            Metric::Euclidean => {
+                let mut slot = 0;
+                while slot + DIST_LANES <= ids.len() {
+                    let quad = [ids[slot], ids[slot + 1], ids[slot + 2], ids[slot + 3]];
+                    for (c, &j) in targets.iter().enumerate() {
+                        let d = euclid_lane4(
+                            ds.point(quad[0]),
+                            ds.point(quad[1]),
+                            ds.point(quad[2]),
+                            ds.point(quad[3]),
+                            ds.point(j),
+                        );
+                        for (lane, &dl) in d.iter().enumerate() {
+                            if quad[lane] != j {
+                                out[(slot + lane) * width + c] = dl;
+                            }
+                        }
+                    }
+                    slot += DIST_LANES;
+                }
+                while slot < ids.len() {
+                    let i = ids[slot];
+                    let ip = ds.point(i);
+                    for (c, &j) in targets.iter().enumerate() {
+                        if i != j {
+                            out[slot * width + c] = euclid_unrolled(ip, ds.point(j));
+                        }
+                    }
+                    slot += 1;
+                }
+            }
+            Metric::Cosine => {
+                for (slot, &i) in ids.iter().enumerate() {
+                    for (c, &j) in targets.iter().enumerate() {
+                        if i != j {
+                            out[slot * width + c] = self.cos_dist(ds, i, j);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pairwise worker over a row chunk (`out` is the chunk's tile slice,
+    /// arriving zeroed): f32 entries, Euclidean columns in lane groups.
+    fn pairwise_chunk(&self, ds: &Dataset, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        let width = cols.len();
+        for (r, &i) in rows.iter().enumerate() {
+            let ip = ds.point(i);
+            match self.metric {
+                Metric::Euclidean => {
+                    let mut c = 0;
+                    while c + DIST_LANES <= width {
+                        let quad = [cols[c], cols[c + 1], cols[c + 2], cols[c + 3]];
+                        let d = euclid_lane4(
+                            ds.point(quad[0]),
+                            ds.point(quad[1]),
+                            ds.point(quad[2]),
+                            ds.point(quad[3]),
+                            ip,
+                        );
+                        for (lane, &dl) in d.iter().enumerate() {
+                            if quad[lane] != i {
+                                out[r * width + c + lane] = dl as f32;
+                            }
+                        }
+                        c += DIST_LANES;
+                    }
+                    while c < width {
+                        let j = cols[c];
+                        if i != j {
+                            out[r * width + c] = euclid_unrolled(ip, ds.point(j)) as f32;
+                        }
+                        c += 1;
+                    }
+                }
+                Metric::Cosine => {
+                    for (c, &j) in cols.iter().enumerate() {
+                        if i != j {
+                            out[r * width + c] = self.cos_dist(ds, i, j) as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Upper-triangle worker for the symmetric tile: global rows
+    /// `base..base + out.len() / k`, entries `b > a` only (the caller
+    /// mirrors afterwards).
+    fn pairwise_upper_chunk(&self, ds: &Dataset, set: &[usize], base: usize, out: &mut [f32]) {
+        let k = set.len();
+        for (r, row) in out.chunks_mut(k).enumerate() {
+            let a = base + r;
+            let i = set[a];
+            let ip = ds.point(i);
+            match self.metric {
+                Metric::Euclidean => {
+                    let mut b = a + 1;
+                    while b + DIST_LANES <= k {
+                        let d = euclid_lane4(
+                            ds.point(set[b]),
+                            ds.point(set[b + 1]),
+                            ds.point(set[b + 2]),
+                            ds.point(set[b + 3]),
+                            ip,
+                        );
+                        for (lane, &dl) in d.iter().enumerate() {
+                            row[b + lane] = dl as f32;
+                        }
+                        b += DIST_LANES;
+                    }
+                    while b < k {
+                        row[b] = euclid_unrolled(ip, ds.point(set[b])) as f32;
+                        b += 1;
+                    }
+                }
+                Metric::Cosine => {
+                    for b in (a + 1)..k {
+                        row[b] = self.cos_dist(ds, i, set[b]) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl DistanceEngine for SimdEngine {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn update_min(
+        &self,
+        ds: &Dataset,
+        center: usize,
+        center_id: u32,
+        mind: &mut [f32],
+        arg: &mut [u32],
+    ) -> Result<()> {
+        self.fold(ds, &[(center, center_id)], mind, arg);
+        Ok(())
+    }
+
+    fn update_min_block(
+        &self,
+        ds: &Dataset,
+        centers: &[(usize, u32)],
+        mind: &mut [f32],
+        arg: &mut [u32],
+    ) -> Result<()> {
+        self.fold(ds, centers, mind, arg);
+        Ok(())
+    }
+
+    fn pairwise_block(&self, ds: &Dataset, rows: &[usize], cols: &[usize]) -> Result<Vec<f32>> {
+        self.check(ds);
+        let width = cols.len();
+        let mut out = vec![0.0f32; rows.len() * width];
+        if rows.is_empty() || width == 0 {
+            return Ok(out);
+        }
+        if same_index_slice(rows, cols) {
+            let k = rows.len();
+            let workers = workers_for(self.threads, k * k.saturating_sub(1) / 2);
+            fanout_row_positions(workers, k, k, &mut out, |base, out_chunk| {
+                self.pairwise_upper_chunk(ds, rows, base, out_chunk)
+            });
+            mirror_upper_triangle(&mut out, k);
+            return Ok(out);
+        }
+        let workers = workers_for(self.threads, rows.len().saturating_mul(width));
+        fanout_rows(workers, rows, width, &mut out, |row_chunk, out_chunk| {
+            self.pairwise_chunk(ds, row_chunk, cols, out_chunk)
+        });
+        Ok(out)
+    }
+
+    fn sums_to_set(&self, ds: &Dataset, candidates: &[usize], set: &[usize]) -> Result<Vec<f64>> {
+        self.check(ds);
+        let mut out = vec![0.0f64; candidates.len()];
+        if candidates.is_empty() || set.is_empty() {
+            return Ok(out);
+        }
+        let workers = workers_for(self.threads, candidates.len().saturating_mul(set.len()));
+        fanout_rows(workers, candidates, 1, &mut out, |cand_chunk, out_chunk| {
+            self.sums_chunk(ds, cand_chunk, set, out_chunk)
+        });
+        Ok(out)
+    }
+
+    fn dists_to_points(&self, ds: &Dataset, ids: &[usize], targets: &[usize]) -> Result<Vec<f64>> {
+        self.check(ds);
+        let width = targets.len();
+        let mut out = vec![0.0f64; ids.len() * width];
+        if ids.is_empty() || width == 0 {
+            return Ok(out);
+        }
+        let workers = workers_for(self.threads, ids.len().saturating_mul(width));
+        fanout_rows(workers, ids, width, &mut out, |id_chunk, out_chunk| {
+            self.dists_chunk(ds, id_chunk, targets, out_chunk)
+        });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::metric::{dot, euclidean};
+    use crate::data::synth;
+    use crate::runtime::engine::ScalarEngine;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn euclid_kernels_bit_identical_to_oracle() {
+        // every dim hits a different remainder path of the unroll
+        let mut rng = Rng::new(5);
+        for dim in 1..=9 {
+            let a: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let c: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let d: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            assert_eq!(
+                euclid_unrolled(&a, &q).to_bits(),
+                euclidean(&a, &q).to_bits(),
+                "dim {dim}"
+            );
+            let lanes = euclid_lane4(&a, &b, &c, &d, &q);
+            for (lane, p) in [&a, &b, &c, &d].into_iter().enumerate() {
+                assert_eq!(
+                    lanes[lane].to_bits(),
+                    euclidean(p, &q).to_bits(),
+                    "dim {dim} lane {lane}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_tree4_deterministic_and_within_tolerance() {
+        let mut rng = Rng::new(7);
+        for dim in 1..=10 {
+            let a: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let t1 = dot_tree4(&a, &b);
+            let t2 = dot_tree4(&a, &b);
+            assert_eq!(t1.to_bits(), t2.to_bits(), "dim {dim}: not deterministic");
+            let seq = dot(&a, &b);
+            assert!(
+                (t1 - seq).abs() <= 1e-10 * seq.abs().max(1.0),
+                "dim {dim}: tree {t1} vs sequential {seq}"
+            );
+        }
+    }
+
+    #[test]
+    fn euclidean_paths_bit_identical_to_scalar() {
+        let ds = synth::uniform_cube(517, 7, 3); // odd n, odd dim
+        let simd = SimdEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
+        let n = ds.n();
+        let (mut ms, mut as_) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        let (mut mv, mut av) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        for (id, c) in [0usize, 100, 516].into_iter().enumerate() {
+            scalar.update_min(&ds, c, id as u32, &mut ms, &mut as_).unwrap();
+            simd.update_min(&ds, c, id as u32, &mut mv, &mut av).unwrap();
+        }
+        assert_eq!(ms, mv);
+        assert_eq!(as_, av);
+        let ids: Vec<usize> = (0..n).collect();
+        let set: Vec<usize> = vec![3, 77, 150, 299, 3];
+        assert_eq!(
+            scalar.sums_to_set(&ds, &ids, &set).unwrap(),
+            simd.sums_to_set(&ds, &ids, &set).unwrap()
+        );
+        assert_eq!(
+            scalar.dists_to_points(&ds, &ids, &set).unwrap(),
+            simd.dists_to_points(&ds, &ids, &set).unwrap()
+        );
+        assert_eq!(
+            scalar.pairwise_block(&ds, &ids, &set).unwrap(),
+            simd.pairwise_block(&ds, &ids, &set).unwrap()
+        );
+    }
+
+    #[test]
+    fn cosine_paths_within_documented_tolerance() {
+        let ds = synth::wikisim(301, 9); // cosine metric
+        let simd = SimdEngine::for_dataset(&ds);
+        let scalar = ScalarEngine::new();
+        let ids: Vec<usize> = (0..ds.n()).collect();
+        let set: Vec<usize> = vec![5, 100, 200, 300, 5];
+        let ss = scalar.sums_to_set(&ds, &ids, &set).unwrap();
+        let sv = simd.sums_to_set(&ds, &ids, &set).unwrap();
+        for (a, b) in ss.iter().zip(&sv) {
+            // sums of 4-5 distances: tolerance scales with the set size
+            assert!((a - b).abs() <= set.len() as f64 * SIMD_COSINE_ABS_TOL);
+        }
+        let ds_block = scalar.dists_to_points(&ds, &ids, &set).unwrap();
+        let sv_block = simd.dists_to_points(&ds, &ids, &set).unwrap();
+        for (a, b) in ds_block.iter().zip(&sv_block) {
+            assert!((a - b).abs() <= SIMD_COSINE_ABS_TOL);
+        }
+        // self-pairs pinned to a true zero despite cosine fp self-noise
+        assert_eq!(sv_block[5 * set.len()], 0.0);
+        assert_eq!(sv_block[5 * set.len() + 4], 0.0);
+    }
+
+    #[test]
+    fn thread_count_cannot_change_output() {
+        // cosine: both the tree dot and the fan-out must be shape-blind
+        let ds = synth::wikisim(20_011, 4);
+        let single = SimdEngine::with_threads(&ds, 1);
+        let many = SimdEngine::with_threads(&ds, 8);
+        let n = ds.n();
+        let centers: Vec<(usize, u32)> = vec![(0, 0), (n / 2, 1), (n - 1, 2)];
+        let (mut m1, mut a1) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        let (mut m8, mut a8) = (vec![f32::INFINITY; n], vec![u32::MAX; n]);
+        single.update_min_block(&ds, &centers, &mut m1, &mut a1).unwrap();
+        many.update_min_block(&ds, &centers, &mut m8, &mut a8).unwrap();
+        assert_eq!(m1, m8);
+        assert_eq!(a1, a8);
+        let ids: Vec<usize> = (0..n).step_by(3).collect();
+        let targets: Vec<usize> = vec![1, 2, 20_010];
+        assert_eq!(
+            single.dists_to_points(&ds, &ids, &targets).unwrap(),
+            many.dists_to_points(&ds, &ids, &targets).unwrap()
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_dataset() {
+        let ds = synth::uniform_cube(64, 2, 1);
+        let other = synth::uniform_cube(65, 2, 1);
+        let simd = SimdEngine::for_dataset(&ds);
+        let mut m = vec![f32::INFINITY; 65];
+        let mut a = vec![u32::MAX; 65];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            simd.update_min(&other, 0, 0, &mut m, &mut a).unwrap();
+        }));
+        assert!(res.is_err());
+    }
+}

@@ -17,6 +17,7 @@ use crate::core::Dataset;
 use crate::diversity::{diversity_with_engine, Objective};
 use crate::matroid::Matroid;
 use crate::runtime::engine::DistanceEngine;
+use crate::runtime::{build_engine, EngineKind};
 
 /// How the streaming algorithm is parameterized.
 #[derive(Clone, Copy, Debug)]
@@ -54,7 +55,8 @@ impl StreamReport {
 }
 
 /// Run one streaming pass over `order` (a permutation of `0..ds.n()`, or
-/// any index sequence — the "stream").
+/// any index sequence — the "stream") with the default scalar restructure
+/// engine (the §5.2 cost model's configuration).
 pub fn run_stream(
     ds: &Dataset,
     m: &dyn Matroid,
@@ -62,24 +64,54 @@ pub fn run_stream(
     mode: StreamMode,
     order: &[usize],
 ) -> StreamReport {
+    run_stream_with_engine(ds, m, k, mode, order, EngineKind::Scalar)
+        .expect("scalar engine construction cannot fail")
+}
+
+/// [`run_stream`] with a registry-selected backend for the restructure
+/// re-assignment tiles — the streaming arm of the engine A/B axis
+/// (`run_pipeline` threads `Pipeline::engine` through here).  The engine
+/// build is part of the timed pass, mirroring `run_pipeline`'s coreset
+/// phase accounting; it can fail only for backends with external
+/// dependencies (PJRT artifacts).
+///
+/// Accounting caveats: `StreamStats::peak_memory_points` counts delegate
+/// points only (the §5.2 working-set measure) — a non-scalar engine on a
+/// *cosine* dataset additionally holds its O(n) precomputed norms, state
+/// the pipeline's finisher/evaluator engine carries anyway (Euclidean
+/// backends skip the precompute entirely).  Restructure tie-breaks read
+/// the engine's f32 tile, so a tolerance-level backend (simd-on-cosine,
+/// pjrt) may legitimately restructure slightly differently than the
+/// bit-exact backends; `distance_evals` counts tile entries either way.
+pub fn run_stream_with_engine(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    mode: StreamMode,
+    order: &[usize],
+    engine: EngineKind,
+) -> Result<StreamReport> {
     let t0 = Instant::now();
     let mut alg = match mode {
         StreamMode::Epsilon(eps) => StreamCoreset::new(ds, m, k, eps, DEFAULT_C),
         StreamMode::Tau(tau) => StreamCoreset::with_tau(ds, m, k, tau),
     };
+    if engine != EngineKind::Scalar {
+        alg.set_engine(build_engine(engine, ds)?);
+    }
     for &x in order {
         alg.push(x);
     }
     let (coreset, stats) = alg.finish();
     let elapsed = t0.elapsed();
     let throughput = order.len() as f64 / elapsed.as_secs_f64().max(1e-12);
-    StreamReport {
+    Ok(StreamReport {
         coreset,
         stats,
         passes: 1,
         elapsed,
         throughput,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -105,6 +137,26 @@ mod tests {
             .coreset_diversity(&ds, Objective::Sum, &ScalarEngine::new())
             .unwrap();
         assert!(d > 0.0);
+    }
+
+    #[test]
+    fn engine_kinds_thread_through_streaming() {
+        let ds = synth::uniform_cube(400, 2, 3);
+        let m = UniformMatroid::new(3);
+        let order: Vec<usize> = (0..ds.n()).collect();
+        let base = run_stream(&ds, &m, 3, StreamMode::Tau(12), &order);
+        for kind in [EngineKind::Batch, EngineKind::Simd] {
+            let rep =
+                run_stream_with_engine(&ds, &m, 3, StreamMode::Tau(12), &order, kind).unwrap();
+            // Euclidean restructure tiles are bit-identical across the
+            // CPU backends, so the coreset cannot depend on the choice
+            assert_eq!(
+                rep.coreset.indices,
+                base.coreset.indices,
+                "engine {} changed the stream coreset",
+                kind.name()
+            );
+        }
     }
 
     #[test]

@@ -131,7 +131,11 @@ fn second_round_recompression_keeps_quality() {
     let two_round = run_pipeline(
         &ds, &m, k, Objective::Sum,
         pipe(
-            Setting::MapReduce { workers: 8, budget: Budget::Clusters(8), second_round_tau: Some(16) },
+            Setting::MapReduce {
+                workers: 8,
+                budget: Budget::Clusters(8),
+                second_round_tau: Some(16),
+            },
             Finisher::LocalSearch { gamma: 0.0 },
         ),
         7,
@@ -152,7 +156,10 @@ fn dataset_permutation_stability() {
     for seed in 0..4u64 {
         let out = run_pipeline(
             &ds, &m, k, Objective::Sum,
-            pipe(Setting::Stream { mode: StreamMode::Tau(24) }, Finisher::LocalSearch { gamma: 0.0 }),
+            pipe(
+                Setting::Stream { mode: StreamMode::Tau(24) },
+                Finisher::LocalSearch { gamma: 0.0 },
+            ),
             seed,
         ).unwrap();
         divs.push(out.diversity);

@@ -1,0 +1,155 @@
+//! Cross-backend conformance: every registered [`DistanceEngine`] backend
+//! runs the same per-primitive case matrix (all five primitives, both
+//! metrics, odd/even n, dim 1, single-point and zero-distance datasets,
+//! duplicate ids, self-pairs, empty shapes) against the scalar oracle
+//! under its declared contract — see `runtime::conformance` for the
+//! harness and `EngineKind::contract` for the per-backend contracts.
+//!
+//! CI runs this suite by name (`cargo test -q --test engine_conformance`)
+//! so a backend regression fails with a readable job label.
+
+use matroid_coreset::core::{Dataset, Metric};
+use matroid_coreset::prop_assert;
+use matroid_coreset::proptest::check;
+use matroid_coreset::runtime::conformance::check_backend;
+use matroid_coreset::runtime::{
+    build_engine_with_threads, DistanceEngine, EngineKind, IdentityLevel, ScalarEngine,
+};
+
+// One named test per backend: a regression reads as
+// `conformance_<backend>` in the CI log, not as a generic loop failure.
+
+#[test]
+fn conformance_scalar() {
+    // the oracle through its own harness — a self-consistency check that
+    // also guards the harness against drifting from the trait contract
+    check_backend(EngineKind::Scalar).unwrap();
+}
+
+#[test]
+fn conformance_batch() {
+    check_backend(EngineKind::Batch).unwrap();
+}
+
+#[test]
+fn conformance_simd() {
+    check_backend(EngineKind::Simd).unwrap();
+}
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn conformance_pjrt() {
+    use matroid_coreset::runtime::{default_artifact_dir, Manifest};
+    // same policy as the ablation bench: the backend needs the AOT
+    // artifacts on disk; absence is an environment gap, not a regression
+    if Manifest::load(default_artifact_dir()).is_err() {
+        eprintln!("SKIP: pjrt artifacts missing (run `make artifacts`)");
+        return;
+    }
+    check_backend(EngineKind::Pjrt).unwrap();
+}
+
+#[test]
+fn registry_is_closed_under_parse() {
+    let kinds = EngineKind::registered();
+    assert!(kinds.contains(&EngineKind::Scalar));
+    assert!(kinds.contains(&EngineKind::Batch));
+    assert!(kinds.contains(&EngineKind::Simd));
+    for &kind in kinds {
+        assert_eq!(EngineKind::parse(kind.name()), Some(kind), "{}", kind.name());
+    }
+    assert_eq!(EngineKind::parse("nope"), None);
+}
+
+/// Differential fuzzing: random datasets and call shapes through **all**
+/// registered backends simultaneously, each judged against the oracle
+/// under its own contract.  Complements the fixed case matrix with the
+/// shapes nobody thought to enumerate.
+#[test]
+fn prop_differential_all_backends_agree() {
+    check("engine-differential", 25, |g| {
+        let n = g.usize_in(2, 40);
+        let dim = g.usize_in(1, 9);
+        let metric = if g.rng.below(2) == 0 {
+            Metric::Euclidean
+        } else {
+            Metric::Cosine
+        };
+        let coords = g.vec_f32(n * dim, 1.5);
+        let ds = Dataset::new(dim, metric, coords, vec![vec![0]; n], 1, "fuzz");
+        // random index lists with duplicates and self-pair overlaps
+        let n_rows = g.usize_in(1, n);
+        let rows: Vec<usize> = (0..n_rows).map(|_| g.rng.below(n)).collect();
+        let n_cols = g.usize_in(1, 6);
+        let cols: Vec<usize> = (0..n_cols).map(|_| g.rng.below(n)).collect();
+        let center = g.rng.below(n);
+
+        let oracle = ScalarEngine::new();
+        let sums_o = oracle.sums_to_set(&ds, &rows, &cols).map_err(|e| e.to_string())?;
+        let blk_o = oracle.dists_to_points(&ds, &rows, &cols).map_err(|e| e.to_string())?;
+        let tile_o = oracle.pairwise_block(&ds, &rows, &cols).map_err(|e| e.to_string())?;
+        let mut mind_o = vec![f32::INFINITY; n];
+        let mut arg_o = vec![u32::MAX; n];
+        oracle
+            .update_min(&ds, center, 7, &mut mind_o, &mut arg_o)
+            .map_err(|e| e.to_string())?;
+
+        for &kind in EngineKind::registered() {
+            if kind == EngineKind::Scalar {
+                continue;
+            }
+            // pjrt without artifacts on disk cannot construct — skip it,
+            // never fail the property for an environment gap
+            let Ok(engine) = build_engine_with_threads(kind, &ds, 2) else {
+                continue;
+            };
+            let level = kind.contract().for_metric(metric);
+            let ok_f64 = |a: f64, b: f64, scale: f64| match level {
+                IdentityLevel::BitExact => a.to_bits() == b.to_bits(),
+                IdentityLevel::AbsTol(tol) => (a - b).abs() <= tol * scale,
+            };
+            let sums = engine.sums_to_set(&ds, &rows, &cols).map_err(|e| e.to_string())?;
+            for (i, (a, b)) in sums.iter().zip(&sums_o).enumerate() {
+                prop_assert!(
+                    ok_f64(*a, *b, cols.len() as f64),
+                    "{}/{metric:?}: sums[{i}] {a} vs oracle {b}",
+                    kind.name()
+                );
+            }
+            let blk = engine.dists_to_points(&ds, &rows, &cols).map_err(|e| e.to_string())?;
+            for (i, (a, b)) in blk.iter().zip(&blk_o).enumerate() {
+                prop_assert!(
+                    ok_f64(*a, *b, 1.0),
+                    "{}/{metric:?}: dists[{i}] {a} vs oracle {b}",
+                    kind.name()
+                );
+            }
+            let tile = engine.pairwise_block(&ds, &rows, &cols).map_err(|e| e.to_string())?;
+            for (i, (a, b)) in tile.iter().zip(&tile_o).enumerate() {
+                prop_assert!(
+                    ok_f64(*a as f64, *b as f64, 1.0),
+                    "{}/{metric:?}: tile[{i}] {a} vs oracle {b}",
+                    kind.name()
+                );
+            }
+            let mut mind = vec![f32::INFINITY; n];
+            let mut arg = vec![u32::MAX; n];
+            engine
+                .update_min(&ds, center, 7, &mut mind, &mut arg)
+                .map_err(|e| e.to_string())?;
+            for (i, (a, b)) in mind.iter().zip(&mind_o).enumerate() {
+                prop_assert!(
+                    ok_f64(*a as f64, *b as f64, 1.0),
+                    "{}/{metric:?}: mind[{i}] {a} vs oracle {b}",
+                    kind.name()
+                );
+            }
+            prop_assert!(
+                arg.iter().all(|&a| a == 7),
+                "{}/{metric:?}: single-center fold must assign every point",
+                kind.name()
+            );
+        }
+        Ok(())
+    });
+}

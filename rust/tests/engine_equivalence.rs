@@ -15,6 +15,13 @@
 //! backend (odd sizes and the k = 0/1/2 edge cases included), and an
 //! evaluation-count regression pins that the evaluator does no duplicate
 //! distance work.
+//!
+//! The *per-primitive* backend matrix (every primitive x metric x edge
+//! case, for every registered backend under its declared contract) has
+//! been extracted into the reusable conformance harness —
+//! `runtime::conformance`, driven by `rust/tests/engine_conformance.rs`.
+//! This file remains the deep large-`n` batch-vs-scalar pin plus the
+//! consumer-layer (evaluator / seq_coreset) identity checks.
 
 use matroid_coreset::algo::exhaustive::exhaustive_best;
 use matroid_coreset::core::{Dataset, Metric};
@@ -22,7 +29,7 @@ use matroid_coreset::data::synth;
 use matroid_coreset::diversity::{Evaluator, Objective, ALL_OBJECTIVES};
 use matroid_coreset::matroid::UniformMatroid;
 use matroid_coreset::runtime::engine::{DistanceEngine, ScalarEngine};
-use matroid_coreset::runtime::BatchEngine;
+use matroid_coreset::runtime::{BatchEngine, SimdEngine};
 use matroid_coreset::util::rng::Rng;
 
 /// A dataset under `metric` with an awkward n (not a multiple of the
@@ -335,4 +342,39 @@ fn seq_coreset_identical_across_engines() {
     assert_eq!(a.indices, b.indices);
     assert_eq!(a.n_clusters, b.n_clusters);
     assert_eq!(a.radius, b.radius);
+    // simd is bit-exact on Euclidean datasets, so the GMM trajectory (an
+    // argmax over the folded min-dists) cannot move either
+    let c = seq_coreset(&ds, &m, 6, Budget::Clusters(20), &SimdEngine::for_dataset(&ds)).unwrap();
+    assert_eq!(a.indices, c.indices);
+    assert_eq!(a.radius, c.radius);
+}
+
+#[test]
+fn diversity_evaluator_bit_identical_under_simd_on_euclidean() {
+    // the consumer-layer restatement of the simd Euclidean contract: the
+    // submatrix and every Table-1 objective value must match the oracle
+    // bit for bit (cosine is tolerance-level and covered by the
+    // conformance suite instead)
+    let ds = dataset(Metric::Euclidean, 601, 9, 7);
+    let simd = SimdEngine::for_dataset(&ds);
+    let scalar = ScalarEngine::new();
+    let es = Evaluator::new(&scalar);
+    let ev = Evaluator::new(&simd);
+    let mut rng = Rng::new(17);
+    for k in [0usize, 1, 2, 3, 5, 8, 13, 17] {
+        let set = rng.sample_indices(ds.n(), k);
+        assert_eq!(
+            es.submatrix(&ds, &set).unwrap(),
+            ev.submatrix(&ds, &set).unwrap(),
+            "submatrix diverged under simd at k={k}"
+        );
+        for obj in ALL_OBJECTIVES {
+            let a = es.diversity(&ds, &set, obj).unwrap();
+            let b = ev.diversity(&ds, &set, obj).unwrap();
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "simd {obj:?} k={k}: scalar {a} vs simd {b}"
+            );
+        }
+    }
 }

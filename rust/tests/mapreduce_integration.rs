@@ -6,7 +6,7 @@ use matroid_coreset::data::synth;
 use matroid_coreset::diversity::Objective;
 use matroid_coreset::mapreduce::{mr_coreset, MapReduceConfig};
 use matroid_coreset::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
-use matroid_coreset::runtime::ScalarEngine;
+use matroid_coreset::runtime::{EngineKind, ScalarEngine};
 
 fn cfg(workers: usize, tau: usize, seed: u64) -> MapReduceConfig {
     MapReduceConfig {
@@ -14,6 +14,7 @@ fn cfg(workers: usize, tau: usize, seed: u64) -> MapReduceConfig {
         budget: Budget::Clusters(tau),
         second_round_tau: None,
         seed,
+        engine: EngineKind::default(),
     }
 }
 

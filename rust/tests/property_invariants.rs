@@ -9,7 +9,9 @@ use matroid_coreset::algo::seq_coreset::seq_coreset;
 use matroid_coreset::algo::stream_coreset::stream_coreset_tau;
 use matroid_coreset::algo::Budget;
 use matroid_coreset::core::{Dataset, Metric};
-use matroid_coreset::diversity::{diversity, diversity_with_engine, mst, tsp, Objective, ALL_OBJECTIVES};
+use matroid_coreset::diversity::{
+    diversity, diversity_with_engine, mst, tsp, Objective, ALL_OBJECTIVES,
+};
 use matroid_coreset::matroid::{
     maximal_independent, Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid,
 };
