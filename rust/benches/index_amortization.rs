@@ -1,0 +1,185 @@
+//! Index amortization — the serving scenario the composable coreset index
+//! exists for: N `(objective, k)` queries against one dataset.
+//!
+//! Three columns per testbed:
+//!
+//! * `pipeline xN`  — the status quo: N independent `run_pipeline` calls,
+//!   each rebuilding its coreset from scratch;
+//! * `index+query`  — one tree build (`CoresetIndex::ingest`), then the N
+//!   queries served from the root coreset (cold cache);
+//! * `index cached` — the same N queries repeated, all cache hits.
+//!
+//! Plus an append-latency profile: per-append wall time and nodes touched
+//! as the segment count grows (the O(log segments) claim, measured).
+//!
+//! Env knobs are the shared ones (`DMMC_BENCH_N`, `DMMC_BENCH_RUNS`,
+//! `DMMC_BENCH_SEED`, `DMMC_BENCH_ENGINE`).
+
+use matroid_coreset::algo::Budget;
+use matroid_coreset::bench::scenarios::{bench_engine_kind, bench_n, bench_seed, testbeds};
+use matroid_coreset::bench::{bench_header, time_once, Table};
+use matroid_coreset::coordinator::{run_pipeline, Finisher, Pipeline, Setting};
+use matroid_coreset::csv_row;
+use matroid_coreset::diversity::Objective;
+use matroid_coreset::index::{CoresetIndex, IndexConfig, QueryService, QuerySpec};
+use matroid_coreset::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n();
+    let seed = bench_seed();
+    let ekind = bench_engine_kind();
+    let tau = 64usize;
+    bench_header(
+        "index_amortization",
+        &format!(
+            "Query service vs repeated pipelines (n={n}, tau={tau}, engine={})",
+            ekind.name()
+        ),
+    );
+    let mut csv = CsvWriter::create(
+        "bench_results/index_amortization.csv",
+        &["dataset", "mode", "queries", "total_s", "per_query_s", "diversity_k4"],
+    )?;
+    let mut append_csv = CsvWriter::create(
+        "bench_results/index_append.csv",
+        &["dataset", "segment", "nodes_touched", "dist_evals", "append_s", "root_size"],
+    )?;
+
+    for bed in testbeds(n, seed) {
+        let k_max = (bed.rank / 4).max(4);
+        // the query mix: a small k-sweep, the repeated-traffic shape the
+        // index amortizes (every query shares the one root coreset)
+        let ks: Vec<usize> = [2usize, 3, 4, 6, 8]
+            .into_iter()
+            .filter(|&k| k <= k_max)
+            .collect();
+        let segment = (bed.ds.n() / 16).max(1);
+
+        // -- status quo: one full pipeline per query ---------------------
+        let mut div_k4 = 0.0f64;
+        let (_, pipeline_s) = time_once(|| {
+            for &k in &ks {
+                let out = run_pipeline(
+                    &bed.ds,
+                    &bed.matroid,
+                    k,
+                    Objective::Sum,
+                    Pipeline {
+                        setting: Setting::Seq {
+                            budget: Budget::Clusters(tau),
+                        },
+                        finisher: Finisher::LocalSearch { gamma: 0.0 },
+                        engine: ekind,
+                    },
+                    seed,
+                )
+                .expect("pipeline");
+                if k == 4 {
+                    div_k4 = out.diversity;
+                }
+            }
+        });
+
+        // -- index build + cold queries + cached repeats -----------------
+        let cfg = IndexConfig {
+            k_max,
+            leaf_budget: Budget::Clusters(tau),
+            reduce_budget: Budget::Clusters(tau),
+            engine: ekind,
+            leaf_ingest: matroid_coreset::index::LeafIngest::Seq,
+        };
+        let order: Vec<usize> = (0..bed.ds.n()).collect();
+        let mut index = CoresetIndex::new(&bed.ds, &*bed.matroid, cfg);
+        let (receipts, build_s) = time_once(|| {
+            order
+                .chunks(segment)
+                .map(|chunk| {
+                    let (r, dt) = time_once(|| index.append(chunk).expect("append"));
+                    (r, dt)
+                })
+                .collect::<Vec<_>>()
+        });
+        for (r, dt) in &receipts {
+            append_csv.row(&csv_row![
+                bed.name, r.segment, r.nodes_touched, r.dist_evals, dt, r.root_size
+            ])?;
+        }
+        let mut service = QueryService::new(index);
+        let mut idx_div_k4 = 0.0f64;
+        let (_, cold_s) = time_once(|| {
+            for &k in &ks {
+                let out = service
+                    .query(&QuerySpec::sum_local_search(k, ekind))
+                    .expect("query");
+                assert!(!out.cache_hit);
+                if k == 4 {
+                    idx_div_k4 = out.result.diversity;
+                }
+            }
+        });
+        let (_, cached_s) = time_once(|| {
+            for &k in &ks {
+                let out = service
+                    .query(&QuerySpec::sum_local_search(k, ekind))
+                    .expect("query");
+                assert!(out.cache_hit);
+            }
+        });
+
+        let nq = ks.len();
+        let mut table = Table::new(&["mode", "total_s", "per_query_s", "diversity(k=4)"]);
+        table.row(csv_row![
+            format!("pipeline x{nq}"),
+            format!("{pipeline_s:.3}"),
+            format!("{:.3}", pipeline_s / nq as f64),
+            format!("{div_k4:.3}")
+        ]);
+        table.row(csv_row![
+            "index build",
+            format!("{build_s:.3}"),
+            "-",
+            "-"
+        ]);
+        table.row(csv_row![
+            format!("index+query x{nq}"),
+            format!("{:.3}", build_s + cold_s),
+            format!("{:.3}", cold_s / nq as f64),
+            format!("{idx_div_k4:.3}")
+        ]);
+        table.row(csv_row![
+            format!("index cached x{nq}"),
+            format!("{cached_s:.6}"),
+            format!("{:.6}", cached_s / nq as f64),
+            "bit-identical"
+        ]);
+        csv.row(&csv_row![bed.name, "pipeline", nq, pipeline_s, pipeline_s / nq as f64, div_k4])?;
+        csv.row(&csv_row![
+            bed.name,
+            "index_cold",
+            nq,
+            build_s + cold_s,
+            cold_s / nq as f64,
+            idx_div_k4
+        ])?;
+        csv.row(&csv_row![
+            bed.name,
+            "index_cached",
+            nq,
+            cached_s,
+            cached_s / nq as f64,
+            idx_div_k4
+        ])?;
+        println!("\n[{} k_max={k_max} queries={nq}]", bed.name);
+        table.print();
+        println!(
+            "amortization: repeated pipelines / (build + cold queries) = {:.2}x; \
+             cached repeat = {:.1}us/query",
+            pipeline_s / (build_s + cold_s).max(1e-12),
+            cached_s / nq as f64 * 1e6,
+        );
+    }
+    csv.flush()?;
+    append_csv.flush()?;
+    println!("\nCSV -> bench_results/index_amortization.csv, bench_results/index_append.csv");
+    Ok(())
+}

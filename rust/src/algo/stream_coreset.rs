@@ -18,10 +18,13 @@
 //! Charikar et al. [14]), which is how the paper controls coreset size
 //! directly in its experiments.
 
+use anyhow::Result;
+
 use crate::algo::Coreset;
 use crate::core::Dataset;
 use crate::matroid::{maximal_independent, Matroid, MatroidKind};
 use crate::runtime::engine::{DistanceEngine, ScalarEngine};
+use crate::runtime::{build_engine, EngineKind};
 use crate::util::timer::PhaseTimer;
 
 /// Lemma 3 constant.
@@ -65,15 +68,22 @@ pub struct StreamCoreset<'a> {
     seen: usize,
     stats: StreamStats,
     /// Engine for the restructure re-assignment tile (the only
-    /// super-constant distance block in the one-pass algorithm).  Scalar
-    /// by default, not batch: the tile is bounded by the center count
-    /// (far below any fan-out threshold), and a per-dataset engine would
-    /// add the O(n) precompute and memory the streaming model exists to
-    /// avoid.  [`Self::set_engine`] lets the pipeline thread its
+    /// super-constant distance block in the point-at-a-time algorithm).
+    /// Scalar by default, not batch: the tile is bounded by the center
+    /// count (far below any fan-out threshold), and a per-dataset engine
+    /// would add the O(n) precompute and memory the streaming model exists
+    /// to avoid.  [`Self::set_engine_kind`] lets the pipeline thread its
     /// registry-selected backend through anyway (the A/B axis of
     /// `run_stream_with_engine`).  The per-point `push` scan stays
-    /// point-at-a-time — that is the streaming cost model §5.2 measures.
+    /// point-at-a-time — that is the streaming cost model §5.2 measures —
+    /// while [`Self::push_batch`] is the mini-batch arrival mode that
+    /// amortizes the scan through one `update_min_block` fold per batch.
     engine: Box<dyn DistanceEngine>,
+    /// Registry kind behind `engine` — [`Self::push_batch`] builds a
+    /// fresh engine of this kind per batch view (engines carry
+    /// per-dataset state, so the dataset-level instance cannot serve a
+    /// view).
+    engine_kind: EngineKind,
 }
 
 impl<'a> StreamCoreset<'a> {
@@ -102,15 +112,20 @@ impl<'a> StreamCoreset<'a> {
             seen: 0,
             stats: StreamStats::default(),
             engine: Box::new(ScalarEngine::new()),
+            engine_kind: EngineKind::Scalar,
         }
     }
 
-    /// Replace the restructure-tile engine (see the field docs for why
-    /// the default is scalar).  The engine must be built for `ds`;
-    /// distance accounting is unchanged — the §5.2 eval ledger counts
-    /// tile entries, not backend calls.
-    pub fn set_engine(&mut self, engine: Box<dyn DistanceEngine>) {
-        self.engine = engine;
+    /// Select the registry backend for the batched passes (the restructure
+    /// re-assignment tile and the [`Self::push_batch`] nearest-center
+    /// fold; see the field docs for why the default is scalar).  Distance
+    /// accounting is unchanged in kind — the §5.2 eval ledger counts tile
+    /// entries, not backend calls.  Fails only for backends with external
+    /// dependencies (PJRT artifacts).
+    pub fn set_engine_kind(&mut self, kind: EngineKind) -> Result<()> {
+        self.engine = build_engine(kind, self.ds)?;
+        self.engine_kind = kind;
+        Ok(())
     }
 
     #[inline]
@@ -198,6 +213,126 @@ impl<'a> StreamCoreset<'a> {
             }
         }
         self.track_memory();
+    }
+
+    /// Mini-batch arrival mode (the amortized counterpart of [`Self::push`],
+    /// closing the ROADMAP open item): process `xs` in stream order, but
+    /// route the nearest-center scan through one engine
+    /// [`DistanceEngine::update_min_block`] fold per batch instead of a
+    /// point-at-a-time scan per arrival.  The fold runs over a zero-copy
+    /// view of `[current centers ++ batch]`, so each batch pays one
+    /// traversal of `|Z|` centers x (|Z| + batch) points; centers born
+    /// mid-batch are folded in exactly with point-at-a-time f64 scans
+    /// (they are rare), and the batch is re-anchored after every
+    /// restructure so stale fold state is never consulted.  A re-anchor
+    /// discards the unconsumed remainder of one fold, but both modes grow
+    /// `R` geometrically (Diameter sets `r = d1 > 2r`, Radius doubles),
+    /// so a stream triggers at most O(log(spread)) restructures total —
+    /// the discarded work is bounded, not per-point.
+    ///
+    /// Semantics match [`Self::push`] except for one documented f32 edge:
+    /// the engine fold keeps the earliest center among f32-equal
+    /// distances, and the join/threshold decision then re-reads the
+    /// winner's distance in exact f64 (one extra eval per point).  When
+    /// two centers' f64 distances differ but collide in f32 — an
+    /// ulp-level tie — the batch mode may therefore delegate to the
+    /// earlier of the two where the sequential scan picks the true f64
+    /// argmin.  The eval ledger counts the fold tile plus the exact
+    /// re-reads.
+    pub fn push_batch(&mut self, xs: &[usize]) {
+        let mut rest = xs;
+        while !rest.is_empty() {
+            // stream bootstrap (first point / R seeding) stays sequential
+            if self.seen < 2 {
+                self.push(rest[0]);
+                rest = &rest[1..];
+                continue;
+            }
+            let consumed = self.push_batch_chunk(rest);
+            rest = &rest[consumed..];
+        }
+    }
+
+    /// One batched pass over a prefix of `xs`; returns how many points
+    /// were consumed.  Stops early (returning the consumed count) after a
+    /// restructure, because the precomputed fold refers to center
+    /// positions that no longer exist — the caller re-anchors.
+    fn push_batch_chunk(&mut self, xs: &[usize]) -> usize {
+        let c0 = self.centers.len();
+        debug_assert!(c0 >= 1);
+        // zero-copy view [centers ++ batch]: rows 0..c0 are the current
+        // centers (so they double as fold centers by view row), rows
+        // c0.. are the batch points whose nearest-center state we want
+        let mut view_ids: Vec<usize> = Vec::with_capacity(c0 + xs.len());
+        view_ids.extend_from_slice(&self.centers);
+        view_ids.extend_from_slice(xs);
+        let view = self.ds.subset(&view_ids);
+        // per-dataset engine state means the dataset-level instance can't
+        // serve the view; CPU kinds build in O(view) or less (Euclidean
+        // backends skip the norm precompute entirely)
+        let engine = build_engine(self.engine_kind, &view)
+            .expect("batch-view engine construction (kind already built for the dataset)");
+        let vn = view.n();
+        let mut mind = vec![f32::INFINITY; vn];
+        let mut arg = vec![u32::MAX; vn];
+        let centers_pairs: Vec<(usize, u32)> = (0..c0).map(|pos| (pos, pos as u32)).collect();
+        engine
+            .update_min_block(&view, &centers_pairs, &mut mind, &mut arg)
+            .expect("nearest-center fold");
+        // ledger: the fold touches every view point once per center
+        self.stats.distance_evals += (c0 * vn) as u64;
+
+        // center positions appended after the fold (mid-batch births)
+        let mut fresh: Vec<usize> = Vec::new();
+        for (j, &x) in xs.iter().enumerate() {
+            self.seen += 1;
+            self.stats.points_processed += 1;
+
+            // nearest among the start centers from the fold, re-read in
+            // exact f64 (the fold is f32), then refined by the mid-batch
+            // centers the fold has not seen
+            let mut zpos = arg[c0 + j] as usize;
+            let mut zdist = self.dist(x, self.centers[zpos]);
+            for &p in &fresh {
+                let d = self.dist(x, self.centers[p]);
+                if d < zdist {
+                    zdist = d;
+                    zpos = p;
+                }
+            }
+
+            if zdist > self.join_threshold() {
+                fresh.push(self.centers.len());
+                self.centers.push(x);
+                self.delegates.push(vec![x]);
+            } else {
+                self.handle(x, zpos);
+            }
+
+            let mut restructured = false;
+            match self.mode {
+                Mode::Diameter { .. } => {
+                    let d1 = self.dist(x, self.first);
+                    if d1 > 2.0 * self.r {
+                        self.r = d1;
+                        self.restructure();
+                        restructured = true;
+                    }
+                }
+                Mode::Radius { tau } => {
+                    while self.centers.len() > tau {
+                        self.r = if self.r > 0.0 { self.r * 2.0 } else { 1e-30 };
+                        self.restructure();
+                        restructured = true;
+                    }
+                }
+            }
+            self.track_memory();
+            if restructured {
+                return j + 1;
+            }
+        }
+        xs.len()
     }
 
     /// Shrink `Z` to a maximal subset with pairwise distance greater than
@@ -534,6 +669,63 @@ mod tests {
             let sol = crate::matroid::maximal_independent(&m, &ds, &cs.indices, k);
             assert_eq!(sol.len(), k);
         }
+    }
+
+    #[test]
+    fn push_batch_matches_sequential_push() {
+        // Euclidean data: the batched fold's f32 re-read edge needs an
+        // ulp-level distance collision between two centers to diverge from
+        // the sequential f64 scan — absent here, so the coresets and the
+        // center sets must match exactly, for every batch size
+        let ds = synth::uniform_cube(400, 3, 21);
+        let m = UniformMatroid::new(4);
+        let order: Vec<usize> = (0..ds.n()).collect();
+        let mut seq_alg = StreamCoreset::with_tau(&ds, &m, 4, 16);
+        for &x in &order {
+            seq_alg.push(x);
+        }
+        let seq_centers = seq_alg.centers().to_vec();
+        let (seq_cs, seq_stats) = seq_alg.finish();
+        for batch in [1usize, 7, 64, 400] {
+            let mut alg = StreamCoreset::with_tau(&ds, &m, 4, 16);
+            alg.set_engine_kind(EngineKind::Batch).unwrap();
+            for chunk in order.chunks(batch) {
+                alg.push_batch(chunk);
+            }
+            assert_eq!(alg.centers(), &seq_centers[..], "batch={batch}: centers moved");
+            let (cs, stats) = alg.finish();
+            assert_eq!(cs.indices, seq_cs.indices, "batch={batch}: coreset moved");
+            assert_eq!(stats.points_processed, seq_stats.points_processed);
+            assert_eq!(stats.restructures, seq_stats.restructures);
+        }
+    }
+
+    #[test]
+    fn push_batch_invariants_on_cosine_data() {
+        // cosine tiles are tolerance-level under simd/pjrt, so no bitwise
+        // pin here — assert the §5.2 invariants instead: size bound along
+        // the stream, coverage, feasibility of the extracted solution
+        let ds = synth::wikisim(300, 9);
+        let m = TransversalMatroid::new();
+        let (k, tau) = (3, 12);
+        let mut alg = StreamCoreset::with_tau(&ds, &m, k, tau);
+        alg.set_engine_kind(EngineKind::Batch).unwrap();
+        let order: Vec<usize> = (0..ds.n()).collect();
+        for chunk in order.chunks(50) {
+            alg.push_batch(chunk);
+            assert!(alg.n_centers() <= tau, "|Z| exceeded tau mid-stream");
+        }
+        let reach = 8.0 * alg.r_estimate();
+        let zs: Vec<usize> = alg.centers().to_vec();
+        for i in 0..ds.n() {
+            let dmin = zs.iter().map(|&z| ds.dist(i, z)).fold(f64::INFINITY, f64::min);
+            assert!(dmin <= reach + 1e-9);
+        }
+        let (cs, stats) = alg.finish();
+        assert_eq!(stats.points_processed, 300);
+        assert!(stats.distance_evals > 0);
+        let sol = crate::matroid::maximal_independent(&m, &ds, &cs.indices, k);
+        assert!(!sol.is_empty());
     }
 
     #[test]

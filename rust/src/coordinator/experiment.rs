@@ -12,6 +12,7 @@ use crate::algo::seq_coreset::seq_coreset;
 use crate::algo::Budget;
 use crate::core::Dataset;
 use crate::diversity::{diversity_with_engine, Objective};
+use crate::index::{CoresetIndex, IndexConfig, LeafIngest};
 use crate::mapreduce::{mr_coreset, MapReduceConfig};
 use crate::matroid::Matroid;
 use crate::runtime::{build_engine, EngineKind};
@@ -31,6 +32,14 @@ pub enum Setting {
         workers: usize,
         budget: Budget,
         second_round_tau: Option<usize>,
+    },
+    /// Composable coreset index: ingest the (permuted) input in
+    /// `segment_size`-point segments through the merge-and-reduce tree
+    /// and hand the root coreset to the finisher — the standing-structure
+    /// counterpart of the one-shot settings (`crate::index`).
+    Index {
+        segment_size: usize,
+        budget: Budget,
     },
     /// No coreset: the finisher runs on the full input (the AMT baseline).
     Full,
@@ -111,6 +120,8 @@ pub fn run_pipeline<M: Matroid + Sync>(
             extra.insert("peak_memory".into(), rep.stats.peak_memory_points as f64);
             extra.insert("restructures".into(), rep.stats.restructures as f64);
             extra.insert("throughput".into(), rep.throughput);
+            // the §5.2 construction cost model — previously dropped here
+            extra.insert("stream_dist_evals".into(), rep.stats.distance_evals as f64);
             (rep.coreset.indices, dt)
         }
         Setting::MapReduce {
@@ -137,7 +148,48 @@ pub fn run_pipeline<M: Matroid + Sync>(
                 "mr_score_dist_evals".into(),
                 rep.shard_score_dist_evals.iter().sum::<u64>() as f64,
             );
+            // construction ledger: shard GMM folds + optional round-2 pass
+            // (the bulk of MR distance work, previously dropped here)
+            extra.insert(
+                "mr_coreset_dist_evals".into(),
+                (rep.shard_coreset_dist_evals.iter().sum::<u64>() + rep.round2_dist_evals)
+                    as f64,
+            );
             (rep.coreset.indices, dt)
+        }
+        Setting::Index {
+            segment_size,
+            budget,
+        } => {
+            let order = rng.permutation(ds.n());
+            let cfg = IndexConfig {
+                k_max: k,
+                leaf_budget: budget,
+                reduce_budget: budget,
+                engine: pipeline.engine,
+                leaf_ingest: LeafIngest::Seq,
+            };
+            let (built, dt) = time_it(|| {
+                let mut idx = CoresetIndex::new(ds, m, cfg);
+                idx.ingest(&order, segment_size.max(1)).map(|receipts| {
+                    let max_nodes =
+                        receipts.iter().map(|r| r.nodes_touched).max().unwrap_or(0);
+                    (
+                        idx.root(),
+                        idx.segments(),
+                        idx.stats().merges,
+                        idx.stats().dist_evals,
+                        max_nodes,
+                    )
+                })
+            });
+            let (root, segments, merges, dist_evals, max_nodes) = built?;
+            extra.insert("index_segments".into(), segments as f64);
+            extra.insert("index_merges".into(), merges as f64);
+            // index-internal merge work, reported rather than dropped
+            extra.insert("index_dist_evals".into(), dist_evals as f64);
+            extra.insert("index_max_nodes_touched".into(), max_nodes as f64);
+            (root, dt)
         }
         Setting::Full => ((0..ds.n()).collect(), Duration::ZERO),
     };
@@ -250,6 +302,37 @@ mod tests {
         assert_eq!(out.solution.len(), 4);
         assert!(out.diversity > 0.0);
         assert!(out.extra.contains_key("peak_memory"));
+        // the §5.2 construction evals are reported, not dropped
+        assert!(out.extra["stream_dist_evals"] > 0.0);
+    }
+
+    #[test]
+    fn index_setting_runs_and_reports_merge_ledger() {
+        let ds = synth::uniform_cube(400, 2, 5);
+        let m = UniformMatroid::new(4);
+        let out = run_pipeline(
+            &ds,
+            &m,
+            4,
+            Objective::Sum,
+            pipe(
+                Setting::Index {
+                    segment_size: 50,
+                    budget: Budget::Clusters(8),
+                },
+                Finisher::LocalSearch { gamma: 0.0 },
+            ),
+            7,
+        )
+        .unwrap();
+        assert_eq!(out.solution.len(), 4);
+        assert!(out.diversity > 0.0);
+        assert!(out.coreset_size < 400);
+        assert_eq!(out.extra["index_segments"], 8.0);
+        assert!(out.extra["index_merges"] >= 1.0);
+        assert!(out.extra["index_dist_evals"] > 0.0);
+        // segment 8's carry chain is the worst case: 1 + trailing_ones(7)
+        assert_eq!(out.extra["index_max_nodes_touched"], 4.0);
     }
 
     #[test]
@@ -276,6 +359,8 @@ mod tests {
         assert_eq!(out.solution.len(), 4);
         assert!(out.extra.contains_key("mr_score_dist_evals"));
         assert!(out.extra.contains_key("dist_evals"));
+        // construction ledger: 4 shards x (tau=4 folds over 100 points)
+        assert_eq!(out.extra["mr_coreset_dist_evals"], (4 * 4 * 100) as f64);
     }
 
     #[test]

@@ -1,10 +1,18 @@
 //! The dataset container: dense points + per-point category labels.
 //!
-//! Layout is a flat row-major `Vec<f32>` (cache-friendly for the GMM scan,
-//! zero-copy sliceable for the PJRT padding path).  Categories carry the
-//! matroid side-information: one label per point for partition matroids,
-//! one-or-more for transversal matroids (paper §2.1 assumes O(1) categories
-//! per element).
+//! Layout is a flat row-major store (cache-friendly for the GMM scan,
+//! zero-copy sliceable for the PJRT padding path) behind an `Arc`, so a
+//! [`Dataset::subset`] is a *view*: it shares the backing coordinates and
+//! carries only a row map.  Sharding (MapReduce workers, sliding-window
+//! blocks, index segments) therefore no longer doubles peak coordinate
+//! memory — a shard costs `O(shard)` row indices + category lists, not
+//! `O(shard * dim)` floats.  Categories carry the matroid
+//! side-information: one label per point for partition matroids,
+//! one-or-more for transversal matroids (paper §2.1 assumes O(1)
+//! categories per element).
+
+use std::borrow::Cow;
+use std::sync::Arc;
 
 use crate::core::metric::Metric;
 
@@ -13,8 +21,11 @@ use crate::core::metric::Metric;
 pub struct Dataset {
     pub dim: usize,
     pub metric: Metric,
-    /// Row-major coordinates, length `n * dim`.
-    pub coords: Vec<f32>,
+    /// Row-major backing store, shared between a dataset and its views.
+    coords: Arc<Vec<f32>>,
+    /// View row map: row `i` of this dataset is storage row `rows[i]`.
+    /// `None` = identity (the dataset covers the whole store in order).
+    rows: Option<Arc<Vec<usize>>>,
     /// Per-point category ids (sorted, deduplicated). Non-empty per point.
     pub categories: Vec<Vec<u32>>,
     /// Total number of distinct categories (ids are `0..n_categories`).
@@ -46,7 +57,8 @@ impl Dataset {
         Dataset {
             dim,
             metric,
-            coords,
+            coords: Arc::new(coords),
+            rows: None,
             categories,
             n_categories,
             name: name.into(),
@@ -57,12 +69,43 @@ impl Dataset {
     /// always meaningful and agrees with the validation in `new`.
     #[inline]
     pub fn n(&self) -> usize {
-        self.coords.len() / self.dim
+        match &self.rows {
+            None => self.coords.len() / self.dim,
+            Some(rows) => rows.len(),
+        }
+    }
+
+    /// True when this dataset is a [`Dataset::subset`] view over a shared
+    /// backing store (its coordinate rows are remapped, not contiguous).
+    #[inline]
+    pub fn is_view(&self) -> bool {
+        self.rows.is_some()
     }
 
     #[inline]
     pub fn point(&self, i: usize) -> &[f32] {
-        &self.coords[i * self.dim..(i + 1) * self.dim]
+        let r = match &self.rows {
+            None => i,
+            Some(rows) => rows[i],
+        };
+        &self.coords[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// The row-major coordinate block: borrowed from the backing store for
+    /// a non-view dataset, materialized for a view (serialization and the
+    /// generator tests want the flat layout; hot paths use
+    /// [`Dataset::point`], which never copies).
+    pub fn flat_coords(&self) -> Cow<'_, [f32]> {
+        match &self.rows {
+            None => Cow::Borrowed(&self.coords[..]),
+            Some(rows) => {
+                let mut out = Vec::with_capacity(rows.len() * self.dim);
+                for i in 0..rows.len() {
+                    out.extend_from_slice(self.point(i));
+                }
+                Cow::Owned(out)
+            }
+        }
     }
 
     /// Distance between points `i` and `j` under the dataset metric.
@@ -89,23 +132,42 @@ impl Dataset {
         best
     }
 
-    /// Restriction of the dataset to `indices` (preserving their order).
+    /// Restriction of the dataset to `indices` (preserving their order),
+    /// as a zero-copy *view*: the backing coordinate store is shared via
+    /// `Arc` and only a row map (plus the per-point category lists) is
+    /// allocated, so sharding no longer doubles peak coordinate memory.
     /// Category ids and the metric are preserved, so matroids built from
-    /// category structure remain valid on the restriction.
+    /// category structure remain valid on the restriction.  The view keeps
+    /// the parent's backing store alive; use [`Dataset::materialize`] when
+    /// an owned copy with an independent lifetime is wanted.
     pub fn subset(&self, indices: &[usize]) -> Dataset {
-        let mut coords = Vec::with_capacity(indices.len() * self.dim);
-        let mut categories = Vec::with_capacity(indices.len());
-        for &i in indices {
-            coords.extend_from_slice(self.point(i));
-            categories.push(self.categories[i].clone());
-        }
+        let rows: Vec<usize> = match &self.rows {
+            None => indices.to_vec(),
+            Some(rows) => indices.iter().map(|&i| rows[i]).collect(),
+        };
+        let categories = indices.iter().map(|&i| self.categories[i].clone()).collect();
         Dataset {
             dim: self.dim,
             metric: self.metric,
-            coords,
+            coords: Arc::clone(&self.coords),
+            rows: Some(Arc::new(rows)),
             categories,
             n_categories: self.n_categories,
             name: format!("{}[subset:{}]", self.name, indices.len()),
+        }
+    }
+
+    /// Deep copy into a fresh contiguous backing store (drops the view row
+    /// map and the reference to the parent's coordinates).
+    pub fn materialize(&self) -> Dataset {
+        Dataset {
+            dim: self.dim,
+            metric: self.metric,
+            coords: Arc::new(self.flat_coords().into_owned()),
+            rows: None,
+            categories: self.categories.clone(),
+            n_categories: self.n_categories,
+            name: self.name.clone(),
         }
     }
 
@@ -150,6 +212,7 @@ mod tests {
         assert_eq!(ds.n(), 3);
         assert_eq!(ds.point(1), &[3.0, 4.0]);
         assert_eq!(ds.dist(0, 1), 5.0);
+        assert!(!ds.is_view());
     }
 
     #[test]
@@ -166,6 +229,44 @@ mod tests {
         assert_eq!(sub.point(0), &[0.0, 1.0]);
         assert_eq!(sub.dist(0, 1), 1.0);
         assert_eq!(sub.categories[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn subset_is_zero_copy_view() {
+        let ds = tiny();
+        let sub = ds.subset(&[2, 0]);
+        assert!(sub.is_view());
+        // the backing store is shared, not copied
+        assert!(Arc::ptr_eq(&ds.coords, &sub.coords));
+        // flat_coords materializes the remapped rows
+        assert_eq!(sub.flat_coords().as_ref(), &[0.0, 1.0, 0.0, 0.0]);
+        // a non-view borrows the store as-is
+        assert!(matches!(ds.flat_coords(), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn view_of_view_composes_row_maps() {
+        let ds = tiny();
+        let sub = ds.subset(&[2, 1, 0]);
+        let subsub = sub.subset(&[2, 0]);
+        assert!(Arc::ptr_eq(&ds.coords, &subsub.coords));
+        assert_eq!(subsub.point(0), ds.point(0));
+        assert_eq!(subsub.point(1), ds.point(2));
+        assert_eq!(subsub.categories[1], ds.categories[2]);
+    }
+
+    #[test]
+    fn materialize_detaches_from_parent_store() {
+        let ds = tiny();
+        let sub = ds.subset(&[1, 2]);
+        let owned = sub.materialize();
+        assert!(!owned.is_view());
+        assert!(!Arc::ptr_eq(&ds.coords, &owned.coords));
+        assert_eq!(owned.n(), 2);
+        for i in 0..2 {
+            assert_eq!(owned.point(i), sub.point(i));
+        }
+        assert_eq!(owned.categories, sub.categories);
     }
 
     #[test]

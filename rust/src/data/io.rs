@@ -25,7 +25,7 @@ pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     w.write_all(&(ds.dim as u32).to_le_bytes())?;
     w.write_all(&(ds.n() as u32).to_le_bytes())?;
     w.write_all(&ds.n_categories.to_le_bytes())?;
-    for &v in &ds.coords {
+    for &v in ds.flat_coords().iter() {
         w.write_all(&v.to_le_bytes())?;
     }
     for cats in &ds.categories {
@@ -151,7 +151,7 @@ mod tests {
         assert_eq!(back.n(), ds.n());
         assert_eq!(back.dim, ds.dim);
         assert_eq!(back.metric, ds.metric);
-        assert_eq!(back.coords, ds.coords);
+        assert_eq!(back.flat_coords(), ds.flat_coords());
         assert_eq!(back.categories, ds.categories);
         std::fs::remove_file(&path).ok();
     }

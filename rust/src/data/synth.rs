@@ -211,16 +211,16 @@ mod tests {
     fn wikisim_deterministic() {
         let a = wikisim(100, 7);
         let b = wikisim(100, 7);
-        assert_eq!(a.coords, b.coords);
+        assert_eq!(a.flat_coords(), b.flat_coords());
         assert_eq!(a.categories, b.categories);
         let c = wikisim(100, 8);
-        assert_ne!(a.coords, c.coords);
+        assert_ne!(a.flat_coords(), c.flat_coords());
     }
 
     #[test]
     fn songsim_nonnegative_and_partition_ready() {
         let ds = songsim(500, 2);
-        assert!(ds.coords.iter().all(|&v| v >= 0.0));
+        assert!(ds.flat_coords().iter().all(|&v| v >= 0.0));
         assert!(ds.categories.iter().all(|c| c.len() == 1));
         assert_eq!(ds.n_categories, 16);
     }

@@ -1,0 +1,41 @@
+//! The composable coreset index + query service — the serving layer that
+//! amortizes coreset construction across many `(objective, k, matroid,
+//! engine)` queries.
+//!
+//! Every `run_pipeline` call rebuilds its coreset from scratch, yet the
+//! paper's central property is that one small coreset contains a
+//! near-optimal feasible solution for *any* downstream extraction, and
+//! that coresets **compose** (Theorem 6 — the MapReduce algorithm is
+//! exactly "coreset of coresets").  This module turns that property into
+//! a standing structure:
+//!
+//! * [`tree::CoresetIndex`] — a merge-and-reduce tree (Bentley–Saxe
+//!   binary counter): leaves are per-segment coresets built with the
+//!   SeqCoreset/GMM machinery or the streaming builder's mini-batch mode
+//!   ([`tree::LeafIngest`]), internal nodes are merged-then-reduced
+//!   coresets.  Appending a segment touches O(log segments) nodes, and
+//!   the union of the occupied levels ([`tree::CoresetIndex::root`]) is
+//!   at all times a valid coreset of everything ingested — the streaming
+//!   and MapReduce settings become two ingestion strategies over the same
+//!   tree.
+//! * [`service::QueryService`] — answers [`service::QuerySpec`] requests
+//!   by running the pipeline's phase-2 finisher on the **root coreset
+//!   only**, behind an LRU result cache keyed on the spec and invalidated
+//!   by the tree epoch: N queries pay one coreset construction instead of
+//!   N pipeline runs, and a repeat query costs zero distance evaluations.
+//! * [`store`] — text snapshots of the tree (plus the CLI's
+//!   dataset/matroid recipe), behind `dmmc index build/append/query`.
+//!
+//! Work accounting is analytic and test-pinned: every construction pass
+//! logs `(input, clusters)` so `rust/tests/index_service.rs` can assert
+//! the append path is logarithmic and cache hits are free.
+
+pub mod service;
+pub mod store;
+pub mod tree;
+
+pub use service::{
+    QueryFinisher, QueryOutcome, QueryResult, QueryService, QuerySpec, ServiceStats,
+};
+pub use store::IndexSnapshot;
+pub use tree::{AppendReceipt, CoresetIndex, IndexConfig, IndexNode, IndexStats, LeafIngest};

@@ -1,0 +1,466 @@
+//! The query service: repeated `(objective, k, matroid, engine)` requests
+//! answered from the standing root coreset, with an epoch-invalidated LRU
+//! result cache.
+//!
+//! A cold query runs the pipeline's phase-2 finisher (AMT local search for
+//! sum-DMMC, exhaustive or greedy otherwise) over [`CoresetIndex::root`]
+//! — never the raw ingest — and scores the winner through the
+//! engine-backed evaluator, exactly like `run_pipeline`'s finisher phase.
+//! Cold runs are deterministic given `(spec, epoch)` (the finisher RNG is
+//! seeded from the cache key and the tree epoch), so a cache hit returns a
+//! bit-identical result at **zero** distance evaluations.  Appending to
+//! the index bumps the tree epoch, which invalidates every cached entry
+//! without any explicit flush.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::algo::exhaustive::exhaustive_best;
+use crate::algo::greedy::greedy_sum;
+use crate::algo::local_search::{local_search_sum, LocalSearchParams};
+use crate::coordinator::spec::{build_matroid, MatroidSpec};
+use crate::diversity::{diversity_with_engine, Objective};
+use crate::index::tree::{AppendReceipt, CoresetIndex};
+use crate::matroid::Matroid;
+use crate::runtime::engine::DistanceEngine;
+use crate::runtime::{build_engine, EngineKind, ScalarEngine};
+use crate::util::fnv1a;
+use crate::util::rng::Rng;
+
+/// Final-solution extractor of a query (mirrors the pipeline finishers;
+/// a separate type so the service layer does not depend on the
+/// coordinator's experiment runner).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QueryFinisher {
+    /// AMT local search — sum-DMMC only.
+    LocalSearch { gamma: f64 },
+    /// Exhaustive search (any objective; exponential in k).
+    Exhaustive,
+    /// Greedy heuristic (cheap baseline, any objective scored after).
+    Greedy,
+}
+
+impl QueryFinisher {
+    fn key_part(&self) -> String {
+        match self {
+            QueryFinisher::LocalSearch { gamma } => format!("ls:{:x}", gamma.to_bits()),
+            QueryFinisher::Exhaustive => "exhaustive".into(),
+            QueryFinisher::Greedy => "greedy".into(),
+        }
+    }
+}
+
+/// One query: which objective/constraint/extractor to serve from the
+/// standing root coreset.
+#[derive(Clone, Debug)]
+pub struct QuerySpec {
+    pub objective: Objective,
+    /// Solution size; must satisfy `k <= IndexConfig::k_max`.
+    pub k: usize,
+    /// Constraint override; `None` = the matroid the index was built for.
+    /// A spec must describe a matroid whose independent sets are
+    /// independent under the build matroid (e.g. a lower-rank uniform
+    /// query on any index), or the coreset guarantee does not transfer.
+    pub matroid: Option<MatroidSpec>,
+    pub engine: EngineKind,
+    pub finisher: QueryFinisher,
+}
+
+impl QuerySpec {
+    /// Common case: sum-DMMC through local search on the build matroid.
+    pub fn sum_local_search(k: usize, engine: EngineKind) -> QuerySpec {
+        QuerySpec {
+            objective: Objective::Sum,
+            k,
+            matroid: None,
+            engine,
+            finisher: QueryFinisher::LocalSearch { gamma: 0.0 },
+        }
+    }
+
+    /// Canonical cache key: every field that can change the result,
+    /// f64s by bit pattern.
+    pub fn cache_key(&self) -> String {
+        format!(
+            "{}|k={}|m={}|e={}|f={}",
+            self.objective.name(),
+            self.k,
+            match &self.matroid {
+                None => "build".to_string(),
+                Some(ms) => format!("{ms:?}"),
+            },
+            self.engine.name(),
+            self.finisher.key_part(),
+        )
+    }
+}
+
+/// The solution payload a query returns (and the cache stores).
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub solution: Vec<usize>,
+    pub diversity: f64,
+    /// Root coreset size the finisher ran on.
+    pub coreset_size: usize,
+}
+
+/// Result + serving metadata.
+#[derive(Clone, Debug)]
+pub struct QueryOutcome {
+    pub result: QueryResult,
+    pub cache_hit: bool,
+    /// Tree epoch the result is valid for.
+    pub epoch: u64,
+    /// Engine distance evaluations this call performed: `Some(0)` on a
+    /// cache hit, the measured scalar counter when `spec.engine ==
+    /// Scalar`, `None` for backends without a counter.  The counter sees
+    /// only work routed through the engine (the batched passes and the
+    /// final scoring); point-at-a-time `Dataset::dist` walks — the greedy
+    /// finisher, local search's per-improving-candidate corrections — are
+    /// not included, matching `LocalSearchResult::dist_evals`.
+    pub dist_evals: Option<u64>,
+    pub elapsed: Duration,
+}
+
+/// Serving counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    pub queries: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct CacheSlot {
+    key: String,
+    epoch: u64,
+    result: QueryResult,
+    last_used: u64,
+}
+
+/// Default result-cache capacity.
+pub const DEFAULT_CACHE_CAPACITY: usize = 64;
+
+/// A [`CoresetIndex`] plus the serving layer on top of it.
+pub struct QueryService<'a> {
+    index: CoresetIndex<'a>,
+    capacity: usize,
+    cache: Vec<CacheSlot>,
+    /// Lazily-built engines per registry kind: engines carry per-dataset
+    /// state (cosine sqnorms are O(n d) to precompute over the *raw*
+    /// ingest), so rebuilding one per query would make serving latency
+    /// scale with ingest size instead of root size.  The dataset is
+    /// immutable, so a built engine stays valid across appends.  The
+    /// scalar oracle is excluded: it is stateless to build, and a fresh
+    /// instance per query gives a per-query eval counter.
+    engines: Vec<(EngineKind, Box<dyn DistanceEngine>)>,
+    tick: u64,
+    stats: ServiceStats,
+}
+
+impl<'a> QueryService<'a> {
+    pub fn new(index: CoresetIndex<'a>) -> QueryService<'a> {
+        QueryService::with_capacity(index, DEFAULT_CACHE_CAPACITY)
+    }
+
+    pub fn with_capacity(index: CoresetIndex<'a>, capacity: usize) -> QueryService<'a> {
+        assert!(capacity >= 1, "cache capacity must be >= 1");
+        QueryService {
+            index,
+            capacity,
+            cache: Vec::new(),
+            engines: Vec::new(),
+            tick: 0,
+            stats: ServiceStats::default(),
+        }
+    }
+
+    /// Get-or-build the cached engine for `kind` (non-scalar kinds only).
+    fn engine_for(&mut self, kind: EngineKind) -> Result<&dyn DistanceEngine> {
+        if let Some(pos) = self.engines.iter().position(|(k, _)| *k == kind) {
+            return Ok(&*self.engines[pos].1);
+        }
+        let engine = build_engine(kind, self.index.dataset())?;
+        self.engines.push((kind, engine));
+        Ok(&*self.engines.last().expect("just pushed").1)
+    }
+
+    pub fn index(&self) -> &CoresetIndex<'a> {
+        &self.index
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// Ingest a segment.  The epoch bump implicitly invalidates every
+    /// cached result; stale slots are refreshed lazily on their next miss.
+    pub fn append(&mut self, batch: &[usize]) -> Result<AppendReceipt> {
+        self.index.append(batch)
+    }
+
+    /// Serve one query from the root coreset (cache-first).
+    pub fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
+        let t0 = Instant::now();
+        self.tick += 1;
+        self.stats.queries += 1;
+        let key = spec.cache_key();
+        let epoch = self.index.epoch();
+        if let Some(slot) = self.cache.iter_mut().find(|s| s.key == key && s.epoch == epoch) {
+            slot.last_used = self.tick;
+            self.stats.hits += 1;
+            return Ok(QueryOutcome {
+                result: slot.result.clone(),
+                cache_hit: true,
+                epoch,
+                dist_evals: Some(0),
+                elapsed: t0.elapsed(),
+            });
+        }
+        self.stats.misses += 1;
+        let (result, dist_evals) = self.run_cold(spec, &key, epoch)?;
+
+        let tick = self.tick;
+        if let Some(slot) = self.cache.iter_mut().find(|s| s.key == key) {
+            // same spec at a stale epoch: refresh in place
+            slot.epoch = epoch;
+            slot.result = result.clone();
+            slot.last_used = tick;
+        } else {
+            if self.cache.len() == self.capacity {
+                let lru = self
+                    .cache
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(i, _)| i)
+                    .expect("non-empty cache");
+                self.cache.swap_remove(lru);
+                self.stats.evictions += 1;
+            }
+            self.cache.push(CacheSlot {
+                key,
+                epoch,
+                result: result.clone(),
+                last_used: tick,
+            });
+        }
+        Ok(QueryOutcome {
+            result,
+            cache_hit: false,
+            epoch,
+            dist_evals,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Run the finisher on the root coreset.  Deterministic given
+    /// `(spec, epoch)`: the RNG seed derives from both, so re-running a
+    /// cold query at the same epoch reproduces the cached result bit for
+    /// bit.
+    fn run_cold(
+        &mut self,
+        spec: &QuerySpec,
+        key: &str,
+        epoch: u64,
+    ) -> Result<(QueryResult, Option<u64>)> {
+        let k_max = self.index.config().k_max;
+        if spec.k > k_max {
+            bail!(
+                "query k = {} exceeds the index's k_max = {k_max} (rebuild the index for larger k)",
+                spec.k,
+            );
+        }
+        let ds = self.index.dataset();
+        let root = self.index.root();
+        if root.is_empty() {
+            bail!("query on an empty index (append at least one segment first)");
+        }
+        let built = spec.matroid.as_ref().map(|ms| build_matroid(ms, ds));
+        let m: &dyn Matroid = match &built {
+            Some(b) => &**b,
+            None => self.index.matroid(),
+        };
+        let mut rng = Rng::new(fnv1a(key) ^ epoch);
+        if spec.engine == EngineKind::Scalar {
+            // the oracle backend carries a per-instance eval counter, so
+            // scalar queries report measured (not analytic) distance work
+            let scalar = ScalarEngine::new();
+            let result = finish(ds, m, spec, &root, &scalar, &mut rng)?;
+            Ok((result, Some(scalar.dist_evals())))
+        } else {
+            let engine = self.engine_for(spec.engine)?;
+            let result = finish(ds, m, spec, &root, engine, &mut rng)?;
+            Ok((result, None))
+        }
+    }
+}
+
+/// Phase-2 of `run_pipeline`, expressed over the root coreset.
+fn finish(
+    ds: &crate::core::Dataset,
+    m: &dyn Matroid,
+    spec: &QuerySpec,
+    root: &[usize],
+    engine: &dyn DistanceEngine,
+    rng: &mut Rng,
+) -> Result<QueryResult> {
+    let solution = match spec.finisher {
+        QueryFinisher::LocalSearch { gamma } => {
+            if spec.objective != Objective::Sum {
+                bail!("local search finisher only applies to sum-DMMC");
+            }
+            let params = LocalSearchParams {
+                gamma,
+                ..Default::default()
+            };
+            local_search_sum(ds, m, spec.k, root, engine, params, None, rng)?.solution
+        }
+        QueryFinisher::Exhaustive => {
+            exhaustive_best(ds, m, spec.k, root, spec.objective, engine)?.solution
+        }
+        QueryFinisher::Greedy => greedy_sum(ds, m, spec.k, root),
+    };
+    let diversity = diversity_with_engine(ds, &solution, spec.objective, engine)?;
+    Ok(QueryResult {
+        solution,
+        diversity,
+        coreset_size: root.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::index::tree::IndexConfig;
+    use crate::matroid::UniformMatroid;
+
+    fn service<'a>(
+        ds: &'a crate::core::Dataset,
+        m: &'a UniformMatroid,
+        k: usize,
+        tau: usize,
+    ) -> QueryService<'a> {
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(k, tau)
+        };
+        QueryService::new(CoresetIndex::new(ds, m, cfg))
+    }
+
+    #[test]
+    fn cold_then_hit_then_invalidate() {
+        let ds = synth::uniform_cube(300, 2, 11);
+        let m = UniformMatroid::new(4);
+        let mut svc = service(&ds, &m, 4, 8);
+        let order: Vec<usize> = (0..200).collect();
+        svc.append(&order).unwrap();
+        let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+
+        let cold = svc.query(&spec).unwrap();
+        assert!(!cold.cache_hit);
+        assert!(cold.dist_evals.unwrap() > 0);
+
+        let hit = svc.query(&spec).unwrap();
+        assert!(hit.cache_hit);
+        assert_eq!(hit.dist_evals, Some(0));
+        assert_eq!(hit.result.solution, cold.result.solution);
+        assert_eq!(hit.result.diversity.to_bits(), cold.result.diversity.to_bits());
+
+        // appending bumps the epoch and invalidates the entry
+        let more: Vec<usize> = (200..300).collect();
+        svc.append(&more).unwrap();
+        let after = svc.query(&spec).unwrap();
+        assert!(!after.cache_hit);
+        assert_eq!(after.epoch, 2);
+        assert_eq!(svc.stats().hits, 1);
+        assert_eq!(svc.stats().misses, 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let ds = synth::uniform_cube(200, 2, 13);
+        let m = UniformMatroid::new(6);
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(6, 8)
+        };
+        let mut svc = QueryService::with_capacity(CoresetIndex::new(&ds, &m, cfg), 2);
+        let order: Vec<usize> = (0..200).collect();
+        svc.append(&order).unwrap();
+        let s2 = QuerySpec::sum_local_search(2, EngineKind::Scalar);
+        let s3 = QuerySpec::sum_local_search(3, EngineKind::Scalar);
+        let s4 = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+        svc.query(&s2).unwrap();
+        svc.query(&s3).unwrap();
+        svc.query(&s2).unwrap(); // refresh s2 -> s3 becomes LRU
+        svc.query(&s4).unwrap(); // evicts s3
+        assert_eq!(svc.stats().evictions, 1);
+        assert!(svc.query(&s2).unwrap().cache_hit);
+        assert!(!svc.query(&s3).unwrap().cache_hit);
+    }
+
+    #[test]
+    fn k_above_k_max_is_rejected_and_empty_index_errors() {
+        let ds = synth::uniform_cube(100, 2, 17);
+        let m = UniformMatroid::new(8);
+        let mut svc = service(&ds, &m, 4, 8);
+        let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+        assert!(svc.query(&spec).is_err(), "empty index must error");
+        let order: Vec<usize> = (0..100).collect();
+        svc.append(&order).unwrap();
+        let big = QuerySpec::sum_local_search(5, EngineKind::Scalar);
+        assert!(svc.query(&big).is_err(), "k > k_max must error");
+    }
+
+    #[test]
+    fn matroid_override_and_other_finishers() {
+        let ds = synth::uniform_cube(150, 2, 19);
+        let m = UniformMatroid::new(6);
+        let mut svc = service(&ds, &m, 6, 8);
+        let order: Vec<usize> = (0..150).collect();
+        svc.append(&order).unwrap();
+        // lower-rank uniform override + exhaustive finisher, non-sum
+        let spec = QuerySpec {
+            objective: Objective::Tree,
+            k: 3,
+            matroid: Some(MatroidSpec::Uniform(3)),
+            engine: EngineKind::Scalar,
+            finisher: QueryFinisher::Exhaustive,
+        };
+        let out = svc.query(&spec).unwrap();
+        assert_eq!(out.result.solution.len(), 3);
+        assert!(out.result.diversity > 0.0);
+        // greedy works and caches separately
+        let gspec = QuerySpec {
+            finisher: QueryFinisher::Greedy,
+            ..spec.clone()
+        };
+        let gout = svc.query(&gspec).unwrap();
+        assert!(!gout.cache_hit);
+        assert!(svc.query(&gspec).unwrap().cache_hit);
+        // local search on a non-sum objective is rejected
+        let bad = QuerySpec {
+            objective: Objective::Star,
+            finisher: QueryFinisher::LocalSearch { gamma: 0.0 },
+            ..spec
+        };
+        assert!(svc.query(&bad).is_err());
+    }
+
+    #[test]
+    fn batch_engine_queries_report_no_counter() {
+        let ds = synth::uniform_cube(250, 3, 23);
+        let m = UniformMatroid::new(4);
+        let mut svc = service(&ds, &m, 4, 8);
+        let order: Vec<usize> = (0..250).collect();
+        svc.append(&order).unwrap();
+        let spec = QuerySpec::sum_local_search(4, EngineKind::Batch);
+        let out = svc.query(&spec).unwrap();
+        assert_eq!(out.dist_evals, None);
+        // and the cached repeat still reports zero
+        assert_eq!(svc.query(&spec).unwrap().dist_evals, Some(0));
+    }
+}

@@ -1,0 +1,309 @@
+//! Index persistence — the state the `dmmc index` subcommands carry
+//! between invocations.
+//!
+//! A snapshot stores the *recipe* for the backing dataset (the CLI data
+//! spec + seed; synthetic generators are deterministic, files reload) and
+//! the tree state itself: config, epoch, ingest cursor, and every occupied
+//! level's coreset indices.  The format is line-oriented text ("DMMCIDX1"
+//! magic), f64s as hex bit patterns so reloads are bit-exact.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::Budget;
+use crate::index::tree::{CoresetIndex, IndexConfig, IndexNode, LeafIngest};
+use crate::runtime::EngineKind;
+
+const MAGIC: &str = "DMMCIDX1";
+
+/// Everything needed to reconstruct a [`CoresetIndex`] (plus the CLI's
+/// ingest cursor) in a later process.
+#[derive(Clone, Debug)]
+pub struct IndexSnapshot {
+    /// CLI dataset spec string (`cube:2000x8`, a file path, ...).
+    pub data: String,
+    /// Seed the dataset spec was parsed with.
+    pub seed: u64,
+    /// CLI matroid spec shorthand (`transversal`, `partition:89`,
+    /// `uniform:16`).
+    pub matroid: String,
+    pub k_max: usize,
+    pub leaf_budget: Budget,
+    pub reduce_budget: Budget,
+    pub engine: EngineKind,
+    pub leaf_ingest: LeafIngest,
+    pub epoch: u64,
+    pub segments: usize,
+    pub points: usize,
+    /// Next dataset row the CLI's sequential ingestion will consume.
+    pub cursor: usize,
+    pub levels: Vec<Option<IndexNode>>,
+}
+
+impl IndexSnapshot {
+    /// Capture the tree state of `index` (the caller supplies the CLI
+    /// recipe fields the tree does not know about).
+    pub fn capture(
+        index: &CoresetIndex<'_>,
+        data: String,
+        seed: u64,
+        matroid: String,
+        cursor: usize,
+    ) -> IndexSnapshot {
+        let cfg = index.config();
+        IndexSnapshot {
+            data,
+            seed,
+            matroid,
+            k_max: cfg.k_max,
+            leaf_budget: cfg.leaf_budget,
+            reduce_budget: cfg.reduce_budget,
+            engine: cfg.engine,
+            leaf_ingest: cfg.leaf_ingest,
+            epoch: index.epoch(),
+            segments: index.segments(),
+            points: index.points_ingested(),
+            cursor,
+            levels: index.levels().to_vec(),
+        }
+    }
+
+    pub fn config(&self) -> IndexConfig {
+        IndexConfig {
+            k_max: self.k_max,
+            leaf_budget: self.leaf_budget,
+            reduce_budget: self.reduce_budget,
+            engine: self.engine,
+            leaf_ingest: self.leaf_ingest,
+        }
+    }
+}
+
+fn budget_to_str(b: Budget) -> String {
+    match b {
+        Budget::Clusters(tau) => format!("clusters:{tau}"),
+        Budget::Epsilon(eps) => format!("eps:{:x}", eps.to_bits()),
+    }
+}
+
+fn budget_from_str(s: &str) -> Result<Budget> {
+    if let Some(rest) = s.strip_prefix("clusters:") {
+        return Ok(Budget::Clusters(rest.parse().context("budget tau")?));
+    }
+    if let Some(rest) = s.strip_prefix("eps:") {
+        let bits = u64::from_str_radix(rest, 16).context("budget eps bits")?;
+        return Ok(Budget::Epsilon(f64::from_bits(bits)));
+    }
+    bail!("bad budget {s} (clusters:<tau> | eps:<bits>)")
+}
+
+/// Serialize a snapshot to its text form.
+pub fn to_string(snap: &IndexSnapshot) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{MAGIC}");
+    let _ = writeln!(out, "data {}", snap.data);
+    let _ = writeln!(out, "seed {}", snap.seed);
+    let _ = writeln!(out, "matroid {}", snap.matroid);
+    let _ = writeln!(out, "k_max {}", snap.k_max);
+    let _ = writeln!(out, "leaf_budget {}", budget_to_str(snap.leaf_budget));
+    let _ = writeln!(out, "reduce_budget {}", budget_to_str(snap.reduce_budget));
+    let _ = writeln!(out, "engine {}", snap.engine.name());
+    let _ = writeln!(out, "leaf_ingest {}", snap.leaf_ingest.name());
+    let _ = writeln!(out, "epoch {}", snap.epoch);
+    let _ = writeln!(out, "segments {}", snap.segments);
+    let _ = writeln!(out, "points {}", snap.points);
+    let _ = writeln!(out, "cursor {}", snap.cursor);
+    let _ = writeln!(out, "levels {}", snap.levels.len());
+    for (i, level) in snap.levels.iter().enumerate() {
+        match level {
+            None => {
+                let _ = writeln!(out, "level {i} absent");
+            }
+            Some(node) => {
+                let _ = writeln!(
+                    out,
+                    "level {i} node {} {} {} {:x}",
+                    node.segments,
+                    node.points,
+                    node.n_clusters,
+                    node.radius.to_bits()
+                );
+                let ids: Vec<String> = node.indices.iter().map(|x| x.to_string()).collect();
+                let _ = writeln!(out, "indices {}", ids.join(" "));
+            }
+        }
+    }
+    out
+}
+
+/// Parse the text form back into a snapshot.
+pub fn from_str(text: &str) -> Result<IndexSnapshot> {
+    let mut lines = text.lines();
+    let magic = lines.next().context("empty index file")?;
+    if magic.trim() != MAGIC {
+        bail!("not a {MAGIC} index file");
+    }
+    // fixed header order keeps the parser trivial and the format auditable
+    let mut field = |name: &str| -> Result<String> {
+        let line = lines.next().with_context(|| format!("missing field {name}"))?;
+        let rest = line
+            .strip_prefix(name)
+            .with_context(|| format!("expected field {name}, got {line:?}"))?;
+        Ok(rest.trim().to_string())
+    };
+    let data = field("data")?;
+    let seed: u64 = field("seed")?.parse().context("seed")?;
+    let matroid = field("matroid")?;
+    let k_max: usize = field("k_max")?.parse().context("k_max")?;
+    let leaf_budget = budget_from_str(&field("leaf_budget")?)?;
+    let reduce_budget = budget_from_str(&field("reduce_budget")?)?;
+    let engine_name = field("engine")?;
+    let engine = EngineKind::parse(&engine_name)
+        .with_context(|| format!("unknown engine {engine_name}"))?;
+    let ingest_name = field("leaf_ingest")?;
+    let leaf_ingest = LeafIngest::parse(&ingest_name)
+        .with_context(|| format!("unknown leaf_ingest {ingest_name}"))?;
+    let epoch: u64 = field("epoch")?.parse().context("epoch")?;
+    let segments: usize = field("segments")?.parse().context("segments")?;
+    let points: usize = field("points")?.parse().context("points")?;
+    let cursor: usize = field("cursor")?.parse().context("cursor")?;
+    let n_levels: usize = field("levels")?.parse().context("levels")?;
+
+    let mut levels: Vec<Option<IndexNode>> = Vec::with_capacity(n_levels);
+    for i in 0..n_levels {
+        let line = lines.next().with_context(|| format!("missing level {i}"))?;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() < 3 || toks[0] != "level" || toks[1] != i.to_string() {
+            bail!("bad level line {line:?}");
+        }
+        match toks[2] {
+            "absent" => levels.push(None),
+            "node" => {
+                if toks.len() != 7 {
+                    bail!("bad node line {line:?}");
+                }
+                let node_segments: usize = toks[3].parse().context("node segments")?;
+                let node_points: usize = toks[4].parse().context("node points")?;
+                let n_clusters: usize = toks[5].parse().context("node clusters")?;
+                let radius =
+                    f64::from_bits(u64::from_str_radix(toks[6], 16).context("node radius")?);
+                let idx_line = lines.next().with_context(|| format!("missing indices {i}"))?;
+                let rest = idx_line
+                    .strip_prefix("indices")
+                    .with_context(|| format!("expected indices line, got {idx_line:?}"))?;
+                let indices: Vec<usize> = rest
+                    .split_whitespace()
+                    .map(|t| t.parse::<usize>().context("index"))
+                    .collect::<Result<_>>()?;
+                levels.push(Some(IndexNode {
+                    indices,
+                    segments: node_segments,
+                    points: node_points,
+                    n_clusters,
+                    radius,
+                }));
+            }
+            other => bail!("bad level tag {other}"),
+        }
+    }
+    Ok(IndexSnapshot {
+        data,
+        seed,
+        matroid,
+        k_max,
+        leaf_budget,
+        reduce_budget,
+        engine,
+        leaf_ingest,
+        epoch,
+        segments,
+        points,
+        cursor,
+        levels,
+    })
+}
+
+pub fn save(snap: &IndexSnapshot, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path.as_ref(), to_string(snap)).context("write index file")
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<IndexSnapshot> {
+    let text = std::fs::read_to_string(path.as_ref()).context("read index file")?;
+    from_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::matroid::UniformMatroid;
+    use crate::runtime::EngineKind;
+
+    #[test]
+    fn snapshot_roundtrips_bit_exactly() {
+        let ds = synth::uniform_cube(200, 2, 29);
+        let m = UniformMatroid::new(4);
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(4, 8)
+        };
+        let mut idx = CoresetIndex::new(&ds, &m, cfg);
+        let order: Vec<usize> = (0..150).collect();
+        idx.ingest(&order, 50).unwrap();
+        let snap = IndexSnapshot::capture(&idx, "cube:200x2".into(), 29, "uniform:4".into(), 150);
+        let text = to_string(&snap);
+        let back = from_str(&text).unwrap();
+        assert_eq!(back.data, "cube:200x2");
+        assert_eq!(back.seed, 29);
+        assert_eq!(back.matroid, "uniform:4");
+        assert_eq!(back.epoch, 3);
+        assert_eq!(back.segments, 3);
+        assert_eq!(back.points, 150);
+        assert_eq!(back.cursor, 150);
+        assert_eq!(back.levels.len(), snap.levels.len());
+        for (a, b) in snap.levels.iter().zip(&back.levels) {
+            match (a, b) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.indices, y.indices);
+                    assert_eq!(x.segments, y.segments);
+                    assert_eq!(x.points, y.points);
+                    assert_eq!(x.n_clusters, y.n_clusters);
+                    assert_eq!(x.radius.to_bits(), y.radius.to_bits());
+                }
+                _ => panic!("level occupancy changed over the roundtrip"),
+            }
+        }
+        // the restored tree keeps serving: same root, appends continue
+        let back_cfg = back.config();
+        let mut idx2 = CoresetIndex::from_parts(
+            &ds,
+            &m,
+            back_cfg,
+            back.levels.clone(),
+            back.epoch,
+            back.segments,
+            back.points,
+        );
+        assert_eq!(idx2.root(), idx.root());
+        let more: Vec<usize> = (150..200).collect();
+        let r = idx2.append(&more).unwrap();
+        assert_eq!(r.segment, 4);
+        assert_eq!(idx2.epoch(), 4);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_str("nonsense").is_err());
+        assert!(from_str("DMMCIDX1\ndata x\nseed nope\n").is_err());
+        assert!(budget_from_str("bogus").is_err());
+        assert!(matches!(budget_from_str("clusters:7").unwrap(), Budget::Clusters(7)));
+        let eps = Budget::Epsilon(0.25);
+        match budget_from_str(&budget_to_str(eps)).unwrap() {
+            Budget::Epsilon(e) => assert_eq!(e.to_bits(), 0.25f64.to_bits()),
+            _ => panic!("budget kind changed"),
+        }
+    }
+}

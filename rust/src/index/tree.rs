@@ -1,0 +1,481 @@
+//! The merge-and-reduce composable coreset tree.
+//!
+//! A Bentley–Saxe-style logarithmic structure over the paper's
+//! composability theorem (Theorem 6): leaves are per-segment coresets
+//! built with the existing SeqCoreset/GMM machinery (or the streaming
+//! builder's mini-batch mode), and each internal node is the
+//! *merge-then-reduce* of its two children — the union of two coresets is
+//! a coreset of the union of their segments, re-compressed with one more
+//! SeqCoreset pass to keep node sizes bounded.  The tree keeps one node
+//! per binary-counter level, so appending segment number `s` touches
+//! exactly `1 + trailing_ones(s - 1)` nodes — O(log segments) — and the
+//! union of the occupied levels (the [`CoresetIndex::root`]) is at all
+//! times a valid coreset of everything ingested.
+//!
+//! Every reduce is accounted in an analytic distance-evaluation ledger
+//! (GMM folds cost `n_clusters * input` evaluations each; the streaming
+//! leaf reports its own §5.2 counter), so tests can pin that append work
+//! is logarithmic rather than proportional to the ingested total.
+
+use anyhow::{ensure, Result};
+
+use crate::algo::seq_coreset::seq_coreset;
+use crate::algo::stream_coreset::{StreamCoreset, DEFAULT_C};
+use crate::algo::Budget;
+use crate::core::Dataset;
+use crate::matroid::Matroid;
+use crate::runtime::{build_engine, EngineKind};
+
+/// How a leaf (per-segment) coreset is built — the two ingestion
+/// strategies of the paper's distributed settings, unified over one tree:
+/// `Seq` is the MapReduce shard construction (Algorithm 1 per segment),
+/// `Stream` drives the one-pass builder's mini-batch mode over the
+/// segment (Algorithm 2 / the tau-variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeafIngest {
+    Seq,
+    Stream,
+}
+
+impl LeafIngest {
+    pub fn name(self) -> &'static str {
+        match self {
+            LeafIngest::Seq => "seq",
+            LeafIngest::Stream => "stream",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LeafIngest> {
+        match s {
+            "seq" => Some(LeafIngest::Seq),
+            "stream" => Some(LeafIngest::Stream),
+            _ => None,
+        }
+    }
+}
+
+/// Construction parameters of a [`CoresetIndex`].
+#[derive(Clone, Copy, Debug)]
+pub struct IndexConfig {
+    /// Largest solution size the index serves; queries must use `k <=
+    /// k_max` (the paper builds coresets for the maximum k of interest).
+    pub k_max: usize,
+    /// Coreset budget per leaf segment.
+    pub leaf_budget: Budget,
+    /// Coreset budget per merge-reduce (internal node).
+    pub reduce_budget: Budget,
+    /// Backend for every construction pass.
+    pub engine: EngineKind,
+    /// Leaf construction strategy.
+    pub leaf_ingest: LeafIngest,
+}
+
+impl IndexConfig {
+    /// Sensible defaults: tau-budgeted SeqCoreset leaves and reduces on
+    /// the default engine.
+    pub fn new(k_max: usize, tau: usize) -> IndexConfig {
+        IndexConfig {
+            k_max,
+            leaf_budget: Budget::Clusters(tau),
+            reduce_budget: Budget::Clusters(tau),
+            engine: EngineKind::default(),
+            leaf_ingest: LeafIngest::Seq,
+        }
+    }
+}
+
+/// One occupied tree level: a coreset summarizing `2^level` segments.
+#[derive(Clone, Debug)]
+pub struct IndexNode {
+    /// Coreset member indices (global, sorted, deduplicated).
+    pub indices: Vec<usize>,
+    /// Number of leaf segments this node summarizes.
+    pub segments: usize,
+    /// Number of raw points this node summarizes.
+    pub points: usize,
+    /// Clusters of the construction that produced this node.
+    pub n_clusters: usize,
+    /// Coverage radius of this node w.r.t. its raw points: every
+    /// summarized point is within this distance of some member.  Compounds
+    /// additively up the lineage (child radius + reduce radius).
+    pub radius: f64,
+}
+
+/// Cumulative ledger across the index lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IndexStats {
+    pub appends: u64,
+    pub merges: u64,
+    /// Analytic distance evaluations of every construction pass (GMM
+    /// folds = `n_clusters * input` each; streaming leaves report their
+    /// own §5.2 counter).
+    pub dist_evals: u64,
+}
+
+/// Per-append accounting, the unit the sublinearity tests pin.
+#[derive(Clone, Debug)]
+pub struct AppendReceipt {
+    /// 1-based ordinal of the appended segment.
+    pub segment: usize,
+    /// Merge-reduce operations this append triggered (the binary-counter
+    /// carry chain: `trailing_ones(segment - 1)`).
+    pub merges: usize,
+    /// Tree nodes written: `1 + merges`.
+    pub nodes_touched: usize,
+    /// Distance evaluations of this append (leaf build + merges).
+    pub dist_evals: u64,
+    /// One `(input_size, n_clusters)` entry per construction pass, leaf
+    /// first — the raw material for re-deriving `dist_evals` analytically.
+    pub reduce_log: Vec<(usize, usize)>,
+    /// Root coreset size after the append.
+    pub root_size: usize,
+    /// Tree epoch after the append (bumps on every append; result caches
+    /// key on it).
+    pub epoch: u64,
+}
+
+/// The standing coreset structure: ingest segments, read the root.
+pub struct CoresetIndex<'a> {
+    ds: &'a Dataset,
+    m: &'a dyn Matroid,
+    cfg: IndexConfig,
+    /// Binary-counter levels; `levels[i]` summarizes `2^i` segments.
+    levels: Vec<Option<IndexNode>>,
+    epoch: u64,
+    segments: usize,
+    points: usize,
+    stats: IndexStats,
+}
+
+impl<'a> CoresetIndex<'a> {
+    pub fn new(ds: &'a Dataset, m: &'a dyn Matroid, cfg: IndexConfig) -> CoresetIndex<'a> {
+        assert!(cfg.k_max >= 1, "index needs k_max >= 1");
+        CoresetIndex {
+            ds,
+            m,
+            cfg,
+            levels: Vec::new(),
+            epoch: 0,
+            segments: 0,
+            points: 0,
+            stats: IndexStats::default(),
+        }
+    }
+
+    /// Restore an index from persisted parts (see `crate::index::store`).
+    /// The caller is responsible for `levels`/`epoch`/`segments`/`points`
+    /// being a snapshot previously produced by this type.
+    pub fn from_parts(
+        ds: &'a Dataset,
+        m: &'a dyn Matroid,
+        cfg: IndexConfig,
+        levels: Vec<Option<IndexNode>>,
+        epoch: u64,
+        segments: usize,
+        points: usize,
+    ) -> CoresetIndex<'a> {
+        CoresetIndex {
+            ds,
+            m,
+            cfg,
+            levels,
+            epoch,
+            segments,
+            points,
+            stats: IndexStats::default(),
+        }
+    }
+
+    pub fn dataset(&self) -> &'a Dataset {
+        self.ds
+    }
+
+    pub fn matroid(&self) -> &'a dyn Matroid {
+        self.m
+    }
+
+    pub fn config(&self) -> &IndexConfig {
+        &self.cfg
+    }
+
+    pub fn levels(&self) -> &[Option<IndexNode>] {
+        &self.levels
+    }
+
+    /// Bumps on every append; cached query results are valid only for the
+    /// epoch they were computed at.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn segments(&self) -> usize {
+        self.segments
+    }
+
+    /// Raw points ingested so far.
+    pub fn points_ingested(&self) -> usize {
+        self.points
+    }
+
+    pub fn stats(&self) -> &IndexStats {
+        &self.stats
+    }
+
+    /// The standing coreset of everything ingested: the union of the
+    /// occupied levels' coresets (a coreset of the full ingest by
+    /// composability — each level covers its own segments).
+    pub fn root(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = Vec::new();
+        for node in self.levels.iter().flatten() {
+            out.extend_from_slice(&node.indices);
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Ingest one segment (a batch of dataset row indices): build its
+    /// leaf coreset, then carry up the binary counter, merge-reducing one
+    /// node per occupied level.  Touches `1 + trailing_ones(segments)`
+    /// nodes — O(log segments) — never the whole ingest.
+    pub fn append(&mut self, batch: &[usize]) -> Result<AppendReceipt> {
+        ensure!(!batch.is_empty(), "index append needs a non-empty batch");
+        let mut dist_evals = 0u64;
+        let mut reduce_log: Vec<(usize, usize)> = Vec::new();
+
+        let (leaf, leaf_evals) = self.build_leaf(batch)?;
+        dist_evals += leaf_evals;
+        reduce_log.push((batch.len(), leaf.n_clusters));
+
+        let mut node = leaf;
+        let mut merges = 0usize;
+        let mut lvl = 0usize;
+        loop {
+            if lvl == self.levels.len() {
+                self.levels.push(None);
+            }
+            match self.levels[lvl].take() {
+                None => {
+                    self.levels[lvl] = Some(node);
+                    break;
+                }
+                Some(other) => {
+                    merges += 1;
+                    let (merged, evals, log) = self.reduce_pair(node, other)?;
+                    dist_evals += evals;
+                    reduce_log.push(log);
+                    node = merged;
+                    lvl += 1;
+                }
+            }
+        }
+
+        self.segments += 1;
+        self.points += batch.len();
+        self.epoch += 1;
+        self.stats.appends += 1;
+        self.stats.merges += merges as u64;
+        self.stats.dist_evals += dist_evals;
+        Ok(AppendReceipt {
+            segment: self.segments,
+            merges,
+            nodes_touched: 1 + merges,
+            dist_evals,
+            reduce_log,
+            root_size: self.root().len(),
+            epoch: self.epoch,
+        })
+    }
+
+    /// Bulk ingestion: split `order` into `segment_size`-point segments
+    /// and append each (the MapReduce arbitrary-partition path expressed
+    /// as tree ingestion).  Returns one receipt per segment.
+    pub fn ingest(&mut self, order: &[usize], segment_size: usize) -> Result<Vec<AppendReceipt>> {
+        assert!(segment_size >= 1);
+        let mut receipts = Vec::new();
+        for chunk in order.chunks(segment_size) {
+            receipts.push(self.append(chunk)?);
+        }
+        Ok(receipts)
+    }
+
+    /// Leaf construction over a zero-copy segment view.
+    fn build_leaf(&self, batch: &[usize]) -> Result<(IndexNode, u64)> {
+        let view = self.ds.subset(batch);
+        match self.cfg.leaf_ingest {
+            LeafIngest::Seq => {
+                let engine = build_engine(self.cfg.engine, &view)?;
+                let cs =
+                    seq_coreset(&view, self.m, self.cfg.k_max, self.cfg.leaf_budget, &*engine)?;
+                // GMM folds the segment once per selected center
+                let evals = (cs.n_clusters * view.n()) as u64;
+                let node = IndexNode {
+                    indices: to_global(batch, &cs.indices),
+                    segments: 1,
+                    points: batch.len(),
+                    n_clusters: cs.n_clusters,
+                    radius: cs.radius,
+                };
+                Ok((node, evals))
+            }
+            LeafIngest::Stream => {
+                let mut alg = match self.cfg.leaf_budget {
+                    Budget::Clusters(tau) => {
+                        StreamCoreset::with_tau(&view, self.m, self.cfg.k_max, tau.max(2))
+                    }
+                    Budget::Epsilon(eps) => {
+                        StreamCoreset::new(&view, self.m, self.cfg.k_max, eps, DEFAULT_C)
+                    }
+                };
+                if self.cfg.engine != EngineKind::Scalar {
+                    alg.set_engine_kind(self.cfg.engine)?;
+                }
+                let order: Vec<usize> = (0..view.n()).collect();
+                alg.push_batch(&order);
+                let (cs, st) = alg.finish();
+                let node = IndexNode {
+                    indices: to_global(batch, &cs.indices),
+                    segments: 1,
+                    points: batch.len(),
+                    n_clusters: cs.n_clusters,
+                    radius: cs.radius,
+                };
+                Ok((node, st.distance_evals))
+            }
+        }
+    }
+
+    /// Merge-then-reduce: union the two coresets (composability), then
+    /// re-compress the union with one SeqCoreset pass under the reduce
+    /// budget so node sizes stay bounded as levels climb.  Returns the
+    /// node, its dist-eval cost, and the `(input, clusters)` ledger entry.
+    fn reduce_pair(&self, a: IndexNode, b: IndexNode) -> Result<Reduced> {
+        let mut union = a.indices;
+        union.extend(b.indices);
+        union.sort_unstable();
+        union.dedup();
+        let view = self.ds.subset(&union);
+        let engine = build_engine(self.cfg.engine, &view)?;
+        let cs = seq_coreset(&view, self.m, self.cfg.k_max, self.cfg.reduce_budget, &*engine)?;
+        let evals = (cs.n_clusters * view.n()) as u64;
+        let node = IndexNode {
+            indices: to_global(&union, &cs.indices),
+            segments: a.segments + b.segments,
+            points: a.points + b.points,
+            n_clusters: cs.n_clusters,
+            // coverage over the lineage compounds additively (triangle
+            // inequality): a raw point sits within the child's radius of a
+            // child-coreset point, which sits within the reduce's radius of
+            // a kept member
+            radius: a.radius.max(b.radius) + cs.radius,
+        };
+        Ok((node, evals, (union.len(), cs.n_clusters)))
+    }
+}
+
+/// A reduced node, its dist-eval cost, and its `(input, clusters)` log
+/// entry.
+type Reduced = (IndexNode, u64, (usize, usize));
+
+/// Map view-local coreset indices back to global dataset rows.
+fn to_global(batch: &[usize], local: &[usize]) -> Vec<usize> {
+    let mut out: Vec<usize> = local.iter().map(|&i| batch[i]).collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
+
+    fn cfg(k: usize, tau: usize) -> IndexConfig {
+        IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(k, tau)
+        }
+    }
+
+    #[test]
+    fn append_carries_like_a_binary_counter() {
+        let ds = synth::uniform_cube(640, 2, 3);
+        let m = UniformMatroid::new(4);
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(4, 8));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        for (s, chunk) in order.chunks(40).enumerate() {
+            let r = idx.append(chunk).unwrap();
+            // carry chain of the binary counter: segment s+1 merges once
+            // per trailing one of s
+            let expect_merges = (s as u32).trailing_ones() as usize;
+            assert_eq!(r.merges, expect_merges, "segment {}", s + 1);
+            assert_eq!(r.nodes_touched, 1 + expect_merges);
+            assert_eq!(r.segment, s + 1);
+            // the ledger is exactly reconstructible from the reduce log
+            let analytic: u64 =
+                r.reduce_log.iter().map(|&(n, c)| (n * c) as u64).sum();
+            assert_eq!(r.dist_evals, analytic);
+        }
+        assert_eq!(idx.segments(), 16);
+        assert_eq!(idx.points_ingested(), 640);
+        // 16 = 2^4 segments collapse into exactly one occupied level
+        assert_eq!(idx.levels().iter().flatten().count(), 1);
+        assert_eq!(idx.epoch(), 16);
+    }
+
+    #[test]
+    fn root_always_contains_a_feasible_solution() {
+        let ds = synth::clustered(600, 2, 5, 0.15, 4, 3);
+        let m = PartitionMatroid::new(vec![2; 4]);
+        let k = 6;
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(k, 16));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        for chunk in order.chunks(100) {
+            idx.append(chunk).unwrap();
+            let root = idx.root();
+            let sol = maximal_independent(&m, &ds, &root, k);
+            assert_eq!(sol.len(), k, "root lost feasibility at {} segments", idx.segments());
+        }
+    }
+
+    #[test]
+    fn root_indices_are_global_unique_and_covered() {
+        let ds = synth::uniform_cube(300, 3, 7);
+        let m = UniformMatroid::new(3);
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(3, 6));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        idx.ingest(&order, 50).unwrap();
+        let root = idx.root();
+        let mut seen = std::collections::HashSet::new();
+        for &i in &root {
+            assert!(i < ds.n());
+            assert!(seen.insert(i), "duplicate root index {i}");
+        }
+        assert!(root.len() < ds.n());
+    }
+
+    #[test]
+    fn stream_leaves_work_too() {
+        let ds = synth::uniform_cube(400, 2, 5);
+        let m = UniformMatroid::new(4);
+        let mut c = cfg(4, 8);
+        c.leaf_ingest = LeafIngest::Stream;
+        let mut idx = CoresetIndex::new(&ds, &m, c);
+        let order: Vec<usize> = (0..ds.n()).collect();
+        let receipts = idx.ingest(&order, 80).unwrap();
+        assert_eq!(receipts.len(), 5);
+        assert!(receipts.iter().all(|r| r.dist_evals > 0));
+        let root = idx.root();
+        let sol = maximal_independent(&m, &ds, &root, 4);
+        assert_eq!(sol.len(), 4);
+    }
+
+    #[test]
+    fn empty_batch_rejected() {
+        let ds = synth::uniform_cube(50, 2, 1);
+        let m = UniformMatroid::new(2);
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(2, 4));
+        assert!(idx.append(&[]).is_err());
+    }
+}

@@ -19,6 +19,12 @@
 //!   per-candidate sums) behind a backend registry
 //!   ([`runtime::EngineKind`]) with four backends and a cross-backend
 //!   conformance harness ([`runtime::conformance`]) — see below,
+//! * the **composable coreset index + query service** ([`index`]): a
+//!   merge-and-reduce coreset tree whose root is a standing coreset of
+//!   everything ingested (appends touch O(log segments) nodes), with an
+//!   epoch-invalidated LRU query cache on top — N `(objective, k,
+//!   matroid, engine)` queries pay one coreset construction instead of N
+//!   pipeline runs (`dmmc index build/append/query`, `--algo index`),
 //! * and the experiment substrate: synthetic datasets ([`data`]),
 //!   a thread-based MapReduce simulator ([`mapreduce`]), a streaming
 //!   harness ([`streaming`]), an experiment coordinator ([`coordinator`]),
@@ -103,6 +109,7 @@ pub mod coordinator;
 pub mod core;
 pub mod data;
 pub mod diversity;
+pub mod index;
 pub mod mapreduce;
 pub mod matroid;
 pub mod proptest;

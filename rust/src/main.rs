@@ -28,6 +28,10 @@ use matroid_coreset::coordinator::{
 };
 use matroid_coreset::data::{io, synth};
 use matroid_coreset::diversity::Objective;
+use matroid_coreset::index::{
+    store, CoresetIndex, IndexConfig, IndexSnapshot, LeafIngest, QueryFinisher, QueryService,
+    QuerySpec,
+};
 use matroid_coreset::matroid::Matroid;
 use matroid_coreset::runtime::EngineKind;
 use matroid_coreset::streaming::StreamMode;
@@ -40,11 +44,17 @@ USAGE: dmmc <subcommand> [options]
 SUBCOMMANDS
   gen-data   --kind wikisim|songsim|cube|clustered --n N [--seed S] --out F [--stats]
   stats      --data <file|kind:n>
-  run        --data <file|kind:n> --algo seq|stream|mr|full
-             [--k K] [--tau T | --eps E] [--workers L] [--objective sum|star|tree|cycle|bipartition]
+  run        --data <file|kind:n> --algo seq|stream|mr|index|full
+             [--k K] [--tau T | --eps E] [--workers L] [--segment N]
+             [--objective sum|star|tree|cycle|bipartition]
              [--finisher local-search|exhaustive|greedy] [--gamma G]
              [--engine batch|scalar|simd|pjrt] [--matroid transversal|partition:R|uniform:R]
              [--seed S]
+  index      build  --data <file|kind:n> --out F.dmmcx [--k K] [--tau T] [--segment N]
+                    [--count C] [--ingest seq|stream] [--engine E] [--matroid M] [--seed S]
+             append --index F.dmmcx [--count C] [--segment N]
+             query  --index F.dmmcx [--objective O] [--k K] [--finisher F] [--gamma G]
+                    [--engine E] [--matroid M] [--repeat R]
   sweep      --config configs/<file>.toml [--csv out.csv]
   artifacts-check  [--data <kind:n>]
   help
@@ -71,6 +81,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "gen-data" => cmd_gen_data(&args),
         "stats" => cmd_stats(&args),
         "run" => cmd_run(&args),
+        "index" => cmd_index(&args),
         "sweep" => cmd_sweep(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         "help" | "--help" => {
@@ -129,8 +140,8 @@ fn print_stats(ds: &matroid_coreset::core::Dataset) {
 
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_known(&[
-        "data", "algo", "k", "tau", "eps", "workers", "objective", "finisher", "gamma",
-        "engine", "matroid", "seed", "second-round-tau",
+        "data", "algo", "k", "tau", "eps", "workers", "segment", "objective", "finisher",
+        "gamma", "engine", "matroid", "seed", "second-round-tau",
     ])?;
     let seed = args.u64_or("seed", 1)?;
     let spec = DatasetSpec::parse(args.require("data")?, seed)?;
@@ -163,6 +174,10 @@ fn cmd_run(args: &Args) -> Result<()> {
                 Some(v) => Some(v.parse().context("--second-round-tau")?),
                 None => None,
             },
+        },
+        "index" => Setting::Index {
+            segment_size: args.usize_or("segment", (ds.n() / 8).max(1))?,
+            budget,
         },
         "full" => Setting::Full,
         other => bail!("unknown --algo {other}"),
@@ -211,6 +226,224 @@ fn cmd_run(args: &Args) -> Result<()> {
     for (key, value) in &out.extra {
         println!("  {key} = {value}");
     }
+    Ok(())
+}
+
+/// The composable coreset index service: `index build` constructs a tree
+/// over a prefix of the dataset and persists it, `index append` ingests
+/// further segments into the persisted tree (touching O(log segments)
+/// nodes), `index query` answers (objective, k, matroid, engine) requests
+/// from the root coreset only.  The result cache lives in-process, so
+/// `--repeat R` demonstrates hit behavior within one invocation.
+fn cmd_index(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .context("index needs an action: build | append | query (before any flags)")?;
+    match action {
+        "build" => cmd_index_build(args),
+        "append" => cmd_index_append(args),
+        "query" => cmd_index_query(args),
+        other => bail!("unknown index action {other} (build | append | query)"),
+    }
+}
+
+/// Reconstruct (dataset, matroid) from a snapshot's recipe fields.
+fn snapshot_world(
+    snap: &IndexSnapshot,
+) -> Result<(
+    matroid_coreset::core::Dataset,
+    matroid_coreset::coordinator::spec::MatroidBox,
+)> {
+    let spec = DatasetSpec::parse(&snap.data, snap.seed)?;
+    let ds = build_dataset(&spec)?;
+    let mspec = MatroidSpec::parse(&snap.matroid)?;
+    let matroid = build_matroid(&mspec, &ds);
+    Ok((ds, matroid))
+}
+
+fn cmd_index_build(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "data", "out", "k", "tau", "eps", "segment", "count", "ingest", "engine", "matroid",
+        "seed",
+    ])?;
+    let seed = args.u64_or("seed", 1)?;
+    let data = args.require("data")?.to_string();
+    let spec = DatasetSpec::parse(&data, seed)?;
+    let ds = build_dataset(&spec)?;
+    let matroid_str = match args.opt("matroid") {
+        Some(s) => {
+            MatroidSpec::parse(s)?; // validate now, store the shorthand
+            s.to_string()
+        }
+        // exhaustive on purpose: if default_for grows or changes a
+        // variant, the compiler forces this snapshot recipe to follow so
+        // `index build` and `run` keep defaulting to the same matroid
+        None => match MatroidSpec::default_for(&spec) {
+            MatroidSpec::Transversal => "transversal".to_string(),
+            MatroidSpec::PartitionProportional { target_rank } => {
+                format!("partition:{target_rank}")
+            }
+            MatroidSpec::Uniform(r) => format!("uniform:{r}"),
+            MatroidSpec::PartitionCaps(_) => {
+                bail!("explicit-caps matroids have no CLI shorthand; pass --matroid")
+            }
+        },
+    };
+    let matroid = build_matroid(&MatroidSpec::parse(&matroid_str)?, &ds);
+    let rank = matroid.rank_bound(&ds);
+    let k_max = args.usize_or("k", (rank / 4).max(2))?;
+    let budget = if let Some(eps) = args.opt("eps") {
+        Budget::Epsilon(eps.parse().context("--eps")?)
+    } else {
+        Budget::Clusters(args.usize_or("tau", 32)?)
+    };
+    let engine = EngineKind::parse(args.str_or("engine", EngineKind::default().name()))
+        .context("bad --engine (batch|scalar|simd|pjrt)")?;
+    let leaf_ingest = LeafIngest::parse(args.str_or("ingest", "seq"))
+        .context("bad --ingest (seq|stream)")?;
+    let count = args.usize_or("count", ds.n())?.min(ds.n());
+    let segment = args.usize_or("segment", (count / 8).max(1))?.max(1);
+
+    let cfg = IndexConfig {
+        k_max,
+        leaf_budget: budget,
+        reduce_budget: budget,
+        engine,
+        leaf_ingest,
+    };
+    let mut index = CoresetIndex::new(&ds, &*matroid, cfg);
+    let order: Vec<usize> = (0..count).collect();
+    let receipts = index.ingest(&order, segment)?;
+    let out = args.require("out")?;
+    let snap = IndexSnapshot::capture(&index, data, seed, matroid_str, count);
+    store::save(&snap, out)?;
+    println!(
+        "index build: data={} n={} ingested={} segments={} k_max={k_max} engine={}",
+        ds.name,
+        ds.n(),
+        count,
+        index.segments(),
+        engine.name(),
+    );
+    println!("root size       {}", index.root().len());
+    println!("merges          {}", index.stats().merges);
+    println!("dist evals      {}", index.stats().dist_evals);
+    if let Some(last) = receipts.last() {
+        println!("last append     touched {} nodes", last.nodes_touched);
+    }
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_index_append(args: &Args) -> Result<()> {
+    args.expect_known(&["index", "count", "segment"])?;
+    let path = args.require("index")?;
+    let snap = store::load(path)?;
+    let (ds, matroid) = snapshot_world(&snap)?;
+    let remaining = ds.n().saturating_sub(snap.cursor);
+    if remaining == 0 {
+        bail!("index already covers all {} dataset rows", ds.n());
+    }
+    let count = args.usize_or("count", remaining)?.min(remaining);
+    let segment = args.usize_or("segment", count)?.max(1);
+    let cfg = snap.config();
+    let mut index = CoresetIndex::from_parts(
+        &ds,
+        &*matroid,
+        cfg,
+        snap.levels.clone(),
+        snap.epoch,
+        snap.segments,
+        snap.points,
+    );
+    let order: Vec<usize> = (snap.cursor..snap.cursor + count).collect();
+    let receipts = index.ingest(&order, segment)?;
+    let new_cursor = snap.cursor + count;
+    let snap2 = IndexSnapshot::capture(&index, snap.data, snap.seed, snap.matroid, new_cursor);
+    store::save(&snap2, path)?;
+    println!(
+        "index append: +{count} rows in {} segment(s) (epoch {} -> {})",
+        receipts.len(),
+        snap.epoch,
+        index.epoch(),
+    );
+    for r in &receipts {
+        println!(
+            "  segment {:>4}: merges={} nodes_touched={} dist_evals={} root={}",
+            r.segment, r.merges, r.nodes_touched, r.dist_evals, r.root_size
+        );
+    }
+    Ok(())
+}
+
+fn cmd_index_query(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "index", "objective", "k", "finisher", "gamma", "engine", "matroid", "repeat",
+    ])?;
+    let path = args.require("index")?;
+    let snap = store::load(path)?;
+    let (ds, matroid) = snapshot_world(&snap)?;
+    let cfg = snap.config();
+    let index = CoresetIndex::from_parts(
+        &ds,
+        &*matroid,
+        cfg,
+        snap.levels.clone(),
+        snap.epoch,
+        snap.segments,
+        snap.points,
+    );
+    let mut service = QueryService::new(index);
+
+    let objective = Objective::parse(args.str_or("objective", "sum"))
+        .context("bad --objective")?;
+    let default_finisher = if objective == Objective::Sum { "local-search" } else { "exhaustive" };
+    let finisher = match args.str_or("finisher", default_finisher) {
+        "local-search" | "ls" => QueryFinisher::LocalSearch {
+            gamma: args.f64_or("gamma", 0.0)?,
+        },
+        "exhaustive" => QueryFinisher::Exhaustive,
+        "greedy" => QueryFinisher::Greedy,
+        other => bail!("unknown --finisher {other}"),
+    };
+    let spec = QuerySpec {
+        objective,
+        k: args.usize_or("k", snap.k_max)?,
+        matroid: match args.opt("matroid") {
+            Some(s) => Some(MatroidSpec::parse(s)?),
+            None => None,
+        },
+        engine: EngineKind::parse(args.str_or("engine", snap.engine.name()))
+            .context("bad --engine")?,
+        finisher,
+    };
+    let repeat = args.usize_or("repeat", 1)?.max(1);
+    println!(
+        "index query: epoch={} segments={} root={} spec={}",
+        snap.epoch,
+        snap.segments,
+        service.index().root().len(),
+        spec.cache_key(),
+    );
+    for i in 0..repeat {
+        let out = service.query(&spec)?;
+        println!(
+            "  [{i}] diversity={:.6} |sol|={} coreset={} cache_hit={} dist_evals={} {:.3}ms",
+            out.result.diversity,
+            out.result.solution.len(),
+            out.result.coreset_size,
+            out.cache_hit,
+            out.dist_evals.map(|e| e.to_string()).unwrap_or_else(|| "n/a".into()),
+            out.elapsed.as_secs_f64() * 1e3,
+        );
+    }
+    let st = service.stats();
+    println!(
+        "served {} queries: {} hits, {} misses, {} evictions",
+        st.queries, st.hits, st.misses, st.evictions
+    );
     Ok(())
 }
 
@@ -289,6 +522,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     let setting = match algo.as_str() {
                         "seq" => Setting::Seq { budget: Budget::Clusters(tau) },
                         "stream" => Setting::Stream { mode: StreamMode::Tau(tau) },
+                        "index" => Setting::Index {
+                            segment_size: (ds.n() / 8).max(1),
+                            budget: Budget::Clusters(tau),
+                        },
                         "full" => Setting::Full,
                         mr if mr.starts_with("mr") => {
                             let workers: usize = mr[2..].parse().context("mrN algo")?;

@@ -58,6 +58,15 @@ pub struct MrReport {
     /// local-search finisher reports via `LocalSearchResult::dist_evals`,
     /// so end-to-end pipelines can account every batched distance pass.
     pub shard_score_dist_evals: Vec<u64>,
+    /// Per-worker distance evaluations spent *building* the shard coreset
+    /// (the GMM folds: one `update_min` of the shard per selected center,
+    /// so `n_clusters_j * |shard_j|` each).  Previously this — the bulk of
+    /// the MR distance work — was silently dropped from the pipeline
+    /// extras while only the scoring pass was reported.
+    pub shard_coreset_dist_evals: Vec<u64>,
+    /// Distance evaluations of the optional round-2 re-compression
+    /// (`n_clusters_2 * |union|`; 0 without a second round).
+    pub round2_dist_evals: u64,
 }
 
 /// Build a coreset of `ds` in (simulated) MapReduce.
@@ -113,15 +122,19 @@ pub fn mr_coreset<M: Matroid + Sync>(
     let mut shard_coreset_sizes = Vec::with_capacity(cfg.workers);
     let mut shard_coreset_diversities = Vec::with_capacity(cfg.workers);
     let mut shard_score_dist_evals = Vec::with_capacity(cfg.workers);
+    let mut shard_coreset_dist_evals = Vec::with_capacity(cfg.workers);
     let mut n_clusters = 0;
     let mut radius = 0.0f64;
-    for r in results {
+    for (shard, r) in shards.iter().zip(results) {
         let (global, cs, shard_div, dt) = r?;
         shard_coreset_sizes.push(global.len());
         shard_coreset_diversities.push(shard_div);
         // the scoring pass is one sums_to_set of the shard coreset against
         // itself: |T_j| * (|T_j| - 1) distances net of self-pairs
         shard_score_dist_evals.push((global.len() * global.len().saturating_sub(1)) as u64);
+        // the construction pass is the GMM folds: one shard-wide
+        // update_min per selected center
+        shard_coreset_dist_evals.push((cs.n_clusters * shard.len()) as u64);
         union.extend(global);
         worker_times.push(dt);
         n_clusters += cs.n_clusters;
@@ -132,11 +145,13 @@ pub fn mr_coreset<M: Matroid + Sync>(
     let makespan_round1 = worker_times.iter().copied().max().unwrap_or_default();
 
     let mut rounds = 1;
+    let mut round2_dist_evals = 0u64;
     let coreset = if let Some(tau2) = cfg.second_round_tau {
         rounds = 2;
         let sub = ds.subset(&union);
         let engine = build_engine(cfg.engine, &sub)?;
         let cs2 = seq_coreset(&sub, m, k, Budget::Clusters(tau2), &*engine)?;
+        round2_dist_evals = (cs2.n_clusters * sub.n()) as u64;
         let indices: Vec<usize> = cs2.indices.iter().map(|&i| union[i]).collect();
         Coreset {
             indices,
@@ -163,6 +178,8 @@ pub fn mr_coreset<M: Matroid + Sync>(
         shard_coreset_sizes,
         shard_coreset_diversities,
         shard_score_dist_evals,
+        shard_coreset_dist_evals,
+        round2_dist_evals,
     })
 }
 
@@ -206,6 +223,27 @@ mod tests {
         for (evals, size) in rep.shard_score_dist_evals.iter().zip(&rep.shard_coreset_sizes) {
             assert_eq!(*evals, (size * size.saturating_sub(1)) as u64);
         }
+    }
+
+    #[test]
+    fn construction_evals_are_reported() {
+        // regression for the silently-dropped ledger: the GMM build work
+        // (the bulk of MR distance evals) must be accounted per shard,
+        // and the round-2 re-compression pass must be accounted too
+        let ds = synth::uniform_cube(800, 2, 6);
+        let m = UniformMatroid::new(4);
+        let mut c = cfg(4, 8);
+        let rep1 = mr_coreset(&ds, &m, 4, c).unwrap();
+        assert_eq!(rep1.shard_coreset_dist_evals.len(), 4);
+        // 800 points over 4 even shards = 200 each; tau = 8 centers, and
+        // each selected center costs one shard-wide update_min fold
+        for &evals in &rep1.shard_coreset_dist_evals {
+            assert_eq!(evals, 8 * 200);
+        }
+        assert_eq!(rep1.round2_dist_evals, 0);
+        c.second_round_tau = Some(8);
+        let rep2 = mr_coreset(&ds, &m, 4, c).unwrap();
+        assert!(rep2.round2_dist_evals > 0);
     }
 
     #[test]

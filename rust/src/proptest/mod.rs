@@ -46,13 +46,7 @@ impl Gen {
 }
 
 fn name_seed(name: &str) -> u64 {
-    // FNV-1a
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
+    crate::util::fnv1a(name)
 }
 
 /// Run `cases` random cases of the property; panic with a reproducible

@@ -17,7 +17,7 @@ use crate::core::Dataset;
 use crate::diversity::{diversity_with_engine, Objective};
 use crate::matroid::Matroid;
 use crate::runtime::engine::DistanceEngine;
-use crate::runtime::{build_engine, EngineKind};
+use crate::runtime::EngineKind;
 
 /// How the streaming algorithm is parameterized.
 #[derive(Clone, Copy, Debug)]
@@ -97,7 +97,7 @@ pub fn run_stream_with_engine(
         StreamMode::Tau(tau) => StreamCoreset::with_tau(ds, m, k, tau),
     };
     if engine != EngineKind::Scalar {
-        alg.set_engine(build_engine(engine, ds)?);
+        alg.set_engine_kind(engine)?;
     }
     for &x in order {
         alg.push(x);

@@ -1,0 +1,286 @@
+//! Integration: the composable coreset index + query service
+//! (`matroid_coreset::index`).
+//!
+//! Pins the three acceptance properties of the subsystem:
+//!
+//! * **quality** — the root coreset of a B-batch index matches the
+//!   one-shot SeqCoreset grid of `coreset_quality` on the same data,
+//!   within a pinned ratio, for every Table-1 objective;
+//! * **sublinear appends** — each append touches exactly
+//!   `1 + trailing_ones(segments)` nodes (O(log segments)), and the
+//!   cumulative dist-eval ledger stays far below rebuilding a one-shot
+//!   coreset per batch (the cost the index amortizes away);
+//! * **free cache hits** — a repeated query is answered bit-identically
+//!   to its cold run at zero distance evaluations, and appends invalidate
+//!   via the tree epoch.
+
+use matroid_coreset::algo::exhaustive::exhaustive_best;
+use matroid_coreset::algo::seq_coreset::seq_coreset;
+use matroid_coreset::algo::Budget;
+use matroid_coreset::core::{Dataset, Metric};
+use matroid_coreset::data::synth;
+use matroid_coreset::diversity::{Objective, ALL_OBJECTIVES};
+use matroid_coreset::index::{
+    CoresetIndex, IndexConfig, LeafIngest, QueryService, QuerySpec,
+};
+use matroid_coreset::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
+use matroid_coreset::prop_assert;
+use matroid_coreset::proptest::{check, Gen};
+use matroid_coreset::runtime::{EngineKind, ScalarEngine};
+
+/// The quality pin: the index's merge-and-reduce root must stay within
+/// this factor of the one-shot coreset's optimum (the eps = 0.5 grid of
+/// `coreset_quality`; the root is empirically near-lossless at these
+/// budgets, so 0.5 leaves a wide determinism margin).
+const PINNED_RATIO: f64 = 0.5;
+
+fn scalar_cfg(k_max: usize, tau: usize) -> IndexConfig {
+    IndexConfig {
+        k_max,
+        leaf_budget: Budget::Clusters(tau),
+        reduce_budget: Budget::Clusters(tau),
+        engine: EngineKind::Scalar,
+        leaf_ingest: LeafIngest::Seq,
+    }
+}
+
+#[test]
+fn root_quality_matches_one_shot_grid() {
+    // the exact dataset/matroid of coreset_quality's partition grid
+    let ds = synth::clustered(60, 2, 6, 0.05, 3, 1);
+    let m = PartitionMatroid::new(vec![2, 2, 2]);
+    let k = 4;
+    let one_shot = seq_coreset(&ds, &m, k, Budget::Epsilon(0.5), &ScalarEngine::new()).unwrap();
+
+    let mut idx = CoresetIndex::new(&ds, &m, scalar_cfg(k, 12));
+    let order: Vec<usize> = (0..ds.n()).collect();
+    idx.ingest(&order, 15).unwrap();
+    assert_eq!(idx.segments(), 4);
+    let root = idx.root();
+    assert!(root.len() < ds.n());
+
+    let scalar = ScalarEngine::new();
+    for obj in ALL_OBJECTIVES {
+        let os_opt = exhaustive_best(&ds, &m, k, &one_shot.indices, obj, &scalar)
+            .unwrap()
+            .diversity;
+        let root_opt = exhaustive_best(&ds, &m, k, &root, obj, &scalar).unwrap().diversity;
+        assert!(
+            root_opt >= PINNED_RATIO * os_opt - 1e-9,
+            "{obj:?}: index root {root_opt} < {PINNED_RATIO} * one-shot {os_opt}"
+        );
+    }
+
+    // and the end-to-end (1 - eps) shape of coreset_quality for sum:
+    // root optimum vs the brute-force optimum of the full input
+    let all: Vec<usize> = (0..ds.n()).collect();
+    let brute = exhaustive_best(&ds, &m, k, &all, Objective::Sum, &scalar).unwrap().diversity;
+    let root_sum = exhaustive_best(&ds, &m, k, &root, Objective::Sum, &scalar)
+        .unwrap()
+        .diversity;
+    assert!(
+        root_sum >= PINNED_RATIO * brute - 1e-9,
+        "sum: index root {root_sum} < {PINNED_RATIO} * brute {brute}"
+    );
+}
+
+#[test]
+fn appends_are_sublinear_in_the_dist_eval_ledger() {
+    let ds = synth::uniform_cube(1024, 2, 9);
+    let m = UniformMatroid::new(4);
+    let (k, tau, seg) = (4usize, 8usize, 32usize);
+    let order: Vec<usize> = (0..ds.n()).collect();
+
+    // the analytic leaf formula is the measured oracle counter
+    let view = ds.subset(&order[..seg]);
+    let probe = ScalarEngine::new();
+    let cs = seq_coreset(&view, &m, k, Budget::Clusters(tau), &probe).unwrap();
+    assert_eq!(
+        probe.dist_evals(),
+        (cs.n_clusters * view.n()) as u64,
+        "leaf ledger formula out of sync with the ScalarEngine counter"
+    );
+
+    let mut idx = CoresetIndex::new(&ds, &m, scalar_cfg(k, tau));
+    let mut index_evals = 0u64;
+    for (s, chunk) in order.chunks(seg).enumerate() {
+        let r = idx.append(chunk).unwrap();
+        // binary-counter carry: O(log segments) nodes, exactly
+        assert_eq!(r.nodes_touched, 1 + (s as u32).trailing_ones() as usize);
+        let log2_bound = usize::BITS - (s + 1).leading_zeros();
+        assert!(
+            r.nodes_touched <= log2_bound as usize + 1,
+            "append {} touched {} nodes > log bound {}",
+            s + 1,
+            r.nodes_touched,
+            log2_bound + 1
+        );
+        // the receipt's ledger is exactly its reduce log
+        let analytic: u64 = r.reduce_log.iter().map(|&(n, c)| (n * c) as u64).sum();
+        assert_eq!(r.dist_evals, analytic);
+        index_evals += r.dist_evals;
+    }
+    assert_eq!(index_evals, idx.stats().dist_evals);
+
+    // the amortized claim: maintaining the tree costs several times less
+    // than rebuilding a one-shot coreset after every batch (measured with
+    // the oracle counter, not assumed)
+    let mut naive_evals = 0u64;
+    for prefix in 1..=(order.len() / seg) {
+        let upto = ds.subset(&order[..prefix * seg]);
+        let counter = ScalarEngine::new();
+        seq_coreset(&upto, &m, k, Budget::Clusters(tau), &counter).unwrap();
+        naive_evals += counter.dist_evals();
+    }
+    assert!(
+        index_evals * 3 < naive_evals,
+        "index appends ({index_evals} evals) not sublinear vs per-batch rebuilds ({naive_evals})"
+    );
+}
+
+#[test]
+fn cached_repeat_query_does_zero_distance_evals() {
+    let ds = synth::clustered(500, 3, 5, 0.1, 4, 13);
+    let m = PartitionMatroid::new(vec![2; 4]);
+    let k = 6;
+    let order: Vec<usize> = (0..ds.n()).collect();
+
+    let mut svc = QueryService::new(CoresetIndex::new(&ds, &m, scalar_cfg(k, 16)));
+    for chunk in order.chunks(125) {
+        svc.append(chunk).unwrap();
+    }
+    let spec = QuerySpec::sum_local_search(k, EngineKind::Scalar);
+    let cold = svc.query(&spec).unwrap();
+    assert!(!cold.cache_hit);
+    assert!(cold.dist_evals.unwrap() > 0, "cold query must do distance work");
+    assert_eq!(cold.result.solution.len(), k);
+
+    let hit = svc.query(&spec).unwrap();
+    assert!(hit.cache_hit);
+    assert_eq!(hit.dist_evals, Some(0), "cache hit must cost zero distance evals");
+
+    // bit-identity: the hit equals the cold run, and a second service
+    // with the identical ingest reproduces the same cold result (cold
+    // runs are deterministic given (spec, epoch))
+    assert_eq!(hit.result.solution, cold.result.solution);
+    assert_eq!(hit.result.diversity.to_bits(), cold.result.diversity.to_bits());
+    let mut svc2 = QueryService::new(CoresetIndex::new(&ds, &m, scalar_cfg(k, 16)));
+    for chunk in order.chunks(125) {
+        svc2.append(chunk).unwrap();
+    }
+    let cold2 = svc2.query(&spec).unwrap();
+    assert!(!cold2.cache_hit);
+    assert_eq!(cold2.result.solution, cold.result.solution);
+    assert_eq!(cold2.result.diversity.to_bits(), cold.result.diversity.to_bits());
+
+    // appending invalidates: the next query is cold again at a new epoch
+    assert!(svc.append(&[]).is_err(), "empty batch must be rejected");
+    let epoch_before = cold.epoch;
+    svc.append(&order[..10]).unwrap();
+    let after = svc.query(&spec).unwrap();
+    assert!(!after.cache_hit);
+    assert!(after.epoch > epoch_before);
+}
+
+fn random_partition_instance(g: &mut Gen, max_n: usize) -> (Dataset, PartitionMatroid) {
+    let n = g.usize_in(12, max_n);
+    let dim = g.usize_in(1, 4);
+    let ncat = g.usize_in(2, 4) as u32;
+    let coords = g.vec_f32(n * dim, 2.0);
+    let categories = (0..n).map(|_| vec![g.rng.below(ncat as usize) as u32]).collect();
+    let ds = Dataset::new(dim, Metric::Euclidean, coords, categories, ncat, "idx-prop");
+    let caps: Vec<usize> = (0..ncat).map(|_| g.usize_in(1, 3)).collect();
+    (ds, PartitionMatroid::new(caps))
+}
+
+#[test]
+fn prop_merge_order_does_not_change_root_feasibility() {
+    check("index-merge-order-feasibility", 30, |g| {
+        let (ds, m) = random_partition_instance(g, 80);
+        let k = g.usize_in(2, 5);
+        let seg = g.usize_in(4, 20);
+        let order: Vec<usize> = (0..ds.n()).collect();
+        let segments: Vec<&[usize]> = order.chunks(seg).collect();
+
+        // forward segment order
+        let mut fwd = CoresetIndex::new(&ds, &m, scalar_cfg(k, g.usize_in(2, 8)));
+        for s in &segments {
+            fwd.append(s).map_err(|e| e.to_string())?;
+        }
+        // reversed segment order (same segments, different merge history)
+        let mut rev = CoresetIndex::new(&ds, &m, *fwd.config());
+        for s in segments.iter().rev() {
+            rev.append(s).map_err(|e| e.to_string())?;
+        }
+
+        let a = maximal_independent(&m, &ds, &fwd.root(), k).len();
+        let b = maximal_independent(&m, &ds, &rev.root(), k).len();
+        prop_assert!(
+            a == b,
+            "merge order changed root feasibility: forward {a}, reversed {b}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_index_feasible_whenever_one_shot_is() {
+    check("index-feasibility-vs-one-shot", 30, |g| {
+        let (ds, m) = random_partition_instance(g, 80);
+        let k = g.usize_in(2, 5);
+        let tau = g.usize_in(2, 8);
+        let one_shot =
+            seq_coreset(&ds, &m, k, Budget::Clusters(tau), &ScalarEngine::new())
+                .map_err(|e| e.to_string())?;
+        let os_len = maximal_independent(&m, &ds, &one_shot.indices, k).len();
+
+        let mut idx = CoresetIndex::new(&ds, &m, scalar_cfg(k, tau));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        idx.ingest(&order, g.usize_in(4, 20)).map_err(|e| e.to_string())?;
+        let root_len = maximal_independent(&m, &ds, &idx.root(), k).len();
+        prop_assert!(
+            root_len >= os_len,
+            "index from {} batches lost feasibility: root mis {root_len} < one-shot {os_len}",
+            idx.segments()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_hits_bit_identical_to_cold() {
+    check("index-cache-bit-identity", 15, |g| {
+        let (ds, m) = random_partition_instance(g, 60);
+        let rank: usize = {
+            // k capped by what the instance can actually seat
+            let all: Vec<usize> = (0..ds.n()).collect();
+            maximal_independent(&m, &ds, &all, 5).len()
+        };
+        if rank < 2 {
+            return Ok(());
+        }
+        let k = g.usize_in(2, rank);
+        let mut svc =
+            QueryService::new(CoresetIndex::new(&ds, &m, scalar_cfg(k, g.usize_in(2, 6))));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        let seg = g.usize_in(5, 30);
+        for chunk in order.chunks(seg) {
+            svc.append(chunk).map_err(|e| e.to_string())?;
+        }
+        let spec = QuerySpec::sum_local_search(k, EngineKind::Scalar);
+        let cold = svc.query(&spec).map_err(|e| e.to_string())?;
+        let hit = svc.query(&spec).map_err(|e| e.to_string())?;
+        prop_assert!(hit.cache_hit, "second identical query missed the cache");
+        prop_assert!(
+            hit.dist_evals == Some(0),
+            "cache hit did distance work: {:?}",
+            hit.dist_evals
+        );
+        prop_assert!(
+            hit.result.solution == cold.result.solution
+                && hit.result.diversity.to_bits() == cold.result.diversity.to_bits(),
+            "cache hit not bit-identical to the cold query"
+        );
+        Ok(())
+    });
+}
