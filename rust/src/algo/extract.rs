@@ -11,7 +11,7 @@
 //! * **general** (§3.1.3): a size-k independent subset if one exists,
 //!   otherwise the whole cluster (Theorem 3).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::core::Dataset;
 use crate::matroid::{maximal_independent, Matroid, MatroidKind};
@@ -38,8 +38,11 @@ fn augment_transversal(
     u: Vec<usize>,
     k: usize,
 ) -> Vec<usize> {
-    // categories of interest = categories of the points of U
-    let mut target: HashMap<u32, usize> = HashMap::new();
+    // categories of interest = categories of the points of U.  BTreeMaps,
+    // not HashMaps: coverage counting iterates these maps, and the
+    // determinism contract (dmmc-lint L1) requires an input-defined order
+    // so extraction depends only on the input order of `cluster`.
+    let mut target: BTreeMap<u32, usize> = BTreeMap::new();
     for &x in &u {
         for &c in &ds.categories[x] {
             target.insert(c, 0);
@@ -58,9 +61,9 @@ fn augment_transversal(
     }
     // count current coverage from U, then greedily add cluster points that
     // help an under-covered category
-    let mut have: HashMap<u32, usize> = target.keys().map(|&c| (c, 0)).collect();
+    let mut have: BTreeMap<u32, usize> = target.keys().map(|&c| (c, 0)).collect();
     let mut out = u.clone();
-    let in_u: std::collections::HashSet<usize> = u.iter().copied().collect();
+    let in_u: BTreeSet<usize> = u.iter().copied().collect();
     for &x in &u {
         for &c in &ds.categories[x] {
             if let Some(h) = have.get_mut(&c) {

@@ -114,7 +114,9 @@ mod tests {
         let ds = synth::uniform_cube(200, 2, 5);
         let m = UniformMatroid::new(3);
         let cs = seq_coreset(&ds, &m, 3, Budget::Clusters(10), &ScalarEngine::new()).unwrap();
-        let mut seen = std::collections::HashSet::new();
+        // BTreeSet so a duplicate-id assertion failure names the same
+        // first duplicate on every run
+        let mut seen = std::collections::BTreeSet::new();
         for &i in &cs.indices {
             assert!(i < ds.n());
             assert!(seen.insert(i));

@@ -359,7 +359,7 @@ impl<'a> StreamCoreset<'a> {
         // restore ALL surviving centers' delegates first: a dropped center
         // merged before a survivor would otherwise have its re-handled
         // points clobbered by the survivor's restore
-        let kept_set: std::collections::HashMap<usize, usize> =
+        let kept_set: std::collections::BTreeMap<usize, usize> =
             kept.iter().enumerate().map(|(new, &old)| (old, new)).collect();
         let mut dropped: Vec<(usize, Vec<usize>)> = Vec::new();
         for (pos, dz) in old_delegates.into_iter().enumerate() {

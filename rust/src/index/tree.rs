@@ -447,7 +447,9 @@ mod tests {
         let order: Vec<usize> = (0..ds.n()).collect();
         idx.ingest(&order, 50).unwrap();
         let root = idx.root();
-        let mut seen = std::collections::HashSet::new();
+        // BTreeSet so a duplicate-id assertion failure names the same
+        // first duplicate on every run
+        let mut seen = std::collections::BTreeSet::new();
         for &i in &root {
             assert!(i < ds.n());
             assert!(seen.insert(i), "duplicate root index {i}");

@@ -98,6 +98,32 @@
 //!   every DFS leaf from a single candidate tile — no duplicate distance
 //!   work (pinned by an evaluation-count regression).
 //!
+//! ## Determinism contracts and static analysis
+//!
+//! The engine contracts above are enforced mechanically, not just by
+//! convention.  `cargo xtask lint` (the `dmmc-lint` pass in
+//! `rust/xtask`) walks every file under `rust/src` and denies:
+//!
+//! * **L1** `HashMap`/`HashSet` in the result-producing modules
+//!   ([`matroid`], [`algo`], [`index`], [`diversity`]) — hash iteration
+//!   order is process-seeded, so iterated collections there must be
+//!   `BTreeMap`/`BTreeSet` or sorted;
+//! * **L2** float accumulation loops in the bit-exact engine kernels
+//!   outside the blessed reduction helpers (`rust/lint.toml [l2]`);
+//! * **L3** `as f32` narrowing inside the exact-f64
+//!   `sums_to_set`/`dists_to_points` kernels and the incremental-AMT
+//!   column store ([`algo::local_search`]);
+//! * **L4** `Instant::now`/`SystemTime`/ambient RNG in deterministic
+//!   query paths (timers live in [`util::timer`] and bench code; query
+//!   RNG derives from the `(spec, epoch)` cache key).
+//!
+//! Exceptions live in `rust/lint.toml` with mandatory justifications, and
+//! every entry must be load-bearing (a stale entry is itself a finding).
+//! CI gates on `cargo xtask lint --deny`, runs the core/algo/index unit
+//! tests under Miri, and runs the engine conformance suite under
+//! ThreadSanitizer; `tests/determinism_contract.rs` pins the runtime side
+//! (identical solutions across category insertion orders and replays).
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 

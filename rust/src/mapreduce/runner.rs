@@ -303,7 +303,9 @@ mod tests {
         let ds = synth::uniform_cube(500, 3, 6);
         let m = UniformMatroid::new(3);
         let rep = mr_coreset(&ds, &m, 3, cfg(4, 8)).unwrap();
-        let mut seen = std::collections::HashSet::new();
+        // BTreeSet so a duplicate-id assertion failure names the same
+        // first duplicate on every run
+        let mut seen = std::collections::BTreeSet::new();
         for &i in &rep.coreset.indices {
             assert!(i < ds.n());
             assert!(seen.insert(i), "duplicate index {i}");

@@ -7,7 +7,7 @@
 //! O(1) categories (the paper's standing assumption), so a check costs
 //! O(|X|^2) in the worst case and is near-linear in practice.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashSet};
 
 use crate::core::Dataset;
 use crate::matroid::{Matroid, MatroidKind};
@@ -24,11 +24,15 @@ impl TransversalMatroid {
     /// Returns `set.len()` iff `set` is independent.
     pub fn matching_size(ds: &Dataset, set: &[usize]) -> usize {
         // category id -> matched element position (in `set`), built lazily:
-        // only categories adjacent to `set` are ever touched.
-        let mut matched_cat: HashMap<u32, usize> = HashMap::new();
+        // only categories adjacent to `set` are ever touched.  A BTreeMap,
+        // not a HashMap: `matching_witness` iterates this map, and the
+        // determinism contract (dmmc-lint L1) requires every iterated
+        // collection in result-producing modules to have an input-defined
+        // order.
+        let mut matched_cat: BTreeMap<u32, usize> = BTreeMap::new();
         let mut size = 0;
         for (pos, &x) in set.iter().enumerate() {
-            let mut visited: HashMap<u32, bool> = HashMap::new();
+            let mut visited: HashSet<u32> = HashSet::new();
             if Self::augment(ds, set, pos, x, &mut matched_cat, &mut visited) {
                 size += 1;
             }
@@ -42,11 +46,11 @@ impl TransversalMatroid {
         set: &[usize],
         pos: usize,
         x: usize,
-        matched_cat: &mut HashMap<u32, usize>,
-        visited: &mut HashMap<u32, bool>,
+        matched_cat: &mut BTreeMap<u32, usize>,
+        visited: &mut HashSet<u32>,
     ) -> bool {
         for &c in &ds.categories[x] {
-            if visited.insert(c, true).is_some() {
+            if !visited.insert(c) {
                 continue;
             }
             match matched_cat.get(&c).copied() {
@@ -69,9 +73,9 @@ impl TransversalMatroid {
     /// A matching witnessing independence: element position -> category id.
     /// Only meaningful when `set` is independent.
     pub fn matching_witness(ds: &Dataset, set: &[usize]) -> Option<Vec<u32>> {
-        let mut matched_cat: HashMap<u32, usize> = HashMap::new();
+        let mut matched_cat: BTreeMap<u32, usize> = BTreeMap::new();
         for (pos, &x) in set.iter().enumerate() {
-            let mut visited: HashMap<u32, bool> = HashMap::new();
+            let mut visited: HashSet<u32> = HashSet::new();
             if !Self::augment(ds, set, pos, x, &mut matched_cat, &mut visited) {
                 return None;
             }
@@ -159,8 +163,9 @@ mod tests {
         let set = [0usize, 1, 2];
         assert!(m.is_independent(&d, &set));
         let w = TransversalMatroid::matching_witness(&d, &set).unwrap();
-        // distinct categories, each adjacent to its element
-        let mut seen = std::collections::HashSet::new();
+        // distinct categories, each adjacent to its element (BTreeSet so a
+        // failed assertion names the same first duplicate on every run)
+        let mut seen = std::collections::BTreeSet::new();
         for (pos, &c) in w.iter().enumerate() {
             assert!(d.categories[set[pos]].contains(&c));
             assert!(seen.insert(c));

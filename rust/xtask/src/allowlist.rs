@@ -1,0 +1,263 @@
+//! `rust/lint.toml` — the checked-in dmmc-lint policy.
+//!
+//! Zero-dependency, so this is a strict reader for the TOML *subset* the
+//! policy file uses (and nothing more — unknown sections or keys are hard
+//! errors, so a typo cannot silently widen the allowlist):
+//!
+//! ```toml
+//! [l2]
+//! blessed = ["dot_tree4", "sums_chunk"]
+//!
+//! [l3]
+//! exact_f64_fns = ["sums_to_set", "dists_to_points"]
+//!
+//! [[allow]]
+//! lint = "L1"
+//! path = "rust/src/matroid/transversal.rs"
+//! symbol = "HashSet"            # optional: pin one symbol
+//! justification = "membership-only; never iterated"
+//! ```
+//!
+//! Every `[[allow]]` entry must carry a non-empty `justification`
+//! (enforced as finding `A2 missing-justification`), and every entry must
+//! actually suppress something on the current tree (an unused entry is
+//! finding `A1 stale-allowlist`) — so the allowlist can only ever shrink
+//! to exactly the justified exceptions.
+
+use crate::report::Finding;
+
+/// One `[[allow]]` entry.
+#[derive(Debug, Clone, Default)]
+pub struct AllowEntry {
+    pub lint: String,
+    pub path: String,
+    /// Optional: only suppress findings whose `symbol` matches exactly
+    /// (empty = any symbol of that lint in that file).
+    pub symbol: String,
+    pub justification: String,
+    /// Line of the `[[allow]]` header in lint.toml (for A1/A2 findings).
+    pub line: u32,
+}
+
+impl AllowEntry {
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.lint == f.lint
+            && self.path == f.path
+            && (self.symbol.is_empty() || self.symbol == f.symbol)
+    }
+}
+
+/// The parsed policy: allowlist + per-lint configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Policy {
+    pub allow: Vec<AllowEntry>,
+    /// L2: functions allowed to accumulate floats in loops.
+    pub l2_blessed: Vec<String>,
+    /// L3: kernel functions whose bodies are exact-f64 paths.
+    pub l3_exact_f64_fns: Vec<String>,
+    /// Repo-relative path of the policy file (for A1/A2 findings).
+    pub source_path: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Section {
+    None,
+    L2,
+    L3,
+    Allow,
+}
+
+/// Parse the policy file.  Errors are fatal to the lint run: a policy
+/// that cannot be read strictly must not gate anything.
+pub fn parse(src: &str, source_path: &str) -> Result<Policy, String> {
+    let mut policy = Policy {
+        source_path: source_path.to_string(),
+        ..Policy::default()
+    };
+    let mut section = Section::None;
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx as u32 + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[allow]]" {
+            section = Section::Allow;
+            policy.allow.push(AllowEntry {
+                line: lineno,
+                ..AllowEntry::default()
+            });
+            continue;
+        }
+        if line.starts_with("[[") {
+            return Err(format!("lint.toml:{lineno}: unknown array table {line}"));
+        }
+        if line.starts_with('[') {
+            section = match line.as_str() {
+                "[l2]" => Section::L2,
+                "[l3]" => Section::L3,
+                _ => return Err(format!("lint.toml:{lineno}: unknown section {line}")),
+            };
+            continue;
+        }
+        let (key, value) = match line.split_once('=') {
+            Some((k, v)) => (k.trim().to_string(), v.trim().to_string()),
+            None => return Err(format!("lint.toml:{lineno}: expected `key = value`")),
+        };
+        match (section, key.as_str()) {
+            (Section::L2, "blessed") => policy.l2_blessed = parse_string_array(&value, lineno)?,
+            (Section::L3, "exact_f64_fns") => {
+                policy.l3_exact_f64_fns = parse_string_array(&value, lineno)?
+            }
+            (Section::Allow, k @ ("lint" | "path" | "symbol" | "justification")) => {
+                let s = parse_string(&value, lineno)?;
+                let entry = policy
+                    .allow
+                    .last_mut()
+                    .ok_or_else(|| format!("lint.toml:{lineno}: key outside [[allow]]"))?;
+                match k {
+                    "lint" => entry.lint = s,
+                    "path" => entry.path = s,
+                    "symbol" => entry.symbol = s,
+                    _ => entry.justification = s,
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "lint.toml:{lineno}: unknown key `{key}` in this section"
+                ))
+            }
+        }
+    }
+    for e in &policy.allow {
+        if e.lint.is_empty() || e.path.is_empty() {
+            return Err(format!(
+                "lint.toml:{}: [[allow]] entry needs both `lint` and `path`",
+                e.line
+            ));
+        }
+    }
+    Ok(policy)
+}
+
+/// Strip a `#` comment, respecting `#` inside double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'"' => in_str = !in_str,
+            b'\\' if in_str => i += 1,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+fn parse_string(value: &str, lineno: u32) -> Result<String, String> {
+    let v = value.trim();
+    if v.len() < 2 || !v.starts_with('"') || !v.ends_with('"') {
+        return Err(format!("lint.toml:{lineno}: expected a \"string\", got `{v}`"));
+    }
+    let inner = &v[1..v.len() - 1];
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => {}
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+fn parse_string_array(value: &str, lineno: u32) -> Result<Vec<String>, String> {
+    let v = value.trim();
+    if !v.starts_with('[') || !v.ends_with(']') {
+        return Err(format!("lint.toml:{lineno}: expected a [\"...\"] array"));
+    }
+    let inner = v[1..v.len() - 1].trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| parse_string(s, lineno))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# policy
+[l2]
+blessed = ["dot_tree4", "sums_chunk"]
+
+[l3]
+exact_f64_fns = ["sums_to_set"]
+
+[[allow]]
+lint = "L1"
+path = "rust/src/matroid/transversal.rs"
+symbol = "HashSet"
+justification = "membership-only # not a comment"
+"#;
+
+    #[test]
+    fn parses_sections_and_entries() {
+        let p = parse(SAMPLE, "rust/lint.toml").unwrap();
+        assert_eq!(p.l2_blessed, vec!["dot_tree4", "sums_chunk"]);
+        assert_eq!(p.l3_exact_f64_fns, vec!["sums_to_set"]);
+        assert_eq!(p.allow.len(), 1);
+        let e = &p.allow[0];
+        assert_eq!(e.lint, "L1");
+        assert_eq!(e.symbol, "HashSet");
+        assert!(e.justification.contains("# not a comment"));
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_are_errors() {
+        assert!(parse("[l9]\n", "t").is_err());
+        assert!(parse("[l2]\nblssed = [\"x\"]\n", "t").is_err());
+        assert!(parse("[[deny]]\n", "t").is_err());
+        assert!(parse("[[allow]]\nlint = \"L1\"\n", "t").is_err(), "path required");
+    }
+
+    #[test]
+    fn symbol_scoping_matches() {
+        let e = AllowEntry {
+            lint: "L1".into(),
+            path: "a.rs".into(),
+            symbol: "HashSet".into(),
+            justification: "j".into(),
+            line: 1,
+        };
+        let mut f = Finding {
+            lint: "L1".into(),
+            name: "hash-collection".into(),
+            path: "a.rs".into(),
+            line: 3,
+            symbol: "HashSet".into(),
+            message: String::new(),
+        };
+        assert!(e.matches(&f));
+        f.symbol = "HashMap".into();
+        assert!(!e.matches(&f), "symbol-pinned entry must not cover HashMap");
+    }
+}

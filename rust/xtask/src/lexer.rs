@@ -1,0 +1,437 @@
+//! A small Rust token scanner — the front end of dmmc-lint.
+//!
+//! The offline image ships no `syn`, so the lints run on a hand-rolled
+//! lexical pass instead of a real AST.  The scanner is exact about the
+//! things that would otherwise cause false positives — comments (line,
+//! nested block, doc), string/char/byte literals, raw strings and raw
+//! identifiers, lifetimes, numeric literals with suffixes — and emits a
+//! flat token stream with line numbers.  Structural context (enclosing
+//! function, loop bodies, `#[cfg(test)]` regions) is reconstructed from
+//! this stream by [`crate::lints::contexts`].
+//!
+//! Known, documented approximations (the tree is rustfmt-formatted, which
+//! CI enforces, so these cannot bite in practice):
+//!
+//! * `*p=x` / `&x=y` without spaces would lex as a compound-assign token;
+//!   rustfmt always spaces binary assignment.
+
+/// Token classification — only as fine-grained as the lints need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `for`, `HashMap`, ...).
+    Ident,
+    /// Single punctuation character.
+    Punct,
+    /// Compound assignment operator (`+=`, `-=`, `*=`, `/=`, `%=`, `&=`,
+    /// `|=`, `^=`) — the accumulation shape lint L2 looks for.
+    CompoundAssign,
+    /// Integer literal (decimal, hex, octal, binary; any suffix).
+    Int,
+    /// Float literal (has a fraction, an exponent, or an `f32`/`f64`
+    /// suffix).
+    Float,
+    /// String or byte-string literal (normal or raw); contents dropped.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'outer` loop labels).
+    Lifetime,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Scan `src` into a token stream.  Never fails: unrecognized bytes are
+/// skipped (lints only ever look for specific shapes, so dropping an
+/// exotic byte is safe and keeps the scanner total).
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let count_newlines = |s: &[u8]| s.iter().filter(|&&c| c == b'\n').count() as u32;
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings / raw identifiers / byte literals: r"  r#"  br"  b"  b'  r#ident
+        if c == b'r' || c == b'b' {
+            // raw (byte) string prefix: r / br, then #s, then a quote
+            let after_r = if c == b'r' {
+                Some(i + 1)
+            } else if i + 1 < n && b[i + 1] == b'r' {
+                Some(i + 2)
+            } else {
+                None
+            };
+            if let Some(start) = after_r {
+                let mut j = start;
+                let mut hashes = 0usize;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    // raw (byte) string: scan to `"` followed by `hashes` #s
+                    let start_line = line;
+                    j += 1;
+                    loop {
+                        if j >= n {
+                            break;
+                        }
+                        if b[j] == b'"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && b[j + 1 + k] == b'#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if b[j] == b'\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                    toks.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+                    i = j;
+                    continue;
+                }
+                if c == b'r' && hashes == 1 && j < n && is_ident_start(b[j]) {
+                    // raw identifier r#type
+                    let s = j;
+                    while j < n && is_ident_char(b[j]) {
+                        j += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Ident,
+                        text: src[s..j].to_string(),
+                        line,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            if c == b'b' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'\'') {
+                // byte string / byte char with escapes
+                let quote = b[i + 1];
+                let start_line = line;
+                let mut j = i + 2;
+                while j < n && b[j] != quote {
+                    if b[j] == b'\\' {
+                        j += 2;
+                    } else {
+                        if b[j] == b'\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                toks.push(Tok {
+                    kind: if quote == b'"' { TokKind::Str } else { TokKind::Char },
+                    text: String::new(),
+                    line: start_line,
+                });
+                i = (j + 1).min(n);
+                continue;
+            }
+            // fall through: plain identifier starting with r/b
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: src[start..i].to_string(),
+                line,
+            });
+            continue;
+        }
+        if c == b'"' {
+            let start_line = line;
+            let mut j = i + 1;
+            while j < n && b[j] != b'"' {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line: start_line });
+            i = (j + 1).min(n);
+            continue;
+        }
+        if c == b'\'' {
+            // char literal or lifetime
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char literal
+                let mut j = i + 2;
+                if j < n {
+                    j += 1; // the escaped character
+                }
+                while j < n && b[j] != b'\'' {
+                    j += 1; // \u{...} forms
+                }
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i = (j + 1).min(n);
+                continue;
+            }
+            // one character (possibly multi-byte) then a closing quote -> char
+            let mut j = i + 1;
+            if j < n {
+                let ch_len = utf8_len(b[j]);
+                j += ch_len;
+            }
+            if j < n && b[j] == b'\'' {
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i = j + 1;
+                continue;
+            }
+            // lifetime: 'ident
+            let start = i + 1;
+            let mut j = start;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lifetime,
+                text: src[start..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut is_float = false;
+            if c == b'0' && i + 1 < n && matches!(b[i + 1], b'x' | b'o' | b'b' | b'X' | b'O' | b'B')
+            {
+                i += 2;
+                while i < n && (b[i].is_ascii_hexdigit() || b[i] == b'_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+                    i += 1;
+                }
+                if i + 1 < n && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    is_float = true;
+                    i += 1;
+                    while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+                        i += 1;
+                    }
+                } else if i < n
+                    && b[i] == b'.'
+                    && (i + 1 >= n || !(is_ident_start(b[i + 1]) || b[i + 1] == b'.'))
+                {
+                    // `1.` trailing-dot float (but not `1.max(..)` or `0..n`)
+                    is_float = true;
+                    i += 1;
+                }
+                if i < n && (b[i] == b'e' || b[i] == b'E') {
+                    let mut j = i + 1;
+                    if j < n && (b[j] == b'+' || b[j] == b'-') {
+                        j += 1;
+                    }
+                    if j < n && b[j].is_ascii_digit() {
+                        is_float = true;
+                        i = j;
+                        while i < n && (b[i].is_ascii_digit() || b[i] == b'_') {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            // type suffix
+            if i < n && is_ident_start(b[i]) {
+                let s = i;
+                while i < n && is_ident_char(b[i]) {
+                    i += 1;
+                }
+                if src[s..i].starts_with('f') {
+                    is_float = true;
+                }
+            }
+            toks.push(Tok {
+                kind: if is_float { TokKind::Float } else { TokKind::Int },
+                text: src[start..i].to_string(),
+                line,
+            });
+            continue;
+        }
+        // compound assignment operators
+        if matches!(c, b'+' | b'-' | b'*' | b'/' | b'%' | b'^' | b'&' | b'|')
+            && i + 1 < n
+            && b[i + 1] == b'='
+        {
+            toks.push(Tok {
+                kind: TokKind::CompoundAssign,
+                text: format!("{}=", c as char),
+                line,
+            });
+            i += 2;
+            continue;
+        }
+        // single punctuation (multi-byte UTF-8 outside literals: skip)
+        let len = utf8_len(c);
+        if len == 1 {
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: (c as char).to_string(),
+                line,
+            });
+        } else {
+            line += count_newlines(&b[i..(i + len).min(n)]);
+        }
+        i += len;
+    }
+    toks
+}
+
+fn utf8_len(b0: u8) -> usize {
+    if b0 < 0x80 {
+        1
+    } else if b0 >= 0xF0 {
+        4
+    } else if b0 >= 0xE0 {
+        3
+    } else {
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        tokenize(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_invisible() {
+        let toks = tokenize("let x = \"HashMap\"; // HashMap\n/* HashMap */ let y;");
+        assert!(toks.iter().all(|t| t.text != "HashMap"));
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let toks = tokenize("let s = r#\"HashMap \" inner\"#; let r#type = 1;");
+        assert!(toks.iter().all(|t| t.text != "HashMap"));
+        assert!(toks.iter().any(|t| t.text == "type" && t.kind == TokKind::Ident));
+    }
+
+    #[test]
+    fn chars_and_lifetimes() {
+        let toks = tokenize("'a' 'x: loop {} fn f<'b>(v: &'b str) {} '\\n'");
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["x", "b", "b"]);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn numbers_classify() {
+        let toks = tokenize("1 2.5 1e3 0x1F 7usize 1.0f32 3f64 1.max(2) 0..4");
+        let kinds: Vec<TokKind> = toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Int | TokKind::Float))
+            .map(|t| t.kind)
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                TokKind::Int,
+                TokKind::Float,
+                TokKind::Float,
+                TokKind::Int,
+                TokKind::Int,
+                TokKind::Float,
+                TokKind::Float,
+                TokKind::Int, // 1 in 1.max(2)
+                TokKind::Int, // 2
+                TokKind::Int, // 0
+                TokKind::Int, // 4
+            ]
+        );
+    }
+
+    #[test]
+    fn compound_assign_is_one_token() {
+        let toks = tokenize("s += d; t -= 1; a == b; c = d;");
+        let compounds: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::CompoundAssign)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(compounds, vec!["+=", "-="]);
+        assert_eq!(texts("a==b").iter().filter(|t| *t == "=").count(), 2);
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_constructs() {
+        let src = "let a = 1;\n/* two\nlines */ let b = \"x\ny\"; let c = 2;";
+        let toks = tokenize(src);
+        let c_tok = toks.iter().find(|t| t.text == "c").unwrap();
+        assert_eq!(c_tok.line, 4);
+    }
+}

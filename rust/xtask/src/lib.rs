@@ -1,0 +1,209 @@
+//! dmmc-lint: determinism-contract static analysis for the
+//! matroid-coreset tree (`cargo xtask lint`).
+//!
+//! The crate is zero-dependency by design (the repo builds without
+//! network access): [`lexer`] is a hand-rolled Rust token scanner —
+//! comments, strings, raw strings, char-vs-lifetime, numeric literals —
+//! and [`allowlist`] is a strict reader for the TOML subset that
+//! `rust/lint.toml` uses.  [`lints`] holds the four contract lints
+//! (L1 hash-collection, L2 float-accum, L3 narrowing-cast, L4
+//! ambient-time-rng); [`report`] renders human and JSON output.
+//!
+//! The pass is deterministic end to end: files are walked in sorted
+//! order and findings are sorted by `(path, line, lint)`, so two runs on
+//! the same tree emit byte-identical reports — the lint holds itself to
+//! the contract it enforces.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod lints;
+pub mod report;
+
+use std::fs;
+use std::path::Path;
+
+use allowlist::Policy;
+use lints::SourceFile;
+use report::{Finding, LintReport};
+
+/// Collect every `*.rs` file under `<root>/rust/src`, repo-relative with
+/// `/` separators, in sorted order (so the report is stable across
+/// platforms and filesystem iteration orders).
+pub fn collect_sources(root: &Path) -> Result<Vec<SourceFile>, String> {
+    let src_root = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    walk(root, &src_root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let content =
+            fs::read_to_string(root.join(&p)).map_err(|e| format!("read {p}: {e}"))?;
+        files.push(SourceFile { path: p, content });
+    }
+    Ok(files)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            // Repo-relative with `/` separators (`rust/src/...`).
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|_| format!("{} escapes the repo root", path.display()))?;
+            let comps: Vec<String> = rel
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect();
+            out.push(comps.join("/"));
+        }
+    }
+    Ok(())
+}
+
+/// Run the full lint pass: per-file lints, allowlist suppression, and
+/// the two allowlist-hygiene findings.
+///
+/// * **A1 `stale-allowlist`** — an `[[allow]]` entry that suppressed
+///   nothing on this tree.  Entries must stay load-bearing: once the
+///   underlying code is fixed the entry has to be deleted, and deleting
+///   any *used* entry makes its finding resurface — so the allowlist is
+///   exact in both directions.
+/// * **A2 `missing-justification`** — an `[[allow]]` entry with an empty
+///   `justification`.  Suppression without a recorded reason is not
+///   reviewable.
+pub fn run(files: &[SourceFile], policy: &Policy) -> LintReport {
+    let mut raw = Vec::new();
+    for f in files {
+        lints::lint_file(f, policy, &mut raw);
+    }
+
+    let mut used = vec![false; policy.allow.len()];
+    let mut findings = Vec::new();
+    let mut suppressed = 0u32;
+    for f in raw {
+        match policy.allow.iter().position(|e| e.matches(&f)) {
+            Some(i) => {
+                used[i] = true;
+                suppressed += 1;
+            }
+            None => findings.push(f),
+        }
+    }
+
+    for (entry, used) in policy.allow.iter().zip(&used) {
+        if !used {
+            findings.push(Finding {
+                lint: "A1".to_string(),
+                name: "stale-allowlist".to_string(),
+                path: policy.source_path.clone(),
+                line: entry.line,
+                symbol: entry.symbol.clone(),
+                message: format!(
+                    "[[allow]] entry ({} in {}) suppressed nothing on this tree; \
+                     delete it",
+                    entry.lint, entry.path
+                ),
+            });
+        }
+        if entry.justification.trim().is_empty() {
+            findings.push(Finding {
+                lint: "A2".to_string(),
+                name: "missing-justification".to_string(),
+                path: policy.source_path.clone(),
+                line: entry.line,
+                symbol: entry.symbol.clone(),
+                message: format!(
+                    "[[allow]] entry ({} in {}) has no justification",
+                    entry.lint, entry.path
+                ),
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.lint.as_str()).cmp(&(b.path.as_str(), b.line, b.lint.as_str()))
+    });
+    LintReport {
+        findings,
+        suppressed,
+        files_scanned: files.len() as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use allowlist::AllowEntry;
+
+    fn file(path: &str, content: &str) -> SourceFile {
+        SourceFile {
+            path: path.to_string(),
+            content: content.to_string(),
+        }
+    }
+
+    #[test]
+    fn suppression_counts_and_symbol_pinning() {
+        let files = vec![file(
+            "rust/src/matroid/t.rs",
+            "use std::collections::{HashMap, HashSet};",
+        )];
+        let policy = Policy {
+            allow: vec![AllowEntry {
+                lint: "L1".into(),
+                path: "rust/src/matroid/t.rs".into(),
+                symbol: "HashSet".into(),
+                justification: "membership-only".into(),
+                line: 10,
+            }],
+            source_path: "rust/lint.toml".into(),
+            ..Policy::default()
+        };
+        let report = run(&files, &policy);
+        assert_eq!(report.suppressed, 1, "HashSet suppressed");
+        assert_eq!(report.findings.len(), 1, "HashMap survives the pinned entry");
+        assert_eq!(report.findings[0].symbol, "HashMap");
+    }
+
+    #[test]
+    fn stale_and_unjustified_entries_are_findings() {
+        let policy = Policy {
+            allow: vec![AllowEntry {
+                lint: "L4".into(),
+                path: "rust/src/nonexistent.rs".into(),
+                symbol: String::new(),
+                justification: String::new(),
+                line: 3,
+            }],
+            source_path: "rust/lint.toml".into(),
+            ..Policy::default()
+        };
+        let report = run(&[], &policy);
+        let lints: Vec<&str> = report.findings.iter().map(|f| f.lint.as_str()).collect();
+        assert_eq!(lints, ["A1", "A2"]);
+        assert_eq!(report.findings[0].path, "rust/lint.toml");
+        assert_eq!(report.findings[0].line, 3);
+    }
+
+    #[test]
+    fn findings_are_sorted() {
+        let files = vec![
+            file("rust/src/matroid/z.rs", "use std::collections::HashMap;"),
+            file("rust/src/algo/a.rs", "\nfn f() { let m = HashMap::new(); }"),
+        ];
+        let report = run(&files, &Policy::default());
+        let keys: Vec<(&str, u32)> = report
+            .findings
+            .iter()
+            .map(|f| (f.path.as_str(), f.line))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,465 @@
+//! The determinism-contract lint registry (L1-L4).
+//!
+//! Each lint is a token-level pass over one source file, scoped to the
+//! modules whose contracts it enforces (paths are repo-relative with `/`
+//! separators).  Test modules (`#[cfg(test)] mod ... { ... }`) are
+//! skipped by every lint: the contracts bind result-producing code, and
+//! the tests that *pin* the contracts legitimately compare floats, time
+//! phases, and so on.
+//!
+//! * **L1 `hash-collection`** — no `HashMap`/`HashSet` in the
+//!   result-producing modules (`matroid/`, `algo/`, `index/`,
+//!   `diversity/`).  Hash iteration order is seeded per process, so any
+//!   iteration over these collections is a nondeterminism hazard that
+//!   multiplies across MapReduce shards; require `BTreeMap`/`BTreeSet`
+//!   or a sorted collect, or an allowlist entry justifying why the
+//!   collection's order provably cannot reach a result (membership-only
+//!   sets).
+//! * **L2 `float-accum`** — no float accumulation loops in the engine
+//!   kernels of bit-exact-contract backends (`runtime/engine.rs`,
+//!   `runtime/batch.rs`, `runtime/simd.rs` — the modules whose
+//!   `EngineKind::contract()` declares bit-exactness; `pjrt.rs` is
+//!   tolerance-contracted and exempt).  A compound assignment (`+=` ...)
+//!   inside a loop is flagged unless the enclosing function is a blessed
+//!   reduction helper (`lint.toml [l2] blessed` — `dot_tree4`, the
+//!   left-to-right lane chains) or the right-hand side is a plain
+//!   integer literal / SCREAMING_CASE stride constant (index and counter
+//!   bookkeeping, not numerics).
+//! * **L3 `narrowing-cast`** — no `as f32` narrowing in the exact-f64
+//!   paths: inside `sums_to_set`/`dists_to_points` kernels (`lint.toml
+//!   [l3] exact_f64_fns`) of the bit-exact engine files, and anywhere in
+//!   `algo/local_search.rs` (the incremental-AMT column store is exact
+//!   f64 end to end).
+//! * **L4 `ambient-time-rng`** — no `Instant::now`/`SystemTime`/ambient
+//!   RNG (`thread_rng`, `from_entropy`, `OsRng`, `getrandom`) in
+//!   deterministic query/finisher paths: all of `rust/src/` except
+//!   `util/timer.rs` and `bench/` (the designated wall-clock homes).
+//!   Query-path RNG must derive from the `(spec, epoch)` cache key so a
+//!   cache hit is bit-identical to its cold run.
+//!
+//! Findings carry the offending `symbol`; allowlist entries may pin one
+//! (`symbol = "HashSet"` suppresses only `HashSet` findings — so
+//! re-introducing a `HashMap` in an allowlisted file still fails).
+
+use crate::allowlist::Policy;
+use crate::lexer::{tokenize, Tok, TokKind};
+use crate::report::Finding;
+
+/// One source file, addressed repo-relative with `/` separators
+/// (`rust/src/matroid/transversal.rs`).
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub content: String,
+}
+
+/// Structural context of one token, reconstructed from the token stream.
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    /// Innermost enclosing function name, if any.
+    pub fn_name: Option<String>,
+    /// Number of enclosing `for`/`while`/`loop` bodies.
+    pub loop_depth: u32,
+    /// Inside a `#[cfg(test)]` item (inline test module).
+    pub in_test: bool,
+}
+
+const L1_DIRS: &[&str] = &[
+    "rust/src/matroid/",
+    "rust/src/algo/",
+    "rust/src/index/",
+    "rust/src/diversity/",
+];
+const L2_FILES: &[&str] = &[
+    "rust/src/runtime/engine.rs",
+    "rust/src/runtime/batch.rs",
+    "rust/src/runtime/simd.rs",
+];
+const L3_WHOLE_FILES: &[&str] = &["rust/src/algo/local_search.rs"];
+const L4_ROOT: &str = "rust/src/";
+const L4_EXEMPT_FILES: &[&str] = &["rust/src/util/timer.rs"];
+const L4_EXEMPT_DIRS: &[&str] = &["rust/src/bench/"];
+const L4_RNG_IDENTS: &[&str] = &["thread_rng", "from_entropy", "OsRng", "getrandom"];
+
+/// Does `toks[i]` start a `#[cfg(test)]` attribute?
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    let want = ["[", "cfg", "(", "test", ")", "]"];
+    toks.len() > i + want.len()
+        && toks[i].text == "#"
+        && want.iter().zip(&toks[i + 1..]).all(|(w, t)| t.text == *w)
+}
+
+/// Reconstruct per-token structural context (single forward pass).
+pub fn contexts(toks: &[Tok]) -> Vec<Ctx> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut depth: i64 = 0;
+    let mut fn_stack: Vec<(String, i64)> = Vec::new();
+    let mut loop_stack: Vec<i64> = Vec::new();
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let mut awaiting_fn_name = false;
+    let mut pending_loop = false;
+    let mut pending_test = false;
+    let mut impl_header = false;
+    // `(`/`[` nesting: a `;` inside parens or brackets (array types like
+    // `-> [f64; 4]`, `[0u8; N]` params) must not cancel a pending item.
+    let mut nest: i64 = 0;
+
+    for (i, t) in toks.iter().enumerate() {
+        out.push(Ctx {
+            fn_name: fn_stack.last().map(|(n, _)| n.clone()),
+            loop_depth: loop_stack.len() as u32,
+            in_test: !test_stack.is_empty(),
+        });
+        match t.kind {
+            TokKind::Ident => {
+                if awaiting_fn_name {
+                    // `fn name` — anything else (`fn(usize)` pointer
+                    // types) cancels below
+                    pending_fn = Some(t.text.clone());
+                    awaiting_fn_name = false;
+                    continue;
+                }
+                match t.text.as_str() {
+                    "fn" => awaiting_fn_name = true,
+                    "impl" => impl_header = true,
+                    "while" | "loop" => pending_loop = true,
+                    "for" => {
+                        // not a loop in `impl Trait for Type` or HRTB
+                        // `for<'a>` positions
+                        let hrtb = toks
+                            .get(i + 1)
+                            .is_some_and(|x| x.kind == TokKind::Punct && x.text == "<");
+                        if !impl_header && !hrtb {
+                            pending_loop = true;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            TokKind::Punct => {
+                awaiting_fn_name = false;
+                match t.text.as_str() {
+                    "{" => {
+                        depth += 1;
+                        impl_header = false;
+                        if let Some(name) = pending_fn.take() {
+                            fn_stack.push((name, depth));
+                        }
+                        if pending_loop {
+                            loop_stack.push(depth);
+                            pending_loop = false;
+                        }
+                        if pending_test {
+                            test_stack.push(depth);
+                            pending_test = false;
+                        }
+                    }
+                    "}" => {
+                        while fn_stack.last().is_some_and(|&(_, d)| d == depth) {
+                            fn_stack.pop();
+                        }
+                        while loop_stack.last() == Some(&depth) {
+                            loop_stack.pop();
+                        }
+                        while test_stack.last() == Some(&depth) {
+                            test_stack.pop();
+                        }
+                        depth -= 1;
+                    }
+                    "(" | "[" => nest += 1,
+                    ")" | "]" => nest = (nest - 1).max(0),
+                    ";" => {
+                        // trait method declarations, `#[cfg(test)] use ..;`
+                        if nest == 0 {
+                            pending_fn = None;
+                            pending_loop = false;
+                            pending_test = false;
+                            impl_header = false;
+                        }
+                    }
+                    "#" => {
+                        if is_cfg_test_attr(toks, i) {
+                            pending_test = true;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            _ => awaiting_fn_name = false,
+        }
+    }
+    out
+}
+
+fn in_any_dir(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.starts_with(d))
+}
+
+fn is_screaming_const(s: &str) -> bool {
+    s.len() >= 2
+        && s.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+        && s.chars().any(|c| c.is_ascii_uppercase())
+}
+
+fn finding(
+    lint: &str,
+    name: &str,
+    file: &SourceFile,
+    tok: &Tok,
+    symbol: &str,
+    message: String,
+) -> Finding {
+    Finding {
+        lint: lint.to_string(),
+        name: name.to_string(),
+        path: file.path.clone(),
+        line: tok.line,
+        symbol: symbol.to_string(),
+        message,
+    }
+}
+
+/// Run every applicable lint over one file, appending raw (unsuppressed)
+/// findings to `out`.
+pub fn lint_file(file: &SourceFile, policy: &Policy, out: &mut Vec<Finding>) {
+    let toks = tokenize(&file.content);
+    let ctxs = contexts(&toks);
+    let path = file.path.as_str();
+
+    let l1 = in_any_dir(path, L1_DIRS);
+    let l2 = L2_FILES.contains(&path);
+    let l3_fns = L2_FILES.contains(&path);
+    let l3_whole = L3_WHOLE_FILES.contains(&path);
+    let l4 = path.starts_with(L4_ROOT)
+        && !L4_EXEMPT_FILES.contains(&path)
+        && !in_any_dir(path, L4_EXEMPT_DIRS);
+
+    for (i, t) in toks.iter().enumerate() {
+        let ctx = &ctxs[i];
+        if ctx.in_test {
+            continue;
+        }
+        // L1: hash collections in result-producing modules
+        if l1 && t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            out.push(finding(
+                "L1",
+                "hash-collection",
+                file,
+                t,
+                &t.text,
+                format!(
+                    "{} in a result-producing module: hash iteration order is \
+                     process-seeded; use BTreeMap/BTreeSet or a sorted collect, \
+                     or allowlist with a justification that its order cannot \
+                     reach any result",
+                    t.text
+                ),
+            ));
+        }
+        // L2: float accumulation loops outside blessed reduction helpers
+        if l2
+            && t.kind == TokKind::CompoundAssign
+            && matches!(t.text.as_str(), "+=" | "-=" | "*=" | "/=")
+            && ctx.loop_depth > 0
+        {
+            let blessed = ctx
+                .fn_name
+                .as_ref()
+                .is_some_and(|f| policy.l2_blessed.iter().any(|b| b == f));
+            let rhs_counter = toks.get(i + 1).zip(toks.get(i + 2)).is_some_and(|(a, b)| {
+                b.text == ";"
+                    && (a.kind == TokKind::Int
+                        || (a.kind == TokKind::Ident && is_screaming_const(&a.text)))
+            });
+            if !blessed && !rhs_counter {
+                let f = ctx.fn_name.clone().unwrap_or_else(|| "<top-level>".into());
+                out.push(finding(
+                    "L2",
+                    "float-accum",
+                    file,
+                    t,
+                    &t.text,
+                    format!(
+                        "accumulation `{}` in a loop of fn `{f}` in a bit-exact \
+                         engine module: accumulation order is part of the engine \
+                         contract — use a blessed reduction helper (lint.toml \
+                         [l2] blessed) or bless this fn after review",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        // L3: `as f32` narrowing in exact-f64 paths
+        let is_as_f32 = t.kind == TokKind::Ident
+            && t.text == "as"
+            && toks
+                .get(i + 1)
+                .is_some_and(|x| x.kind == TokKind::Ident && x.text == "f32");
+        if is_as_f32 {
+            let in_exact_fn = l3_fns
+                && ctx
+                    .fn_name
+                    .as_ref()
+                    .is_some_and(|f| policy.l3_exact_f64_fns.iter().any(|e| e == f));
+            if l3_whole || in_exact_fn {
+                let f = ctx.fn_name.clone().unwrap_or_else(|| "<top-level>".into());
+                out.push(finding(
+                    "L3",
+                    "narrowing-cast",
+                    file,
+                    t,
+                    "as f32",
+                    format!(
+                        "`as f32` narrowing in exact-f64 path (fn `{f}`): \
+                         sums_to_set/dists_to_points columns are exact f64 by \
+                         contract (swap acceptance compares at 1e-12 relative)"
+                    ),
+                ));
+            }
+        }
+        // L4: ambient time / RNG in deterministic paths
+        if l4 && t.kind == TokKind::Ident {
+            let instant_now = t.text == "Instant"
+                && toks.get(i + 1).is_some_and(|x| x.text == ":")
+                && toks.get(i + 2).is_some_and(|x| x.text == ":")
+                && toks
+                    .get(i + 3)
+                    .is_some_and(|x| x.kind == TokKind::Ident && x.text == "now");
+            let symbol = if instant_now {
+                Some("Instant::now")
+            } else if t.text == "SystemTime" {
+                Some("SystemTime")
+            } else if L4_RNG_IDENTS.contains(&t.text.as_str()) {
+                Some(t.text.as_str())
+            } else {
+                None
+            };
+            if let Some(sym) = symbol {
+                out.push(finding(
+                    "L4",
+                    "ambient-time-rng",
+                    file,
+                    t,
+                    sym,
+                    format!(
+                        "`{sym}` in a deterministic path: timers belong in \
+                         util/timer.rs or bench code, RNG must derive from the \
+                         (spec, epoch) cache key; allowlist only wall-clock \
+                         reporting that never feeds a result"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allowlist::Policy;
+
+    fn run_on(path: &str, content: &str, policy: &Policy) -> Vec<Finding> {
+        let mut out = Vec::new();
+        let f = SourceFile {
+            path: path.to_string(),
+            content: content.to_string(),
+        };
+        lint_file(&f, policy, &mut out);
+        out
+    }
+
+    #[test]
+    fn context_tracks_fns_loops_and_tests() {
+        let toks = tokenize(
+            "fn outer() { for i in 0..n { x += d; } }\n\
+             #[cfg(test)]\nmod tests { fn t() { let h: HashMap<u32, u32>; } }",
+        );
+        let ctxs = contexts(&toks);
+        let at = |text: &str| {
+            let i = toks.iter().position(|t| t.text == text).unwrap();
+            ctxs[i].clone()
+        };
+        let acc = at("+=");
+        assert_eq!(acc.fn_name.as_deref(), Some("outer"));
+        assert_eq!(acc.loop_depth, 1);
+        assert!(!acc.in_test);
+        let h = at("HashMap");
+        assert!(h.in_test);
+        assert_eq!(h.fn_name.as_deref(), Some("t"));
+    }
+
+    #[test]
+    fn semicolon_in_array_type_keeps_fn_name() {
+        // `-> [f64; 4]` must not cancel the pending fn name: euclid_lane4
+        // would otherwise lose its blessing (real bug caught in review).
+        let src = "fn euclid_lane4(p: &[f32]) -> [f64; 4] { for t in 0..4 { a0 += d; } }";
+        let toks = tokenize(src);
+        let ctxs = contexts(&toks);
+        let i = toks.iter().position(|t| t.text == "+=").unwrap();
+        assert_eq!(ctxs[i].fn_name.as_deref(), Some("euclid_lane4"));
+    }
+
+    #[test]
+    fn impl_for_is_not_a_loop() {
+        let toks = tokenize("impl Engine for Batch { fn go(&self) { s += v; } }");
+        let ctxs = contexts(&toks);
+        let i = toks.iter().position(|t| t.text == "+=").unwrap();
+        assert_eq!(ctxs[i].loop_depth, 0);
+        assert_eq!(ctxs[i].fn_name.as_deref(), Some("go"));
+    }
+
+    #[test]
+    fn l1_fires_only_in_scoped_modules() {
+        let p = Policy::default();
+        let bad = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+        assert_eq!(run_on("rust/src/matroid/x.rs", bad, &p).len(), 3);
+        assert_eq!(run_on("rust/src/util/x.rs", bad, &p).len(), 0);
+    }
+
+    #[test]
+    fn l2_blessing_and_counter_exemptions() {
+        let p = Policy {
+            l2_blessed: vec!["dot_tree4".to_string()],
+            ..Policy::default()
+        };
+        let src = "fn dot_tree4() { while t < n { s0 += a * b; } }\n\
+                   fn rogue() { for x in xs { acc += d * d; i += 1; j += LANES; } }";
+        let got = run_on("rust/src/runtime/simd.rs", src, &p);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].lint, "L2");
+        assert!(got[0].message.contains("rogue"));
+    }
+
+    #[test]
+    fn l3_scopes_by_fn_and_by_file() {
+        let p = Policy {
+            l3_exact_f64_fns: vec!["sums_to_set".to_string()],
+            ..Policy::default()
+        };
+        let src = "fn sums_to_set() { let x = d as f32; }\nfn pairwise_block() { let y = d as f32; }";
+        let got = run_on("rust/src/runtime/batch.rs", src, &p);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].message.contains("sums_to_set"));
+        let got = run_on("rust/src/algo/local_search.rs", "fn any() { let x = d as f32; }", &p);
+        assert_eq!(got.len(), 1, "whole-file scope for the column store");
+    }
+
+    #[test]
+    fn l4_time_sources_and_exemptions() {
+        let p = Policy::default();
+        let src = "fn f() { let t0 = Instant::now(); let s = SystemTime::now(); }";
+        let got = run_on("rust/src/streaming/mod.rs", src, &p);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].symbol, "Instant::now");
+        assert_eq!(run_on("rust/src/util/timer.rs", src, &p).len(), 0);
+        assert_eq!(run_on("rust/src/bench/mod.rs", src, &p).len(), 0);
+    }
+
+    #[test]
+    fn test_modules_are_skipped() {
+        let p = Policy::default();
+        let src = "#[cfg(test)]\nmod tests {\n  use std::collections::HashSet;\n  fn f() { let t = Instant::now(); }\n}";
+        assert_eq!(run_on("rust/src/algo/x.rs", src, &p).len(), 0);
+    }
+}

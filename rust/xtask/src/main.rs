@@ -1,0 +1,91 @@
+//! `cargo xtask lint [--deny] [--json] [--out <path>] [--root <path>]`
+//!
+//! Exit codes: 0 clean (or findings without `--deny`), 1 findings under
+//! `--deny`, 2 usage/config/IO error.  CI runs
+//! `cargo xtask lint --deny --out lint-report.json` and archives the
+//! report.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> String {
+    "usage: cargo xtask lint [--deny] [--json] [--out <path>] [--root <path>]\n\
+     \n\
+     Runs the dmmc-lint determinism-contract pass (L1-L4, see\n\
+     rust/xtask/src/lints.rs) over rust/src, applying the allowlist in\n\
+     rust/lint.toml.\n\
+     \n\
+       --deny        exit 1 if any finding survives the allowlist\n\
+       --json        print the JSON report to stdout instead of human text\n\
+       --out <path>  also write the JSON report to <path>\n\
+       --root <path> repo root (default: the workspace this binary was\n\
+                     built from)\n"
+        .to_string()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run_cli(&args) {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("dmmc-lint: error: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_cli(args: &[String]) -> Result<ExitCode, String> {
+    let mut deny = false;
+    let mut json = false;
+    let mut out_path: Option<PathBuf> = None;
+    // xtask lives at <root>/rust/xtask, so the default root is two up.
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+
+    let mut it = args.iter();
+    match it.next().map(String::as_str) {
+        Some("lint") => {}
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{}", usage());
+            return Ok(ExitCode::SUCCESS);
+        }
+        Some(other) => return Err(format!("unknown subcommand `{other}`\n{}", usage())),
+    }
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--deny" => deny = true,
+            "--json" => json = true,
+            "--out" => {
+                out_path = Some(PathBuf::from(
+                    it.next().ok_or("--out needs a path argument")?,
+                ))
+            }
+            "--root" => {
+                root = PathBuf::from(it.next().ok_or("--root needs a path argument")?)
+            }
+            other => return Err(format!("unknown flag `{other}`\n{}", usage())),
+        }
+    }
+
+    let policy_path = root.join("rust").join("lint.toml");
+    let policy_src = std::fs::read_to_string(&policy_path)
+        .map_err(|e| format!("read {}: {e}", policy_path.display()))?;
+    let policy = xtask::allowlist::parse(&policy_src, "rust/lint.toml")?;
+
+    let files = xtask::collect_sources(&root)?;
+    let report = xtask::run(&files, &policy);
+
+    if json {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if let Some(p) = out_path {
+        std::fs::write(&p, report.to_json()).map_err(|e| format!("write {}: {e}", p.display()))?;
+    }
+
+    if deny && !report.is_clean() {
+        Ok(ExitCode::FAILURE)
+    } else {
+        Ok(ExitCode::SUCCESS)
+    }
+}

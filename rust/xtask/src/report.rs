@@ -1,0 +1,158 @@
+//! Finding/report types and the two output renderers (human, JSON).
+//!
+//! JSON is hand-rolled (zero-dependency crate); the shape is stable and
+//! versioned so CI can archive reports across runs:
+//!
+//! ```json
+//! {
+//!   "tool": "dmmc-lint",
+//!   "version": 1,
+//!   "files_scanned": 42,
+//!   "suppressed": 4,
+//!   "findings": [
+//!     {"lint": "L1", "name": "hash-collection", "path": "rust/src/...",
+//!      "line": 10, "symbol": "HashMap", "message": "..."}
+//!   ]
+//! }
+//! ```
+
+/// One lint violation (or allowlist-hygiene finding A1/A2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Lint id: "L1".."L4", or "A1"/"A2" for allowlist hygiene.
+    pub lint: String,
+    /// Stable kebab-case name, e.g. "hash-collection".
+    pub name: String,
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    pub line: u32,
+    /// The offending symbol (e.g. "HashMap", "Instant::now") — allowlist
+    /// entries can pin on this.
+    pub symbol: String,
+    pub message: String,
+}
+
+/// The result of a full lint run.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    /// Findings matched (and silenced) by allowlist entries.
+    pub suppressed: u32,
+    pub files_scanned: u32,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.findings.len() * 160);
+        out.push_str("{\n");
+        out.push_str("  \"tool\": \"dmmc-lint\",\n");
+        out.push_str("  \"version\": 1,\n");
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str(&format!("  \"suppressed\": {},\n", self.suppressed));
+        out.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"lint\": {}, ", json_str(&f.lint)));
+            out.push_str(&format!("\"name\": {}, ", json_str(&f.name)));
+            out.push_str(&format!("\"path\": {}, ", json_str(&f.path)));
+            out.push_str(&format!("\"line\": {}, ", f.line));
+            out.push_str(&format!("\"symbol\": {}, ", json_str(&f.symbol)));
+            out.push_str(&format!("\"message\": {}", json_str(&f.message)));
+            out.push('}');
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{} {}] {}\n",
+                f.path, f.line, f.lint, f.name, f.message
+            ));
+        }
+        out.push_str(&format!(
+            "dmmc-lint: {} finding(s), {} suppressed by rust/lint.toml, {} file(s) scanned\n",
+            self.findings.len(),
+            self.suppressed,
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// Escape a string as a JSON string literal (with surrounding quotes).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn json_shape() {
+        let report = LintReport {
+            findings: vec![Finding {
+                lint: "L1".into(),
+                name: "hash-collection".into(),
+                path: "rust/src/algo/x.rs".into(),
+                line: 7,
+                symbol: "HashMap".into(),
+                message: "order-sensitive".into(),
+            }],
+            suppressed: 2,
+            files_scanned: 5,
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"tool\": \"dmmc-lint\""));
+        assert!(j.contains("\"version\": 1"));
+        assert!(j.contains("\"files_scanned\": 5"));
+        assert!(j.contains("\"suppressed\": 2"));
+        assert!(j.contains("\"lint\": \"L1\""));
+        assert!(j.contains("\"line\": 7"));
+    }
+
+    #[test]
+    fn human_summary_line() {
+        let report = LintReport {
+            findings: Vec::new(),
+            suppressed: 1,
+            files_scanned: 3,
+        };
+        let h = report.render_human();
+        assert!(h.contains("0 finding(s)"));
+        assert!(h.contains("1 suppressed"));
+    }
+}

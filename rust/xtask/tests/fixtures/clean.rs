@@ -1,0 +1,26 @@
+// dmmc-lint fixture: a clean file — deterministic collections, no float
+// accumulation outside blessed helpers, no ambient time/RNG.  Zero
+// findings at any linted path.
+use std::collections::BTreeMap;
+
+pub fn category_counts(labels: &[u32]) -> Vec<(u32, usize)> {
+    let mut counts: BTreeMap<u32, usize> = BTreeMap::new();
+    for &l in labels {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    counts.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // test modules may use anything: lints skip them
+    use std::collections::HashSet;
+
+    #[test]
+    fn hash_in_tests_is_fine() {
+        let mut s = HashSet::new();
+        assert!(s.insert(1));
+        let t0 = std::time::Instant::now();
+        assert!(t0.elapsed().as_secs() < 1);
+    }
+}

@@ -1,0 +1,14 @@
+// dmmc-lint fixture: L1 hash-collection.  Linted as if it lived at
+// rust/src/algo/fixture.rs — two `HashMap` mentions (use + type) plus
+// one `HashSet` = 3 findings.
+use std::collections::HashMap;
+
+pub fn category_counts(labels: &[u32]) -> Vec<(u32, usize)> {
+    let mut counts: HashMap<u32, usize> = Default::default();
+    for &l in labels {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    // iteration order reaches the result: the L1 hazard
+    let mut seen = std::collections::HashSet::new();
+    counts.into_iter().filter(|&(l, _)| seen.insert(l)).collect()
+}

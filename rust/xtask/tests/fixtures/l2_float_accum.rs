@@ -1,0 +1,25 @@
+// dmmc-lint fixture: L2 float-accum.  Linted as if it lived at
+// rust/src/runtime/simd.rs — `rogue_sum` accumulates in a loop outside
+// the blessed list (1 finding); the counter/stride updates and the
+// blessed helper do not fire.
+const LANES: usize = 4;
+
+pub fn dot_tree4(a: &[f32], b: &[f32]) -> f64 {
+    let mut s0 = 0.0f64;
+    let mut t = 0;
+    while t < a.len() {
+        s0 += a[t] as f64 * b[t] as f64; // blessed fn: allowed
+        t += 1; // integer counter: allowed anywhere
+    }
+    s0
+}
+
+pub fn rogue_sum(xs: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    let mut i = 0;
+    while i < xs.len() {
+        acc += xs[i] * xs[i]; // NOT blessed: the L2 finding
+        i += LANES; // SCREAMING_CASE stride: allowed
+    }
+    acc
+}

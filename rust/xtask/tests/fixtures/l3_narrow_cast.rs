@@ -1,0 +1,15 @@
+// dmmc-lint fixture: L3 narrowing-cast.  Linted as if it lived at
+// rust/src/runtime/batch.rs — the cast inside `sums_to_set` (an
+// exact-f64 kernel) is the finding; the same cast in `pairwise_block`
+// (f32 by contract) is not.
+pub fn sums_to_set(dists: &[f64], out: &mut [f32]) {
+    for (slot, &d) in dists.iter().enumerate() {
+        out[slot] = d as f32; // exact-f64 path: the L3 finding
+    }
+}
+
+pub fn pairwise_block(dists: &[f64], out: &mut [f32]) {
+    for (slot, &d) in dists.iter().enumerate() {
+        out[slot] = d as f32; // f32 tile contract: allowed
+    }
+}

@@ -1,0 +1,19 @@
+// dmmc-lint fixture: L4 ambient-time-rng.  Linted as if it lived at
+// rust/src/index/fixture.rs — `Instant::now`, `SystemTime` and
+// `thread_rng` are the 3 findings; the `#[cfg(test)]` module is skipped.
+// (Fixtures are lexed, never compiled, so the paths need not resolve.)
+pub fn timed_query() -> u128 {
+    let t0 = std::time::Instant::now();
+    let _wall = std::time::SystemTime::now();
+    let _seed: u64 = rand::thread_rng().gen();
+    t0.elapsed().as_nanos()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timing_in_tests_is_fine() {
+        let t0 = std::time::Instant::now();
+        assert!(t0.elapsed().as_secs() < 1);
+    }
+}

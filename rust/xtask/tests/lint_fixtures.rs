@@ -1,0 +1,134 @@
+//! Fixture tests for the dmmc-lint pass itself: each bad snippet under
+//! `tests/fixtures/` produces exactly its documented findings, the clean
+//! snippet produces none, and the allowlist semantics (suppression,
+//! symbol pinning, A1/A2 hygiene) behave as specified.
+//!
+//! The per-lint configuration (`[l2] blessed`, `[l3] exact_f64_fns`)
+//! comes from the REAL `rust/lint.toml`, so these tests also pin that the
+//! checked-in policy keeps the fixtures' expectations true.
+
+use xtask::allowlist::{AllowEntry, Policy};
+use xtask::lints::{lint_file, SourceFile};
+use xtask::report::Finding;
+
+const L1_FIXTURE: &str = include_str!("fixtures/l1_hash_iteration.rs");
+const L2_FIXTURE: &str = include_str!("fixtures/l2_float_accum.rs");
+const L3_FIXTURE: &str = include_str!("fixtures/l3_narrow_cast.rs");
+const L4_FIXTURE: &str = include_str!("fixtures/l4_ambient_time.rs");
+const CLEAN_FIXTURE: &str = include_str!("fixtures/clean.rs");
+
+/// The real checked-in policy, with the allowlist cleared so fixture
+/// findings are observed raw (stale-entry hygiene is tested separately).
+fn real_policy_no_allow() -> Policy {
+    let src = include_str!("../../lint.toml");
+    let mut policy = xtask::allowlist::parse(src, "rust/lint.toml").expect("rust/lint.toml parses");
+    policy.allow.clear();
+    policy
+}
+
+fn lint_at(path: &str, content: &str, policy: &Policy) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let file = SourceFile {
+        path: path.to_string(),
+        content: content.to_string(),
+    };
+    lint_file(&file, policy, &mut out);
+    out
+}
+
+#[test]
+fn l1_fixture_flags_hash_collections() {
+    let got = lint_at("rust/src/algo/fixture.rs", L1_FIXTURE, &real_policy_no_allow());
+    let symbols: Vec<&str> = got.iter().map(|f| f.symbol.as_str()).collect();
+    assert_eq!(symbols, ["HashMap", "HashMap", "HashSet"], "{got:#?}");
+    assert!(got.iter().all(|f| f.lint == "L1"));
+}
+
+#[test]
+fn l2_fixture_flags_only_the_rogue_accumulator() {
+    let got = lint_at("rust/src/runtime/simd.rs", L2_FIXTURE, &real_policy_no_allow());
+    assert_eq!(got.len(), 1, "{got:#?}");
+    assert_eq!(got[0].lint, "L2");
+    assert!(got[0].message.contains("rogue_sum"));
+}
+
+#[test]
+fn l3_fixture_flags_only_the_exact_f64_kernel() {
+    let got = lint_at("rust/src/runtime/batch.rs", L3_FIXTURE, &real_policy_no_allow());
+    assert_eq!(got.len(), 1, "{got:#?}");
+    assert_eq!(got[0].lint, "L3");
+    assert!(got[0].message.contains("sums_to_set"));
+}
+
+#[test]
+fn l4_fixture_flags_time_and_rng_sources() {
+    let got = lint_at("rust/src/index/fixture.rs", L4_FIXTURE, &real_policy_no_allow());
+    let symbols: Vec<&str> = got.iter().map(|f| f.symbol.as_str()).collect();
+    assert_eq!(symbols, ["Instant::now", "SystemTime", "thread_rng"], "{got:#?}");
+    assert!(got.iter().all(|f| f.lint == "L4"));
+}
+
+#[test]
+fn clean_fixture_is_clean_everywhere() {
+    let policy = real_policy_no_allow();
+    for path in [
+        "rust/src/algo/fixture.rs",
+        "rust/src/runtime/simd.rs",
+        "rust/src/runtime/batch.rs",
+        "rust/src/index/fixture.rs",
+    ] {
+        let got = lint_at(path, CLEAN_FIXTURE, &policy);
+        assert!(got.is_empty(), "clean fixture at {path}: {got:#?}");
+    }
+}
+
+#[test]
+fn allowlist_suppresses_and_pins_symbols() {
+    let mut policy = real_policy_no_allow();
+    policy.allow.push(AllowEntry {
+        lint: "L1".to_string(),
+        path: "rust/src/algo/fixture.rs".to_string(),
+        symbol: "HashSet".to_string(),
+        justification: "fixture".to_string(),
+        line: 1,
+    });
+    let files = [SourceFile {
+        path: "rust/src/algo/fixture.rs".to_string(),
+        content: L1_FIXTURE.to_string(),
+    }];
+    let report = xtask::run(&files, &policy);
+    assert_eq!(report.suppressed, 1, "only the HashSet finding is suppressed");
+    let symbols: Vec<&str> = report.findings.iter().map(|f| f.symbol.as_str()).collect();
+    assert_eq!(symbols, ["HashMap", "HashMap"], "HashMap survives the pinned entry");
+}
+
+#[test]
+fn stale_and_unjustified_entries_are_findings() {
+    let mut policy = real_policy_no_allow();
+    policy.allow.push(AllowEntry {
+        lint: "L1".to_string(),
+        path: "rust/src/algo/nothing_here.rs".to_string(),
+        symbol: String::new(),
+        justification: String::new(),
+        line: 42,
+    });
+    let report = xtask::run(&[], &policy);
+    let lints: Vec<&str> = report.findings.iter().map(|f| f.lint.as_str()).collect();
+    assert_eq!(lints, ["A1", "A2"]);
+    assert!(report.findings.iter().all(|f| f.path == "rust/lint.toml" && f.line == 42));
+}
+
+#[test]
+fn json_report_shape() {
+    let files = [SourceFile {
+        path: "rust/src/algo/fixture.rs".to_string(),
+        content: L1_FIXTURE.to_string(),
+    }];
+    let report = xtask::run(&files, &real_policy_no_allow());
+    let json = report.to_json();
+    assert!(json.contains("\"tool\": \"dmmc-lint\""));
+    assert!(json.contains("\"version\": 1"));
+    assert!(json.contains("\"lint\": \"L1\""));
+    assert!(json.contains("\"symbol\": \"HashMap\""));
+    assert!(json.contains("\"files_scanned\": 1"));
+}

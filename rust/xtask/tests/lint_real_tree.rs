@@ -1,0 +1,80 @@
+//! The self-enforcement test: `cargo xtask lint --deny` semantics over
+//! the REAL tree with the REAL `rust/lint.toml`.
+//!
+//! Three properties, together making the allowlist exact in both
+//! directions:
+//!
+//! 1. the current tree + current policy is clean (this is what CI's
+//!    `lint` job gates on);
+//! 2. removing ANY single `[[allow]]` entry makes the run fail — every
+//!    entry is load-bearing right now;
+//! 3. re-introducing a `HashMap` in `matroid/transversal.rs` makes the
+//!    run fail — the entry there pins `symbol = "HashSet"`, so it cannot
+//!    mask a regression of the map the matching actually iterates.
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+fn real_policy() -> xtask::allowlist::Policy {
+    let src = std::fs::read_to_string(repo_root().join("rust").join("lint.toml"))
+        .expect("rust/lint.toml exists");
+    xtask::allowlist::parse(&src, "rust/lint.toml").expect("rust/lint.toml parses")
+}
+
+#[test]
+fn real_tree_is_clean_under_real_policy() {
+    let files = xtask::collect_sources(&repo_root()).expect("walk rust/src");
+    assert!(files.len() > 30, "walker found the tree ({} files)", files.len());
+    let report = xtask::run(&files, &real_policy());
+    assert!(
+        report.is_clean(),
+        "dmmc-lint findings on the real tree:\n{}",
+        report.render_human()
+    );
+    assert!(report.suppressed > 0, "the allowlist should be load-bearing");
+}
+
+#[test]
+fn removing_any_allow_entry_fails_the_tree() {
+    let files = xtask::collect_sources(&repo_root()).expect("walk rust/src");
+    let policy = real_policy();
+    assert!(!policy.allow.is_empty());
+    for drop in 0..policy.allow.len() {
+        let mut reduced = policy.clone();
+        let removed = reduced.allow.remove(drop);
+        let report = xtask::run(&files, &reduced);
+        assert!(
+            !report.is_clean(),
+            "allowlist entry {} ({} in {}) suppresses nothing — delete it",
+            drop,
+            removed.lint,
+            removed.path
+        );
+    }
+}
+
+#[test]
+fn reintroducing_hashmap_in_transversal_fails() {
+    let files = xtask::collect_sources(&repo_root()).expect("walk rust/src");
+    let mutated: Vec<xtask::lints::SourceFile> = files
+        .into_iter()
+        .map(|mut f| {
+            if f.path == "rust/src/matroid/transversal.rs" {
+                f.content = f.content.replace("BTreeMap", "HashMap");
+            }
+            f
+        })
+        .collect();
+    let report = xtask::run(&mutated, &real_policy());
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.lint == "L1" && f.symbol == "HashMap"),
+        "the symbol-pinned HashSet entry must not mask a HashMap:\n{}",
+        report.render_human()
+    );
+}
