@@ -44,6 +44,21 @@ fn main() -> anyhow::Result<()> {
         "bench_results/index_append.csv",
         &["dataset", "segment", "nodes_touched", "dist_evals", "append_s", "root_size"],
     )?;
+    let mut delete_csv = CsvWriter::create(
+        "bench_results/index_delete.csv",
+        &[
+            "dataset",
+            "rows_deleted",
+            "newly_dead",
+            "nodes_touched",
+            "rebuilds",
+            "dist_evals",
+            "delete_s",
+            "live_fraction",
+            "root_size",
+            "postdelete_query_s",
+        ],
+    )?;
 
     for bed in testbeds(n, seed) {
         let k_max = (bed.rank / 4).max(4);
@@ -82,11 +97,10 @@ fn main() -> anyhow::Result<()> {
 
         // -- index build + cold queries + cached repeats -----------------
         let cfg = IndexConfig {
-            k_max,
             leaf_budget: Budget::Clusters(tau),
             reduce_budget: Budget::Clusters(tau),
             engine: ekind,
-            leaf_ingest: matroid_coreset::index::LeafIngest::Seq,
+            ..IndexConfig::new(k_max, tau)
         };
         let order: Vec<usize> = (0..bed.ds.n()).collect();
         let mut index = CoresetIndex::new(&bed.ds, &*bed.matroid, cfg);
@@ -125,6 +139,30 @@ fn main() -> anyhow::Result<()> {
                 assert!(out.cache_hit);
             }
         });
+
+        // -- delete phase: tombstone a quarter of the ingest, remeasure --
+        let victims: Vec<usize> = (0..bed.ds.n() / 4).collect();
+        let (dr, delete_s) = time_once(|| service.delete(&victims).expect("delete"));
+        let (_, postdel_s) = time_once(|| {
+            for &k in &ks {
+                let out = service
+                    .query(&QuerySpec::sum_local_search(k, ekind))
+                    .expect("query");
+                assert!(!out.cache_hit, "delete must invalidate the cache");
+            }
+        });
+        delete_csv.row(&csv_row![
+            bed.name,
+            victims.len(),
+            dr.newly_dead,
+            dr.nodes_touched,
+            dr.rebuilds,
+            dr.dist_evals,
+            delete_s,
+            service.index().live_fraction(),
+            dr.root_size,
+            postdel_s
+        ])?;
 
         let nq = ks.len();
         let mut table = Table::new(&["mode", "total_s", "per_query_s", "diversity(k=4)"]);
@@ -180,6 +218,10 @@ fn main() -> anyhow::Result<()> {
     }
     csv.flush()?;
     append_csv.flush()?;
-    println!("\nCSV -> bench_results/index_amortization.csv, bench_results/index_append.csv");
+    delete_csv.flush()?;
+    println!(
+        "\nCSV -> bench_results/index_amortization.csv, bench_results/index_append.csv, \
+         bench_results/index_delete.csv"
+    );
     Ok(())
 }

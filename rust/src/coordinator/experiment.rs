@@ -12,7 +12,7 @@ use crate::algo::seq_coreset::seq_coreset;
 use crate::algo::Budget;
 use crate::core::Dataset;
 use crate::diversity::{diversity_with_engine, Objective};
-use crate::index::{CoresetIndex, IndexConfig, LeafIngest};
+use crate::index::{CoresetIndex, IndexConfig};
 use crate::mapreduce::{mr_coreset, MapReduceConfig};
 use crate::matroid::Matroid;
 use crate::runtime::{build_engine, EngineKind};
@@ -162,12 +162,13 @@ pub fn run_pipeline<M: Matroid + Sync>(
             budget,
         } => {
             let order = rng.permutation(ds.n());
+            // the tau passed to new() is irrelevant: both budgets are
+            // overridden with the setting's own
             let cfg = IndexConfig {
-                k_max: k,
                 leaf_budget: budget,
                 reduce_budget: budget,
                 engine: pipeline.engine,
-                leaf_ingest: LeafIngest::Seq,
+                ..IndexConfig::new(k, 1)
             };
             let (built, dt) = time_it(|| {
                 let mut idx = CoresetIndex::new(ds, m, cfg);
@@ -180,15 +181,23 @@ pub fn run_pipeline<M: Matroid + Sync>(
                         idx.stats().merges,
                         idx.stats().dist_evals,
                         max_nodes,
+                        idx.live_fraction(),
+                        idx.stats().rebuilds,
                     )
                 })
             });
-            let (root, segments, merges, dist_evals, max_nodes) = built?;
+            let (root, segments, merges, dist_evals, max_nodes, live_fraction, rebuilds) =
+                built?;
             extra.insert("index_segments".into(), segments as f64);
             extra.insert("index_merges".into(), merges as f64);
             // index-internal merge work, reported rather than dropped
             extra.insert("index_dist_evals".into(), dist_evals as f64);
             extra.insert("index_max_nodes_touched".into(), max_nodes as f64);
+            // dynamic-index health: 1.0 / 0 for this append-only setting,
+            // but the columns exist so sweep CSVs stay schema-stable when
+            // delete phases are added
+            extra.insert("index_live_fraction".into(), live_fraction);
+            extra.insert("index_rebuilds".into(), rebuilds as f64);
             (root, dt)
         }
         Setting::Full => ((0..ds.n()).collect(), Duration::ZERO),
@@ -333,6 +342,9 @@ mod tests {
         assert!(out.extra["index_dist_evals"] > 0.0);
         // segment 8's carry chain is the worst case: 1 + trailing_ones(7)
         assert_eq!(out.extra["index_max_nodes_touched"], 4.0);
+        // append-only run: everything lives, nothing was rebuilt
+        assert_eq!(out.extra["index_live_fraction"], 1.0);
+        assert_eq!(out.extra["index_rebuilds"], 0.0);
     }
 
     #[test]

@@ -114,6 +114,27 @@ impl MatroidSpec {
         bail!("unknown matroid spec {s} (transversal | partition:<rank> | uniform:<r>)")
     }
 
+    /// Canonical cache-key fragment: a stable, collision-free rendering
+    /// of every field that can change which matroid is built.  Unlike the
+    /// `Debug` form this is pinned by test and safe to persist or hash;
+    /// any future float-bearing variant must render its floats as
+    /// `to_bits()` hex (decimal printing is lossy and format-unstable),
+    /// matching `QueryFinisher::key_part`.
+    pub fn key_part(&self) -> String {
+        match self {
+            MatroidSpec::Transversal => "transversal".to_string(),
+            MatroidSpec::PartitionProportional { target_rank } => {
+                format!("partition:{target_rank}")
+            }
+            // comma-joined so caps [1, 2] and [12] cannot collide
+            MatroidSpec::PartitionCaps(caps) => {
+                let caps: Vec<String> = caps.iter().map(|c| c.to_string()).collect();
+                format!("caps:{}", caps.join(","))
+            }
+            MatroidSpec::Uniform(r) => format!("uniform:{r}"),
+        }
+    }
+
     /// The natural matroid for a dataset spec (wikisim -> transversal,
     /// songsim -> partition rank 89, like the paper's Table 2).
     pub fn default_for(spec: &DatasetSpec) -> MatroidSpec {
@@ -177,6 +198,28 @@ mod tests {
             MatroidSpec::Uniform(5)
         ));
         assert!(MatroidSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn key_part_is_stable_and_collision_free() {
+        // pinned literals: keys are persisted in caches, so they must not
+        // drift with Debug formatting or field renames
+        assert_eq!(MatroidSpec::Transversal.key_part(), "transversal");
+        assert_eq!(
+            MatroidSpec::PartitionProportional { target_rank: 89 }.key_part(),
+            "partition:89"
+        );
+        assert_eq!(MatroidSpec::PartitionCaps(vec![1, 2, 3]).key_part(), "caps:1,2,3");
+        assert_eq!(MatroidSpec::Uniform(16).key_part(), "uniform:16");
+        // the separator keeps adjacent caps unambiguous
+        assert_ne!(
+            MatroidSpec::PartitionCaps(vec![1, 2]).key_part(),
+            MatroidSpec::PartitionCaps(vec![12]).key_part()
+        );
+        // parseable shorthands roundtrip through their key form
+        for s in ["transversal", "partition:89", "uniform:5"] {
+            assert_eq!(MatroidSpec::parse(s).unwrap().key_part(), s);
+        }
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //!   the union of the occupied levels ([`tree::CoresetIndex::root`]) is
 //!   at all times a valid coreset of everything ingested — the streaming
 //!   and MapReduce settings become two ingestion strategies over the same
-//!   tree.
+//!   tree.  The tree is fully dynamic: [`tree::CoresetIndex::delete`]
+//!   tombstones rows (O(log) node touches, threshold-triggered rebuilds
+//!   from survivors), and [`tree::RetentionPolicy`] bounds freshness
+//!   (`LastSegments` sliding windows, `Ttl` epoch expiry) — the
+//!   standalone sliding-window coreset is now a thin wrapper over this
+//!   type.
 //! * [`service::QueryService`] — answers [`service::QuerySpec`] requests
 //!   by running the pipeline's phase-2 finisher on the **root coreset
 //!   only**, behind an LRU result cache keyed on the spec and invalidated
@@ -38,4 +43,7 @@ pub use service::{
     QueryFinisher, QueryOutcome, QueryResult, QueryService, QuerySpec, ServiceStats,
 };
 pub use store::IndexSnapshot;
-pub use tree::{AppendReceipt, CoresetIndex, IndexConfig, IndexNode, IndexStats, LeafIngest};
+pub use tree::{
+    AppendReceipt, CoresetIndex, DeleteReceipt, IndexConfig, IndexNode, IndexParts, IndexStats,
+    LeafIngest, RetentionPolicy, DEFAULT_REBUILD_THRESHOLD,
+};

@@ -21,7 +21,7 @@ use crate::algo::greedy::greedy_sum;
 use crate::algo::local_search::{local_search_sum, LocalSearchParams};
 use crate::coordinator::spec::{build_matroid, MatroidSpec};
 use crate::diversity::{diversity_with_engine, Objective};
-use crate::index::tree::{AppendReceipt, CoresetIndex};
+use crate::index::tree::{AppendReceipt, CoresetIndex, DeleteReceipt};
 use crate::matroid::Matroid;
 use crate::runtime::engine::DistanceEngine;
 use crate::runtime::{build_engine, EngineKind, ScalarEngine};
@@ -88,7 +88,7 @@ impl QuerySpec {
             self.k,
             match &self.matroid {
                 None => "build".to_string(),
-                Some(ms) => format!("{ms:?}"),
+                Some(ms) => ms.key_part(),
             },
             self.engine.name(),
             self.finisher.key_part(),
@@ -198,6 +198,13 @@ impl<'a> QueryService<'a> {
     /// cached result; stale slots are refreshed lazily on their next miss.
     pub fn append(&mut self, batch: &[usize]) -> Result<AppendReceipt> {
         self.index.append(batch)
+    }
+
+    /// Tombstone rows.  An effective delete bumps the tree epoch, so
+    /// every cached result is invalidated exactly like an append; a
+    /// no-op delete (nothing newly dead) leaves the cache valid.
+    pub fn delete(&mut self, rows: &[usize]) -> Result<DeleteReceipt> {
+        self.index.delete(rows)
     }
 
     /// Serve one query from the root coreset (cache-first).
@@ -448,6 +455,57 @@ mod tests {
             ..spec
         };
         assert!(svc.query(&bad).is_err());
+    }
+
+    #[test]
+    fn delete_invalidates_cache_but_noop_delete_does_not() {
+        let ds = synth::uniform_cube(300, 2, 37);
+        let m = UniformMatroid::new(4);
+        let mut svc = service(&ds, &m, 4, 8);
+        let order: Vec<usize> = (0..300).collect();
+        svc.append(&order).unwrap();
+        let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+        let cold = svc.query(&spec).unwrap();
+        assert!(!cold.cache_hit);
+        // an effective delete bumps the epoch: a cache hit is impossible
+        let victim = cold.result.solution[0];
+        let r = svc.delete(&[victim]).unwrap();
+        assert_eq!(r.newly_dead, 1);
+        let after = svc.query(&spec).unwrap();
+        assert!(!after.cache_hit, "cache survived a delete");
+        assert_ne!(after.epoch, cold.epoch);
+        assert!(!after.result.solution.contains(&victim));
+        // a no-op delete (same row again) keeps the cache valid
+        let r2 = svc.delete(&[victim]).unwrap();
+        assert_eq!(r2.newly_dead, 0);
+        assert!(svc.query(&spec).unwrap().cache_hit);
+    }
+
+    #[test]
+    fn cache_key_is_canonical_for_matroid_overrides() {
+        let base = QuerySpec {
+            objective: Objective::Sum,
+            k: 3,
+            matroid: Some(MatroidSpec::Uniform(3)),
+            engine: EngineKind::Scalar,
+            finisher: QueryFinisher::Greedy,
+        };
+        // pinned literal: the key must not drift with Debug formatting
+        assert_eq!(base.cache_key(), "sum|k=3|m=uniform:3|e=scalar|f=greedy");
+        let caps = QuerySpec {
+            matroid: Some(MatroidSpec::PartitionCaps(vec![1, 2])),
+            ..base.clone()
+        };
+        let caps2 = QuerySpec {
+            matroid: Some(MatroidSpec::PartitionCaps(vec![12])),
+            ..base.clone()
+        };
+        assert_ne!(caps.cache_key(), caps2.cache_key(), "caps keys must not collide");
+        let build = QuerySpec {
+            matroid: None,
+            ..base
+        };
+        assert_ne!(build.cache_key(), QuerySpec::sum_local_search(3, EngineKind::Scalar).cache_key());
     }
 
     #[test]

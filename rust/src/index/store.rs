@@ -3,20 +3,32 @@
 //!
 //! A snapshot stores the *recipe* for the backing dataset (the CLI data
 //! spec + seed; synthetic generators are deterministic, files reload) and
-//! the tree state itself: config, epoch, ingest cursor, and every occupied
-//! level's coreset indices.  The format is line-oriented text ("DMMCIDX1"
-//! magic), f64s as hex bit patterns so reloads are bit-exact.
+//! the tree state itself: config, epoch, ingest cursor, lifetime stats,
+//! tombstones, and every occupied level's coreset indices.  The format is
+//! line-oriented text (`DMMCIDX2` magic), f64s as hex bit patterns so
+//! reloads are bit-exact.
+//!
+//! Legacy `DMMCIDX1` files (written before the index became dynamic)
+//! still load: they imply keep-all retention, no tombstones, and a
+//! reconstructed stats ledger (`appends = segments`, `merges = segments -
+//! occupied levels` — exact for a pure-append keep-all tree — and
+//! `dist_evals = 0`, which v1 never recorded).
 
+use std::collections::BTreeSet;
 use std::fmt::Write as _;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::algo::Budget;
-use crate::index::tree::{CoresetIndex, IndexConfig, IndexNode, LeafIngest};
+use crate::index::tree::{
+    CoresetIndex, IndexConfig, IndexNode, IndexParts, IndexStats, LeafIngest, RetentionPolicy,
+    DEFAULT_REBUILD_THRESHOLD,
+};
 use crate::runtime::EngineKind;
 
-const MAGIC: &str = "DMMCIDX1";
+const MAGIC_V2: &str = "DMMCIDX2";
+const MAGIC_V1: &str = "DMMCIDX1";
 
 /// Everything needed to reconstruct a [`CoresetIndex`] (plus the CLI's
 /// ingest cursor) in a later process.
@@ -34,11 +46,17 @@ pub struct IndexSnapshot {
     pub reduce_budget: Budget,
     pub engine: EngineKind,
     pub leaf_ingest: LeafIngest,
+    pub retention: RetentionPolicy,
+    pub rebuild_threshold: f64,
     pub epoch: u64,
     pub segments: usize,
     pub points: usize,
     /// Next dataset row the CLI's sequential ingestion will consume.
     pub cursor: usize,
+    /// Lifetime ledger — survives the roundtrip (a reloaded index keeps
+    /// its append/merge/dist-eval history).
+    pub stats: IndexStats,
+    pub tombstones: BTreeSet<usize>,
     pub levels: Vec<Option<IndexNode>>,
 }
 
@@ -53,6 +71,7 @@ impl IndexSnapshot {
         cursor: usize,
     ) -> IndexSnapshot {
         let cfg = index.config();
+        let parts = index.parts();
         IndexSnapshot {
             data,
             seed,
@@ -62,11 +81,15 @@ impl IndexSnapshot {
             reduce_budget: cfg.reduce_budget,
             engine: cfg.engine,
             leaf_ingest: cfg.leaf_ingest,
-            epoch: index.epoch(),
-            segments: index.segments(),
-            points: index.points_ingested(),
+            retention: cfg.retention,
+            rebuild_threshold: cfg.rebuild_threshold,
+            epoch: parts.epoch,
+            segments: parts.segments,
+            points: parts.points,
             cursor,
-            levels: index.levels().to_vec(),
+            stats: parts.stats,
+            tombstones: parts.tombstones,
+            levels: parts.levels,
         }
     }
 
@@ -77,6 +100,20 @@ impl IndexSnapshot {
             reduce_budget: self.reduce_budget,
             engine: self.engine,
             leaf_ingest: self.leaf_ingest,
+            retention: self.retention,
+            rebuild_threshold: self.rebuild_threshold,
+        }
+    }
+
+    /// The resumable state for [`CoresetIndex::from_parts`].
+    pub fn parts(&self) -> IndexParts {
+        IndexParts {
+            levels: self.levels.clone(),
+            epoch: self.epoch,
+            segments: self.segments,
+            points: self.points,
+            stats: self.stats,
+            tombstones: self.tombstones.clone(),
         }
     }
 }
@@ -99,10 +136,10 @@ fn budget_from_str(s: &str) -> Result<Budget> {
     bail!("bad budget {s} (clusters:<tau> | eps:<bits>)")
 }
 
-/// Serialize a snapshot to its text form.
+/// Serialize a snapshot to its text form (always the current `DMMCIDX2`).
 pub fn to_string(snap: &IndexSnapshot) -> String {
     let mut out = String::new();
-    let _ = writeln!(out, "{MAGIC}");
+    let _ = writeln!(out, "{MAGIC_V2}");
     let _ = writeln!(out, "data {}", snap.data);
     let _ = writeln!(out, "seed {}", snap.seed);
     let _ = writeln!(out, "matroid {}", snap.matroid);
@@ -111,10 +148,20 @@ pub fn to_string(snap: &IndexSnapshot) -> String {
     let _ = writeln!(out, "reduce_budget {}", budget_to_str(snap.reduce_budget));
     let _ = writeln!(out, "engine {}", snap.engine.name());
     let _ = writeln!(out, "leaf_ingest {}", snap.leaf_ingest.name());
+    let _ = writeln!(out, "retention {}", snap.retention.name());
+    let _ = writeln!(out, "rebuild_threshold {:x}", snap.rebuild_threshold.to_bits());
     let _ = writeln!(out, "epoch {}", snap.epoch);
     let _ = writeln!(out, "segments {}", snap.segments);
     let _ = writeln!(out, "points {}", snap.points);
     let _ = writeln!(out, "cursor {}", snap.cursor);
+    let s = snap.stats;
+    let _ = writeln!(
+        out,
+        "stats {} {} {} {} {} {}",
+        s.appends, s.merges, s.dist_evals, s.deletes, s.rebuilds, s.expired_segments
+    );
+    let dead: Vec<String> = snap.tombstones.iter().map(|x| x.to_string()).collect();
+    let _ = writeln!(out, "tombstones {}", dead.join(" "));
     let _ = writeln!(out, "levels {}", snap.levels.len());
     for (i, level) in snap.levels.iter().enumerate() {
         match level {
@@ -124,11 +171,13 @@ pub fn to_string(snap: &IndexSnapshot) -> String {
             Some(node) => {
                 let _ = writeln!(
                     out,
-                    "level {i} node {} {} {} {:x}",
+                    "level {i} node {} {} {} {:x} {} {}",
                     node.segments,
                     node.points,
                     node.n_clusters,
-                    node.radius.to_bits()
+                    node.radius.to_bits(),
+                    node.first_segment,
+                    node.born_epoch,
                 );
                 let ids: Vec<String> = node.indices.iter().map(|x| x.to_string()).collect();
                 let _ = writeln!(out, "indices {}", ids.join(" "));
@@ -138,13 +187,16 @@ pub fn to_string(snap: &IndexSnapshot) -> String {
     out
 }
 
-/// Parse the text form back into a snapshot.
+/// Parse the text form back into a snapshot (`DMMCIDX2`, or legacy
+/// `DMMCIDX1` with the defaults described in the module docs).
 pub fn from_str(text: &str) -> Result<IndexSnapshot> {
     let mut lines = text.lines();
     let magic = lines.next().context("empty index file")?;
-    if magic.trim() != MAGIC {
-        bail!("not a {MAGIC} index file");
-    }
+    let v2 = match magic.trim() {
+        MAGIC_V2 => true,
+        MAGIC_V1 => false,
+        _ => bail!("not a {MAGIC_V2} (or legacy {MAGIC_V1}) index file"),
+    };
     // fixed header order keeps the parser trivial and the format auditable
     let mut field = |name: &str| -> Result<String> {
         let line = lines.next().with_context(|| format!("missing field {name}"))?;
@@ -165,10 +217,44 @@ pub fn from_str(text: &str) -> Result<IndexSnapshot> {
     let ingest_name = field("leaf_ingest")?;
     let leaf_ingest = LeafIngest::parse(&ingest_name)
         .with_context(|| format!("unknown leaf_ingest {ingest_name}"))?;
+    let (retention, rebuild_threshold) = if v2 {
+        let ret_name = field("retention")?;
+        let retention = RetentionPolicy::parse(&ret_name)
+            .with_context(|| format!("unknown retention {ret_name}"))?;
+        let bits =
+            u64::from_str_radix(&field("rebuild_threshold")?, 16).context("threshold bits")?;
+        (retention, f64::from_bits(bits))
+    } else {
+        (RetentionPolicy::KeepAll, DEFAULT_REBUILD_THRESHOLD)
+    };
     let epoch: u64 = field("epoch")?.parse().context("epoch")?;
     let segments: usize = field("segments")?.parse().context("segments")?;
     let points: usize = field("points")?.parse().context("points")?;
     let cursor: usize = field("cursor")?.parse().context("cursor")?;
+    let (stats, tombstones) = if v2 {
+        let stat_toks: Vec<u64> = field("stats")?
+            .split_whitespace()
+            .map(|t| t.parse::<u64>().context("stats entry"))
+            .collect::<Result<_>>()?;
+        if stat_toks.len() != 6 {
+            bail!("stats line needs 6 entries, got {}", stat_toks.len());
+        }
+        let stats = IndexStats {
+            appends: stat_toks[0],
+            merges: stat_toks[1],
+            dist_evals: stat_toks[2],
+            deletes: stat_toks[3],
+            rebuilds: stat_toks[4],
+            expired_segments: stat_toks[5],
+        };
+        let tombstones: BTreeSet<usize> = field("tombstones")?
+            .split_whitespace()
+            .map(|t| t.parse::<usize>().context("tombstone row"))
+            .collect::<Result<_>>()?;
+        (Some(stats), tombstones)
+    } else {
+        (None, BTreeSet::new())
+    };
     let n_levels: usize = field("levels")?.parse().context("levels")?;
 
     let mut levels: Vec<Option<IndexNode>> = Vec::with_capacity(n_levels);
@@ -181,7 +267,8 @@ pub fn from_str(text: &str) -> Result<IndexSnapshot> {
         match toks[2] {
             "absent" => levels.push(None),
             "node" => {
-                if toks.len() != 7 {
+                let want = if v2 { 9 } else { 7 };
+                if toks.len() != want {
                     bail!("bad node line {line:?}");
                 }
                 let node_segments: usize = toks[3].parse().context("node segments")?;
@@ -189,6 +276,17 @@ pub fn from_str(text: &str) -> Result<IndexSnapshot> {
                 let n_clusters: usize = toks[5].parse().context("node clusters")?;
                 let radius =
                     f64::from_bits(u64::from_str_radix(toks[6], 16).context("node radius")?);
+                // v1 wrote no provenance: 0 = "unknown first segment",
+                // which only windowed retention reads, and v1 trees were
+                // always keep-all
+                let (first_segment, born_epoch) = if v2 {
+                    (
+                        toks[7].parse().context("node first_segment")?,
+                        toks[8].parse().context("node born_epoch")?,
+                    )
+                } else {
+                    (0, 0)
+                };
                 let idx_line = lines.next().with_context(|| format!("missing indices {i}"))?;
                 let rest = idx_line
                     .strip_prefix("indices")
@@ -203,11 +301,23 @@ pub fn from_str(text: &str) -> Result<IndexSnapshot> {
                     points: node_points,
                     n_clusters,
                     radius,
+                    first_segment,
+                    born_epoch,
                 }));
             }
             other => bail!("bad level tag {other}"),
         }
     }
+    let stats = stats.unwrap_or_else(|| {
+        // v1 never persisted the ledger; reconstruct what a pure-append
+        // keep-all tree implies and leave dist_evals (unknowable) at 0
+        let occupied = levels.iter().flatten().count() as u64;
+        IndexStats {
+            appends: segments as u64,
+            merges: (segments as u64).saturating_sub(occupied),
+            ..IndexStats::default()
+        }
+    });
     Ok(IndexSnapshot {
         data,
         seed,
@@ -217,10 +327,14 @@ pub fn from_str(text: &str) -> Result<IndexSnapshot> {
         reduce_budget,
         engine,
         leaf_ingest,
+        retention,
+        rebuild_threshold,
         epoch,
         segments,
         points,
         cursor,
+        stats,
+        tombstones,
         levels,
     })
 }
@@ -252,16 +366,29 @@ mod tests {
         let mut idx = CoresetIndex::new(&ds, &m, cfg);
         let order: Vec<usize> = (0..150).collect();
         idx.ingest(&order, 50).unwrap();
+        idx.delete(&[3, 1, 4]).unwrap();
         let snap = IndexSnapshot::capture(&idx, "cube:200x2".into(), 29, "uniform:4".into(), 150);
         let text = to_string(&snap);
+        assert!(text.starts_with("DMMCIDX2\n"));
         let back = from_str(&text).unwrap();
         assert_eq!(back.data, "cube:200x2");
         assert_eq!(back.seed, 29);
         assert_eq!(back.matroid, "uniform:4");
-        assert_eq!(back.epoch, 3);
+        assert_eq!(back.epoch, 4, "3 appends + 1 delete");
         assert_eq!(back.segments, 3);
         assert_eq!(back.points, 150);
         assert_eq!(back.cursor, 150);
+        assert_eq!(back.retention, RetentionPolicy::KeepAll);
+        assert_eq!(
+            back.rebuild_threshold.to_bits(),
+            DEFAULT_REBUILD_THRESHOLD.to_bits()
+        );
+        // the lifetime ledger survives the roundtrip (this is the
+        // from_parts stats-reset regression)
+        assert_eq!(back.stats, *idx.stats());
+        assert_eq!(back.stats.appends, 3);
+        assert_eq!(back.stats.deletes, 1);
+        assert_eq!(back.tombstones, *idx.tombstones());
         assert_eq!(back.levels.len(), snap.levels.len());
         for (a, b) in snap.levels.iter().zip(&back.levels) {
             match (a, b) {
@@ -272,31 +399,94 @@ mod tests {
                     assert_eq!(x.points, y.points);
                     assert_eq!(x.n_clusters, y.n_clusters);
                     assert_eq!(x.radius.to_bits(), y.radius.to_bits());
+                    assert_eq!(x.first_segment, y.first_segment);
+                    assert_eq!(x.born_epoch, y.born_epoch);
                 }
                 _ => panic!("level occupancy changed over the roundtrip"),
             }
         }
-        // the restored tree keeps serving: same root, appends continue
-        let back_cfg = back.config();
-        let mut idx2 = CoresetIndex::from_parts(
-            &ds,
-            &m,
-            back_cfg,
-            back.levels.clone(),
-            back.epoch,
-            back.segments,
-            back.points,
-        );
+        // the restored tree keeps serving: same root and stats, appends
+        // and deletes continue
+        let mut idx2 = CoresetIndex::from_parts(&ds, &m, back.config(), back.parts());
         assert_eq!(idx2.root(), idx.root());
+        assert_eq!(idx2.stats(), idx.stats());
         let more: Vec<usize> = (150..200).collect();
         let r = idx2.append(&more).unwrap();
         assert_eq!(r.segment, 4);
-        assert_eq!(idx2.epoch(), 4);
+        assert_eq!(idx2.epoch(), 5);
+        assert_eq!(idx2.stats().appends, 4);
+    }
+
+    #[test]
+    fn windowed_retention_roundtrips() {
+        let ds = synth::uniform_cube(200, 2, 41);
+        let m = UniformMatroid::new(3);
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            retention: RetentionPolicy::LastSegments(2),
+            ..IndexConfig::new(3, 6)
+        };
+        let mut idx = CoresetIndex::new(&ds, &m, cfg);
+        let order: Vec<usize> = (0..200).collect();
+        idx.ingest(&order, 40).unwrap();
+        let snap = IndexSnapshot::capture(&idx, "cube:200x2".into(), 41, "uniform:3".into(), 200);
+        let back = from_str(&to_string(&snap)).unwrap();
+        assert_eq!(back.retention, RetentionPolicy::LastSegments(2));
+        let mut idx2 = CoresetIndex::from_parts(&ds, &m, back.config(), back.parts());
+        assert_eq!(idx2.root(), idx.root());
+        // the restored window keeps sliding: a fresh append still expires
+        // the oldest surviving segment
+        let r = idx2.append(&(0..40).collect::<Vec<_>>()).unwrap();
+        assert_eq!(r.expired, 1);
+    }
+
+    #[test]
+    fn legacy_v1_snapshots_still_load() {
+        // a literal DMMCIDX1 file as the previous release wrote it
+        let text = "DMMCIDX1\n\
+                    data cube:100x2\n\
+                    seed 7\n\
+                    matroid uniform:3\n\
+                    k_max 3\n\
+                    leaf_budget clusters:6\n\
+                    reduce_budget clusters:6\n\
+                    engine scalar\n\
+                    leaf_ingest seq\n\
+                    epoch 3\n\
+                    segments 3\n\
+                    points 90\n\
+                    cursor 90\n\
+                    levels 2\n\
+                    level 0 node 1 30 4 3ff0000000000000\n\
+                    indices 61 64 70 77\n\
+                    level 1 node 2 60 5 4000000000000000\n\
+                    indices 2 11 19 40 55\n";
+        let snap = from_str(text).unwrap();
+        assert_eq!(snap.retention, RetentionPolicy::KeepAll);
+        assert_eq!(
+            snap.rebuild_threshold.to_bits(),
+            DEFAULT_REBUILD_THRESHOLD.to_bits()
+        );
+        assert!(snap.tombstones.is_empty());
+        // reconstructed ledger: appends = segments, merges = segments -
+        // occupied levels (exact for pure-append keep-all), evals unknown
+        assert_eq!(snap.stats.appends, 3);
+        assert_eq!(snap.stats.merges, 1);
+        assert_eq!(snap.stats.dist_evals, 0);
+        let node = snap.levels[1].as_ref().unwrap();
+        assert_eq!(node.indices, vec![2, 11, 19, 40, 55]);
+        assert_eq!(node.first_segment, 0, "v1 provenance is unknown");
+        assert_eq!(node.radius, 2.0);
+        // and a v2 rewrite of it parses back identically
+        let back = from_str(&to_string(&snap)).unwrap();
+        assert_eq!(back.stats, snap.stats);
+        assert_eq!(back.levels.len(), snap.levels.len());
     }
 
     #[test]
     fn rejects_garbage() {
         assert!(from_str("nonsense").is_err());
+        assert!(from_str("DMMCIDX2\ndata x\nseed nope\n").is_err());
         assert!(from_str("DMMCIDX1\ndata x\nseed nope\n").is_err());
         assert!(budget_from_str("bogus").is_err());
         assert!(matches!(budget_from_str("clusters:7").unwrap(), Budget::Clusters(7)));

@@ -12,10 +12,40 @@
 //! union of the occupied levels (the [`CoresetIndex::root`]) is at all
 //! times a valid coreset of everything ingested.
 //!
-//! Every reduce is accounted in an analytic distance-evaluation ledger
-//! (GMM folds cost `n_clusters * input` evaluations each; the streaming
-//! leaf reports its own §5.2 counter), so tests can pin that append work
-//! is logarithmic rather than proportional to the ingested total.
+//! ## Dynamic operations
+//!
+//! The tree is fully dynamic, not just append-only:
+//!
+//! * **Deletions** are tombstones: [`CoresetIndex::delete`] marks dataset
+//!   rows dead, [`CoresetIndex::root`] filters them, and the epoch bumps
+//!   so every cached query result is invalidated for free.  Each delete
+//!   scans only the occupied levels (O(log segments) node touches).  When
+//!   a node's live fraction drops below
+//!   [`IndexConfig::rebuild_threshold`] (default
+//!   [`DEFAULT_REBUILD_THRESHOLD`]), that node is rebuilt from its
+//!   surviving members with one SeqCoreset pass — amortized-O(log) work,
+//!   because a node absorbs Ω(threshold · |node|) deletions between
+//!   rebuilds and the rebuild input is only the node's live members.  A
+//!   node whose members all die is simply dropped.
+//! * **Retention** bounds freshness: [`RetentionPolicy::LastSegments`]
+//!   expires nodes whose newest segment left the sliding window, and
+//!   [`RetentionPolicy::Ttl`] expires nodes older than a fixed number of
+//!   epochs.  Under a windowed policy appends do *not* merge-reduce
+//!   (leaves land in the first free level slot): merging would fuse old
+//!   and new segments into one node whose partial expiry could silently
+//!   drop in-window coverage, so windowed trees keep leaf granularity and
+//!   expire whole segments exactly — this is precisely the standalone
+//!   sliding-window coreset's behavior, which is why
+//!   `streaming::SlidingWindowCoreset` is now a thin wrapper over this
+//!   type.
+//!
+//! Every construction pass is accounted in an analytic
+//! distance-evaluation ledger (GMM folds cost `n_clusters * input`
+//! evaluations each; the streaming leaf reports its own §5.2 counter), so
+//! tests can pin that append *and delete/rebuild* work is logarithmic
+//! rather than proportional to the ingested total.
+
+use std::collections::BTreeSet;
 
 use anyhow::{ensure, Result};
 
@@ -25,6 +55,10 @@ use crate::algo::Budget;
 use crate::core::Dataset;
 use crate::matroid::Matroid;
 use crate::runtime::{build_engine, EngineKind};
+
+/// Default live-fraction threshold below which a node is rebuilt from its
+/// surviving members (see [`IndexConfig::rebuild_threshold`]).
+pub const DEFAULT_REBUILD_THRESHOLD: f64 = 0.5;
 
 /// How a leaf (per-segment) coreset is built — the two ingestion
 /// strategies of the paper's distributed settings, unified over one tree:
@@ -54,6 +88,51 @@ impl LeafIngest {
     }
 }
 
+/// What the index keeps standing as segments age.
+///
+/// `KeepAll` is the classic append-only tree (full merge-reduce carry
+/// chain).  The windowed policies trade merging for exact expiry: see the
+/// module docs for why windowed trees never merge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetentionPolicy {
+    /// Every segment stays forever (default).
+    KeepAll,
+    /// Keep only the newest `w` segments; a node expires once its newest
+    /// segment falls out of the window.
+    LastSegments(usize),
+    /// Keep a node only for `epochs` epochs after it was built (epochs
+    /// advance on every append and every effective delete).
+    Ttl(u64),
+}
+
+impl RetentionPolicy {
+    pub fn name(self) -> String {
+        match self {
+            RetentionPolicy::KeepAll => "keep-all".to_string(),
+            RetentionPolicy::LastSegments(w) => format!("last:{w}"),
+            RetentionPolicy::Ttl(e) => format!("ttl:{e}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RetentionPolicy> {
+        if s == "keep-all" {
+            return Some(RetentionPolicy::KeepAll);
+        }
+        if let Some(rest) = s.strip_prefix("last:") {
+            return rest.parse().ok().map(RetentionPolicy::LastSegments);
+        }
+        if let Some(rest) = s.strip_prefix("ttl:") {
+            return rest.parse().ok().map(RetentionPolicy::Ttl);
+        }
+        None
+    }
+
+    /// Windowed policies expire nodes and therefore suppress merging.
+    pub fn is_windowed(self) -> bool {
+        !matches!(self, RetentionPolicy::KeepAll)
+    }
+}
+
 /// Construction parameters of a [`CoresetIndex`].
 #[derive(Clone, Copy, Debug)]
 pub struct IndexConfig {
@@ -62,17 +141,24 @@ pub struct IndexConfig {
     pub k_max: usize,
     /// Coreset budget per leaf segment.
     pub leaf_budget: Budget,
-    /// Coreset budget per merge-reduce (internal node).
+    /// Coreset budget per merge-reduce (internal node) and per
+    /// post-delete rebuild.
     pub reduce_budget: Budget,
     /// Backend for every construction pass.
     pub engine: EngineKind,
     /// Leaf construction strategy.
     pub leaf_ingest: LeafIngest,
+    /// What to keep as segments age.
+    pub retention: RetentionPolicy,
+    /// A node whose live member fraction drops strictly below this is
+    /// rebuilt from its survivors ([`DEFAULT_REBUILD_THRESHOLD`] by
+    /// default).
+    pub rebuild_threshold: f64,
 }
 
 impl IndexConfig {
     /// Sensible defaults: tau-budgeted SeqCoreset leaves and reduces on
-    /// the default engine.
+    /// the default engine, keep-all retention, 0.5 rebuild threshold.
     pub fn new(k_max: usize, tau: usize) -> IndexConfig {
         IndexConfig {
             k_max,
@@ -80,14 +166,18 @@ impl IndexConfig {
             reduce_budget: Budget::Clusters(tau),
             engine: EngineKind::default(),
             leaf_ingest: LeafIngest::Seq,
+            retention: RetentionPolicy::KeepAll,
+            rebuild_threshold: DEFAULT_REBUILD_THRESHOLD,
         }
     }
 }
 
-/// One occupied tree level: a coreset summarizing `2^level` segments.
+/// One occupied tree level: a coreset summarizing consecutive segments.
 #[derive(Clone, Debug)]
 pub struct IndexNode {
-    /// Coreset member indices (global, sorted, deduplicated).
+    /// Coreset member indices (global, sorted, deduplicated).  May
+    /// contain tombstoned rows; readers filter through the index's
+    /// tombstone set.
     pub indices: Vec<usize>,
     /// Number of leaf segments this node summarizes.
     pub segments: usize,
@@ -97,19 +187,33 @@ pub struct IndexNode {
     pub n_clusters: usize,
     /// Coverage radius of this node w.r.t. its raw points: every
     /// summarized point is within this distance of some member.  Compounds
-    /// additively up the lineage (child radius + reduce radius).
+    /// additively up the lineage (child radius + reduce radius; a rebuild
+    /// adds its own pass radius the same way).
     pub radius: f64,
+    /// 1-based ordinal of the oldest segment this node covers (0 = legacy
+    /// snapshot, unknown; only windowed retention reads this, and legacy
+    /// `DMMCIDX1` snapshots were always keep-all).
+    pub first_segment: usize,
+    /// Epoch at which this node was (re)built; TTL retention ages it.
+    pub born_epoch: u64,
 }
 
 /// Cumulative ledger across the index lifetime.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct IndexStats {
     pub appends: u64,
     pub merges: u64,
     /// Analytic distance evaluations of every construction pass (GMM
     /// folds = `n_clusters * input` each; streaming leaves report their
-    /// own §5.2 counter).
+    /// own §5.2 counter).  Includes post-delete rebuild passes.
     pub dist_evals: u64,
+    /// `delete` calls that tombstoned at least one new row.
+    pub deletes: u64,
+    /// Nodes rebuilt from survivors after crossing the live-fraction
+    /// threshold.
+    pub rebuilds: u64,
+    /// Segments dropped by the retention policy (whole expired nodes).
+    pub expired_segments: u64,
 }
 
 /// Per-append accounting, the unit the sublinearity tests pin.
@@ -118,7 +222,8 @@ pub struct AppendReceipt {
     /// 1-based ordinal of the appended segment.
     pub segment: usize,
     /// Merge-reduce operations this append triggered (the binary-counter
-    /// carry chain: `trailing_ones(segment - 1)`).
+    /// carry chain: `trailing_ones(segment - 1)`; always 0 under windowed
+    /// retention).
     pub merges: usize,
     /// Tree nodes written: `1 + merges`.
     pub nodes_touched: usize,
@@ -127,10 +232,42 @@ pub struct AppendReceipt {
     /// One `(input_size, n_clusters)` entry per construction pass, leaf
     /// first — the raw material for re-deriving `dist_evals` analytically.
     pub reduce_log: Vec<(usize, usize)>,
+    /// Segments expired by the retention policy during this append.
+    pub expired: usize,
     /// Root coreset size after the append.
     pub root_size: usize,
     /// Tree epoch after the append (bumps on every append; result caches
     /// key on it).
+    pub epoch: u64,
+}
+
+/// Per-delete accounting — the delete-side counterpart of
+/// [`AppendReceipt`], pinned by the dynamic-index tests.
+#[derive(Clone, Debug)]
+pub struct DeleteReceipt {
+    /// Rows newly tombstoned by this call (already-dead and duplicate
+    /// rows are ignored).
+    pub newly_dead: usize,
+    /// Coreset member slots (across all nodes) killed by this call.
+    pub members_killed: usize,
+    /// Occupied levels scanned — bounded by the level count, O(log
+    /// segments).
+    pub nodes_touched: usize,
+    /// Nodes rebuilt from survivors (live fraction crossed the
+    /// threshold).
+    pub rebuilds: usize,
+    /// Levels dropped outright because every member died.
+    pub dropped_levels: usize,
+    /// Segments expired by the retention policy during this delete.
+    pub expired: usize,
+    /// Distance evaluations of the rebuild passes.
+    pub dist_evals: u64,
+    /// One `(live_input, n_clusters)` entry per rebuild pass.
+    pub reduce_log: Vec<(usize, usize)>,
+    /// Root coreset size after the delete.
+    pub root_size: usize,
+    /// Tree epoch after the delete.  Bumps iff `newly_dead > 0`, so a
+    /// no-op delete leaves cached query results valid.
     pub epoch: u64,
 }
 
@@ -139,17 +276,39 @@ pub struct CoresetIndex<'a> {
     ds: &'a Dataset,
     m: &'a dyn Matroid,
     cfg: IndexConfig,
-    /// Binary-counter levels; `levels[i]` summarizes `2^i` segments.
+    /// Binary-counter levels; under keep-all retention `levels[i]`
+    /// summarizes `2^i` segments, under windowed retention slots hold
+    /// single-segment leaves (first free slot wins).
     levels: Vec<Option<IndexNode>>,
     epoch: u64,
     segments: usize,
     points: usize,
     stats: IndexStats,
+    /// Deleted dataset rows.  `BTreeSet` per the L1 determinism contract
+    /// (iterated for persistence and live-member filtering).
+    tombstones: BTreeSet<usize>,
+}
+
+/// Resumable state of a [`CoresetIndex`] minus the borrowed dataset /
+/// matroid / config — what `crate::index::store` persists and
+/// [`CoresetIndex::from_parts`] restores.
+#[derive(Clone, Debug)]
+pub struct IndexParts {
+    pub levels: Vec<Option<IndexNode>>,
+    pub epoch: u64,
+    pub segments: usize,
+    pub points: usize,
+    pub stats: IndexStats,
+    pub tombstones: BTreeSet<usize>,
 }
 
 impl<'a> CoresetIndex<'a> {
     pub fn new(ds: &'a Dataset, m: &'a dyn Matroid, cfg: IndexConfig) -> CoresetIndex<'a> {
         assert!(cfg.k_max >= 1, "index needs k_max >= 1");
+        assert!(
+            cfg.rebuild_threshold >= 0.0 && cfg.rebuild_threshold <= 1.0,
+            "rebuild_threshold must lie in [0, 1]"
+        );
         CoresetIndex {
             ds,
             m,
@@ -159,30 +318,42 @@ impl<'a> CoresetIndex<'a> {
             segments: 0,
             points: 0,
             stats: IndexStats::default(),
+            tombstones: BTreeSet::new(),
         }
     }
 
     /// Restore an index from persisted parts (see `crate::index::store`).
-    /// The caller is responsible for `levels`/`epoch`/`segments`/`points`
-    /// being a snapshot previously produced by this type.
+    /// The caller is responsible for `parts` being a snapshot previously
+    /// produced by this type; the lifetime ledger ([`IndexStats`])
+    /// survives the roundtrip.
     pub fn from_parts(
         ds: &'a Dataset,
         m: &'a dyn Matroid,
         cfg: IndexConfig,
-        levels: Vec<Option<IndexNode>>,
-        epoch: u64,
-        segments: usize,
-        points: usize,
+        parts: IndexParts,
     ) -> CoresetIndex<'a> {
         CoresetIndex {
             ds,
             m,
             cfg,
-            levels,
-            epoch,
-            segments,
-            points,
-            stats: IndexStats::default(),
+            levels: parts.levels,
+            epoch: parts.epoch,
+            segments: parts.segments,
+            points: parts.points,
+            stats: parts.stats,
+            tombstones: parts.tombstones,
+        }
+    }
+
+    /// Capture the resumable state for persistence.
+    pub fn parts(&self) -> IndexParts {
+        IndexParts {
+            levels: self.levels.clone(),
+            epoch: self.epoch,
+            segments: self.segments,
+            points: self.points,
+            stats: self.stats,
+            tombstones: self.tombstones.clone(),
         }
     }
 
@@ -202,8 +373,8 @@ impl<'a> CoresetIndex<'a> {
         &self.levels
     }
 
-    /// Bumps on every append; cached query results are valid only for the
-    /// epoch they were computed at.
+    /// Bumps on every append and every effective delete; cached query
+    /// results are valid only for the epoch they were computed at.
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -212,7 +383,8 @@ impl<'a> CoresetIndex<'a> {
         self.segments
     }
 
-    /// Raw points ingested so far.
+    /// Raw points ingested so far (lifetime counter; unaffected by
+    /// deletes and expiry).
     pub fn points_ingested(&self) -> usize {
         self.points
     }
@@ -221,13 +393,46 @@ impl<'a> CoresetIndex<'a> {
         &self.stats
     }
 
-    /// The standing coreset of everything ingested: the union of the
-    /// occupied levels' coresets (a coreset of the full ingest by
-    /// composability — each level covers its own segments).
+    /// Deleted dataset rows.
+    pub fn tombstones(&self) -> &BTreeSet<usize> {
+        &self.tombstones
+    }
+
+    /// Live fraction across all standing coreset member slots (1.0 for an
+    /// empty tree).  The rebuild threshold applies per node; this is the
+    /// aggregate the pipeline reports.
+    pub fn live_fraction(&self) -> f64 {
+        let mut total = 0usize;
+        let mut live = 0usize;
+        for node in self.levels.iter().flatten() {
+            total += node.indices.len();
+            live += self.live_in(node);
+        }
+        if total == 0 {
+            1.0
+        } else {
+            live as f64 / total as f64
+        }
+    }
+
+    /// Live coreset member slots across all nodes (cross-node duplicates
+    /// counted — this is the memory-accounting bound, not the root size).
+    pub fn member_count(&self) -> usize {
+        self.levels.iter().flatten().map(|n| self.live_in(n)).sum()
+    }
+
+    fn live_in(&self, node: &IndexNode) -> usize {
+        node.indices.iter().filter(|i| !self.tombstones.contains(i)).count()
+    }
+
+    /// The standing coreset of everything ingested, tombstone-filtered:
+    /// the union of the occupied levels' live members (a coreset of the
+    /// live ingest by composability — each level covers its own
+    /// segments).
     pub fn root(&self) -> Vec<usize> {
         let mut out: Vec<usize> = Vec::new();
         for node in self.levels.iter().flatten() {
-            out.extend_from_slice(&node.indices);
+            out.extend(node.indices.iter().copied().filter(|i| !self.tombstones.contains(i)));
         }
         out.sort_unstable();
         out.dedup();
@@ -235,53 +440,82 @@ impl<'a> CoresetIndex<'a> {
     }
 
     /// Ingest one segment (a batch of dataset row indices): build its
-    /// leaf coreset, then carry up the binary counter, merge-reducing one
-    /// node per occupied level.  Touches `1 + trailing_ones(segments)`
-    /// nodes — O(log segments) — never the whole ingest.
+    /// leaf coreset, then — under keep-all retention — carry up the
+    /// binary counter, merge-reducing one node per occupied level
+    /// (`1 + trailing_ones(segments)` node touches, O(log segments)).
+    /// Under windowed retention the leaf lands in the first free slot
+    /// (one node touch) and the retention sweep expires anything that
+    /// aged out.  Tombstoned rows in the batch are skipped: a deleted row
+    /// stays deleted.
     pub fn append(&mut self, batch: &[usize]) -> Result<AppendReceipt> {
         ensure!(!batch.is_empty(), "index append needs a non-empty batch");
+        let batch_live: Vec<usize> = if self.tombstones.is_empty() {
+            batch.to_vec()
+        } else {
+            batch.iter().copied().filter(|i| !self.tombstones.contains(i)).collect()
+        };
+        ensure!(
+            !batch_live.is_empty(),
+            "index append batch contains only tombstoned rows"
+        );
         let mut dist_evals = 0u64;
         let mut reduce_log: Vec<(usize, usize)> = Vec::new();
 
-        let (leaf, leaf_evals) = self.build_leaf(batch)?;
+        let seg_ord = self.segments + 1;
+        let born = self.epoch + 1;
+        let (mut leaf, leaf_evals) = self.build_leaf(&batch_live)?;
+        leaf.first_segment = seg_ord;
+        leaf.born_epoch = born;
         dist_evals += leaf_evals;
-        reduce_log.push((batch.len(), leaf.n_clusters));
+        reduce_log.push((batch_live.len(), leaf.n_clusters));
 
         let mut node = leaf;
         let mut merges = 0usize;
-        let mut lvl = 0usize;
-        loop {
-            if lvl == self.levels.len() {
-                self.levels.push(None);
+        if self.cfg.retention.is_windowed() {
+            // no merging under windowed retention (see module docs): the
+            // leaf takes the first free slot so expiry stays exact
+            match self.levels.iter().position(|l| l.is_none()) {
+                Some(slot) => self.levels[slot] = Some(node),
+                None => self.levels.push(Some(node)),
             }
-            match self.levels[lvl].take() {
-                None => {
-                    self.levels[lvl] = Some(node);
-                    break;
+        } else {
+            let mut lvl = 0usize;
+            loop {
+                if lvl == self.levels.len() {
+                    self.levels.push(None);
                 }
-                Some(other) => {
-                    merges += 1;
-                    let (merged, evals, log) = self.reduce_pair(node, other)?;
-                    dist_evals += evals;
-                    reduce_log.push(log);
-                    node = merged;
-                    lvl += 1;
+                match self.levels[lvl].take() {
+                    None => {
+                        self.levels[lvl] = Some(node);
+                        break;
+                    }
+                    Some(other) => {
+                        merges += 1;
+                        let (mut merged, evals, log) = self.reduce_pair(node, other)?;
+                        merged.born_epoch = born;
+                        dist_evals += evals;
+                        reduce_log.push(log);
+                        node = merged;
+                        lvl += 1;
+                    }
                 }
             }
         }
 
-        self.segments += 1;
+        self.segments = seg_ord;
         self.points += batch.len();
-        self.epoch += 1;
+        self.epoch = born;
         self.stats.appends += 1;
         self.stats.merges += merges as u64;
         self.stats.dist_evals += dist_evals;
+        let expired = self.apply_retention();
         Ok(AppendReceipt {
-            segment: self.segments,
+            segment: seg_ord,
             merges,
             nodes_touched: 1 + merges,
             dist_evals,
             reduce_log,
+            expired,
             root_size: self.root().len(),
             epoch: self.epoch,
         })
@@ -297,6 +531,130 @@ impl<'a> CoresetIndex<'a> {
             receipts.push(self.append(chunk)?);
         }
         Ok(receipts)
+    }
+
+    /// Tombstone `rows`: mark them dead across every level, bump the
+    /// epoch (cache invalidation), and rebuild any node whose live
+    /// fraction dropped strictly below the configured threshold from its
+    /// surviving members.  Duplicate and already-dead rows are ignored; a
+    /// call that tombstones nothing new is a no-op (epoch unchanged, so
+    /// caches stay valid).
+    ///
+    /// The whole batch is marked before any threshold is evaluated, so
+    /// the resulting tree state depends only on the *set* of rows, not
+    /// the order they appear in `rows` — the determinism-contract replay
+    /// tests pin this.
+    pub fn delete(&mut self, rows: &[usize]) -> Result<DeleteReceipt> {
+        for &r in rows {
+            ensure!(r < self.ds.n(), "delete row {r} out of range (n = {})", self.ds.n());
+        }
+        let mut newly: BTreeSet<usize> = BTreeSet::new();
+        for &r in rows {
+            if self.tombstones.insert(r) {
+                newly.insert(r);
+            }
+        }
+        if newly.is_empty() {
+            return Ok(DeleteReceipt {
+                newly_dead: 0,
+                members_killed: 0,
+                nodes_touched: 0,
+                rebuilds: 0,
+                dropped_levels: 0,
+                expired: 0,
+                dist_evals: 0,
+                reduce_log: Vec::new(),
+                root_size: self.root().len(),
+                epoch: self.epoch,
+            });
+        }
+        self.epoch += 1;
+        self.stats.deletes += 1;
+
+        let mut members_killed = 0usize;
+        let mut nodes_touched = 0usize;
+        let mut rebuilds = 0usize;
+        let mut dropped_levels = 0usize;
+        let mut dist_evals = 0u64;
+        let mut reduce_log: Vec<(usize, usize)> = Vec::new();
+
+        for lvl in 0..self.levels.len() {
+            let Some(node) = self.levels[lvl].take() else { continue };
+            nodes_touched += 1;
+            members_killed += node.indices.iter().filter(|i| newly.contains(i)).count();
+            let live: Vec<usize> = node
+                .indices
+                .iter()
+                .copied()
+                .filter(|i| !self.tombstones.contains(i))
+                .collect();
+            if live.is_empty() {
+                dropped_levels += 1;
+                continue;
+            }
+            if (live.len() as f64) < self.cfg.rebuild_threshold * (node.indices.len() as f64) {
+                let (rebuilt, evals, log) = self.rebuild_node(&node, &live)?;
+                dist_evals += evals;
+                reduce_log.push(log);
+                rebuilds += 1;
+                self.levels[lvl] = Some(rebuilt);
+            } else {
+                self.levels[lvl] = Some(node);
+            }
+        }
+
+        self.stats.rebuilds += rebuilds as u64;
+        self.stats.dist_evals += dist_evals;
+        let expired = self.apply_retention();
+        Ok(DeleteReceipt {
+            newly_dead: newly.len(),
+            members_killed,
+            nodes_touched,
+            rebuilds,
+            dropped_levels,
+            expired,
+            dist_evals,
+            reduce_log,
+            root_size: self.root().len(),
+            epoch: self.epoch,
+        })
+    }
+
+    /// Expire nodes the retention policy no longer keeps; returns the
+    /// number of segments dropped.  Runs after every append and every
+    /// effective delete.
+    fn apply_retention(&mut self) -> usize {
+        let mut expired = 0usize;
+        let (segments, epoch) = (self.segments, self.epoch);
+        match self.cfg.retention {
+            RetentionPolicy::KeepAll => {}
+            RetentionPolicy::LastSegments(w) => {
+                let oldest_live = segments.saturating_sub(w.max(1)) + 1;
+                for slot in self.levels.iter_mut() {
+                    let drop_it = slot
+                        .as_ref()
+                        .is_some_and(|n| n.first_segment + n.segments - 1 < oldest_live);
+                    if drop_it {
+                        expired += slot.take().map_or(0, |n| n.segments);
+                    }
+                }
+            }
+            RetentionPolicy::Ttl(t) => {
+                let t = t.max(1);
+                for slot in self.levels.iter_mut() {
+                    let drop_it = slot.as_ref().is_some_and(|n| epoch >= n.born_epoch + t);
+                    if drop_it {
+                        expired += slot.take().map_or(0, |n| n.segments);
+                    }
+                }
+            }
+        }
+        // trim trailing empty slots so windowed trees don't grow forever
+        while self.levels.last().is_some_and(|l| l.is_none()) {
+            self.levels.pop();
+        }
+        self.stats.expired_segments += expired as u64;
+        expired
     }
 
     /// Leaf construction over a zero-copy segment view.
@@ -315,6 +673,8 @@ impl<'a> CoresetIndex<'a> {
                     points: batch.len(),
                     n_clusters: cs.n_clusters,
                     radius: cs.radius,
+                    first_segment: 0,
+                    born_epoch: 0,
                 };
                 Ok((node, evals))
             }
@@ -339,6 +699,8 @@ impl<'a> CoresetIndex<'a> {
                     points: batch.len(),
                     n_clusters: cs.n_clusters,
                     radius: cs.radius,
+                    first_segment: 0,
+                    born_epoch: 0,
                 };
                 Ok((node, st.distance_evals))
             }
@@ -347,13 +709,20 @@ impl<'a> CoresetIndex<'a> {
 
     /// Merge-then-reduce: union the two coresets (composability), then
     /// re-compress the union with one SeqCoreset pass under the reduce
-    /// budget so node sizes stay bounded as levels climb.  Returns the
-    /// node, its dist-eval cost, and the `(input, clusters)` ledger entry.
+    /// budget so node sizes stay bounded as levels climb.  Tombstoned
+    /// members are filtered out of the union before the pass (merging is
+    /// self-cleaning).  Returns the node, its dist-eval cost, and the
+    /// `(input, clusters)` ledger entry.
     fn reduce_pair(&self, a: IndexNode, b: IndexNode) -> Result<Reduced> {
         let mut union = a.indices;
         union.extend(b.indices);
         union.sort_unstable();
         union.dedup();
+        if !self.tombstones.is_empty() {
+            union.retain(|i| !self.tombstones.contains(i));
+        }
+        // never empty: a node whose members all died is dropped at delete
+        // time, so both inputs carry at least one live member
         let view = self.ds.subset(&union);
         let engine = build_engine(self.cfg.engine, &view)?;
         let cs = seq_coreset(&view, self.m, self.cfg.k_max, self.cfg.reduce_budget, &*engine)?;
@@ -368,14 +737,49 @@ impl<'a> CoresetIndex<'a> {
             // child-coreset point, which sits within the reduce's radius of
             // a kept member
             radius: a.radius.max(b.radius) + cs.radius,
+            first_segment: min_first_segment(a.first_segment, b.first_segment),
+            born_epoch: 0,
         };
         Ok((node, evals, (union.len(), cs.n_clusters)))
+    }
+
+    /// Rebuild a node from its surviving members with one SeqCoreset pass
+    /// under the reduce budget.  Coverage compounds: a raw point sits
+    /// within the old node's radius of some member, and every *live*
+    /// member sits within the rebuild's radius of a kept member (dead
+    /// members no longer need covering — they left the live ingest).
+    fn rebuild_node(&self, node: &IndexNode, live: &[usize]) -> Result<Reduced> {
+        let view = self.ds.subset(live);
+        let engine = build_engine(self.cfg.engine, &view)?;
+        let cs = seq_coreset(&view, self.m, self.cfg.k_max, self.cfg.reduce_budget, &*engine)?;
+        let evals = (cs.n_clusters * view.n()) as u64;
+        let rebuilt = IndexNode {
+            indices: to_global(live, &cs.indices),
+            segments: node.segments,
+            points: node.points,
+            n_clusters: cs.n_clusters,
+            radius: node.radius + cs.radius,
+            first_segment: node.first_segment,
+            born_epoch: self.epoch,
+        };
+        Ok((rebuilt, evals, (live.len(), cs.n_clusters)))
     }
 }
 
 /// A reduced node, its dist-eval cost, and its `(input, clusters)` log
 /// entry.
 type Reduced = (IndexNode, u64, (usize, usize));
+
+/// Min of two first-segment ordinals where 0 means "unknown" (legacy
+/// snapshot): unknown is absorbing, because a merged node's window
+/// membership can't be narrower than its least-known child.
+fn min_first_segment(a: usize, b: usize) -> usize {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        a.min(b)
+    }
+}
 
 /// Map view-local coreset indices back to global dataset rows.
 fn to_global(batch: &[usize], local: &[usize]) -> Vec<usize> {
@@ -479,5 +883,158 @@ mod tests {
         let m = UniformMatroid::new(2);
         let mut idx = CoresetIndex::new(&ds, &m, cfg(2, 4));
         assert!(idx.append(&[]).is_err());
+    }
+
+    #[test]
+    fn delete_tombstones_filter_root_and_bump_epoch() {
+        let ds = synth::uniform_cube(300, 2, 13);
+        let m = UniformMatroid::new(4);
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(4, 10));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        idx.ingest(&order, 60).unwrap();
+        let epoch_before = idx.epoch();
+        let root_before = idx.root();
+        // kill a couple of actual root members plus a non-member row
+        let victims = vec![root_before[0], root_before[1], root_before[0]];
+        let r = idx.delete(&victims).unwrap();
+        assert_eq!(r.newly_dead, 2, "duplicates collapse");
+        assert!(r.members_killed >= 2);
+        assert_eq!(r.epoch, epoch_before + 1);
+        let root_after = idx.root();
+        assert!(!root_after.contains(&root_before[0]));
+        assert!(!root_after.contains(&root_before[1]));
+        // analytic ledger holds for rebuild passes too
+        let analytic: u64 = r.reduce_log.iter().map(|&(n, c)| (n * c) as u64).sum();
+        assert_eq!(r.dist_evals, analytic);
+        // deleting the same rows again is a no-op: no epoch bump
+        let r2 = idx.delete(&victims).unwrap();
+        assert_eq!(r2.newly_dead, 0);
+        assert_eq!(r2.epoch, idx.epoch());
+        assert_eq!(r2.epoch, epoch_before + 1);
+        assert_eq!(idx.stats().deletes, 1);
+        // out-of-range rows are rejected
+        assert!(idx.delete(&[ds.n()]).is_err());
+    }
+
+    #[test]
+    fn delete_below_threshold_rebuilds_the_node() {
+        let ds = synth::uniform_cube(320, 2, 17);
+        let m = UniformMatroid::new(4);
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(4, 8));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        // 8 segments -> one occupied level
+        idx.ingest(&order, 40).unwrap();
+        assert_eq!(idx.levels().iter().flatten().count(), 1);
+        let root = idx.root();
+        // kill well over half the node's members: must trigger a rebuild
+        let kill: Vec<usize> = root.iter().copied().take(root.len() * 3 / 4).collect();
+        let r = idx.delete(&kill).unwrap();
+        assert_eq!(r.rebuilds, 1);
+        assert_eq!(r.nodes_touched, 1);
+        assert!(r.dist_evals > 0);
+        assert_eq!(idx.stats().rebuilds, 1);
+        // rebuild kept the node alive and its members live
+        let node = idx.levels().iter().flatten().next().unwrap();
+        assert!(node.indices.iter().all(|i| !idx.tombstones().contains(i)));
+        assert_eq!(node.born_epoch, idx.epoch());
+        // live fraction recovered to 1.0 (rebuilt from survivors only)
+        assert!((idx.live_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delete_everything_drops_levels() {
+        let ds = synth::uniform_cube(100, 2, 19);
+        let m = UniformMatroid::new(3);
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(3, 6));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        idx.ingest(&order, 50).unwrap();
+        let r = idx.delete(&order).unwrap();
+        assert!(r.dropped_levels >= 1);
+        assert_eq!(r.rebuilds, 0, "dead nodes drop, they don't rebuild");
+        assert!(idx.root().is_empty());
+        assert_eq!(idx.member_count(), 0);
+        // appending only tombstoned rows is rejected; fresh rows would be
+        // fine but this dataset is fully dead
+        assert!(idx.append(&order[..10]).is_err());
+    }
+
+    #[test]
+    fn last_segments_retention_keeps_leaf_granularity_and_expires() {
+        let ds = synth::uniform_cube(400, 2, 23);
+        let m = UniformMatroid::new(4);
+        let mut c = cfg(4, 8);
+        c.retention = RetentionPolicy::LastSegments(3);
+        let mut idx = CoresetIndex::new(&ds, &m, c);
+        let order: Vec<usize> = (0..ds.n()).collect();
+        for (s, chunk) in order.chunks(40).enumerate() {
+            let r = idx.append(chunk).unwrap();
+            // windowed retention never merges: exactly one node touch
+            assert_eq!(r.merges, 0, "segment {}", s + 1);
+            assert_eq!(r.nodes_touched, 1);
+            if s + 1 > 3 {
+                assert_eq!(r.expired, 1, "segment {}", s + 1);
+            }
+            // at most w=3 occupied slots at any time
+            assert!(idx.levels().iter().flatten().count() <= 3);
+        }
+        assert_eq!(idx.segments(), 10);
+        assert_eq!(idx.stats().expired_segments, 7);
+        // sequential ingestion: everything surviving is from the last 3
+        // segments, i.e. rows >= 7 * 40
+        assert!(idx.root().iter().all(|&i| i >= 280), "expired rows leaked into root");
+    }
+
+    #[test]
+    fn ttl_retention_expires_by_epoch_age() {
+        let ds = synth::uniform_cube(300, 2, 29);
+        let m = UniformMatroid::new(3);
+        let mut c = cfg(3, 6);
+        c.retention = RetentionPolicy::Ttl(2);
+        let mut idx = CoresetIndex::new(&ds, &m, c);
+        let order: Vec<usize> = (0..ds.n()).collect();
+        for chunk in order.chunks(50) {
+            idx.append(chunk).unwrap();
+            // each append bumps the epoch once, so with ttl=2 at most two
+            // nodes are within their lifetime
+            assert!(idx.levels().iter().flatten().count() <= 2);
+        }
+        let min_born = idx.epoch() - 1;
+        assert!(idx
+            .levels()
+            .iter()
+            .flatten()
+            .all(|n| n.born_epoch >= min_born || n.born_epoch + 2 > idx.epoch()));
+        assert_eq!(idx.stats().expired_segments as usize, idx.segments() - 2);
+    }
+
+    #[test]
+    fn retention_policy_names_roundtrip() {
+        for p in [
+            RetentionPolicy::KeepAll,
+            RetentionPolicy::LastSegments(7),
+            RetentionPolicy::Ttl(12),
+        ] {
+            assert_eq!(RetentionPolicy::parse(&p.name()), Some(p));
+        }
+        assert_eq!(RetentionPolicy::parse("bogus"), None);
+        assert_eq!(RetentionPolicy::parse("last:x"), None);
+        assert!(RetentionPolicy::LastSegments(1).is_windowed());
+        assert!(!RetentionPolicy::KeepAll.is_windowed());
+    }
+
+    #[test]
+    fn parts_roundtrip_preserves_stats_and_tombstones() {
+        let ds = synth::uniform_cube(200, 2, 31);
+        let m = UniformMatroid::new(4);
+        let mut idx = CoresetIndex::new(&ds, &m, cfg(4, 8));
+        let order: Vec<usize> = (0..ds.n()).collect();
+        idx.ingest(&order, 50).unwrap();
+        idx.delete(&[0, 1, 2, 3, 4]).unwrap();
+        let parts = idx.parts();
+        let idx2 = CoresetIndex::from_parts(&ds, &m, *idx.config(), parts);
+        assert_eq!(idx2.root(), idx.root());
+        assert_eq!(idx2.stats(), idx.stats());
+        assert_eq!(idx2.tombstones(), idx.tombstones());
+        assert_eq!(idx2.epoch(), idx.epoch());
     }
 }

@@ -20,11 +20,14 @@
 //!   ([`runtime::EngineKind`]) with four backends and a cross-backend
 //!   conformance harness ([`runtime::conformance`]) — see below,
 //! * the **composable coreset index + query service** ([`index`]): a
-//!   merge-and-reduce coreset tree whose root is a standing coreset of
-//!   everything ingested (appends touch O(log segments) nodes), with an
-//!   epoch-invalidated LRU query cache on top — N `(objective, k,
-//!   matroid, engine)` queries pay one coreset construction instead of N
-//!   pipeline runs (`dmmc index build/append/query`, `--algo index`),
+//!   fully dynamic merge-and-reduce coreset tree whose root is a standing
+//!   coreset of everything ingested — appends *and* tombstoned deletes
+//!   touch O(log segments) nodes (threshold-triggered rebuilds from
+//!   survivors), retention policies bound freshness (`last:<w>` sliding
+//!   windows, `ttl:<epochs>` expiry), and an epoch-invalidated LRU query
+//!   cache sits on top: N `(objective, k, matroid, engine)` queries pay
+//!   one coreset construction instead of N pipeline runs (`dmmc index
+//!   build/append/delete/query`, `--algo index`),
 //! * and the experiment substrate: synthetic datasets ([`data`]),
 //!   a thread-based MapReduce simulator ([`mapreduce`]), a streaming
 //!   harness ([`streaming`]), an experiment coordinator ([`coordinator`]),

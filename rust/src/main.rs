@@ -30,7 +30,7 @@ use matroid_coreset::data::{io, synth};
 use matroid_coreset::diversity::Objective;
 use matroid_coreset::index::{
     store, CoresetIndex, IndexConfig, IndexSnapshot, LeafIngest, QueryFinisher, QueryService,
-    QuerySpec,
+    QuerySpec, RetentionPolicy, DEFAULT_REBUILD_THRESHOLD,
 };
 use matroid_coreset::matroid::Matroid;
 use matroid_coreset::runtime::EngineKind;
@@ -52,7 +52,9 @@ SUBCOMMANDS
              [--seed S]
   index      build  --data <file|kind:n> --out F.dmmcx [--k K] [--tau T] [--segment N]
                     [--count C] [--ingest seq|stream] [--engine E] [--matroid M] [--seed S]
+                    [--retention keep-all|last:W|ttl:E] [--rebuild-threshold F]
              append --index F.dmmcx [--count C] [--segment N]
+             delete --index F.dmmcx --rows N,A..B,... (tombstones rows; A..B is half-open)
              query  --index F.dmmcx [--objective O] [--k K] [--finisher F] [--gamma G]
                     [--engine E] [--matroid M] [--repeat R]
   sweep      --config configs/<file>.toml [--csv out.csv]
@@ -232,20 +234,23 @@ fn cmd_run(args: &Args) -> Result<()> {
 /// The composable coreset index service: `index build` constructs a tree
 /// over a prefix of the dataset and persists it, `index append` ingests
 /// further segments into the persisted tree (touching O(log segments)
-/// nodes), `index query` answers (objective, k, matroid, engine) requests
-/// from the root coreset only.  The result cache lives in-process, so
-/// `--repeat R` demonstrates hit behavior within one invocation.
+/// nodes), `index delete` tombstones rows (epoch bump, threshold-driven
+/// rebuilds), `index query` answers (objective, k, matroid, engine)
+/// requests from the root coreset only.  The result cache lives
+/// in-process, so `--repeat R` demonstrates hit behavior within one
+/// invocation.
 fn cmd_index(args: &Args) -> Result<()> {
     let action = args
         .positional
         .first()
         .map(|s| s.as_str())
-        .context("index needs an action: build | append | query (before any flags)")?;
+        .context("index needs an action: build | append | delete | query (before any flags)")?;
     match action {
         "build" => cmd_index_build(args),
         "append" => cmd_index_append(args),
+        "delete" => cmd_index_delete(args),
         "query" => cmd_index_query(args),
-        other => bail!("unknown index action {other} (build | append | query)"),
+        other => bail!("unknown index action {other} (build | append | delete | query)"),
     }
 }
 
@@ -266,7 +271,7 @@ fn snapshot_world(
 fn cmd_index_build(args: &Args) -> Result<()> {
     args.expect_known(&[
         "data", "out", "k", "tau", "eps", "segment", "count", "ingest", "engine", "matroid",
-        "seed",
+        "seed", "retention", "rebuild-threshold",
     ])?;
     let seed = args.u64_or("seed", 1)?;
     let data = args.require("data")?.to_string();
@@ -306,12 +311,21 @@ fn cmd_index_build(args: &Args) -> Result<()> {
     let count = args.usize_or("count", ds.n())?.min(ds.n());
     let segment = args.usize_or("segment", (count / 8).max(1))?.max(1);
 
+    let retention = RetentionPolicy::parse(args.str_or("retention", "keep-all"))
+        .context("bad --retention (keep-all | last:<w> | ttl:<epochs>)")?;
+    let rebuild_threshold = args.f64_or("rebuild-threshold", DEFAULT_REBUILD_THRESHOLD)?;
+    if !(0.0..=1.0).contains(&rebuild_threshold) {
+        bail!("--rebuild-threshold must lie in [0, 1]");
+    }
+
     let cfg = IndexConfig {
         k_max,
         leaf_budget: budget,
         reduce_budget: budget,
         engine,
         leaf_ingest,
+        retention,
+        rebuild_threshold,
     };
     let mut index = CoresetIndex::new(&ds, &*matroid, cfg);
     let order: Vec<usize> = (0..count).collect();
@@ -320,12 +334,13 @@ fn cmd_index_build(args: &Args) -> Result<()> {
     let snap = IndexSnapshot::capture(&index, data, seed, matroid_str, count);
     store::save(&snap, out)?;
     println!(
-        "index build: data={} n={} ingested={} segments={} k_max={k_max} engine={}",
+        "index build: data={} n={} ingested={} segments={} k_max={k_max} engine={} retention={}",
         ds.name,
         ds.n(),
         count,
         index.segments(),
         engine.name(),
+        retention.name(),
     );
     println!("root size       {}", index.root().len());
     println!("merges          {}", index.stats().merges);
@@ -349,15 +364,7 @@ fn cmd_index_append(args: &Args) -> Result<()> {
     let count = args.usize_or("count", remaining)?.min(remaining);
     let segment = args.usize_or("segment", count)?.max(1);
     let cfg = snap.config();
-    let mut index = CoresetIndex::from_parts(
-        &ds,
-        &*matroid,
-        cfg,
-        snap.levels.clone(),
-        snap.epoch,
-        snap.segments,
-        snap.points,
-    );
+    let mut index = CoresetIndex::from_parts(&ds, &*matroid, cfg, snap.parts());
     let order: Vec<usize> = (snap.cursor..snap.cursor + count).collect();
     let receipts = index.ingest(&order, segment)?;
     let new_cursor = snap.cursor + count;
@@ -378,6 +385,64 @@ fn cmd_index_append(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Row-list grammar for `index delete --rows`: comma-separated entries,
+/// each a single row `N` or a half-open range `A..B`.
+fn parse_rows(s: &str) -> Result<Vec<usize>> {
+    let mut out: Vec<usize> = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once("..") {
+            let a: usize = a.parse().with_context(|| format!("bad range start {part:?}"))?;
+            let b: usize = b.parse().with_context(|| format!("bad range end {part:?}"))?;
+            if a >= b {
+                bail!("empty range {part:?} (ranges are half-open A..B with A < B)");
+            }
+            out.extend(a..b);
+        } else {
+            out.push(part.parse().with_context(|| format!("bad row {part:?}"))?);
+        }
+    }
+    if out.is_empty() {
+        bail!("--rows names no rows (grammar: N or A..B, comma-separated)");
+    }
+    Ok(out)
+}
+
+fn cmd_index_delete(args: &Args) -> Result<()> {
+    args.expect_known(&["index", "rows"])?;
+    let path = args.require("index")?;
+    let rows = parse_rows(args.require("rows")?)?;
+    let snap = store::load(path)?;
+    let (ds, matroid) = snapshot_world(&snap)?;
+    let cfg = snap.config();
+    let mut index = CoresetIndex::from_parts(&ds, &*matroid, cfg, snap.parts());
+    let r = index.delete(&rows)?;
+    let snap2 = IndexSnapshot::capture(&index, snap.data, snap.seed, snap.matroid, snap.cursor);
+    store::save(&snap2, path)?;
+    println!(
+        "index delete: {} row(s) requested, {} newly dead (epoch {} -> {})",
+        rows.len(),
+        r.newly_dead,
+        snap.epoch,
+        index.epoch(),
+    );
+    println!(
+        "  members_killed={} nodes_touched={} rebuilds={} dropped_levels={} expired={} \
+         dist_evals={}",
+        r.members_killed, r.nodes_touched, r.rebuilds, r.dropped_levels, r.expired, r.dist_evals
+    );
+    println!(
+        "  root={} live_fraction={:.3} tombstones={}",
+        r.root_size,
+        index.live_fraction(),
+        index.tombstones().len(),
+    );
+    Ok(())
+}
+
 fn cmd_index_query(args: &Args) -> Result<()> {
     args.expect_known(&[
         "index", "objective", "k", "finisher", "gamma", "engine", "matroid", "repeat",
@@ -386,15 +451,7 @@ fn cmd_index_query(args: &Args) -> Result<()> {
     let snap = store::load(path)?;
     let (ds, matroid) = snapshot_world(&snap)?;
     let cfg = snap.config();
-    let index = CoresetIndex::from_parts(
-        &ds,
-        &*matroid,
-        cfg,
-        snap.levels.clone(),
-        snap.epoch,
-        snap.segments,
-        snap.points,
-    );
+    let index = CoresetIndex::from_parts(&ds, &*matroid, cfg, snap.parts());
     let mut service = QueryService::new(index);
 
     let objective = Objective::parse(args.str_or("objective", "sum"))

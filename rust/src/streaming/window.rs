@@ -1,58 +1,75 @@
 //! Sliding-window coresets — an extension beyond the paper (its related
 //! work cites Borassi et al. [7] for sliding-window diversity; the paper
-//! itself leaves windows open).  Built directly on the paper's own
-//! *composability* property (Theorem 6): the window is split into blocks,
-//! each block carries its own SeqCoreset, and the union of live-block
-//! coresets is a coreset for the window.
+//! itself leaves windows open).  Built on the paper's own *composability*
+//! property (Theorem 6): the window is split into blocks, each block
+//! carries its own SeqCoreset, and the union of live-block coresets is a
+//! coreset for the window.
+//!
+//! Since the coreset index became fully dynamic, this type is a thin
+//! wrapper over [`CoresetIndex`] with
+//! [`RetentionPolicy::LastSegments`] retention: each sealed block is one
+//! appended segment, the index's no-merge windowed mode keeps leaf
+//! granularity, and expiry of whole blocks is the retention sweep.  One
+//! subsystem now serves append-only, windowed, and delete-capable
+//! workloads; only the pending (unsealed) buffer lives here.
 //!
 //! Memory: O(blocks_per_window * coreset_size) — independent of the window
 //! length in points whenever the per-block coreset is.
 
 use anyhow::Result;
 
-use crate::algo::seq_coreset::seq_coreset;
-use crate::algo::Budget;
 use crate::core::Dataset;
+use crate::index::tree::{CoresetIndex, IndexConfig, RetentionPolicy};
 use crate::matroid::Matroid;
-use crate::runtime::BatchEngine;
+use crate::runtime::EngineKind;
 
 /// Blocked sliding-window coreset maintainer.
-pub struct SlidingWindowCoreset<'a, M: Matroid> {
-    ds: &'a Dataset,
-    m: &'a M,
-    k: usize,
-    /// Per-block coreset budget.
-    tau: usize,
+pub struct SlidingWindowCoreset<'a> {
+    index: CoresetIndex<'a>,
     /// Points per block.
     block_size: usize,
-    /// Number of live blocks (window = block_size * window_blocks points).
-    window_blocks: usize,
     /// Buffer of the block being filled.
     pending: Vec<usize>,
-    /// Live blocks: (first_stream_position, coreset indices into ds).
-    blocks: std::collections::VecDeque<(usize, Vec<usize>)>,
     seen: usize,
 }
 
-impl<'a, M: Matroid> SlidingWindowCoreset<'a, M> {
+impl<'a> SlidingWindowCoreset<'a> {
+    /// Window maintainer on the registry's default engine (the same
+    /// backend every other scenario defaults to).
     pub fn new(
         ds: &'a Dataset,
-        m: &'a M,
+        m: &'a dyn Matroid,
         k: usize,
         tau: usize,
         block_size: usize,
         window_blocks: usize,
     ) -> Self {
+        Self::with_engine(ds, m, k, tau, block_size, window_blocks, EngineKind::default())
+    }
+
+    /// Window maintainer with an explicit block-seal backend — the
+    /// `--engine` / `run.engine` / `DMMC_BENCH_ENGINE` axis, which the
+    /// window previously ignored by hardcoding the batch engine.
+    pub fn with_engine(
+        ds: &'a Dataset,
+        m: &'a dyn Matroid,
+        k: usize,
+        tau: usize,
+        block_size: usize,
+        window_blocks: usize,
+        engine: EngineKind,
+    ) -> Self {
         assert!(block_size > 0 && window_blocks > 0);
+        // IndexConfig::new already picks Budget::Clusters(tau) seq leaves
+        let cfg = IndexConfig {
+            engine,
+            retention: RetentionPolicy::LastSegments(window_blocks),
+            ..IndexConfig::new(k, tau)
+        };
         SlidingWindowCoreset {
-            ds,
-            m,
-            k,
-            tau,
+            index: CoresetIndex::new(ds, m, cfg),
             block_size,
-            window_blocks,
             pending: Vec::with_capacity(block_size),
-            blocks: Default::default(),
             seen: 0,
         }
     }
@@ -62,41 +79,20 @@ impl<'a, M: Matroid> SlidingWindowCoreset<'a, M> {
         self.pending.push(x);
         self.seen += 1;
         if self.pending.len() == self.block_size {
-            self.seal_block()?;
+            let block = std::mem::take(&mut self.pending);
+            // blocks are small, so the seal usually stays on one thread;
+            // past the engine's fan-out threshold it parallelizes
+            self.index.append(&block)?;
         }
         Ok(())
     }
 
-    fn seal_block(&mut self) -> Result<()> {
-        let block = std::mem::take(&mut self.pending);
-        let start = self.seen - block.len();
-        let local = self.ds.subset(&block);
-        // blocks are small, so the batch engine usually stays on one
-        // thread; past its fan-out threshold the block seal parallelizes
-        let cs = seq_coreset(
-            &local,
-            self.m,
-            self.k,
-            Budget::Clusters(self.tau),
-            &BatchEngine::for_dataset(&local),
-        )?;
-        let global: Vec<usize> = cs.indices.iter().map(|&i| block[i]).collect();
-        self.blocks.push_back((start, global));
-        while self.blocks.len() > self.window_blocks {
-            self.blocks.pop_front();
-        }
-        Ok(())
-    }
-
-    /// Coreset for the current window: union of live block coresets plus
-    /// the raw pending buffer (its block is not sealed yet).
+    /// Coreset for the current window: union of live block coresets (the
+    /// index root) plus the raw pending buffer (its block is not sealed
+    /// yet).
     pub fn query(&self) -> Vec<usize> {
-        let mut out: Vec<usize> = self
-            .blocks
-            .iter()
-            .flat_map(|(_, cs)| cs.iter().copied())
-            .chain(self.pending.iter().copied())
-            .collect();
+        let mut out = self.index.root();
+        out.extend_from_slice(&self.pending);
         out.sort_unstable();
         out.dedup();
         out
@@ -104,15 +100,25 @@ impl<'a, M: Matroid> SlidingWindowCoreset<'a, M> {
 
     /// Stream positions covered by the current window (inclusive start).
     pub fn window_start(&self) -> usize {
-        self.blocks
-            .front()
-            .map(|(s, _)| *s)
-            .unwrap_or(self.seen - self.pending.len())
+        let sealed = (self.seen - self.pending.len()) / self.block_size;
+        let w = match self.index.config().retention {
+            RetentionPolicy::LastSegments(w) => w,
+            // unreachable by construction; keep the math total anyway
+            _ => sealed,
+        };
+        sealed.saturating_sub(w) * self.block_size
     }
 
-    /// Stored points right now — the memory footprint.
+    /// Stored points right now — the memory footprint (live index members
+    /// plus the pending buffer).
     pub fn memory_points(&self) -> usize {
-        self.blocks.iter().map(|(_, cs)| cs.len()).sum::<usize>() + self.pending.len()
+        self.index.member_count() + self.pending.len()
+    }
+
+    /// The backing index (window-retained); exposed so callers can serve
+    /// queries or snapshots through the standard index surface.
+    pub fn index(&self) -> &CoresetIndex<'a> {
+        &self.index
     }
 }
 
@@ -135,6 +141,10 @@ mod tests {
         let q = sw.query();
         assert!(q.iter().all(|&i| i >= 700), "expired point in window: {q:?}");
         assert!(!q.is_empty());
+        // the backing index saw every block as a segment and expired the
+        // rest exactly
+        assert_eq!(sw.index().segments(), 10);
+        assert_eq!(sw.index().stats().expired_segments, 7);
     }
 
     #[test]
@@ -177,5 +187,24 @@ mod tests {
         }
         let q = sw.query();
         assert_eq!(q, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn engine_kinds_agree_on_euclidean_windows() {
+        let ds = synth::uniform_cube(900, 2, 5);
+        let m = UniformMatroid::new(4);
+        let mut base = SlidingWindowCoreset::with_engine(&ds, &m, 4, 4, 150, 3, EngineKind::Scalar);
+        let mut batch = SlidingWindowCoreset::with_engine(&ds, &m, 4, 4, 150, 3, EngineKind::Batch);
+        for i in 0..900 {
+            base.push(i).unwrap();
+            batch.push(i).unwrap();
+            // Euclidean block seals are bit-identical across the CPU
+            // backends, so the whole window trajectory must agree
+            if i % 150 == 149 {
+                assert_eq!(batch.query(), base.query(), "engines diverged at {i}");
+            }
+        }
+        assert_eq!(batch.query(), base.query());
+        assert_eq!(batch.window_start(), base.window_start());
     }
 }

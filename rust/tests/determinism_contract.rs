@@ -14,13 +14,18 @@
 //!   repeated calls and across datasets whose per-point category lists
 //!   were supplied in shuffled order (`Dataset::new` normalizes them —
 //!   part of the same input-defined-order contract);
-//! * whole SeqCoreset runs replay identically.
+//! * whole SeqCoreset runs replay identically;
+//! * dynamic index state (tombstones, rebuilds, retention) depends only
+//!   on the *set* of deleted rows, never on the order they were listed,
+//!   and replays identically across category-insertion-order variants.
 
 use matroid_coreset::algo::seq_coreset::seq_coreset;
 use matroid_coreset::algo::{extract::extract, Budget};
 use matroid_coreset::core::{Dataset, Metric};
+use matroid_coreset::index::{CoresetIndex, IndexConfig, RetentionPolicy};
 use matroid_coreset::matroid::{Matroid, TransversalMatroid};
 use matroid_coreset::runtime::engine::ScalarEngine;
+use matroid_coreset::runtime::EngineKind;
 use matroid_coreset::util::rng::Rng;
 
 const N_CATEGORIES: u32 = 6;
@@ -170,5 +175,72 @@ fn seq_coreset_replays_identically_across_category_insertion_orders() {
             got, want,
             "variant {variant}: coreset changed with category insertion order"
         );
+    }
+}
+
+#[test]
+fn index_delete_replays_identically_under_row_order() {
+    let (coords, cats) = raw_data(120, 41);
+    let ds = dataset_variant(&coords, &cats, 0);
+    let m = TransversalMatroid::new();
+    let cfg = IndexConfig {
+        engine: EngineKind::Scalar,
+        ..IndexConfig::new(4, 8)
+    };
+    let order: Vec<usize> = (0..ds.n()).collect();
+    // heavy enough to kill whole nodes and cross rebuild thresholds
+    let victims: Vec<usize> = (0..ds.n()).step_by(2).collect();
+
+    let build = |rows: &[usize]| {
+        let mut idx = CoresetIndex::new(&ds, &m, cfg);
+        idx.ingest(&order, 30).unwrap();
+        idx.delete(rows).unwrap();
+        idx
+    };
+    let base = build(&victims);
+    for perm in 1..5u64 {
+        // the whole batch is tombstoned before any threshold is checked,
+        // so one delete call must depend only on the set of rows — shuffle
+        // within the call, not across calls
+        let mut shuffled = victims.clone();
+        Rng::new(perm * 104729).shuffle(&mut shuffled);
+        let idx = build(&shuffled);
+        assert_eq!(idx.tombstones(), base.tombstones(), "perm {perm}");
+        assert_eq!(idx.root(), base.root(), "perm {perm}: delete order changed the tree");
+        assert_eq!(idx.epoch(), base.epoch(), "perm {perm}");
+        assert_eq!(idx.stats(), base.stats(), "perm {perm}");
+    }
+}
+
+#[test]
+fn dynamic_index_invariant_across_category_insertion_orders() {
+    let (coords, cats) = raw_data(150, 43);
+    let m = TransversalMatroid::new();
+    let victims: Vec<usize> = (0..150).step_by(3).collect();
+    let run = |ds: &Dataset, retention: RetentionPolicy| {
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            retention,
+            ..IndexConfig::new(4, 8)
+        };
+        let mut idx = CoresetIndex::new(ds, &m, cfg);
+        let order: Vec<usize> = (0..ds.n()).collect();
+        idx.ingest(&order, 25).unwrap();
+        let r = idx.delete(&victims).unwrap();
+        (idx.root(), r.root_size, idx.epoch(), *idx.stats())
+    };
+    let base = dataset_variant(&coords, &cats, 0);
+    for retention in [RetentionPolicy::KeepAll, RetentionPolicy::LastSegments(3)] {
+        let want = run(&base, retention);
+        for variant in 1..4 {
+            let ds = dataset_variant(&coords, &cats, variant);
+            assert_eq!(
+                run(&ds, retention),
+                want,
+                "variant {variant}, retention {}: dynamic index state changed \
+                 with category insertion order",
+                retention.name()
+            );
+        }
     }
 }

@@ -1,0 +1,226 @@
+//! Integration: the dynamic side of the coreset index — deletions,
+//! rebuilds, retention (`matroid_coreset::index` + the window wrapper).
+//!
+//! Pins the acceptance properties of the dynamic subsystem:
+//!
+//! * **delete quality** — after tombstoning rows, the index root is as
+//!   good a coreset of the *surviving* data as a one-shot SeqCoreset
+//!   rebuilt from scratch on the survivors, within the same pinned ratio
+//!   the append-only tests use, for every Table-1 objective;
+//! * **amortized O(log) deletes** — a delete touches only the occupied
+//!   levels (O(log segments)), and the analytic rebuild ledger equals
+//!   the measured ScalarEngine oracle counter, pass for pass;
+//! * **cache epoch** — an effective delete makes a cache hit impossible
+//!   (epoch bump), a no-op delete leaves cached results valid;
+//! * **window-as-retention** — a `LastSegments` index reproduces the
+//!   `SlidingWindowCoreset` wrapper trajectory bit-exactly.
+
+use std::collections::BTreeSet;
+
+use matroid_coreset::algo::exhaustive::exhaustive_best;
+use matroid_coreset::algo::seq_coreset::seq_coreset;
+use matroid_coreset::algo::Budget;
+use matroid_coreset::data::synth;
+use matroid_coreset::diversity::{Objective, ALL_OBJECTIVES};
+use matroid_coreset::index::{
+    CoresetIndex, IndexConfig, LeafIngest, QueryService, QuerySpec, RetentionPolicy,
+};
+use matroid_coreset::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
+use matroid_coreset::runtime::{EngineKind, ScalarEngine};
+use matroid_coreset::streaming::SlidingWindowCoreset;
+
+/// Same pin as `index_service.rs`: the dynamic root must stay within this
+/// factor of the from-scratch optimum on the surviving rows.
+const PINNED_RATIO: f64 = 0.5;
+
+fn scalar_cfg(k_max: usize, tau: usize) -> IndexConfig {
+    IndexConfig {
+        engine: EngineKind::Scalar,
+        leaf_ingest: LeafIngest::Seq,
+        ..IndexConfig::new(k_max, tau)
+    }
+}
+
+#[test]
+fn delete_then_query_matches_rebuild_from_scratch_quality() {
+    // the exact instance of index_service's quality pin
+    let ds = synth::clustered(60, 2, 6, 0.05, 3, 1);
+    let m = PartitionMatroid::new(vec![2, 2, 2]);
+    let k = 4;
+
+    let mut idx = CoresetIndex::new(&ds, &m, scalar_cfg(k, 12));
+    let order: Vec<usize> = (0..ds.n()).collect();
+    idx.ingest(&order, 15).unwrap();
+
+    // tombstone every 4th row, then compare the standing root against a
+    // one-shot coreset rebuilt from scratch on exactly the survivors
+    let victims: Vec<usize> = (0..ds.n()).step_by(4).collect();
+    let r = idx.delete(&victims).unwrap();
+    assert_eq!(r.newly_dead, victims.len());
+    let dead: BTreeSet<usize> = victims.iter().copied().collect();
+    let survivors: Vec<usize> = (0..ds.n()).filter(|i| !dead.contains(i)).collect();
+
+    let root = idx.root();
+    assert!(root.iter().all(|i| !dead.contains(i)), "dead row leaked into root");
+    assert_eq!(
+        maximal_independent(&m, &ds, &root, k).len(),
+        k,
+        "delete broke root feasibility"
+    );
+
+    let view = ds.subset(&survivors);
+    let scratch = seq_coreset(&view, &m, k, Budget::Epsilon(0.5), &ScalarEngine::new()).unwrap();
+    let scratch_global: Vec<usize> = scratch.indices.iter().map(|&i| survivors[i]).collect();
+
+    let scalar = ScalarEngine::new();
+    for obj in ALL_OBJECTIVES {
+        let scratch_opt = exhaustive_best(&ds, &m, k, &scratch_global, obj, &scalar)
+            .unwrap()
+            .diversity;
+        let root_opt = exhaustive_best(&ds, &m, k, &root, obj, &scalar).unwrap().diversity;
+        assert!(
+            root_opt >= PINNED_RATIO * scratch_opt - 1e-9,
+            "{obj:?}: dynamic root {root_opt} < {PINNED_RATIO} * from-scratch {scratch_opt}"
+        );
+    }
+
+    // and against the brute-force optimum over all survivors, for sum
+    let brute = exhaustive_best(&ds, &m, k, &survivors, Objective::Sum, &scalar)
+        .unwrap()
+        .diversity;
+    let root_sum = exhaustive_best(&ds, &m, k, &root, Objective::Sum, &scalar)
+        .unwrap()
+        .diversity;
+    assert!(
+        root_sum >= PINNED_RATIO * brute - 1e-9,
+        "sum: dynamic root {root_sum} < {PINNED_RATIO} * survivor brute-force {brute}"
+    );
+}
+
+#[test]
+fn delete_touches_only_occupied_levels() {
+    let ds = synth::uniform_cube(840, 2, 11);
+    let m = UniformMatroid::new(4);
+    let mut idx = CoresetIndex::new(&ds, &m, scalar_cfg(4, 8));
+    let order: Vec<usize> = (0..ds.n()).collect();
+    // 21 segments = 0b10101: exactly 3 occupied binary-counter levels
+    idx.ingest(&order, 40).unwrap();
+    assert_eq!(idx.segments(), 21);
+    let occupied = idx.levels().iter().flatten().count();
+    assert_eq!(occupied, (21u32).count_ones() as usize);
+
+    let root = idx.root();
+    let r = idx.delete(&root[..2]).unwrap();
+    // a delete scans each occupied level once — O(log segments), not
+    // O(segments) and not O(points)
+    assert_eq!(r.nodes_touched, occupied);
+    let log2_bound = (usize::BITS - 21usize.leading_zeros()) as usize;
+    assert!(
+        r.nodes_touched <= log2_bound,
+        "delete touched {} nodes > log bound {log2_bound}",
+        r.nodes_touched
+    );
+    // receipt ledger is exactly reconstructible from its reduce log
+    let analytic: u64 = r.reduce_log.iter().map(|&(n, c)| (n * c) as u64).sum();
+    assert_eq!(r.dist_evals, analytic);
+}
+
+#[test]
+fn rebuild_ledger_matches_the_scalar_engine_counter() {
+    let ds = synth::uniform_cube(320, 2, 17);
+    let m = UniformMatroid::new(4);
+    let (k, tau) = (4usize, 8usize);
+    let mut idx = CoresetIndex::new(&ds, &m, scalar_cfg(k, tau));
+    let order: Vec<usize> = (0..ds.n()).collect();
+    // 8 segments collapse into a single occupied level
+    idx.ingest(&order, 40).unwrap();
+    let node_indices = idx.levels().iter().flatten().next().unwrap().indices.clone();
+
+    // kill 3/4 of the root: the lone node crosses the 0.5 live-fraction
+    // threshold and rebuilds from its survivors
+    let root = idx.root();
+    let kill: Vec<usize> = root.iter().copied().take(root.len() * 3 / 4).collect();
+    let r = idx.delete(&kill).unwrap();
+    assert_eq!(r.rebuilds, 1);
+
+    // replay the rebuild pass externally with the oracle counter: one
+    // SeqCoreset over the node's live members under the reduce budget
+    let dead: BTreeSet<usize> = kill.iter().copied().collect();
+    let live: Vec<usize> = node_indices.iter().copied().filter(|i| !dead.contains(i)).collect();
+    let probe = ScalarEngine::new();
+    let view = ds.subset(&live);
+    let cs = seq_coreset(&view, &m, k, Budget::Clusters(tau), &probe).unwrap();
+    assert_eq!(
+        probe.dist_evals(),
+        r.dist_evals,
+        "analytic rebuild ledger out of sync with the measured ScalarEngine counter"
+    );
+    assert_eq!(r.dist_evals, (cs.n_clusters * view.n()) as u64);
+    assert_eq!(r.reduce_log, vec![(live.len(), cs.n_clusters)]);
+
+    // and the rebuild itself is the deterministic replay of that pass
+    let mut want: Vec<usize> = cs.indices.iter().map(|&i| live[i]).collect();
+    want.sort_unstable();
+    want.dedup();
+    assert_eq!(idx.root(), want, "rebuilt node differs from its external replay");
+}
+
+#[test]
+fn effective_delete_makes_cache_hits_impossible() {
+    let ds = synth::clustered(200, 2, 4, 0.1, 3, 7);
+    let m = PartitionMatroid::new(vec![2; 3]);
+    let k = 4;
+    let order: Vec<usize> = (0..ds.n()).collect();
+    let mut svc = QueryService::new(CoresetIndex::new(&ds, &m, scalar_cfg(k, 10)));
+    for chunk in order.chunks(50) {
+        svc.append(chunk).unwrap();
+    }
+
+    let spec = QuerySpec::sum_local_search(k, EngineKind::Scalar);
+    let cold = svc.query(&spec).unwrap();
+    assert!(!cold.cache_hit);
+    assert!(svc.query(&spec).unwrap().cache_hit);
+
+    // kill a member of the served solution: the epoch bump must force the
+    // next identical query cold, and the dead row out of its solution
+    let victim = cold.result.solution[0];
+    let dr = svc.delete(&[victim]).unwrap();
+    assert!(dr.epoch > cold.epoch);
+    let after = svc.query(&spec).unwrap();
+    assert!(!after.cache_hit, "cache hit served across a delete");
+    assert!(after.epoch > cold.epoch);
+    assert!(!after.result.solution.contains(&victim));
+
+    // deleting the same row again is a no-op: epoch holds, cache stays
+    let noop = svc.delete(&[victim]).unwrap();
+    assert_eq!(noop.newly_dead, 0);
+    assert_eq!(noop.epoch, after.epoch);
+    assert!(svc.query(&spec).unwrap().cache_hit, "no-op delete evicted the cache");
+}
+
+#[test]
+fn last_segments_retention_reproduces_the_window_wrapper() {
+    let ds = synth::uniform_cube(1000, 2, 1);
+    let m = UniformMatroid::new(4);
+    let (k, tau, block, w) = (4usize, 4usize, 100usize, 3usize);
+    let mut sw = SlidingWindowCoreset::with_engine(&ds, &m, k, tau, block, w, EngineKind::Scalar);
+    let cfg = IndexConfig {
+        retention: RetentionPolicy::LastSegments(w),
+        ..scalar_cfg(k, tau)
+    };
+    let mut idx = CoresetIndex::new(&ds, &m, cfg);
+
+    let order: Vec<usize> = (0..ds.n()).collect();
+    for chunk in order.chunks(block) {
+        for &x in chunk {
+            sw.push(x).unwrap();
+        }
+        idx.append(chunk).unwrap();
+        // at a block boundary the wrapper's pending buffer is empty, so
+        // its query is exactly the retained index root
+        assert_eq!(sw.query(), idx.root(), "wrapper diverged from bare retention");
+    }
+    assert_eq!(sw.index().segments(), idx.segments());
+    assert_eq!(sw.index().stats().expired_segments, idx.stats().expired_segments);
+    assert_eq!(sw.window_start(), (idx.segments() - w) * block);
+}

@@ -36,11 +36,9 @@ const PINNED_RATIO: f64 = 0.5;
 
 fn scalar_cfg(k_max: usize, tau: usize) -> IndexConfig {
     IndexConfig {
-        k_max,
-        leaf_budget: Budget::Clusters(tau),
-        reduce_budget: Budget::Clusters(tau),
         engine: EngineKind::Scalar,
         leaf_ingest: LeafIngest::Seq,
+        ..IndexConfig::new(k_max, tau)
     }
 }
 
