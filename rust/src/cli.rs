@@ -100,6 +100,33 @@ impl Args {
     }
 }
 
+/// Row-list grammar shared by `index delete --rows` and the serve
+/// protocol's `DELETE` request: comma-separated entries, each a single
+/// row `N` or a half-open range `A..B`.
+pub fn parse_rows(s: &str) -> Result<Vec<usize>> {
+    let mut out: Vec<usize> = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once("..") {
+            let a: usize = a.parse().with_context(|| format!("bad range start {part:?}"))?;
+            let b: usize = b.parse().with_context(|| format!("bad range end {part:?}"))?;
+            if a >= b {
+                bail!("empty range {part:?} (ranges are half-open A..B with A < B)");
+            }
+            out.extend(a..b);
+        } else {
+            out.push(part.parse().with_context(|| format!("bad row {part:?}"))?);
+        }
+    }
+    if out.is_empty() {
+        bail!("row list names no rows (grammar: N or A..B, comma-separated)");
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +174,16 @@ mod tests {
     fn require_errors_when_absent() {
         let a = parse(&["run"]);
         assert!(a.require("data").is_err());
+    }
+
+    #[test]
+    fn parse_rows_grammar() {
+        assert_eq!(parse_rows("3").unwrap(), vec![3]);
+        assert_eq!(parse_rows("1,4..7,2").unwrap(), vec![1, 4, 5, 6, 2]);
+        assert_eq!(parse_rows(" 8 , 9 ").unwrap(), vec![8, 9]);
+        assert!(parse_rows("").is_err(), "empty list");
+        assert!(parse_rows("5..5").is_err(), "empty range");
+        assert!(parse_rows("7..3").is_err(), "reversed range");
+        assert!(parse_rows("x").is_err(), "non-numeric");
     }
 }

@@ -85,7 +85,7 @@ pub fn build_dataset(spec: &DatasetSpec) -> Result<Dataset> {
 }
 
 /// Which matroid constrains the solutions.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum MatroidSpec {
     Transversal,
     /// Partition with caps proportional to category frequency, binary-

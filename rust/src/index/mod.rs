@@ -28,8 +28,15 @@
 //!   only**, behind an LRU result cache keyed on the spec and invalidated
 //!   by the tree epoch: N queries pay one coreset construction instead of
 //!   N pipeline runs, and a repeat query costs zero distance evaluations.
+//!   The cache and its counters live in [`service::ResultCache`] — the
+//!   lock-friendly seam the multi-tenant server ([`crate::serve`]) shares
+//!   across worker threads — and the cold path is the free function
+//!   [`service::run_cold_query`], callable against any borrowed root.
 //! * [`store`] — text snapshots of the tree (plus the CLI's
-//!   dataset/matroid recipe), behind `dmmc index build/append/query`.
+//!   dataset/matroid recipe), behind `dmmc index build/append/query`,
+//!   and the result-cache sidecar (`<index>.cache`, stamped with the
+//!   snapshot's content id) that keeps repeat queries warm across
+//!   restarts and server reloads.
 //!
 //! Work accounting is analytic and test-pinned: every construction pass
 //! logs `(input, clusters)` so `rust/tests/index_service.rs` can assert
@@ -40,7 +47,8 @@ pub mod store;
 pub mod tree;
 
 pub use service::{
-    QueryFinisher, QueryOutcome, QueryResult, QueryService, QuerySpec, ServiceStats,
+    run_cold_query, ColdQuery, DistEvals, QueryFinisher, QueryOutcome, QueryResult, QueryService,
+    QuerySpec, ResultCache, ServiceStats, DEFAULT_CACHE_CAPACITY,
 };
 pub use store::IndexSnapshot;
 pub use tree::{

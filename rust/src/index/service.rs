@@ -11,6 +11,16 @@
 //! bit-identical result at **zero** distance evaluations.  Appending to
 //! the index bumps the tree epoch, which invalidates every cached entry
 //! without any explicit flush.
+//!
+//! The cache and its counters live in [`ResultCache`], a lock-friendly
+//! seam shared with the `dmmc serve` tenants (which wrap one in a
+//! `Mutex`); the cold path itself is the free function
+//! [`run_cold_query`], callable without a `&mut QueryService` so serve
+//! worker threads can run it against a borrowed root.  Accounting is
+//! error-aware: a rejected query (`k > k_max`, empty index,
+//! local-search-on-non-sum, engine construction failure) counts in
+//! [`ServiceStats::errors`], never as a miss — misses feed the hit rate
+//! the load harness reports, and error paths must not skew it.
 
 use std::time::{Duration, Instant};
 
@@ -105,33 +115,98 @@ pub struct QueryResult {
     pub coreset_size: usize,
 }
 
+/// Distance-evaluation accounting for one served query.  The three cases
+/// are deliberately distinct: a cache hit is *known* to cost zero evals,
+/// a scalar cold run *measured* its count, and a cold run on a backend
+/// without a counter did real work that simply was not measured —
+/// conflating the last case with "measured zero" (the old `Option<u64>`
+/// encoding) mis-reported counterless backends as free in the serve CSV.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistEvals {
+    /// Measured by the scalar oracle's per-instance counter.  Sees only
+    /// work routed through the engine (the batched passes and the final
+    /// scoring); point-at-a-time `Dataset::dist` walks — the greedy
+    /// finisher, local search's per-improving-candidate corrections — are
+    /// not included, matching `LocalSearchResult::dist_evals`.
+    Measured(u64),
+    /// A cold run on a backend without an eval counter: work happened,
+    /// but no number exists for it.
+    Uncounted,
+    /// Served from the result cache (or an in-flight coalesced
+    /// computation): zero evaluations by construction.
+    CachedZero,
+}
+
+impl DistEvals {
+    /// The measured count, when one exists.
+    pub fn measured(self) -> Option<u64> {
+        match self {
+            DistEvals::Measured(n) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// True only for cache/coalesced answers (zero work by construction).
+    pub fn is_free(self) -> bool {
+        self == DistEvals::CachedZero
+    }
+
+    /// CLI/CSV rendering: the count, `n/a`, or `cached`.
+    pub fn render(self) -> String {
+        match self {
+            DistEvals::Measured(n) => n.to_string(),
+            DistEvals::Uncounted => "n/a".to_string(),
+            DistEvals::CachedZero => "cached".to_string(),
+        }
+    }
+}
+
 /// Result + serving metadata.
 #[derive(Clone, Debug)]
 pub struct QueryOutcome {
     pub result: QueryResult,
     pub cache_hit: bool,
-    /// Tree epoch the result is valid for.
+    /// Tree epoch the result is valid for (always the epoch of the root
+    /// the cold run consumed — a result is never stamped with an epoch it
+    /// was not computed from).
     pub epoch: u64,
-    /// Engine distance evaluations this call performed: `Some(0)` on a
-    /// cache hit, the measured scalar counter when `spec.engine ==
-    /// Scalar`, `None` for backends without a counter.  The counter sees
-    /// only work routed through the engine (the batched passes and the
-    /// final scoring); point-at-a-time `Dataset::dist` walks — the greedy
-    /// finisher, local search's per-improving-candidate corrections — are
-    /// not included, matching `LocalSearchResult::dist_evals`.
-    pub dist_evals: Option<u64>,
+    /// Engine distance evaluations this call performed.
+    pub dist_evals: DistEvals,
     pub elapsed: Duration,
 }
 
 /// Serving counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     pub queries: u64,
+    /// Same-epoch cache hits (including hits discovered on a coalescing
+    /// leader's post-registration re-check).
     pub hits: u64,
+    /// Successful cold runs.  A failed query is an error, not a miss.
     pub misses: u64,
+    /// Rejected queries: `k > k_max`, empty index, invalid
+    /// finisher/objective combination, engine construction failure.
+    pub errors: u64,
+    /// Requests that waited on an identical in-flight `(spec, epoch)`
+    /// computation and shared its result (serve-only; always 0 in the
+    /// single-threaded service).
+    pub coalesced: u64,
     pub evictions: u64,
 }
 
+impl ServiceStats {
+    /// Fraction of queries answered without a cold computation (cache
+    /// hits plus coalesced waits over all queries, errors included).
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            (self.hits + self.coalesced) as f64 / self.queries as f64
+        }
+    }
+}
+
+#[derive(Debug)]
 struct CacheSlot {
     key: String,
     epoch: u64,
@@ -142,11 +217,195 @@ struct CacheSlot {
 /// Default result-cache capacity.
 pub const DEFAULT_CACHE_CAPACITY: usize = 64;
 
+/// The epoch-invalidated LRU result cache plus its serving counters,
+/// extracted from [`QueryService`] as a lock-friendly seam: the
+/// single-threaded service owns one directly, the `dmmc serve` tenants
+/// share one behind a `Mutex` across worker threads.
+///
+/// The accounting protocol is split so error paths stay out of the hit
+/// rate: [`ResultCache::lookup`] counts the query (and a hit, if any);
+/// on a miss the caller runs the cold path and then records exactly one
+/// of [`ResultCache::complete_miss`] (success) or
+/// [`ResultCache::record_error`] (failure).
+#[derive(Debug)]
+pub struct ResultCache {
+    capacity: usize,
+    slots: Vec<CacheSlot>,
+    tick: u64,
+    stats: ServiceStats,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> ResultCache {
+        assert!(capacity >= 1, "cache capacity must be >= 1");
+        ResultCache {
+            capacity,
+            slots: Vec::new(),
+            tick: 0,
+            stats: ServiceStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Start serving one query: counts it, and returns the same-epoch
+    /// cached result if one exists (counting a hit).  `None` is *not*
+    /// yet a miss — the miss is recorded only when the cold run succeeds.
+    pub fn lookup(&mut self, key: &str, epoch: u64) -> Option<QueryResult> {
+        self.tick += 1;
+        self.stats.queries += 1;
+        self.touch(key, epoch)
+    }
+
+    /// Re-check after registering as a coalescing leader: a competing
+    /// leader may have published between the [`ResultCache::lookup`] miss
+    /// and the registration.  Counts a (late) hit, never a new query.
+    pub fn recheck(&mut self, key: &str, epoch: u64) -> Option<QueryResult> {
+        self.tick += 1;
+        self.touch(key, epoch)
+    }
+
+    fn touch(&mut self, key: &str, epoch: u64) -> Option<QueryResult> {
+        let tick = self.tick;
+        let slot = self.slots.iter_mut().find(|s| s.key == key && s.epoch == epoch)?;
+        slot.last_used = tick;
+        self.stats.hits += 1;
+        Some(slot.result.clone())
+    }
+
+    /// A cold run succeeded after a [`ResultCache::lookup`] miss: record
+    /// the miss and cache the result for `(key, epoch)`.
+    pub fn complete_miss(&mut self, key: &str, epoch: u64, result: QueryResult) {
+        self.stats.misses += 1;
+        self.insert(key, epoch, result, true);
+    }
+
+    /// A cold run failed after a [`ResultCache::lookup`] miss.
+    pub fn record_error(&mut self) {
+        self.stats.errors += 1;
+    }
+
+    /// A request shared an identical in-flight computation's result.
+    pub fn record_coalesced(&mut self) {
+        self.stats.coalesced += 1;
+    }
+
+    /// Warm the cache without touching any counter (persisted-sidecar
+    /// load; see `index::store::load_result_cache`).
+    pub fn seed(&mut self, key: &str, epoch: u64, result: QueryResult) {
+        self.insert(key, epoch, result, false);
+    }
+
+    /// Every cached `(key, epoch, result)`, for the persisted sidecar.
+    pub fn entries(&self) -> Vec<(String, u64, QueryResult)> {
+        self.slots.iter().map(|s| (s.key.clone(), s.epoch, s.result.clone())).collect()
+    }
+
+    fn insert(&mut self, key: &str, epoch: u64, result: QueryResult, count_eviction: bool) {
+        let tick = self.tick;
+        if let Some(slot) = self.slots.iter_mut().find(|s| s.key == key) {
+            // same spec at a stale epoch: refresh in place
+            slot.epoch = epoch;
+            slot.result = result;
+            slot.last_used = tick;
+            return;
+        }
+        if self.slots.len() == self.capacity {
+            let lru = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(i, _)| i)
+                .expect("non-empty cache");
+            self.slots.swap_remove(lru);
+            if count_eviction {
+                self.stats.evictions += 1;
+            }
+        }
+        self.slots.push(CacheSlot {
+            key: key.to_string(),
+            epoch,
+            result,
+            last_used: tick,
+        });
+    }
+}
+
+/// Borrowed context for one cold query — everything [`run_cold_query`]
+/// needs, with no `&mut QueryService` in sight so serve worker threads
+/// can run cold paths against a root captured under a read lock.
+pub struct ColdQuery<'c> {
+    pub ds: &'c crate::core::Dataset,
+    /// The index's build matroid (used when the spec has no override).
+    pub matroid: &'c dyn Matroid,
+    pub k_max: usize,
+    /// The root coreset the finisher runs on, captured at `epoch`.
+    pub root: &'c [usize],
+    pub epoch: u64,
+}
+
+/// Run the finisher on a root coreset.  Deterministic given `(spec,
+/// epoch)`: the RNG seed derives from both, so re-running a cold query at
+/// the same epoch reproduces the cached result bit for bit.
+///
+/// `engine` is an optional pre-built backend for `spec.engine`; when
+/// `None` (and the spec is non-scalar) one is built for this call.
+/// `DistanceEngine` is deliberately not `Send + Sync`, so serving threads
+/// cannot share built engines and pass `None` — the same
+/// engine-per-worker rule the MapReduce simulator follows.
+pub fn run_cold_query(
+    cx: &ColdQuery<'_>,
+    spec: &QuerySpec,
+    key: &str,
+    engine: Option<&dyn DistanceEngine>,
+) -> Result<(QueryResult, DistEvals)> {
+    if spec.k > cx.k_max {
+        bail!(
+            "query k = {} exceeds the index's k_max = {} (rebuild the index for larger k)",
+            spec.k,
+            cx.k_max,
+        );
+    }
+    if cx.root.is_empty() {
+        bail!("query on an empty index (append at least one segment first)");
+    }
+    let built = spec.matroid.as_ref().map(|ms| build_matroid(ms, cx.ds));
+    let m: &dyn Matroid = match &built {
+        Some(b) => &**b,
+        None => cx.matroid,
+    };
+    let mut rng = Rng::new(fnv1a(key) ^ cx.epoch);
+    if spec.engine == EngineKind::Scalar {
+        // the oracle backend carries a per-instance eval counter, so
+        // scalar queries report measured (not analytic) distance work
+        let scalar = ScalarEngine::new();
+        let result = finish(cx.ds, m, spec, cx.root, &scalar, &mut rng)?;
+        return Ok((result, DistEvals::Measured(scalar.dist_evals())));
+    }
+    match engine {
+        Some(e) => Ok((finish(cx.ds, m, spec, cx.root, e, &mut rng)?, DistEvals::Uncounted)),
+        None => {
+            let e = build_engine(spec.engine, cx.ds)?;
+            Ok((finish(cx.ds, m, spec, cx.root, &*e, &mut rng)?, DistEvals::Uncounted))
+        }
+    }
+}
+
 /// A [`CoresetIndex`] plus the serving layer on top of it.
 pub struct QueryService<'a> {
     index: CoresetIndex<'a>,
-    capacity: usize,
-    cache: Vec<CacheSlot>,
+    cache: ResultCache,
     /// Lazily-built engines per registry kind: engines carry per-dataset
     /// state (cosine sqnorms are O(n d) to precompute over the *raw*
     /// ingest), so rebuilding one per query would make serving latency
@@ -155,8 +414,6 @@ pub struct QueryService<'a> {
     /// scalar oracle is excluded: it is stateless to build, and a fresh
     /// instance per query gives a per-query eval counter.
     engines: Vec<(EngineKind, Box<dyn DistanceEngine>)>,
-    tick: u64,
-    stats: ServiceStats,
 }
 
 impl<'a> QueryService<'a> {
@@ -165,25 +422,25 @@ impl<'a> QueryService<'a> {
     }
 
     pub fn with_capacity(index: CoresetIndex<'a>, capacity: usize) -> QueryService<'a> {
-        assert!(capacity >= 1, "cache capacity must be >= 1");
         QueryService {
             index,
-            capacity,
-            cache: Vec::new(),
+            cache: ResultCache::new(capacity),
             engines: Vec::new(),
-            tick: 0,
-            stats: ServiceStats::default(),
         }
     }
 
-    /// Get-or-build the cached engine for `kind` (non-scalar kinds only).
-    fn engine_for(&mut self, kind: EngineKind) -> Result<&dyn DistanceEngine> {
-        if let Some(pos) = self.engines.iter().position(|(k, _)| *k == kind) {
-            return Ok(&*self.engines[pos].1);
+    /// Build (if needed) the cached engine for `kind` (non-scalar only).
+    fn ensure_engine(&mut self, kind: EngineKind) -> Result<()> {
+        if self.engines.iter().any(|(k, _)| *k == kind) {
+            return Ok(());
         }
         let engine = build_engine(kind, self.index.dataset())?;
         self.engines.push((kind, engine));
-        Ok(&*self.engines.last().expect("just pushed").1)
+        Ok(())
+    }
+
+    fn engine_ref(&self, kind: EngineKind) -> Option<&dyn DistanceEngine> {
+        self.engines.iter().find(|(k, _)| *k == kind).map(|(_, e)| &**e)
     }
 
     pub fn index(&self) -> &CoresetIndex<'a> {
@@ -191,7 +448,24 @@ impl<'a> QueryService<'a> {
     }
 
     pub fn stats(&self) -> &ServiceStats {
-        &self.stats
+        self.cache.stats()
+    }
+
+    pub fn cache(&self) -> &ResultCache {
+        &self.cache
+    }
+
+    /// Warm the cache from persisted `(key, epoch, result)` entries
+    /// without touching the serving counters.
+    pub fn warm_cache(&mut self, entries: Vec<(String, u64, QueryResult)>) {
+        for (key, epoch, result) in entries {
+            self.cache.seed(&key, epoch, result);
+        }
+    }
+
+    /// Every cached entry, for persisting the result-cache sidecar.
+    pub fn cache_entries(&self) -> Vec<(String, u64, QueryResult)> {
+        self.cache.entries()
     }
 
     /// Ingest a segment.  The epoch bump implicitly invalidates every
@@ -210,97 +484,56 @@ impl<'a> QueryService<'a> {
     /// Serve one query from the root coreset (cache-first).
     pub fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
         let t0 = Instant::now();
-        self.tick += 1;
-        self.stats.queries += 1;
         let key = spec.cache_key();
         let epoch = self.index.epoch();
-        if let Some(slot) = self.cache.iter_mut().find(|s| s.key == key && s.epoch == epoch) {
-            slot.last_used = self.tick;
-            self.stats.hits += 1;
+        if let Some(result) = self.cache.lookup(&key, epoch) {
             return Ok(QueryOutcome {
-                result: slot.result.clone(),
+                result,
                 cache_hit: true,
                 epoch,
-                dist_evals: Some(0),
+                dist_evals: DistEvals::CachedZero,
                 elapsed: t0.elapsed(),
             });
         }
-        self.stats.misses += 1;
-        let (result, dist_evals) = self.run_cold(spec, &key, epoch)?;
-
-        let tick = self.tick;
-        if let Some(slot) = self.cache.iter_mut().find(|s| s.key == key) {
-            // same spec at a stale epoch: refresh in place
-            slot.epoch = epoch;
-            slot.result = result.clone();
-            slot.last_used = tick;
-        } else {
-            if self.cache.len() == self.capacity {
-                let lru = self
-                    .cache
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, s)| s.last_used)
-                    .map(|(i, _)| i)
-                    .expect("non-empty cache");
-                self.cache.swap_remove(lru);
-                self.stats.evictions += 1;
+        match self.cold_outcome(spec, &key, epoch) {
+            Ok((result, dist_evals)) => {
+                self.cache.complete_miss(&key, epoch, result.clone());
+                Ok(QueryOutcome {
+                    result,
+                    cache_hit: false,
+                    epoch,
+                    dist_evals,
+                    elapsed: t0.elapsed(),
+                })
             }
-            self.cache.push(CacheSlot {
-                key,
-                epoch,
-                result: result.clone(),
-                last_used: tick,
-            });
+            Err(e) => {
+                // rejected queries are errors, not misses: they must not
+                // skew the hit rate the load harness reports
+                self.cache.record_error();
+                Err(e)
+            }
         }
-        Ok(QueryOutcome {
-            result,
-            cache_hit: false,
-            epoch,
-            dist_evals,
-            elapsed: t0.elapsed(),
-        })
     }
 
-    /// Run the finisher on the root coreset.  Deterministic given
-    /// `(spec, epoch)`: the RNG seed derives from both, so re-running a
-    /// cold query at the same epoch reproduces the cached result bit for
-    /// bit.
-    fn run_cold(
+    fn cold_outcome(
         &mut self,
         spec: &QuerySpec,
         key: &str,
         epoch: u64,
-    ) -> Result<(QueryResult, Option<u64>)> {
-        let k_max = self.index.config().k_max;
-        if spec.k > k_max {
-            bail!(
-                "query k = {} exceeds the index's k_max = {k_max} (rebuild the index for larger k)",
-                spec.k,
-            );
+    ) -> Result<(QueryResult, DistEvals)> {
+        if spec.engine != EngineKind::Scalar {
+            self.ensure_engine(spec.engine)?;
         }
-        let ds = self.index.dataset();
+        let engine = self.engine_ref(spec.engine);
         let root = self.index.root();
-        if root.is_empty() {
-            bail!("query on an empty index (append at least one segment first)");
-        }
-        let built = spec.matroid.as_ref().map(|ms| build_matroid(ms, ds));
-        let m: &dyn Matroid = match &built {
-            Some(b) => &**b,
-            None => self.index.matroid(),
+        let cx = ColdQuery {
+            ds: self.index.dataset(),
+            matroid: self.index.matroid(),
+            k_max: self.index.config().k_max,
+            root: &root,
+            epoch,
         };
-        let mut rng = Rng::new(fnv1a(key) ^ epoch);
-        if spec.engine == EngineKind::Scalar {
-            // the oracle backend carries a per-instance eval counter, so
-            // scalar queries report measured (not analytic) distance work
-            let scalar = ScalarEngine::new();
-            let result = finish(ds, m, spec, &root, &scalar, &mut rng)?;
-            Ok((result, Some(scalar.dist_evals())))
-        } else {
-            let engine = self.engine_for(spec.engine)?;
-            let result = finish(ds, m, spec, &root, engine, &mut rng)?;
-            Ok((result, None))
-        }
+        run_cold_query(&cx, spec, key, engine)
     }
 }
 
@@ -368,11 +601,11 @@ mod tests {
 
         let cold = svc.query(&spec).unwrap();
         assert!(!cold.cache_hit);
-        assert!(cold.dist_evals.unwrap() > 0);
+        assert!(cold.dist_evals.measured().unwrap() > 0);
 
         let hit = svc.query(&spec).unwrap();
         assert!(hit.cache_hit);
-        assert_eq!(hit.dist_evals, Some(0));
+        assert_eq!(hit.dist_evals, DistEvals::CachedZero);
         assert_eq!(hit.result.solution, cold.result.solution);
         assert_eq!(hit.result.diversity.to_bits(), cold.result.diversity.to_bits());
 
@@ -384,6 +617,7 @@ mod tests {
         assert_eq!(after.epoch, 2);
         assert_eq!(svc.stats().hits, 1);
         assert_eq!(svc.stats().misses, 2);
+        assert_eq!(svc.stats().errors, 0);
     }
 
     #[test]
@@ -420,6 +654,48 @@ mod tests {
         svc.append(&order).unwrap();
         let big = QuerySpec::sum_local_search(5, EngineKind::Scalar);
         assert!(svc.query(&big).is_err(), "k > k_max must error");
+    }
+
+    #[test]
+    fn errors_count_separately_and_never_inflate_misses() {
+        // the serving-stats regression: before the errors counter, every
+        // rejected query consumed a tick and a miss, permanently skewing
+        // the hit rate the load harness reports
+        let ds = synth::uniform_cube(120, 2, 31);
+        let m = UniformMatroid::new(8);
+        let mut svc = service(&ds, &m, 4, 8);
+        let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+
+        // empty index: an error, not a miss
+        assert!(svc.query(&spec).is_err());
+        assert_eq!(svc.stats().queries, 1);
+        assert_eq!(svc.stats().errors, 1);
+        assert_eq!(svc.stats().misses, 0);
+
+        let order: Vec<usize> = (0..120).collect();
+        svc.append(&order).unwrap();
+
+        // k > k_max: same
+        let big = QuerySpec::sum_local_search(5, EngineKind::Scalar);
+        assert!(svc.query(&big).is_err());
+        // local search on a non-sum objective: same
+        let bad = QuerySpec {
+            objective: Objective::Star,
+            ..QuerySpec::sum_local_search(4, EngineKind::Scalar)
+        };
+        assert!(svc.query(&bad).is_err());
+        assert_eq!(svc.stats().queries, 3);
+        assert_eq!(svc.stats().errors, 3);
+        assert_eq!(svc.stats().misses, 0);
+        assert_eq!(svc.stats().hits, 0);
+
+        // a valid query still records the one real miss, and the hit rate
+        // counts only genuine hits over all queries
+        assert!(!svc.query(&spec).unwrap().cache_hit);
+        assert!(svc.query(&spec).unwrap().cache_hit);
+        assert_eq!(svc.stats().misses, 1);
+        assert_eq!(svc.stats().hits, 1);
+        assert!((svc.stats().hit_rate() - 0.2).abs() < 1e-12);
     }
 
     #[test]
@@ -509,7 +785,7 @@ mod tests {
     }
 
     #[test]
-    fn batch_engine_queries_report_no_counter() {
+    fn batch_engine_queries_report_uncounted_then_cached() {
         let ds = synth::uniform_cube(250, 3, 23);
         let m = UniformMatroid::new(4);
         let mut svc = service(&ds, &m, 4, 8);
@@ -517,8 +793,45 @@ mod tests {
         svc.append(&order).unwrap();
         let spec = QuerySpec::sum_local_search(4, EngineKind::Batch);
         let out = svc.query(&spec).unwrap();
-        assert_eq!(out.dist_evals, None);
-        // and the cached repeat still reports zero
-        assert_eq!(svc.query(&spec).unwrap().dist_evals, Some(0));
+        // the batch backend has no counter: its work is Uncounted, which
+        // must never be conflated with a measured zero
+        assert_eq!(out.dist_evals, DistEvals::Uncounted);
+        assert_eq!(out.dist_evals.measured(), None);
+        // the cached repeat is genuinely free
+        let hit = svc.query(&spec).unwrap();
+        assert_eq!(hit.dist_evals, DistEvals::CachedZero);
+        assert!(hit.dist_evals.is_free());
+    }
+
+    #[test]
+    fn warm_cache_seeds_entries_without_touching_counters() {
+        let ds = synth::uniform_cube(200, 2, 43);
+        let m = UniformMatroid::new(4);
+        let mut svc = service(&ds, &m, 4, 8);
+        let order: Vec<usize> = (0..200).collect();
+        svc.append(&order).unwrap();
+        let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+        let cold = svc.query(&spec).unwrap();
+        let entries = svc.cache_entries();
+        assert_eq!(entries.len(), 1);
+
+        // a fresh service warmed with the persisted entries serves the
+        // same bits as a hit, at zero queries-so-far on the counters
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(4, 8)
+        };
+        let mut idx2 = CoresetIndex::new(&ds, &m, cfg);
+        idx2.append(&order).unwrap();
+        let mut svc2 = QueryService::new(idx2);
+        svc2.warm_cache(entries);
+        assert_eq!(svc2.stats().queries, 0);
+        let hit = svc2.query(&spec).unwrap();
+        assert!(hit.cache_hit);
+        assert_eq!(hit.dist_evals, DistEvals::CachedZero);
+        assert_eq!(hit.result.diversity.to_bits(), cold.result.diversity.to_bits());
+        assert_eq!(hit.result.solution, cold.result.solution);
+        assert_eq!(svc2.stats().hits, 1);
+        assert_eq!(svc2.stats().misses, 0);
     }
 }

@@ -16,19 +16,25 @@
 
 use std::collections::BTreeSet;
 use std::fmt::Write as _;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::algo::Budget;
+use crate::coordinator::spec::MatroidBox;
+use crate::coordinator::{build_dataset, build_matroid, DatasetSpec, MatroidSpec};
+use crate::core::Dataset;
+use crate::index::service::QueryResult;
 use crate::index::tree::{
     CoresetIndex, IndexConfig, IndexNode, IndexParts, IndexStats, LeafIngest, RetentionPolicy,
     DEFAULT_REBUILD_THRESHOLD,
 };
 use crate::runtime::EngineKind;
+use crate::util::fnv1a;
 
 const MAGIC_V2: &str = "DMMCIDX2";
 const MAGIC_V1: &str = "DMMCIDX1";
+const CACHE_MAGIC: &str = "DMMCCACHE1";
 
 /// Everything needed to reconstruct a [`CoresetIndex`] (plus the CLI's
 /// ingest cursor) in a later process.
@@ -348,6 +354,136 @@ pub fn load(path: impl AsRef<Path>) -> Result<IndexSnapshot> {
     from_str(&text)
 }
 
+/// Reconstruct `(dataset, matroid)` from a snapshot's recipe fields —
+/// the one way every consumer (the `dmmc index` subcommands, the serve
+/// tenants) rebuilds the world a persisted tree was built over.
+pub fn snapshot_world(snap: &IndexSnapshot) -> Result<(Dataset, MatroidBox)> {
+    let spec = DatasetSpec::parse(&snap.data, snap.seed)?;
+    let ds = build_dataset(&spec)?;
+    let mspec = MatroidSpec::parse(&snap.matroid)?;
+    let matroid = build_matroid(&mspec, &ds);
+    Ok((ds, matroid))
+}
+
+/// Content identity of a snapshot: the hash of its exact text form.  Any
+/// state change (epoch, levels, tombstones, cursor, config) changes the
+/// id, so a result-cache sidecar stamped with it can never be replayed
+/// against a tree it was not computed from.
+pub fn snapshot_id(snap: &IndexSnapshot) -> u64 {
+    fnv1a(&to_string(snap))
+}
+
+/// Sidecar path for the persisted result cache of the index at `path`
+/// (`foo.dmmcx` -> `foo.dmmcx.cache`).
+pub fn result_cache_path(path: impl AsRef<Path>) -> PathBuf {
+    let mut s = path.as_ref().as_os_str().to_os_string();
+    s.push(".cache");
+    PathBuf::from(s)
+}
+
+/// Serialize persisted result-cache entries (`DMMCCACHE1`): diversity as
+/// f64 hex bits so a warm hit replays the cold result bit for bit.  Cache
+/// keys contain no whitespace by construction (`QuerySpec::cache_key` is
+/// `|`-separated), so the line format stays split_whitespace-parseable.
+pub fn result_cache_to_string(snapshot_id: u64, entries: &[(String, u64, QueryResult)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{CACHE_MAGIC}");
+    let _ = writeln!(out, "snapshot {snapshot_id:016x}");
+    let _ = writeln!(out, "entries {}", entries.len());
+    for (key, epoch, result) in entries {
+        debug_assert!(!key.contains(char::is_whitespace), "cache key {key:?} has whitespace");
+        let _ = writeln!(
+            out,
+            "entry {epoch} {} {:x} {key}",
+            result.coreset_size,
+            result.diversity.to_bits(),
+        );
+        let ids: Vec<String> = result.solution.iter().map(|x| x.to_string()).collect();
+        let _ = writeln!(out, "solution {}", ids.join(" "));
+    }
+    out
+}
+
+/// Parse a `DMMCCACHE1` sidecar back into `(snapshot_id, entries)`.
+pub fn result_cache_from_str(text: &str) -> Result<(u64, Vec<(String, u64, QueryResult)>)> {
+    let mut lines = text.lines();
+    let magic = lines.next().context("empty cache file")?;
+    if magic.trim() != CACHE_MAGIC {
+        bail!("not a {CACHE_MAGIC} result-cache file");
+    }
+    let snap_line = lines.next().context("missing snapshot line")?;
+    let id_hex = snap_line
+        .strip_prefix("snapshot")
+        .with_context(|| format!("expected snapshot line, got {snap_line:?}"))?
+        .trim();
+    let snapshot_id = u64::from_str_radix(id_hex, 16).context("snapshot id bits")?;
+    let n_line = lines.next().context("missing entries line")?;
+    let n: usize = n_line
+        .strip_prefix("entries")
+        .with_context(|| format!("expected entries line, got {n_line:?}"))?
+        .trim()
+        .parse()
+        .context("entries count")?;
+    let mut entries = Vec::with_capacity(n);
+    for i in 0..n {
+        let line = lines.next().with_context(|| format!("missing entry {i}"))?;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() != 5 || toks[0] != "entry" {
+            bail!("bad entry line {line:?}");
+        }
+        let epoch: u64 = toks[1].parse().context("entry epoch")?;
+        let coreset_size: usize = toks[2].parse().context("entry coreset size")?;
+        let diversity =
+            f64::from_bits(u64::from_str_radix(toks[3], 16).context("entry diversity bits")?);
+        let key = toks[4].to_string();
+        let sol_line = lines.next().with_context(|| format!("missing solution {i}"))?;
+        let rest = sol_line
+            .strip_prefix("solution")
+            .with_context(|| format!("expected solution line, got {sol_line:?}"))?;
+        let solution: Vec<usize> = rest
+            .split_whitespace()
+            .map(|t| t.parse::<usize>().context("solution id"))
+            .collect::<Result<_>>()?;
+        entries.push((
+            key,
+            epoch,
+            QueryResult {
+                solution,
+                diversity,
+                coreset_size,
+            },
+        ));
+    }
+    Ok((snapshot_id, entries))
+}
+
+pub fn save_result_cache(
+    path: impl AsRef<Path>,
+    snapshot_id: u64,
+    entries: &[(String, u64, QueryResult)],
+) -> Result<()> {
+    std::fs::write(path.as_ref(), result_cache_to_string(snapshot_id, entries))
+        .context("write result-cache sidecar")
+}
+
+/// Load the sidecar's entries, but only if it was stamped with
+/// `expected_id`.  The cache is a best-effort warm start: a missing
+/// sidecar, an unparseable one, or an id mismatch (the index file changed
+/// without its sidecar) all degrade to an empty cache, never an error —
+/// serving correctness must not depend on a sidecar's health.
+pub fn load_result_cache(
+    path: impl AsRef<Path>,
+    expected_id: u64,
+) -> Vec<(String, u64, QueryResult)> {
+    let Ok(text) = std::fs::read_to_string(path.as_ref()) else {
+        return Vec::new();
+    };
+    match result_cache_from_str(&text) {
+        Ok((id, entries)) if id == expected_id => entries,
+        _ => Vec::new(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -495,5 +631,97 @@ mod tests {
             Budget::Epsilon(e) => assert_eq!(e.to_bits(), 0.25f64.to_bits()),
             _ => panic!("budget kind changed"),
         }
+    }
+
+    fn sample_entries() -> Vec<(String, u64, QueryResult)> {
+        vec![
+            (
+                "sum|k=3|m=build|e=scalar|f=ls:0".to_string(),
+                4,
+                QueryResult {
+                    solution: vec![7, 19, 42],
+                    diversity: 3.75,
+                    coreset_size: 24,
+                },
+            ),
+            (
+                "tree|k=2|m=uniform:2|e=batch|f=greedy".to_string(),
+                4,
+                QueryResult {
+                    solution: vec![0, 99],
+                    diversity: 0.5f64.sqrt(),
+                    coreset_size: 24,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn result_cache_roundtrips_bit_exactly() {
+        let entries = sample_entries();
+        let text = result_cache_to_string(0xdead_beef_cafe_f00d, &entries);
+        assert!(text.starts_with("DMMCCACHE1\n"));
+        let (id, back) = result_cache_from_str(&text).unwrap();
+        assert_eq!(id, 0xdead_beef_cafe_f00d);
+        assert_eq!(back.len(), entries.len());
+        for ((ka, ea, ra), (kb, eb, rb)) in entries.iter().zip(&back) {
+            assert_eq!(ka, kb);
+            assert_eq!(ea, eb);
+            assert_eq!(ra.solution, rb.solution);
+            assert_eq!(ra.diversity.to_bits(), rb.diversity.to_bits());
+            assert_eq!(ra.coreset_size, rb.coreset_size);
+        }
+    }
+
+    #[test]
+    fn result_cache_rejects_garbage() {
+        assert!(result_cache_from_str("nonsense").is_err());
+        assert!(result_cache_from_str("DMMCCACHE1\nsnapshot zz\n").is_err());
+        assert!(result_cache_from_str("DMMCCACHE1\nsnapshot 0\nentries 1\n").is_err());
+        let (_, empty) = result_cache_from_str("DMMCCACHE1\nsnapshot ff\nentries 0\n").unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn sidecar_load_is_best_effort() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dmmc_store_sidecar_{}.dmmcx", std::process::id()));
+        let sidecar = result_cache_path(&path);
+        assert_eq!(
+            sidecar.file_name().unwrap().to_str().unwrap(),
+            format!("dmmc_store_sidecar_{}.dmmcx.cache", std::process::id()),
+        );
+        // missing file -> empty, not an error
+        let _ = std::fs::remove_file(&sidecar);
+        assert!(load_result_cache(&sidecar, 1).is_empty());
+        // stamped with another snapshot id -> empty (stale sidecar)
+        let entries = sample_entries();
+        save_result_cache(&sidecar, 1, &entries).unwrap();
+        assert!(load_result_cache(&sidecar, 2).is_empty());
+        // matching id -> the entries come back
+        let back = load_result_cache(&sidecar, 1);
+        assert_eq!(back.len(), entries.len());
+        // corrupt file -> empty
+        std::fs::write(&sidecar, "DMMCCACHE1\nsnapshot 1\nentries 9\n").unwrap();
+        assert!(load_result_cache(&sidecar, 1).is_empty());
+        let _ = std::fs::remove_file(&sidecar);
+    }
+
+    #[test]
+    fn snapshot_id_tracks_state_changes() {
+        let ds = synth::uniform_cube(120, 2, 53);
+        let m = UniformMatroid::new(3);
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(3, 6)
+        };
+        let mut idx = CoresetIndex::new(&ds, &m, cfg);
+        idx.append(&(0..60).collect::<Vec<_>>()).unwrap();
+        let snap = IndexSnapshot::capture(&idx, "cube:120x2".into(), 53, "uniform:3".into(), 60);
+        let id0 = snapshot_id(&snap);
+        assert_eq!(id0, snapshot_id(&from_str(&to_string(&snap)).unwrap()), "id is content-stable");
+        idx.append(&(60..120).collect::<Vec<_>>()).unwrap();
+        let snap2 = IndexSnapshot::capture(&idx, "cube:120x2".into(), 53, "uniform:3".into(), 120);
+        assert_ne!(id0, snapshot_id(&snap2), "an append must change the snapshot id");
     }
 }

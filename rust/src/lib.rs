@@ -28,6 +28,14 @@
 //!   cache sits on top: N `(objective, k, matroid, engine)` queries pay
 //!   one coreset construction instead of N pipeline runs (`dmmc index
 //!   build/append/delete/query`, `--algo index`),
+//! * the **multi-tenant query server** ([`serve`], `dmmc serve`): a
+//!   std-only TCP front end (line protocol, scoped worker-thread pool)
+//!   hosting many named indexes loaded from snapshots — concurrent
+//!   identical queries coalesce onto one cold computation, mutations are
+//!   serialized per tenant behind epoch-gated invalidation, the result
+//!   cache persists across restarts via a content-id-stamped sidecar,
+//!   and a load-replay harness measures p50/p99/QPS/hit-rate
+//!   (`bench_results/serve_load.csv`),
 //! * and the experiment substrate: synthetic datasets ([`data`]),
 //!   a thread-based MapReduce simulator ([`mapreduce`]), a streaming
 //!   harness ([`streaming`]), an experiment coordinator ([`coordinator`]),
@@ -143,5 +151,6 @@ pub mod mapreduce;
 pub mod matroid;
 pub mod proptest;
 pub mod runtime;
+pub mod serve;
 pub mod streaming;
 pub mod util;

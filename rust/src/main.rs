@@ -21,7 +21,7 @@
 use anyhow::{bail, Context, Result};
 
 use matroid_coreset::algo::Budget;
-use matroid_coreset::cli::Args;
+use matroid_coreset::cli::{parse_rows, Args};
 use matroid_coreset::coordinator::{
     build_dataset, build_matroid, run_pipeline, DatasetSpec, Finisher, MatroidSpec, Pipeline,
     Setting,
@@ -34,6 +34,7 @@ use matroid_coreset::index::{
 };
 use matroid_coreset::matroid::Matroid;
 use matroid_coreset::runtime::EngineKind;
+use matroid_coreset::serve::{self, ServeState};
 use matroid_coreset::streaming::StreamMode;
 
 const USAGE: &str = "\
@@ -57,6 +58,15 @@ SUBCOMMANDS
              delete --index F.dmmcx --rows N,A..B,... (tombstones rows; A..B is half-open)
              query  --index F.dmmcx [--objective O] [--k K] [--finisher F] [--gamma G]
                     [--engine E] [--matroid M] [--repeat R]
+  serve      [name=F.dmmcx ...] [--index name=F.dmmcx,name2=G.dmmcx]
+             [--listen HOST:PORT] [--workers N] [--cache-cap N]
+             [--replay <ops.txt|synth:N>] [--threads N] [--csv out.csv] [--seed S]
+             (tenant specs go before any flags; --replay runs the load
+              harness in-process and exits instead of listening)
+             wire protocol, one line per request, replies `OK ...`/`ERR ...`:
+               PING | TENANTS | LOAD n F | UNLOAD n | STATS n | SAVE n
+               QUERY n <objective> <k> [finisher=F] [gamma=G] [engine=E] [matroid=M]
+               APPEND n [count] [segment=N] | DELETE n <rows> | QUIT | SHUTDOWN
   sweep      --config configs/<file>.toml [--csv out.csv]
   artifacts-check  [--data <kind:n>]
   help
@@ -84,6 +94,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "stats" => cmd_stats(&args),
         "run" => cmd_run(&args),
         "index" => cmd_index(&args),
+        "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         "help" | "--help" => {
@@ -254,18 +265,64 @@ fn cmd_index(args: &Args) -> Result<()> {
     }
 }
 
-/// Reconstruct (dataset, matroid) from a snapshot's recipe fields.
-fn snapshot_world(
-    snap: &IndexSnapshot,
-) -> Result<(
-    matroid_coreset::core::Dataset,
-    matroid_coreset::coordinator::spec::MatroidBox,
-)> {
-    let spec = DatasetSpec::parse(&snap.data, snap.seed)?;
-    let ds = build_dataset(&spec)?;
-    let mspec = MatroidSpec::parse(&snap.matroid)?;
-    let matroid = build_matroid(&mspec, &ds);
-    Ok((ds, matroid))
+/// The multi-tenant serving front end (see `rust/src/serve/`): load the
+/// named indexes, then either run the in-process load-replay harness
+/// (`--replay`) or listen for protocol connections until `SHUTDOWN`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "index", "listen", "workers", "cache-cap", "replay", "threads", "csv", "seed",
+    ])?;
+    let state = ServeState::new(
+        args.usize_or("cache-cap", matroid_coreset::index::DEFAULT_CACHE_CAPACITY)?,
+    );
+    let mut specs: Vec<String> = args.positional.clone();
+    if let Some(list) = args.opt("index") {
+        specs.extend(list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()));
+    }
+    if specs.is_empty() {
+        bail!(
+            "serve needs at least one index: `name=path` positionals (before any flags) \
+             or --index name=path[,name=path...]"
+        );
+    }
+    for spec in &specs {
+        let (name, path) = match spec.split_once('=') {
+            Some((n, p)) => (n.to_string(), p.to_string()),
+            None => {
+                let stem = std::path::Path::new(spec)
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .with_context(|| format!("no tenant name derivable from {spec}"))?;
+                (stem.to_string(), spec.clone())
+            }
+        };
+        let tenant = state.load(&name, std::path::Path::new(&path))?;
+        let st = tenant.status();
+        println!(
+            "loaded tenant={} from {path} (epoch={} segments={} root={} warm={})",
+            st.name, st.epoch, st.segments, st.root, st.cache_len,
+        );
+    }
+    if let Some(source) = args.opt("replay") {
+        let threads = args.usize_or("threads", serve::DEFAULT_WORKERS)?;
+        let seed = args.u64_or("seed", 1)?;
+        let report = serve::replay::run_replay(&state, source, threads, seed)?;
+        print!("{}", serve::replay::render_report(&report));
+        let csv = args.str_or("csv", "bench_results/serve_load.csv");
+        serve::replay::write_replay_csv(csv, &report)?;
+        println!("wrote {csv}");
+        return Ok(());
+    }
+    let listen = args.str_or("listen", "127.0.0.1:7466");
+    let workers = args.usize_or("workers", serve::DEFAULT_WORKERS)?;
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("bind {listen}"))?;
+    println!(
+        "dmmc serve: listening on {} ({workers} workers, {} tenant(s))",
+        listener.local_addr()?,
+        state.names().len(),
+    );
+    serve::server::serve(&state, listener, workers)
 }
 
 fn cmd_index_build(args: &Args) -> Result<()> {
@@ -356,12 +413,22 @@ fn cmd_index_append(args: &Args) -> Result<()> {
     args.expect_known(&["index", "count", "segment"])?;
     let path = args.require("index")?;
     let snap = store::load(path)?;
-    let (ds, matroid) = snapshot_world(&snap)?;
+    let (ds, matroid) = store::snapshot_world(&snap)?;
     let remaining = ds.n().saturating_sub(snap.cursor);
     if remaining == 0 {
         bail!("index already covers all {} dataset rows", ds.n());
     }
-    let count = args.usize_or("count", remaining)?.min(remaining);
+    // over-asking clamps to the rows the dataset still has — and says so,
+    // instead of silently ingesting fewer rows than requested
+    let requested = args.usize_or("count", remaining)?;
+    let count = requested.min(remaining);
+    if requested > remaining {
+        println!(
+            "index append: requested {requested} rows, clamped to the {count} remaining \
+             (dataset n = {})",
+            ds.n(),
+        );
+    }
     let segment = args.usize_or("segment", count)?.max(1);
     let cfg = snap.config();
     let mut index = CoresetIndex::from_parts(&ds, &*matroid, cfg, snap.parts());
@@ -385,38 +452,12 @@ fn cmd_index_append(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Row-list grammar for `index delete --rows`: comma-separated entries,
-/// each a single row `N` or a half-open range `A..B`.
-fn parse_rows(s: &str) -> Result<Vec<usize>> {
-    let mut out: Vec<usize> = Vec::new();
-    for part in s.split(',') {
-        let part = part.trim();
-        if part.is_empty() {
-            continue;
-        }
-        if let Some((a, b)) = part.split_once("..") {
-            let a: usize = a.parse().with_context(|| format!("bad range start {part:?}"))?;
-            let b: usize = b.parse().with_context(|| format!("bad range end {part:?}"))?;
-            if a >= b {
-                bail!("empty range {part:?} (ranges are half-open A..B with A < B)");
-            }
-            out.extend(a..b);
-        } else {
-            out.push(part.parse().with_context(|| format!("bad row {part:?}"))?);
-        }
-    }
-    if out.is_empty() {
-        bail!("--rows names no rows (grammar: N or A..B, comma-separated)");
-    }
-    Ok(out)
-}
-
 fn cmd_index_delete(args: &Args) -> Result<()> {
     args.expect_known(&["index", "rows"])?;
     let path = args.require("index")?;
     let rows = parse_rows(args.require("rows")?)?;
     let snap = store::load(path)?;
-    let (ds, matroid) = snapshot_world(&snap)?;
+    let (ds, matroid) = store::snapshot_world(&snap)?;
     let cfg = snap.config();
     let mut index = CoresetIndex::from_parts(&ds, &*matroid, cfg, snap.parts());
     let r = index.delete(&rows)?;
@@ -449,10 +490,17 @@ fn cmd_index_query(args: &Args) -> Result<()> {
     ])?;
     let path = args.require("index")?;
     let snap = store::load(path)?;
-    let (ds, matroid) = snapshot_world(&snap)?;
+    let (ds, matroid) = store::snapshot_world(&snap)?;
     let cfg = snap.config();
     let index = CoresetIndex::from_parts(&ds, &*matroid, cfg, snap.parts());
     let mut service = QueryService::new(index);
+    // warm from the persisted sidecar (ignored unless it matches this
+    // exact snapshot), so repeated invocations hit across processes
+    let sidecar = store::result_cache_path(path);
+    let snap_id = store::snapshot_id(&snap);
+    let warm = store::load_result_cache(&sidecar, snap_id);
+    let n_warm = warm.len();
+    service.warm_cache(warm);
 
     let objective = Objective::parse(args.str_or("objective", "sum"))
         .context("bad --objective")?;
@@ -478,7 +526,7 @@ fn cmd_index_query(args: &Args) -> Result<()> {
     };
     let repeat = args.usize_or("repeat", 1)?.max(1);
     println!(
-        "index query: epoch={} segments={} root={} spec={}",
+        "index query: epoch={} segments={} root={} warm={n_warm} spec={}",
         snap.epoch,
         snap.segments,
         service.index().root().len(),
@@ -492,14 +540,28 @@ fn cmd_index_query(args: &Args) -> Result<()> {
             out.result.solution.len(),
             out.result.coreset_size,
             out.cache_hit,
-            out.dist_evals.map(|e| e.to_string()).unwrap_or_else(|| "n/a".into()),
+            out.dist_evals.render(),
             out.elapsed.as_secs_f64() * 1e3,
         );
     }
+    // persist the cache for the next invocation (queries never bump the
+    // epoch, so every entry is current; the filter guards regardless)
+    let entries: Vec<_> = service
+        .cache_entries()
+        .into_iter()
+        .filter(|(_, epoch, _)| *epoch == snap.epoch)
+        .collect();
+    store::save_result_cache(&sidecar, snap_id, &entries)?;
     let st = service.stats();
     println!(
-        "served {} queries: {} hits, {} misses, {} evictions",
-        st.queries, st.hits, st.misses, st.evictions
+        "served {} queries: {} hits, {} misses, {} errors, {} evictions \
+         (persisted {} cache entries)",
+        st.queries,
+        st.hits,
+        st.misses,
+        st.errors,
+        st.evictions,
+        entries.len(),
     );
     Ok(())
 }

@@ -1,0 +1,40 @@
+//! `dmmc serve` — a long-running multi-tenant query server over
+//! persisted coreset indexes.
+//!
+//! The paper's serving story ends with a standing summary answering
+//! expensive diversity queries cheaply; this subsystem is the process
+//! around that summary.  It is std-only (no async runtime): `std::net`
+//! sockets, a scoped worker-thread pool, and per-tenant locks.
+//!
+//! * [`state`] — the tenant registry: each [`state::Tenant`] owns a
+//!   reconstructed dataset/matroid world plus the tree state, serializes
+//!   appends/deletes behind a write lock, and serves queries behind the
+//!   shared [`crate::index::service::ResultCache`] with **in-flight
+//!   coalescing**: concurrent identical `(spec, epoch)` requests ride one
+//!   cold computation and all receive the bit-identical result.
+//! * [`protocol`] — the line-oriented request grammar
+//!   (`QUERY`/`APPEND`/`DELETE`/`LOAD`/`STATS`/...), its parser, and the
+//!   executor that turns requests into single-line `OK`/`ERR` replies.
+//! * [`server`] — the TCP front end: accept loop + fixed worker pool,
+//!   clean `SHUTDOWN` via a stop flag and a loopback self-connect.
+//! * [`replay`] — the load harness behind `dmmc serve --replay`:
+//!   thousands of mixed ops, p50/p99 latency, QPS, and hit-rate into
+//!   `bench_results/serve_load.csv`.
+//!
+//! Restarts stay warm: `SAVE` persists each tenant's snapshot plus a
+//! result-cache sidecar keyed on the snapshot's content id
+//! ([`crate::index::store::snapshot_id`]), and loading a tenant replays
+//! matching sidecar entries into its cache.
+
+pub mod protocol;
+pub mod replay;
+pub mod server;
+pub mod state;
+
+pub use protocol::{execute, handle_line, parse_request, Request};
+pub use replay::{run_replay, write_replay_csv, ReplayReport};
+pub use server::{serve, spawn, ServerHandle, DEFAULT_WORKERS};
+pub use state::{
+    AppendSummary, DeleteSummary, InflightSlot, QuerySource, ServeState, Tenant, TenantAnswer,
+    TenantStatus,
+};

@@ -1,0 +1,358 @@
+//! The line-oriented `dmmc serve` request protocol.
+//!
+//! One request per line, whitespace-separated tokens, commands
+//! case-insensitive; every reply is a single line starting `OK ` or
+//! `ERR ` (errors are flattened to one line).  The grammar is the wire
+//! twin of the `dmmc index` subcommands:
+//!
+//! ```text
+//! PING
+//! TENANTS
+//! LOAD <name> <path.dmmcx>
+//! UNLOAD <name>
+//! QUERY <tenant> <objective> <k> [finisher=ls|exhaustive|greedy]
+//!       [gamma=G] [engine=E] [matroid=M]
+//! APPEND <tenant> [count] [segment=N]
+//! DELETE <tenant> <rows>          # N or A..B, comma-separated
+//! STATS <tenant>
+//! SAVE <tenant>
+//! QUIT                            # close this connection
+//! SHUTDOWN                        # stop the whole server
+//! ```
+//!
+//! Query replies carry the diversity both human-readable (`div=`) and as
+//! f64 hex bits (`bits=`), so a client can assert bit-identity of
+//! cache/coalesced answers straight off the wire.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::parse_rows;
+use crate::coordinator::MatroidSpec;
+use crate::diversity::Objective;
+use crate::index::service::{QueryFinisher, QuerySpec};
+use crate::runtime::EngineKind;
+use crate::serve::state::ServeState;
+
+/// A parsed protocol request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Tenants,
+    Load { name: String, path: String },
+    Unload { name: String },
+    Query {
+        tenant: String,
+        objective: Objective,
+        k: usize,
+        finisher: QueryFinisher,
+        /// `None` = the tenant's build engine.
+        engine: Option<EngineKind>,
+        matroid: Option<MatroidSpec>,
+    },
+    Append {
+        tenant: String,
+        count: Option<usize>,
+        segment: Option<usize>,
+    },
+    Delete { tenant: String, rows: Vec<usize> },
+    Stats { tenant: String },
+    Save { tenant: String },
+    Quit,
+    Shutdown,
+}
+
+fn kv(tok: &str) -> Option<(&str, &str)> {
+    tok.split_once('=')
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    let cmd = toks.first().context("empty request")?.to_ascii_uppercase();
+    let arg = |i: usize, what: &str| -> Result<&str> {
+        toks.get(i).copied().with_context(|| format!("{cmd} needs {what}"))
+    };
+    match cmd.as_str() {
+        "PING" => Ok(Request::Ping),
+        "TENANTS" => Ok(Request::Tenants),
+        "QUIT" => Ok(Request::Quit),
+        "SHUTDOWN" => Ok(Request::Shutdown),
+        "LOAD" => Ok(Request::Load {
+            name: arg(1, "a tenant name")?.to_string(),
+            path: arg(2, "an index path")?.to_string(),
+        }),
+        "UNLOAD" => Ok(Request::Unload {
+            name: arg(1, "a tenant name")?.to_string(),
+        }),
+        "STATS" => Ok(Request::Stats {
+            tenant: arg(1, "a tenant name")?.to_string(),
+        }),
+        "SAVE" => Ok(Request::Save {
+            tenant: arg(1, "a tenant name")?.to_string(),
+        }),
+        "DELETE" => Ok(Request::Delete {
+            tenant: arg(1, "a tenant name")?.to_string(),
+            rows: parse_rows(arg(2, "a row list")?)?,
+        }),
+        "APPEND" => {
+            let tenant = arg(1, "a tenant name")?.to_string();
+            let mut count = None;
+            let mut segment = None;
+            for tok in &toks[2..] {
+                match kv(tok) {
+                    Some(("segment", v)) => {
+                        segment = Some(v.parse().with_context(|| format!("bad segment {v}"))?);
+                    }
+                    Some((k, _)) => bail!("unknown APPEND option {k} (segment=N)"),
+                    None => {
+                        if count.is_some() {
+                            bail!("APPEND takes one count, got a second: {tok}");
+                        }
+                        count = Some(tok.parse().with_context(|| format!("bad count {tok}"))?);
+                    }
+                }
+            }
+            Ok(Request::Append { tenant, count, segment })
+        }
+        "QUERY" => {
+            let tenant = arg(1, "a tenant name")?.to_string();
+            let objective = Objective::parse(arg(2, "an objective")?)
+                .with_context(|| format!("bad objective {}", toks[2]))?;
+            let k: usize = arg(3, "k")?.parse().with_context(|| format!("bad k {}", toks[3]))?;
+            let mut finisher_name: Option<&str> = None;
+            let mut gamma = 0.0f64;
+            let mut engine = None;
+            let mut matroid = None;
+            for tok in &toks[4..] {
+                let Some((key, v)) = kv(tok) else {
+                    bail!("QUERY options are key=value, got {tok}");
+                };
+                match key {
+                    "finisher" => finisher_name = Some(v),
+                    "gamma" => gamma = v.parse().with_context(|| format!("bad gamma {v}"))?,
+                    "engine" => {
+                        engine = Some(
+                            EngineKind::parse(v).with_context(|| format!("bad engine {v}"))?,
+                        );
+                    }
+                    "matroid" => matroid = Some(MatroidSpec::parse(v)?),
+                    other => bail!("unknown QUERY option {other} (finisher|gamma|engine|matroid)"),
+                }
+            }
+            // default mirrors `dmmc index query`: local search for sum
+            // (the only objective it applies to), greedy otherwise —
+            // exhaustive is opt-in on a server (exponential in k)
+            let finisher = match finisher_name {
+                None => {
+                    if objective == Objective::Sum {
+                        QueryFinisher::LocalSearch { gamma }
+                    } else {
+                        QueryFinisher::Greedy
+                    }
+                }
+                Some("local-search") | Some("ls") => QueryFinisher::LocalSearch { gamma },
+                Some("exhaustive") => QueryFinisher::Exhaustive,
+                Some("greedy") => QueryFinisher::Greedy,
+                Some(other) => bail!("unknown finisher {other} (local-search|exhaustive|greedy)"),
+            };
+            Ok(Request::Query { tenant, objective, k, finisher, engine, matroid })
+        }
+        other => bail!("unknown command {other} (PING TENANTS LOAD UNLOAD QUERY APPEND DELETE STATS SAVE QUIT SHUTDOWN)"),
+    }
+}
+
+/// Execute one request against the tenant registry, producing the `OK`
+/// payload.  `QUIT`/`SHUTDOWN` are connection-level and never reach
+/// execution.
+pub fn execute(state: &ServeState, req: &Request) -> Result<String> {
+    match req {
+        Request::Ping => Ok("pong".to_string()),
+        Request::Quit | Request::Shutdown => bail!("connection-level command reached execute"),
+        Request::Tenants => {
+            let names = state.names();
+            Ok(format!("tenants {}", names.join(" ")).trim_end().to_string())
+        }
+        Request::Load { name, path } => {
+            let tenant = state.load(name, std::path::Path::new(path))?;
+            let st = tenant.status();
+            Ok(format!(
+                "loaded tenant={} epoch={} segments={} root={} warm={}",
+                st.name, st.epoch, st.segments, st.root, st.cache_len
+            ))
+        }
+        Request::Unload { name } => {
+            state.unload(name)?;
+            Ok(format!("unloaded tenant={name}"))
+        }
+        Request::Query { tenant, objective, k, finisher, engine, matroid } => {
+            let t = state.get(tenant)?;
+            let spec = QuerySpec {
+                objective: *objective,
+                k: *k,
+                matroid: matroid.clone(),
+                engine: engine.unwrap_or_else(|| t.engine()),
+                finisher: *finisher,
+            };
+            let ans = t.query(&spec)?;
+            let out = &ans.outcome;
+            let sol: Vec<String> = out.result.solution.iter().map(|x| x.to_string()).collect();
+            Ok(format!(
+                "query tenant={} source={} epoch={} evals={} us={} div={:.6} bits={:x} k={} coreset={} sol={}",
+                tenant,
+                ans.source.name(),
+                out.epoch,
+                out.dist_evals.render(),
+                out.elapsed.as_micros(),
+                out.result.diversity,
+                out.result.diversity.to_bits(),
+                out.result.solution.len(),
+                out.result.coreset_size,
+                sol.join(","),
+            ))
+        }
+        Request::Append { tenant, count, segment } => {
+            let t = state.get(tenant)?;
+            let a = t.append(*count, *segment)?;
+            Ok(format!(
+                "append tenant={} requested={} appended={} clamped={} segments={} epoch={} root={}",
+                tenant,
+                a.requested.map(|r| r.to_string()).unwrap_or_else(|| "all".to_string()),
+                a.appended,
+                a.clamped,
+                a.segments,
+                a.epoch,
+                a.root,
+            ))
+        }
+        Request::Delete { tenant, rows } => {
+            let t = state.get(tenant)?;
+            let d = t.delete(rows)?;
+            Ok(format!(
+                "delete tenant={} requested={} newly_dead={} rebuilds={} root={} epoch={}",
+                tenant,
+                rows.len(),
+                d.receipt.newly_dead,
+                d.receipt.rebuilds,
+                d.receipt.root_size,
+                d.epoch,
+            ))
+        }
+        Request::Stats { tenant } => {
+            let st = state.get(tenant)?.status();
+            let s = st.stats;
+            Ok(format!(
+                "stats tenant={} queries={} hits={} misses={} errors={} coalesced={} \
+                 evictions={} hit_rate={:.4} cache={} epoch={} segments={} points={} root={} \
+                 tombstones={} cursor={}",
+                st.name,
+                s.queries,
+                s.hits,
+                s.misses,
+                s.errors,
+                s.coalesced,
+                s.evictions,
+                s.hit_rate(),
+                st.cache_len,
+                st.epoch,
+                st.segments,
+                st.points,
+                st.root,
+                st.tombstones,
+                st.cursor,
+            ))
+        }
+        Request::Save { tenant } => {
+            let t = state.get(tenant)?;
+            let (path, entries) = t.save()?;
+            Ok(format!("saved tenant={} path={} entries={}", tenant, path.display(), entries))
+        }
+    }
+}
+
+/// Flatten an error chain to one protocol-safe line.
+pub fn flatten_error(e: &anyhow::Error) -> String {
+    format!("{e:#}").replace('\n', " ")
+}
+
+/// Parse + execute one line into a full reply line (`OK ...` / `ERR ...`).
+pub fn handle_line(state: &ServeState, line: &str) -> String {
+    match parse_request(line).and_then(|req| execute(state, &req)) {
+        Ok(payload) => format!("OK {payload}"),
+        Err(e) => format!("ERR {}", flatten_error(&e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_grammar() {
+        assert_eq!(parse_request("ping").unwrap(), Request::Ping);
+        assert_eq!(parse_request("  SHUTDOWN  ").unwrap(), Request::Shutdown);
+        assert_eq!(
+            parse_request("LOAD main /tmp/x.dmmcx").unwrap(),
+            Request::Load { name: "main".into(), path: "/tmp/x.dmmcx".into() }
+        );
+        let q = parse_request("QUERY main sum 4 finisher=greedy engine=scalar").unwrap();
+        match q {
+            Request::Query { tenant, objective, k, finisher, engine, matroid } => {
+                assert_eq!(tenant, "main");
+                assert_eq!(objective, Objective::Sum);
+                assert_eq!(k, 4);
+                assert_eq!(finisher, QueryFinisher::Greedy);
+                assert_eq!(engine, Some(EngineKind::Scalar));
+                assert!(matroid.is_none());
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        // defaults: sum -> local search, non-sum -> greedy
+        match parse_request("QUERY main sum 4").unwrap() {
+            Request::Query { finisher, .. } => {
+                assert_eq!(finisher, QueryFinisher::LocalSearch { gamma: 0.0 });
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        match parse_request("QUERY main tree 3").unwrap() {
+            Request::Query { finisher, .. } => assert_eq!(finisher, QueryFinisher::Greedy),
+            other => panic!("parsed {other:?}"),
+        }
+        assert_eq!(
+            parse_request("APPEND main 500 segment=100").unwrap(),
+            Request::Append { tenant: "main".into(), count: Some(500), segment: Some(100) }
+        );
+        assert_eq!(
+            parse_request("APPEND main").unwrap(),
+            Request::Append { tenant: "main".into(), count: None, segment: None }
+        );
+        assert_eq!(
+            parse_request("DELETE main 1,4..6").unwrap(),
+            Request::Delete { tenant: "main".into(), rows: vec![1, 4, 5] }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_request("").is_err());
+        assert!(parse_request("FROB").is_err());
+        assert!(parse_request("QUERY").is_err());
+        assert!(parse_request("QUERY main").is_err());
+        assert!(parse_request("QUERY main sum").is_err());
+        assert!(parse_request("QUERY main sum four").is_err());
+        assert!(parse_request("QUERY main sum 4 bogus").is_err());
+        assert!(parse_request("QUERY main sum 4 finisher=magic").is_err());
+        assert!(parse_request("APPEND main 10 20").is_err());
+        assert!(parse_request("DELETE main").is_err());
+        assert!(parse_request("DELETE main 9..3").is_err());
+    }
+
+    #[test]
+    fn handle_line_wraps_ok_and_err() {
+        let state = ServeState::new(4);
+        assert_eq!(handle_line(&state, "PING"), "OK pong");
+        assert_eq!(handle_line(&state, "TENANTS"), "OK tenants");
+        let err = handle_line(&state, "QUERY missing sum 4");
+        assert!(err.starts_with("ERR "), "{err}");
+        assert!(!err.contains('\n'));
+    }
+}

@@ -1,0 +1,325 @@
+//! Load-replay harness: drive the serving state with thousands of mixed
+//! query/append/delete protocol ops and report latency/throughput — the
+//! measured number behind the ROADMAP's serving north star.
+//!
+//! Ops come from a file (one protocol line each, `#` comments allowed)
+//! or are synthesized (`synth:<n>`): a seeded mix of ~90% queries over a
+//! small spec pool, ~6% single-row appends, ~4% deletes.  The workload
+//! is deterministic given the seed — only the timings vary run to run.
+//! Ops execute through [`handle_line`], so the harness measures exactly
+//! the per-request work a TCP worker performs (minus socket I/O), across
+//! `threads` concurrent workers pulling from a shared cursor.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::csv_row;
+use crate::index::service::ServiceStats;
+use crate::serve::protocol::handle_line;
+use crate::serve::state::ServeState;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::util::stats::quantile_sorted;
+use crate::util::timer::Stopwatch;
+
+/// Latency/throughput summary for one op kind (plus the `all` row).
+#[derive(Clone, Debug)]
+pub struct KindSummary {
+    pub kind: String,
+    pub count: usize,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Ops of this kind completed per wall-clock second of the whole
+    /// replay (concurrent kinds share the wall, so the `all` row's qps is
+    /// the aggregate throughput).
+    pub qps: f64,
+}
+
+/// Everything one replay run measured.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    /// First loaded tenant (the synthetic workload's target).
+    pub tenant: String,
+    pub threads: usize,
+    pub ops: usize,
+    pub wall: Duration,
+    /// Ops answered `ERR` (an exhausted-dataset append, a malformed op in
+    /// a replay file, ...).
+    pub err_replies: usize,
+    /// Fleet-wide serving counters after the run.
+    pub stats: ServiceStats,
+    /// Per-kind summaries, `all` first, then kinds alphabetically.
+    pub kinds: Vec<KindSummary>,
+}
+
+/// Synthesize a deterministic mixed workload against the first tenant.
+fn synth_ops(state: &ServeState, n: usize, seed: u64) -> Result<Vec<String>> {
+    let names = state.names();
+    let name = names.first().context("synthetic replay needs a loaded tenant")?;
+    let tenant = state.get(name)?;
+    let k_max = tenant.k_max();
+    // rows that exist at replay start — the delete pool (deleting an
+    // already-dead row is a valid no-op op, so overlap is fine)
+    let initial_rows = tenant.cursor().max(1);
+    let mut specs: Vec<String> = Vec::new();
+    for k in 2..=k_max.min(6) {
+        specs.push(format!("QUERY {name} sum {k}"));
+        specs.push(format!("QUERY {name} sum {k} finisher=greedy"));
+        specs.push(format!("QUERY {name} tree {k} finisher=greedy"));
+    }
+    if specs.is_empty() {
+        specs.push(format!("QUERY {name} sum {k_max}"));
+    }
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        let roll = rng.below(100);
+        if roll < 90 {
+            ops.push(specs[rng.below(specs.len())].clone());
+        } else if roll < 96 {
+            ops.push(format!("APPEND {name} 1"));
+        } else {
+            ops.push(format!("DELETE {name} {}", rng.below(initial_rows)));
+        }
+    }
+    Ok(ops)
+}
+
+/// Run a replay: `source` is `synth:<n>` or a path to an ops file.
+pub fn run_replay(
+    state: &ServeState,
+    source: &str,
+    threads: usize,
+    seed: u64,
+) -> Result<ReplayReport> {
+    let ops: Vec<String> = if let Some(n) = source.strip_prefix("synth:") {
+        synth_ops(state, n.parse().context("synth:<n> op count")?, seed)?
+    } else {
+        std::fs::read_to_string(source)
+            .with_context(|| format!("read replay ops file {source}"))?
+            .lines()
+            .map(|l| l.trim().to_string())
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .collect()
+    };
+    if ops.is_empty() {
+        bail!("replay source {source} holds no ops");
+    }
+    let tenant = state.names().first().cloned().unwrap_or_default();
+    let threads = threads.max(1);
+    let cursor = AtomicUsize::new(0);
+    let wall_sw = Stopwatch::start();
+    // each worker records (kind, latency_us, ok) locally; merged after
+    let mut samples: Vec<(String, f64, bool)> = thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(String, f64, bool)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::SeqCst);
+                        let Some(op) = ops.get(i) else { break };
+                        let kind = op
+                            .split_whitespace()
+                            .next()
+                            .unwrap_or("?")
+                            .to_ascii_lowercase();
+                        let t0 = Instant::now();
+                        let reply = handle_line(state, op);
+                        let us = t0.elapsed().as_secs_f64() * 1e6;
+                        local.push((kind, us, reply.starts_with("OK ")));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = wall_sw.elapsed();
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    let err_replies = samples.iter().filter(|(_, _, ok)| !ok).count();
+
+    // `all` row plus one per kind; sort keys for a deterministic CSV row
+    // order (sample *values* are timing, inherently run-specific)
+    samples.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut kinds: Vec<KindSummary> = Vec::new();
+    let summarize = |kind: &str, lats: &mut Vec<f64>| -> KindSummary {
+        lats.sort_by(f64::total_cmp);
+        KindSummary {
+            kind: kind.to_string(),
+            count: lats.len(),
+            p50_us: quantile_sorted(lats, 0.5),
+            p99_us: quantile_sorted(lats, 0.99),
+            qps: lats.len() as f64 / wall_s,
+        }
+    };
+    let mut all: Vec<f64> = samples.iter().map(|(_, us, _)| *us).collect();
+    kinds.push(summarize("all", &mut all));
+    let mut i = 0;
+    while i < samples.len() {
+        let kind = samples[i].0.clone();
+        let mut lats: Vec<f64> = Vec::new();
+        while i < samples.len() && samples[i].0 == kind {
+            lats.push(samples[i].1);
+            i += 1;
+        }
+        kinds.push(summarize(&kind, &mut lats));
+    }
+
+    Ok(ReplayReport {
+        tenant,
+        threads,
+        ops: samples.len(),
+        wall,
+        err_replies,
+        stats: state.total_stats(),
+        kinds,
+    })
+}
+
+/// Write the replay CSV (`bench_results/serve_load.csv` schema, see
+/// EXPERIMENTS.md): one row per kind, fleet-wide counters repeated on
+/// every row.
+pub fn write_replay_csv(path: &str, report: &ReplayReport) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        path,
+        &[
+            "tenant", "threads", "kind", "ops", "p50_us", "p99_us", "qps", "hits", "misses",
+            "errors", "coalesced", "hit_rate",
+        ],
+    )?;
+    let s = &report.stats;
+    for k in &report.kinds {
+        csv.row(&csv_row![
+            report.tenant,
+            report.threads,
+            k.kind,
+            k.count,
+            format!("{:.1}", k.p50_us),
+            format!("{:.1}", k.p99_us),
+            format!("{:.1}", k.qps),
+            s.hits,
+            s.misses,
+            s.errors,
+            s.coalesced,
+            format!("{:.4}", s.hit_rate())
+        ])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Render the report for stdout.
+pub fn render_report(report: &ReplayReport) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let s = &report.stats;
+    let _ = writeln!(
+        out,
+        "replay: tenant={} threads={} ops={} wall={:.3}s err_replies={}",
+        report.tenant,
+        report.threads,
+        report.ops,
+        report.wall.as_secs_f64(),
+        report.err_replies,
+    );
+    let _ = writeln!(
+        out,
+        "stats: queries={} hits={} misses={} errors={} coalesced={} evictions={} hit_rate={:.4}",
+        s.queries, s.hits, s.misses, s.errors, s.coalesced, s.evictions, s.hit_rate(),
+    );
+    for k in &report.kinds {
+        let _ = writeln!(
+            out,
+            "  {:<8} ops={:<6} p50={:.1}us p99={:.1}us qps={:.1}",
+            k.kind, k.count, k.p50_us, k.p99_us, k.qps,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::index::tree::{CoresetIndex, IndexConfig};
+    use crate::index::IndexSnapshot;
+    use crate::matroid::UniformMatroid;
+    use crate::runtime::EngineKind;
+
+    fn state_with_tenant() -> ServeState {
+        let ds = synth::uniform_cube(400, 2, 61);
+        let m = UniformMatroid::new(4);
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(4, 8)
+        };
+        let mut idx = CoresetIndex::new(&ds, &m, cfg);
+        idx.ingest(&(0..300).collect::<Vec<_>>(), 100).unwrap();
+        let snap = IndexSnapshot::capture(&idx, "cube:400x2".into(), 61, "uniform:4".into(), 300);
+        let state = ServeState::new(32);
+        state.add("main", &snap).unwrap();
+        state
+    }
+
+    #[test]
+    fn synth_workload_is_deterministic_and_mixed() {
+        let state = state_with_tenant();
+        let a = synth_ops(&state, 500, 9).unwrap();
+        let b = synth_ops(&state, 500, 9).unwrap();
+        assert_eq!(a, b, "same seed, same ops");
+        let c = synth_ops(&state, 500, 10).unwrap();
+        assert_ne!(a, c, "different seed, different ops");
+        let queries = a.iter().filter(|o| o.starts_with("QUERY")).count();
+        let appends = a.iter().filter(|o| o.starts_with("APPEND")).count();
+        let deletes = a.iter().filter(|o| o.starts_with("DELETE")).count();
+        assert_eq!(queries + appends + deletes, 500);
+        assert!(queries > 350, "queries dominate: {queries}");
+        assert!(appends > 0 && deletes > 0, "mutations present: {appends}/{deletes}");
+    }
+
+    #[test]
+    fn replay_runs_and_reports() {
+        let state = state_with_tenant();
+        let report = run_replay(&state, "synth:200", 4, 5).unwrap();
+        assert_eq!(report.ops, 200);
+        assert_eq!(report.tenant, "main");
+        // every op got a reply; queries repeat within the pool, so the
+        // cache + coalescing must have produced warm answers
+        assert!(report.stats.queries >= 150);
+        assert!(report.stats.hits + report.stats.coalesced > 0, "no warm answers at all");
+        let all = &report.kinds[0];
+        assert_eq!(all.kind, "all");
+        assert_eq!(all.count, 200);
+        assert!(all.p99_us >= all.p50_us);
+        assert!(report.kinds.iter().any(|k| k.kind == "query"));
+
+        let path = std::env::temp_dir()
+            .join(format!("dmmc_replay_{}.csv", std::process::id()));
+        write_replay_csv(path.to_str().unwrap(), &report).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.starts_with(
+            "tenant,threads,kind,ops,p50_us,p99_us,qps,hits,misses,errors,coalesced,hit_rate"
+        ));
+        assert!(text.lines().count() >= 3, "header + all + at least one kind");
+    }
+
+    #[test]
+    fn file_replay_and_bad_sources_error() {
+        let state = state_with_tenant();
+        assert!(run_replay(&state, "synth:zero", 1, 1).is_err());
+        assert!(run_replay(&state, "/nonexistent/ops.txt", 1, 1).is_err());
+        let path = std::env::temp_dir()
+            .join(format!("dmmc_replay_ops_{}.txt", std::process::id()));
+        std::fs::write(&path, "# comment\nQUERY main sum 3\n\nQUERY main sum 3\nPING\n").unwrap();
+        let report = run_replay(&state, path.to_str().unwrap(), 2, 1).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(report.ops, 3);
+        assert_eq!(report.err_replies, 0);
+        assert_eq!(report.stats.queries, 2);
+        assert_eq!(report.stats.misses, 1, "second identical query is warm");
+    }
+}

@@ -1,0 +1,149 @@
+//! The `dmmc serve` TCP front end: std-only (`std::net` + a scoped
+//! worker-thread pool), one protocol line per request.
+//!
+//! Concurrency shape: the accept loop hands connections to a fixed pool
+//! of workers over an mpsc channel (the receiver shared behind a mutex —
+//! the classic std-only work queue).  Each worker owns one connection at
+//! a time and serves its requests sequentially; cross-connection
+//! concurrency is what exercises the tenants' coalescing and serialized
+//! mutations.  `SHUTDOWN` sets the stop flag and pokes the listener with
+//! a loopback connect so the blocking `accept` wakes and the scope can
+//! join.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::serve::protocol::{execute, flatten_error, parse_request, Request};
+use crate::serve::state::ServeState;
+
+/// Default worker-pool size.
+pub const DEFAULT_WORKERS: usize = 4;
+
+/// Run the server until a `SHUTDOWN` request arrives.  Blocks the
+/// calling thread; connections are served by `workers` scoped threads.
+pub fn serve(state: &ServeState, listener: TcpListener, workers: usize) -> Result<()> {
+    let local = listener.local_addr().context("server local addr")?;
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Mutex::new(rx);
+    thread::scope(|s| {
+        for _ in 0..workers.max(1) {
+            s.spawn(|| worker_loop(state, &rx, &stop, local));
+        }
+        for stream in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            if tx.send(stream).is_err() {
+                break;
+            }
+        }
+        // closing the channel ends every idle worker's recv
+        drop(tx);
+    });
+    Ok(())
+}
+
+fn worker_loop(
+    state: &ServeState,
+    rx: &Mutex<mpsc::Receiver<TcpStream>>,
+    stop: &AtomicBool,
+    local: SocketAddr,
+) {
+    loop {
+        // take the lock only to dequeue, never while serving
+        let stream = match rx.lock().unwrap().recv() {
+            Ok(stream) => stream,
+            Err(_) => break,
+        };
+        // a broken connection only ends that connection
+        let _ = handle_conn(state, stream, stop, local);
+    }
+}
+
+fn handle_conn(
+    state: &ServeState,
+    stream: TcpStream,
+    stop: &AtomicBool,
+    local: SocketAddr,
+) -> Result<()> {
+    let reader_half = stream.try_clone().context("clone connection")?;
+    let mut reader = BufReader::new(reader_half);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break; // EOF: client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match parse_request(trimmed) {
+            Ok(Request::Quit) => {
+                writeln!(writer, "OK bye")?;
+                writer.flush()?;
+                break;
+            }
+            Ok(Request::Shutdown) => {
+                writeln!(writer, "OK shutting down")?;
+                writer.flush()?;
+                stop.store(true, Ordering::SeqCst);
+                // wake the blocking accept so the scope can join
+                let _ = TcpStream::connect(local);
+                break;
+            }
+            Ok(req) => {
+                let reply = match execute(state, &req) {
+                    Ok(payload) => format!("OK {payload}"),
+                    Err(e) => format!("ERR {}", flatten_error(&e)),
+                };
+                writeln!(writer, "{reply}")?;
+                writer.flush()?;
+            }
+            Err(e) => {
+                writeln!(writer, "ERR {}", flatten_error(&e))?;
+                writer.flush()?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A background server for tests: bound to an ephemeral loopback port.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    thread: thread::JoinHandle<Result<()>>,
+}
+
+/// Spawn a server on `127.0.0.1:0` (kernel-assigned port).
+pub fn spawn(state: Arc<ServeState>, workers: usize) -> Result<ServerHandle> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind loopback")?;
+    let addr = listener.local_addr()?;
+    let thread = thread::spawn(move || serve(&state, listener, workers));
+    Ok(ServerHandle { addr, thread })
+}
+
+impl ServerHandle {
+    /// Send `SHUTDOWN`, wait for the ack, and join the server thread.
+    pub fn shutdown(self) -> Result<()> {
+        let stream = TcpStream::connect(self.addr).context("connect for shutdown")?;
+        let mut writer = BufWriter::new(stream.try_clone()?);
+        writer.write_all(b"SHUTDOWN\n")?;
+        writer.flush()?;
+        let mut ack = String::new();
+        BufReader::new(stream).read_line(&mut ack)?;
+        drop(writer);
+        match self.thread.join() {
+            Ok(result) => result,
+            Err(_) => anyhow::bail!("server thread panicked"),
+        }
+    }
+}

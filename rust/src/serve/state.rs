@@ -1,0 +1,633 @@
+//! Multi-tenant serving state: named indexes behind per-tenant locks.
+//!
+//! A [`Tenant`] owns everything one served index needs — the
+//! reconstructed dataset and matroid, the tree state as [`IndexParts`],
+//! and a shared [`ResultCache`] — and exposes thread-safe query / append
+//! / delete entry points.  The borrowed-lifetime [`CoresetIndex`] is
+//! reconstructed transiently from the owned parts inside each operation
+//! (the parts *are* the tree; reconstruction is a cheap clone of the
+//! level vectors, no distance work).
+//!
+//! Concurrency protocol per tenant:
+//!
+//! * **mutations are serialized** behind the `inner` write lock (one
+//!   append/delete at a time; the epoch bump inside `IndexParts` is what
+//!   invalidates cached results, exactly as in the single-threaded
+//!   service);
+//! * **queries coalesce**: a query captures `(root, epoch)` under the
+//!   read lock, misses the cache, then registers in the in-flight map
+//!   keyed `cache_key@epoch`.  The first registrant (leader) runs the
+//!   cold computation **outside every lock**; later arrivals block on the
+//!   leader's [`InflightSlot`] and receive the bit-identical result at
+//!   zero distance evaluations.  The leader publishes to the cache
+//!   *before* deregistering, so at every instant a duplicate request
+//!   finds the result in the cache, in flight, or becomes the one leader
+//!   — never a second cold run for the same `(spec, epoch)`;
+//! * a result is always stamped with the epoch of the root it was
+//!   computed from (captured atomically under the read lock), so an
+//!   append racing a query can never produce a result labeled with an
+//!   epoch it does not belong to.
+//!
+//! Engines are built per cold run: [`DistanceEngine`] is deliberately not
+//! `Send + Sync` (the PJRT backend holds raw client pointers), so worker
+//! threads must not share one — the same engine-per-worker rule the
+//! MapReduce simulator follows.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::spec::MatroidBox;
+use crate::core::Dataset;
+use crate::index::service::{
+    run_cold_query, ColdQuery, DistEvals, QueryOutcome, QueryResult, QuerySpec, ResultCache,
+    ServiceStats,
+};
+use crate::index::store;
+use crate::index::tree::{CoresetIndex, DeleteReceipt, IndexConfig, IndexParts};
+use crate::index::IndexSnapshot;
+use crate::runtime::EngineKind;
+use crate::util::timer::Stopwatch;
+
+/// How a query was answered — the serving-path label the load harness
+/// and the protocol report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuerySource {
+    /// A cold computation ran for this request.
+    Cold,
+    /// Served from the result cache.
+    Cache,
+    /// Waited on an identical in-flight computation and shared its
+    /// result.
+    Coalesced,
+}
+
+impl QuerySource {
+    pub fn name(self) -> &'static str {
+        match self {
+            QuerySource::Cold => "cold",
+            QuerySource::Cache => "cache",
+            QuerySource::Coalesced => "coalesced",
+        }
+    }
+}
+
+/// A served query plus its serving-path label.
+#[derive(Clone, Debug)]
+pub struct TenantAnswer {
+    pub outcome: QueryOutcome,
+    pub source: QuerySource,
+}
+
+/// One in-flight cold computation: the leader publishes exactly once,
+/// every follower blocks until then.  Errors propagate as strings so a
+/// failing leader does not strand its followers.
+#[derive(Debug, Default)]
+pub struct InflightSlot {
+    done: Mutex<Option<Result<QueryResult, String>>>,
+    cv: Condvar,
+}
+
+impl InflightSlot {
+    pub fn new() -> InflightSlot {
+        InflightSlot::default()
+    }
+
+    /// Publish the computation's outcome and wake every waiter.
+    pub fn publish(&self, outcome: Result<QueryResult, String>) {
+        let mut done = self.done.lock().unwrap();
+        *done = Some(outcome);
+        self.cv.notify_all();
+    }
+
+    /// Block until the leader publishes.
+    pub fn wait(&self) -> Result<QueryResult, String> {
+        let mut done = self.done.lock().unwrap();
+        loop {
+            if let Some(outcome) = done.as_ref() {
+                return outcome.clone();
+            }
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+}
+
+/// Mutable tree state of a tenant: the resumable parts plus the CLI-style
+/// sequential ingest cursor.
+#[derive(Debug)]
+struct TenantInner {
+    parts: IndexParts,
+    cursor: usize,
+}
+
+/// Everything an append reports over the wire (including the satellite
+/// clamp semantics: over-asking is clamped to the remaining rows, and the
+/// clamp is visible).
+#[derive(Clone, Copy, Debug)]
+pub struct AppendSummary {
+    /// What the request asked for (`None` = "the rest").
+    pub requested: Option<usize>,
+    /// Rows actually ingested after clamping to the dataset remainder.
+    pub appended: usize,
+    /// True iff the request over-asked and was clamped.
+    pub clamped: bool,
+    /// Segments the rows were split into.
+    pub segments: usize,
+    /// Tree epoch after the append.
+    pub epoch: u64,
+    /// Root coreset size after the append.
+    pub root: usize,
+}
+
+/// A delete's receipt plus the post-delete epoch.
+#[derive(Clone, Debug)]
+pub struct DeleteSummary {
+    pub receipt: DeleteReceipt,
+    pub epoch: u64,
+}
+
+/// Point-in-time tenant description for `STATS` replies and the load
+/// harness.
+#[derive(Clone, Debug)]
+pub struct TenantStatus {
+    pub name: String,
+    pub stats: ServiceStats,
+    pub cache_len: usize,
+    pub epoch: u64,
+    pub segments: usize,
+    pub points: usize,
+    pub root: usize,
+    pub tombstones: usize,
+    pub cursor: usize,
+}
+
+/// One served index: owned world + tree state + shared result cache.
+pub struct Tenant {
+    name: String,
+    /// Snapshot file this tenant persists to (`None` for in-memory
+    /// tenants added directly from a snapshot, e.g. in tests).
+    path: Option<PathBuf>,
+    data: String,
+    seed: u64,
+    matroid_str: String,
+    ds: Dataset,
+    matroid: MatroidBox,
+    cfg: IndexConfig,
+    inner: RwLock<TenantInner>,
+    cache: Mutex<ResultCache>,
+    inflight: Mutex<BTreeMap<String, Arc<InflightSlot>>>,
+}
+
+/// Tenant names travel inside whitespace-separated protocol lines.
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+    {
+        bail!("bad tenant name {name:?} (ascii alphanumerics, '-', '_' only)");
+    }
+    Ok(())
+}
+
+impl Tenant {
+    /// Reconstruct a tenant from a snapshot (the serving twin of the
+    /// `dmmc index` subcommands' load path).
+    pub fn from_snapshot(
+        name: &str,
+        snap: &IndexSnapshot,
+        path: Option<PathBuf>,
+        cache_capacity: usize,
+    ) -> Result<Tenant> {
+        validate_name(name)?;
+        let (ds, matroid) = store::snapshot_world(snap)?;
+        Ok(Tenant {
+            name: name.to_string(),
+            path,
+            data: snap.data.clone(),
+            seed: snap.seed,
+            matroid_str: snap.matroid.clone(),
+            ds,
+            matroid,
+            cfg: snap.config(),
+            inner: RwLock::new(TenantInner {
+                parts: snap.parts(),
+                cursor: snap.cursor,
+            }),
+            cache: Mutex::new(ResultCache::new(cache_capacity)),
+            inflight: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn k_max(&self) -> usize {
+        self.cfg.k_max
+    }
+
+    /// The engine the index was built with (default for queries that do
+    /// not override it).
+    pub fn engine(&self) -> EngineKind {
+        self.cfg.engine
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.inner.read().unwrap().parts.epoch
+    }
+
+    pub fn cursor(&self) -> usize {
+        self.inner.read().unwrap().cursor
+    }
+
+    /// A clone of the current tree state (for reference re-computations
+    /// in tests).
+    pub fn parts(&self) -> IndexParts {
+        self.inner.read().unwrap().parts.clone()
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        *self.cache.lock().unwrap().stats()
+    }
+
+    /// Warm the result cache from persisted entries (no counters touched).
+    pub fn warm(&self, entries: Vec<(String, u64, QueryResult)>) {
+        let mut cache = self.cache.lock().unwrap();
+        for (key, epoch, result) in entries {
+            cache.seed(&key, epoch, result);
+        }
+    }
+
+    /// Serve one query: cache, then coalesce, then cold.
+    pub fn query(&self, spec: &QuerySpec) -> Result<TenantAnswer> {
+        let sw = Stopwatch::start();
+        let key = spec.cache_key();
+        // capture (root, epoch) atomically: the result is stamped with
+        // the epoch of exactly the root it was computed from
+        let (root, epoch) = {
+            let inner = self.inner.read().unwrap();
+            let idx =
+                CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
+            (idx.root(), idx.epoch())
+        };
+        if let Some(result) = self.cache.lock().unwrap().lookup(&key, epoch) {
+            return Ok(self.answer(result, QuerySource::Cache, true, epoch, sw));
+        }
+        let ikey = format!("{key}@{epoch}");
+        let (slot, leader) = {
+            let mut inflight = self.inflight.lock().unwrap();
+            match inflight.get(&ikey) {
+                Some(slot) => (Arc::clone(slot), false),
+                None => {
+                    let slot = Arc::new(InflightSlot::new());
+                    inflight.insert(ikey.clone(), Arc::clone(&slot));
+                    (slot, true)
+                }
+            }
+        };
+        if !leader {
+            return match slot.wait() {
+                Ok(result) => {
+                    self.cache.lock().unwrap().record_coalesced();
+                    Ok(self.answer(result, QuerySource::Coalesced, false, epoch, sw))
+                }
+                Err(msg) => {
+                    self.cache.lock().unwrap().record_error();
+                    bail!("coalesced query failed: {msg}");
+                }
+            };
+        }
+        // double-checked cache: a prior leader may have published between
+        // our lookup miss and our registration (publish precedes
+        // deregistration, so this re-check closes the window)
+        if let Some(result) = self.cache.lock().unwrap().recheck(&key, epoch) {
+            self.inflight.lock().unwrap().remove(&ikey);
+            slot.publish(Ok(result.clone()));
+            return Ok(self.answer(result, QuerySource::Cache, true, epoch, sw));
+        }
+        let cx = ColdQuery {
+            ds: &self.ds,
+            matroid: &*self.matroid,
+            k_max: self.cfg.k_max,
+            root: &root,
+            epoch,
+        };
+        // the cold run happens outside every lock; the engine is built
+        // per run (DistanceEngine is not Send + Sync)
+        match run_cold_query(&cx, spec, &key, None) {
+            Ok((result, dist_evals)) => {
+                // publish-before-deregister: cache first, then remove the
+                // slot, then wake followers — no instant exists where a
+                // duplicate request finds neither
+                self.cache.lock().unwrap().complete_miss(&key, epoch, result.clone());
+                self.inflight.lock().unwrap().remove(&ikey);
+                slot.publish(Ok(result.clone()));
+                Ok(TenantAnswer {
+                    outcome: QueryOutcome {
+                        result,
+                        cache_hit: false,
+                        epoch,
+                        dist_evals,
+                        elapsed: sw.elapsed(),
+                    },
+                    source: QuerySource::Cold,
+                })
+            }
+            Err(e) => {
+                self.cache.lock().unwrap().record_error();
+                self.inflight.lock().unwrap().remove(&ikey);
+                slot.publish(Err(format!("{e:#}")));
+                Err(e)
+            }
+        }
+    }
+
+    fn answer(
+        &self,
+        result: QueryResult,
+        source: QuerySource,
+        cache_hit: bool,
+        epoch: u64,
+        sw: Stopwatch,
+    ) -> TenantAnswer {
+        TenantAnswer {
+            outcome: QueryOutcome {
+                result,
+                cache_hit,
+                epoch,
+                dist_evals: DistEvals::CachedZero,
+                elapsed: sw.elapsed(),
+            },
+            source,
+        }
+    }
+
+    /// Ingest the next `requested` dataset rows (clamped to the rows the
+    /// dataset still has; `None` = all of them).  Serialized behind the
+    /// write lock; the epoch bump invalidates cached results implicitly.
+    pub fn append(&self, requested: Option<usize>, segment: Option<usize>) -> Result<AppendSummary> {
+        let mut inner = self.inner.write().unwrap();
+        let remaining = self.ds.n().saturating_sub(inner.cursor);
+        if remaining == 0 {
+            bail!("tenant {} already covers all {} dataset rows", self.name, self.ds.n());
+        }
+        let count = requested.unwrap_or(remaining).min(remaining);
+        if count == 0 {
+            bail!("append of zero rows (pass a positive count or omit it)");
+        }
+        let segment = segment.unwrap_or(count).max(1);
+        let mut idx =
+            CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
+        let order: Vec<usize> = (inner.cursor..inner.cursor + count).collect();
+        let receipts = idx.ingest(&order, segment)?;
+        inner.cursor += count;
+        inner.parts = idx.parts();
+        Ok(AppendSummary {
+            requested,
+            appended: count,
+            clamped: requested.is_some_and(|r| r > count),
+            segments: receipts.len(),
+            epoch: inner.parts.epoch,
+            root: idx.root().len(),
+        })
+    }
+
+    /// Tombstone rows (serialized; an effective delete bumps the epoch).
+    pub fn delete(&self, rows: &[usize]) -> Result<DeleteSummary> {
+        let mut inner = self.inner.write().unwrap();
+        let mut idx =
+            CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
+        let receipt = idx.delete(rows)?;
+        inner.parts = idx.parts();
+        Ok(DeleteSummary {
+            receipt,
+            epoch: inner.parts.epoch,
+        })
+    }
+
+    /// Capture the current tree state as a snapshot.
+    pub fn snapshot(&self) -> IndexSnapshot {
+        let inner = self.inner.read().unwrap();
+        let idx = CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
+        IndexSnapshot::capture(
+            &idx,
+            self.data.clone(),
+            self.seed,
+            self.matroid_str.clone(),
+            inner.cursor,
+        )
+    }
+
+    /// Persist the tenant back to its snapshot file plus the result-cache
+    /// sidecar (only current-epoch entries are worth persisting; stale
+    /// ones could never hit).  Returns the path and the entry count.
+    pub fn save(&self) -> Result<(PathBuf, usize)> {
+        let path = self
+            .path
+            .clone()
+            .with_context(|| format!("tenant {} was not loaded from a file", self.name))?;
+        let snap = self.snapshot();
+        store::save(&snap, &path)?;
+        let entries: Vec<(String, u64, QueryResult)> = self
+            .cache
+            .lock()
+            .unwrap()
+            .entries()
+            .into_iter()
+            .filter(|(_, epoch, _)| *epoch == snap.epoch)
+            .collect();
+        store::save_result_cache(store::result_cache_path(&path), store::snapshot_id(&snap), &entries)?;
+        Ok((path, entries.len()))
+    }
+
+    pub fn status(&self) -> TenantStatus {
+        let (epoch, segments, points, root, tombstones, cursor) = {
+            let inner = self.inner.read().unwrap();
+            let idx =
+                CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
+            (
+                idx.epoch(),
+                idx.segments(),
+                inner.parts.points,
+                idx.root().len(),
+                idx.tombstones().len(),
+                inner.cursor,
+            )
+        };
+        let (stats, cache_len) = {
+            let cache = self.cache.lock().unwrap();
+            (*cache.stats(), cache.len())
+        };
+        TenantStatus {
+            name: self.name.clone(),
+            stats,
+            cache_len,
+            epoch,
+            segments,
+            points,
+            root,
+            tombstones,
+            cursor,
+        }
+    }
+}
+
+/// The server's tenant registry.
+pub struct ServeState {
+    cache_capacity: usize,
+    tenants: RwLock<BTreeMap<String, Arc<Tenant>>>,
+}
+
+impl ServeState {
+    pub fn new(cache_capacity: usize) -> ServeState {
+        ServeState {
+            cache_capacity: cache_capacity.max(1),
+            tenants: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Load (or replace) a tenant from a snapshot file, warming its
+    /// result cache from the sidecar when the sidecar matches the
+    /// snapshot's content id.
+    pub fn load(&self, name: &str, path: &Path) -> Result<Arc<Tenant>> {
+        let snap = store::load(path)
+            .with_context(|| format!("load index {} for tenant {name}", path.display()))?;
+        let tenant =
+            Tenant::from_snapshot(name, &snap, Some(path.to_path_buf()), self.cache_capacity)?;
+        let warm = store::load_result_cache(store::result_cache_path(path), store::snapshot_id(&snap));
+        tenant.warm(warm);
+        let tenant = Arc::new(tenant);
+        self.tenants.write().unwrap().insert(name.to_string(), Arc::clone(&tenant));
+        Ok(tenant)
+    }
+
+    /// Register an in-memory tenant directly from a snapshot (tests, and
+    /// anything that does not need persistence).
+    pub fn add(&self, name: &str, snap: &IndexSnapshot) -> Result<Arc<Tenant>> {
+        let tenant = Arc::new(Tenant::from_snapshot(name, snap, None, self.cache_capacity)?);
+        self.tenants.write().unwrap().insert(name.to_string(), Arc::clone(&tenant));
+        Ok(tenant)
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<Tenant>> {
+        self.tenants
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no tenant {name} (loaded: {})", self.names().join(", ")))
+    }
+
+    pub fn unload(&self, name: &str) -> Result<()> {
+        self.tenants
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .with_context(|| format!("no tenant {name} to unload"))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Sum of every tenant's serving counters (the load harness reports
+    /// the fleet-wide hit rate).
+    pub fn total_stats(&self) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for tenant in self.tenants.read().unwrap().values() {
+            let s = tenant.stats();
+            total.queries += s.queries;
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.errors += s.errors;
+            total.coalesced += s.coalesced;
+            total.evictions += s.evictions;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::index::tree::IndexConfig;
+    use crate::matroid::UniformMatroid;
+
+    fn snapshot(n: usize, ingest: usize, seed: u64) -> IndexSnapshot {
+        let ds = synth::uniform_cube(n, 2, seed);
+        let m = UniformMatroid::new(4);
+        let cfg = IndexConfig {
+            engine: EngineKind::Scalar,
+            ..IndexConfig::new(4, 8)
+        };
+        let mut idx = CoresetIndex::new(&ds, &m, cfg);
+        idx.ingest(&(0..ingest).collect::<Vec<_>>(), (ingest / 2).max(1)).unwrap();
+        IndexSnapshot::capture(&idx, format!("cube:{n}x2"), seed, "uniform:4".into(), ingest)
+    }
+
+    #[test]
+    fn tenant_names_are_validated() {
+        let snap = snapshot(100, 50, 7);
+        assert!(Tenant::from_snapshot("ok-name_2", &snap, None, 8).is_ok());
+        for bad in ["", "has space", "a/b", "a=b", "q@e"] {
+            assert!(Tenant::from_snapshot(bad, &snap, None, 8).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn tenant_query_append_delete_roundtrip() {
+        let state = ServeState::new(8);
+        let snap = snapshot(300, 200, 11);
+        let tenant = state.add("main", &snap).unwrap();
+        let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+
+        let cold = tenant.query(&spec).unwrap();
+        assert_eq!(cold.source, QuerySource::Cold);
+        assert!(!cold.outcome.cache_hit);
+        let hit = tenant.query(&spec).unwrap();
+        assert_eq!(hit.source, QuerySource::Cache);
+        assert_eq!(hit.outcome.dist_evals, DistEvals::CachedZero);
+        assert_eq!(
+            hit.outcome.result.diversity.to_bits(),
+            cold.outcome.result.diversity.to_bits()
+        );
+
+        // over-asking clamps and says so
+        let a = tenant.append(Some(500), None).unwrap();
+        assert_eq!(a.appended, 100);
+        assert!(a.clamped);
+        assert_eq!(tenant.cursor(), 300);
+        assert!(tenant.append(Some(1), None).is_err(), "dataset exhausted");
+
+        // post-append the cache is stale (new epoch): next query is cold
+        let after = tenant.query(&spec).unwrap();
+        assert_eq!(after.source, QuerySource::Cold);
+        assert_eq!(after.outcome.epoch, a.epoch);
+
+        let d = tenant.delete(&[after.outcome.result.solution[0]]).unwrap();
+        assert_eq!(d.receipt.newly_dead, 1);
+        assert_eq!(tenant.query(&spec).unwrap().source, QuerySource::Cold);
+
+        let st = tenant.status();
+        assert_eq!(st.stats.misses, 3);
+        assert_eq!(st.stats.hits, 1);
+        assert_eq!(st.cursor, 300);
+    }
+
+    #[test]
+    fn state_registry_get_and_unload() {
+        let state = ServeState::new(4);
+        let snap = snapshot(100, 60, 13);
+        state.add("a", &snap).unwrap();
+        state.add("b", &snap).unwrap();
+        assert_eq!(state.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(state.get("a").is_ok());
+        assert!(state.get("missing").is_err());
+        state.unload("a").unwrap();
+        assert!(state.get("a").is_err());
+        assert!(state.unload("a").is_err());
+    }
+}

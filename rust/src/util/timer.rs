@@ -15,6 +15,26 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     (out, t0.elapsed())
 }
 
+/// A started wall-clock timer for latency accounting in code that must
+/// not touch ambient time directly (dmmc-lint L4): the `Instant::now`
+/// call stays inside this blessed module, and callers — the serve
+/// tenants' per-query `elapsed` stamp, most prominently — only ever
+/// *read* the elapsed duration, never branch on it.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+}
+
 /// Named-phase wall-clock accumulator.
 #[derive(Default, Debug, Clone)]
 pub struct PhaseTimer {
@@ -79,6 +99,15 @@ mod tests {
         assert!(t.get("a") >= Duration::from_millis(4));
         assert!(t.total() >= t.get("a"));
         assert_eq!(t.get("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let a = sw.elapsed();
+        assert!(a >= Duration::from_millis(2));
+        assert!(sw.elapsed() >= a);
     }
 
     #[test]

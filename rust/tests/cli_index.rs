@@ -1,0 +1,104 @@
+//! CLI-level regressions for the `dmmc index` subcommands, run against
+//! the real binary (`CARGO_BIN_EXE_dmmc`) so the argument grammar, the
+//! printed contract lines, and the on-disk artifacts are all pinned at
+//! the process boundary.
+//!
+//! * **append clamp** — `--count` over-asking is clamped to the rows the
+//!   dataset still has, and the clamp is printed (the silent-shortfall
+//!   bugfix); an exhausted index refuses further appends;
+//! * **cross-process warm cache** — `index query` persists its result
+//!   cache to the `.cache` sidecar, so a repeat invocation in a fresh
+//!   process answers from cache (`dist_evals=cached`) bit-identically.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn dmmc(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_dmmc"))
+        .args(args)
+        .output()
+        .expect("spawn dmmc")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dmmc_cli_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn append_count_overask_clamps_and_says_so() {
+    let idx = tmp("clamp.dmmcx");
+    let idx_s = idx.to_str().unwrap();
+    let built = dmmc(&[
+        "index", "build", "--data", "cube:300x2", "--out", idx_s, "--k", "4", "--tau", "8",
+        "--matroid", "uniform:4", "--engine", "scalar", "--count", "200", "--segment", "50",
+        "--seed", "3",
+    ]);
+    assert!(built.status.success(), "build failed: {}", String::from_utf8_lossy(&built.stderr));
+
+    // 100 rows remain; asking for 500 must clamp — loudly, not silently
+    let appended = dmmc(&["index", "append", "--index", idx_s, "--count", "500"]);
+    let out = stdout(&appended);
+    assert!(appended.status.success(), "append failed: {out}");
+    assert!(
+        out.contains("requested 500 rows, clamped to the 100 remaining"),
+        "clamp not printed:\n{out}"
+    );
+    assert!(out.contains("+100 rows"), "clamped count not ingested:\n{out}");
+
+    // nothing remains: a further append is an error, not a zero-row no-op
+    let exhausted = dmmc(&["index", "append", "--index", idx_s, "--count", "1"]);
+    assert!(!exhausted.status.success());
+    assert!(
+        String::from_utf8_lossy(&exhausted.stderr).contains("already covers all"),
+        "wrong exhaustion error: {}",
+        String::from_utf8_lossy(&exhausted.stderr)
+    );
+
+    std::fs::remove_file(&idx).ok();
+}
+
+#[test]
+fn repeat_query_hits_the_persisted_cache_across_processes() {
+    let idx = tmp("warm.dmmcx");
+    let idx_s = idx.to_str().unwrap();
+    let built = dmmc(&[
+        "index", "build", "--data", "cube:200x2", "--out", idx_s, "--k", "4", "--tau", "8",
+        "--matroid", "uniform:4", "--engine", "scalar", "--seed", "5",
+    ]);
+    assert!(built.status.success(), "build failed: {}", String::from_utf8_lossy(&built.stderr));
+
+    let query = ["index", "query", "--index", idx_s, "--k", "4"];
+    let cold = dmmc(&query);
+    let cold_out = stdout(&cold);
+    assert!(cold.status.success(), "cold query failed: {cold_out}");
+    assert!(cold_out.contains("warm=0"), "first run found a sidecar:\n{cold_out}");
+    assert!(cold_out.contains("cache_hit=false"), "{cold_out}");
+    assert!(cold_out.contains("persisted 1 cache entries"), "{cold_out}");
+
+    let sidecar = PathBuf::from(format!("{idx_s}.cache"));
+    assert!(sidecar.exists(), "query did not write the sidecar");
+
+    // a fresh process answers the identical spec from the sidecar
+    let warm = dmmc(&query);
+    let warm_out = stdout(&warm);
+    assert!(warm.status.success(), "warm query failed: {warm_out}");
+    assert!(warm_out.contains("warm=1"), "sidecar not loaded:\n{warm_out}");
+    assert!(warm_out.contains("cache_hit=true"), "{warm_out}");
+    assert!(warm_out.contains("dist_evals=cached"), "{warm_out}");
+
+    // bit-identical across processes: the printed diversity values match
+    let diversity = |s: &str| {
+        s.split_whitespace()
+            .find_map(|tok| tok.strip_prefix("diversity="))
+            .expect("no query result line")
+            .to_string()
+    };
+    assert_eq!(diversity(&cold_out), diversity(&warm_out));
+
+    std::fs::remove_file(&idx).ok();
+    std::fs::remove_file(&sidecar).ok();
+}

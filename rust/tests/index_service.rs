@@ -21,7 +21,7 @@ use matroid_coreset::core::{Dataset, Metric};
 use matroid_coreset::data::synth;
 use matroid_coreset::diversity::{Objective, ALL_OBJECTIVES};
 use matroid_coreset::index::{
-    CoresetIndex, IndexConfig, LeafIngest, QueryService, QuerySpec,
+    CoresetIndex, DistEvals, IndexConfig, LeafIngest, QueryService, QuerySpec,
 };
 use matroid_coreset::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
 use matroid_coreset::prop_assert;
@@ -150,12 +150,19 @@ fn cached_repeat_query_does_zero_distance_evals() {
     let spec = QuerySpec::sum_local_search(k, EngineKind::Scalar);
     let cold = svc.query(&spec).unwrap();
     assert!(!cold.cache_hit);
-    assert!(cold.dist_evals.unwrap() > 0, "cold query must do distance work");
+    assert!(
+        cold.dist_evals.measured().unwrap() > 0,
+        "cold query must do distance work"
+    );
     assert_eq!(cold.result.solution.len(), k);
 
     let hit = svc.query(&spec).unwrap();
     assert!(hit.cache_hit);
-    assert_eq!(hit.dist_evals, Some(0), "cache hit must cost zero distance evals");
+    assert_eq!(
+        hit.dist_evals,
+        DistEvals::CachedZero,
+        "cache hit must cost zero distance evals"
+    );
 
     // bit-identity: the hit equals the cold run, and a second service
     // with the identical ingest reproduces the same cold result (cold
@@ -270,7 +277,7 @@ fn prop_cache_hits_bit_identical_to_cold() {
         let hit = svc.query(&spec).map_err(|e| e.to_string())?;
         prop_assert!(hit.cache_hit, "second identical query missed the cache");
         prop_assert!(
-            hit.dist_evals == Some(0),
+            hit.dist_evals == DistEvals::CachedZero,
             "cache hit did distance work: {:?}",
             hit.dist_evals
         );

@@ -1,0 +1,306 @@
+//! Integration: the multi-tenant query server (`matroid_coreset::serve`).
+//!
+//! Pins the serving-layer acceptance properties:
+//!
+//! * **coalescing** — M threads firing the identical `(spec, epoch)`
+//!   request produce bit-identical answers from exactly one cold
+//!   computation (misses == 1, everyone else hit or coalesced);
+//! * **epoch stamping** — queries racing appends never mix results
+//!   across epochs: every answer stamped with epoch E is bit-identical
+//!   to every other epoch-E answer, and the final state replays to the
+//!   same bits in a reference single-threaded service;
+//! * **warm restarts** — a tenant saved with its result-cache sidecar
+//!   answers the same query from cache (zero distance evals) after a
+//!   full reload, bit-identically;
+//! * **error accounting** — a failing query counts as an error, never a
+//!   miss;
+//! * **the TCP front end** — a real socket roundtrip: query cold, query
+//!   warm, mutate, query cold again, clean shutdown.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use matroid_coreset::data::synth;
+use matroid_coreset::index::tree::{CoresetIndex, IndexConfig};
+use matroid_coreset::index::{store, DistEvals, IndexSnapshot, QueryResult, QueryService, QuerySpec};
+use matroid_coreset::matroid::UniformMatroid;
+use matroid_coreset::runtime::EngineKind;
+use matroid_coreset::serve::{spawn, InflightSlot, QuerySource, ServeState};
+
+fn snapshot(n: usize, ingest: usize, seed: u64) -> IndexSnapshot {
+    let ds = synth::uniform_cube(n, 2, seed);
+    let m = UniformMatroid::new(4);
+    let cfg = IndexConfig {
+        engine: EngineKind::Scalar,
+        ..IndexConfig::new(4, 8)
+    };
+    let mut idx = CoresetIndex::new(&ds, &m, cfg);
+    idx.ingest(&(0..ingest).collect::<Vec<_>>(), (ingest / 2).max(1)).unwrap();
+    IndexSnapshot::capture(&idx, format!("cube:{n}x2"), seed, "uniform:4".into(), ingest)
+}
+
+#[test]
+fn identical_concurrent_queries_coalesce_onto_one_cold_run() {
+    const THREADS: usize = 8;
+    let state = ServeState::new(16);
+    let snap = snapshot(500, 400, 21);
+    let tenant = state.add("main", &snap).unwrap();
+    let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+    let barrier = Barrier::new(THREADS);
+
+    let answers: Vec<_> = thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                s.spawn(|| {
+                    barrier.wait();
+                    tenant.query(&spec).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // exactly one cold computation ran; every other request was served
+    // from the cache or rode the in-flight leader
+    let st = tenant.stats();
+    assert_eq!(st.queries, THREADS as u64);
+    assert_eq!(st.misses, 1, "more than one cold computation: {st:?}");
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.hits + st.coalesced, (THREADS - 1) as u64, "{st:?}");
+    let cold: Vec<_> =
+        answers.iter().filter(|a| a.source == QuerySource::Cold).collect();
+    assert_eq!(cold.len(), 1, "exactly one answer may be labeled cold");
+
+    // bit-identity across every serving path
+    let reference = &answers[0].outcome.result;
+    for a in &answers {
+        assert_eq!(a.outcome.result.solution, reference.solution);
+        assert_eq!(
+            a.outcome.result.diversity.to_bits(),
+            reference.diversity.to_bits()
+        );
+        assert_eq!(a.outcome.epoch, answers[0].outcome.epoch);
+        if a.source != QuerySource::Cold {
+            assert_eq!(a.outcome.dist_evals, DistEvals::CachedZero);
+        }
+    }
+}
+
+#[test]
+fn inflight_slot_delivers_results_and_errors_to_waiters() {
+    let slot = Arc::new(InflightSlot::new());
+    let waiters: Vec<_> = (0..3)
+        .map(|_| {
+            let slot = Arc::clone(&slot);
+            thread::spawn(move || slot.wait())
+        })
+        .collect();
+    thread::sleep(Duration::from_millis(10));
+    let result = QueryResult {
+        solution: vec![3, 1, 4],
+        diversity: 1.5,
+        coreset_size: 9,
+    };
+    slot.publish(Ok(result.clone()));
+    for w in waiters {
+        let got = w.join().unwrap().unwrap();
+        assert_eq!(got.solution, result.solution);
+        assert_eq!(got.diversity.to_bits(), result.diversity.to_bits());
+    }
+    // a waiter arriving after publication returns immediately
+    assert!(slot.wait().is_ok());
+
+    let failing = InflightSlot::new();
+    failing.publish(Err("leader failed".into()));
+    assert_eq!(failing.wait().unwrap_err(), "leader failed");
+}
+
+#[test]
+fn queries_racing_appends_stay_epoch_consistent() {
+    const QUERY_THREADS: usize = 4;
+    const QUERIES_EACH: usize = 25;
+    let state = ServeState::new(16);
+    let snap = snapshot(600, 200, 33);
+    let tenant = state.add("main", &snap).unwrap();
+    let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+
+    let answers: Vec<(u64, u64, Vec<usize>)> = thread::scope(|s| {
+        let appender = s.spawn(|| {
+            for _ in 0..8 {
+                tenant.append(Some(50), None).unwrap();
+                thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let handles: Vec<_> = (0..QUERY_THREADS)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut seen = Vec::new();
+                    for _ in 0..QUERIES_EACH {
+                        let a = tenant.query(&spec).unwrap();
+                        seen.push((
+                            a.outcome.epoch,
+                            a.outcome.result.diversity.to_bits(),
+                            a.outcome.result.solution.clone(),
+                        ));
+                    }
+                    seen
+                })
+            })
+            .collect();
+        appender.join().unwrap();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(tenant.cursor(), 600, "all appends landed");
+
+    // every answer stamped with epoch E must agree bit for bit with
+    // every other epoch-E answer — a stale root can never leak into a
+    // newer epoch's label
+    let mut by_epoch: BTreeMap<u64, (u64, Vec<usize>)> = BTreeMap::new();
+    for (epoch, bits, sol) in &answers {
+        match by_epoch.get(epoch) {
+            None => {
+                by_epoch.insert(*epoch, (*bits, sol.clone()));
+            }
+            Some((b0, s0)) => {
+                assert_eq!(bits, b0, "epoch {epoch} answered with two diversities");
+                assert_eq!(sol, s0, "epoch {epoch} answered with two solutions");
+            }
+        }
+    }
+
+    // and the settled state replays to the same bits in a fresh
+    // single-threaded reference service (cold runs are deterministic
+    // given (spec, epoch))
+    let settled = tenant.query(&spec).unwrap();
+    let snap = tenant.snapshot();
+    let (ds, matroid) = store::snapshot_world(&snap).unwrap();
+    let idx = CoresetIndex::from_parts(&ds, &*matroid, snap.config(), snap.parts());
+    let mut reference = QueryService::new(idx);
+    let cold = reference.query(&spec).unwrap();
+    assert_eq!(cold.result.solution, settled.outcome.result.solution);
+    assert_eq!(
+        cold.result.diversity.to_bits(),
+        settled.outcome.result.diversity.to_bits()
+    );
+    assert_eq!(cold.epoch, settled.outcome.epoch);
+}
+
+#[test]
+fn saved_tenant_restarts_with_a_warm_cache() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("dmmc_serve_warm_{}.idx", std::process::id()));
+    let snap = snapshot(300, 200, 55);
+    store::save(&snap, &path).unwrap();
+    let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+
+    // first lifetime: load cold, query, save (snapshot + sidecar)
+    let state = ServeState::new(8);
+    let tenant = state.load("main", &path).unwrap();
+    let cold = tenant.query(&spec).unwrap();
+    assert_eq!(cold.source, QuerySource::Cold);
+    let (saved_path, entries) = tenant.save().unwrap();
+    assert_eq!(saved_path, path);
+    assert_eq!(entries, 1);
+    assert!(store::result_cache_path(&path).exists(), "sidecar written");
+    drop(state);
+
+    // second lifetime: the same query is answered from the sidecar-warmed
+    // cache, bit-identically, at zero distance evals
+    let state = ServeState::new(8);
+    let tenant = state.load("main", &path).unwrap();
+    let warm = tenant.query(&spec).unwrap();
+    assert_eq!(warm.source, QuerySource::Cache, "restart lost the cache");
+    assert_eq!(warm.outcome.dist_evals, DistEvals::CachedZero);
+    assert_eq!(warm.outcome.result.solution, cold.outcome.result.solution);
+    assert_eq!(
+        warm.outcome.result.diversity.to_bits(),
+        cold.outcome.result.diversity.to_bits()
+    );
+    let st = tenant.stats();
+    assert_eq!((st.hits, st.misses), (1, 0));
+
+    // a mutation invalidates the persisted entries too: next query is cold
+    tenant.append(Some(50), None).unwrap();
+    assert_eq!(tenant.query(&spec).unwrap().source, QuerySource::Cold);
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(store::result_cache_path(&path)).ok();
+}
+
+#[test]
+fn failed_queries_count_as_errors_not_misses() {
+    let state = ServeState::new(8);
+    let snap = snapshot(100, 60, 77);
+    let tenant = state.add("main", &snap).unwrap();
+    // k above the index's k_max must fail cleanly...
+    let bad = QuerySpec::sum_local_search(10, EngineKind::Scalar);
+    assert!(tenant.query(&bad).is_err());
+    let st = tenant.stats();
+    assert_eq!((st.queries, st.errors, st.misses, st.hits), (1, 1, 0, 0));
+    // ...and leave the tenant fully serviceable
+    let ok = QuerySpec::sum_local_search(3, EngineKind::Scalar);
+    assert_eq!(tenant.query(&ok).unwrap().source, QuerySource::Cold);
+    assert_eq!(tenant.query(&ok).unwrap().source, QuerySource::Cache);
+}
+
+#[test]
+fn tcp_roundtrip_serves_queries_and_mutations() {
+    let state = Arc::new(ServeState::new(8));
+    let snap = snapshot(300, 200, 91);
+    state.add("main", &snap).unwrap();
+    let handle = spawn(Arc::clone(&state), 2).unwrap();
+
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+    let mut ask = |line: &str| -> String {
+        writeln!(writer, "{line}").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    };
+
+    assert_eq!(ask("PING"), "OK pong");
+    assert_eq!(ask("TENANTS"), "OK tenants main");
+
+    let cold = ask("QUERY main sum 4");
+    assert!(cold.starts_with("OK query tenant=main source=cold"), "{cold}");
+    let warm = ask("QUERY main sum 4");
+    assert!(warm.starts_with("OK query tenant=main source=cache"), "{warm}");
+    // the wire carries the diversity bits: cache hit is bit-identical
+    let bits = |reply: &str| {
+        reply
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix("bits="))
+            .unwrap()
+            .to_string()
+    };
+    assert_eq!(bits(&cold), bits(&warm));
+
+    let append = ask("APPEND main 50");
+    assert!(append.starts_with("OK append tenant=main"), "{append}");
+    let after = ask("QUERY main sum 4");
+    assert!(after.starts_with("OK query tenant=main source=cold"), "post-append query must be cold: {after}");
+
+    let del = ask("DELETE main 0..3");
+    assert!(del.starts_with("OK delete tenant=main requested=3"), "{del}");
+    assert!(ask("QUERY main sum 4").contains("source=cold"));
+
+    let stats = ask("STATS main");
+    assert!(stats.starts_with("OK stats tenant=main queries=4"), "{stats}");
+
+    // malformed and unknown requests answer ERR without dropping the line
+    assert!(ask("QUERY nosuch sum 4").starts_with("ERR "));
+    assert!(ask("FROBNICATE").starts_with("ERR "));
+    assert_eq!(ask("QUIT"), "OK bye");
+
+    // release the worker before joining the server
+    drop(reader);
+    drop(writer);
+    handle.shutdown().unwrap();
+}
