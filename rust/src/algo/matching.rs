@@ -1,0 +1,236 @@
+//! Matching-based remote-clique finisher: the Hassin–Rubinstein–Tamir
+//! greedy maximum-weight matching 2-approximation, raced against the
+//! matroid Gonzalez farthest-point greedy with deterministic best-of-both
+//! selection.
+//!
+//! The matching arm sorts all candidate pairs by distance (descending)
+//! and greedily takes matroid-feasible edges with unused endpoints until
+//! `floor(k/2)` edges are placed; odd `k` (or a matroid stall) is topped
+//! up by feasible farthest-point fill.  The GMM arm is
+//! [`greedy_matroid_gonzalez`].  Both finishers are scored through the
+//! engine-backed [`Evaluator`], and the better solution wins (ties go to
+//! the matching arm), so the race never returns a result worse than
+//! either standalone finisher — a pinned invariant.
+//!
+//! Determinism: the matching arm is fully deterministic (edges ordered by
+//! `(weight desc, i, j)` with index tie-breaks, Vec + sort only — no hash
+//! collections per lint contract L1); the GMM arm consumes the caller's
+//! seeded [`Rng`], so the race winner is a pure function of
+//! `(dataset, matroid, k, candidates, objective, seed)`.
+
+use anyhow::Result;
+
+use crate::core::Dataset;
+use crate::diversity::{Evaluator, Objective};
+use crate::matroid::Matroid;
+use crate::runtime::engine::DistanceEngine;
+use crate::util::rng::Rng;
+
+use super::greedy::greedy_matroid_gonzalez;
+
+/// Outcome of the matching-vs-GMM race (see [`matching_race`]).
+#[derive(Clone, Debug)]
+pub struct MatchingRace {
+    /// The winning solution (best-of-both).
+    pub solution: Vec<usize>,
+    /// Diversity of the winning solution under the raced objective.
+    pub diversity: f64,
+    /// Diversity of the matching arm's solution.
+    pub matching_value: f64,
+    /// Diversity of the GMM arm's solution.
+    pub gmm_value: f64,
+    /// Which arm won: `"matching"` or `"gmm"` (ties go to matching).
+    pub winner: &'static str,
+    /// Number of matching edges placed before the fill step.
+    pub matching_edges: usize,
+}
+
+/// Greedy maximum-weight matching under the matroid: sort candidate
+/// pairs by distance descending, take each edge whose two endpoints are
+/// still unused and jointly matroid-feasible, stop at `floor(k/2)`
+/// edges, then top up to `k` with feasible farthest-point fill (odd `k`,
+/// or a matroid that starves the matching early).  Returns the selected
+/// indices and the number of whole edges placed.
+pub fn greedy_matching_solution(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    candidates: &[usize],
+    engine: &dyn DistanceEngine,
+) -> Result<(Vec<usize>, usize)> {
+    let n = candidates.len();
+    if n == 0 || k == 0 {
+        return Ok((Vec::new(), 0));
+    }
+    let tile = Evaluator::new(engine).submatrix(ds, candidates)?;
+    // all pairs (a < b) as positions into `candidates`, heaviest first;
+    // ties broken by (a, b) so the order is a pure function of the input
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(n * (n - 1) / 2);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            edges.push((a, b));
+        }
+    }
+    edges.sort_by(|&(a1, b1), &(a2, b2)| {
+        let w1 = tile[a1 * n + b1];
+        let w2 = tile[a2 * n + b2];
+        w2.partial_cmp(&w1)
+            .expect("finite distances")
+            .then(a1.cmp(&a2))
+            .then(b1.cmp(&b2))
+    });
+
+    let mut sol: Vec<usize> = Vec::with_capacity(k);
+    let mut used = vec![false; n];
+    let mut placed_edges = 0usize;
+    for &(a, b) in &edges {
+        if sol.len() + 2 > k {
+            break;
+        }
+        if used[a] || used[b] {
+            continue;
+        }
+        let (x, y) = (candidates[a], candidates[b]);
+        if !m.can_extend(ds, &sol, x) {
+            continue;
+        }
+        sol.push(x);
+        if m.can_extend(ds, &sol, y) {
+            sol.push(y);
+            used[a] = true;
+            used[b] = true;
+            placed_edges += 1;
+        } else {
+            sol.pop();
+        }
+    }
+    // fill the remaining slots (odd k, or matroid-starved matching) with
+    // deterministic feasible farthest-point additions over the same tile
+    while sol.len() < k {
+        let mut best: Option<(usize, f64)> = None;
+        for (a, &x) in candidates.iter().enumerate() {
+            if used[a] || sol.contains(&x) {
+                continue;
+            }
+            let mind = candidates
+                .iter()
+                .enumerate()
+                .filter(|&(_, y)| sol.contains(y))
+                .map(|(b, _)| tile[a.min(b) * n + a.max(b)])
+                .fold(f64::INFINITY, f64::min);
+            let d = if sol.is_empty() { 1.0 } else { mind };
+            if best.map(|(_, bd)| d > bd).unwrap_or(true) && m.can_extend(ds, &sol, x) {
+                best = Some((a, d));
+            }
+        }
+        match best {
+            None => break,
+            Some((a, _)) => {
+                used[a] = true;
+                sol.push(candidates[a]);
+            }
+        }
+    }
+    Ok((sol, placed_edges))
+}
+
+/// Race the greedy maximum-weight matching against the matroid Gonzalez
+/// greedy and return the better solution under `obj` (best-of-both; ties
+/// go to the matching arm).
+pub fn matching_race(
+    ds: &Dataset,
+    m: &dyn Matroid,
+    k: usize,
+    candidates: &[usize],
+    obj: Objective,
+    engine: &dyn DistanceEngine,
+    rng: &mut Rng,
+) -> Result<MatchingRace> {
+    let (match_sol, matching_edges) = greedy_matching_solution(ds, m, k, candidates, engine)?;
+    let gmm_sol = greedy_matroid_gonzalez(ds, m, k, candidates, rng);
+    let ev = Evaluator::new(engine);
+    let matching_value = ev.diversity(ds, &match_sol, obj)?;
+    let gmm_value = ev.diversity(ds, &gmm_sol, obj)?;
+    let (solution, diversity, winner) = if matching_value >= gmm_value {
+        (match_sol, matching_value, "matching")
+    } else {
+        (gmm_sol, gmm_value, "gmm")
+    };
+    Ok(MatchingRace {
+        solution,
+        diversity,
+        matching_value,
+        gmm_value,
+        winner,
+        matching_edges,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::matroid::{Matroid, PartitionMatroid, UniformMatroid};
+    use crate::runtime::engine::ScalarEngine;
+
+    #[test]
+    fn matching_solution_is_independent_and_sized() {
+        let ds = synth::clustered(120, 2, 4, 0.1, 3, 1);
+        let m = PartitionMatroid::new(vec![2, 2, 2]);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let e = ScalarEngine::new();
+        for k in [2usize, 4, 5, 6] {
+            let (sol, edges) = greedy_matching_solution(&ds, &m, k, &cands, &e).unwrap();
+            assert_eq!(sol.len(), k, "k={k}");
+            assert!(m.is_independent(&ds, &sol), "k={k}");
+            assert!(edges <= k / 2, "k={k} edges={edges}");
+        }
+    }
+
+    #[test]
+    fn matching_arm_is_deterministic() {
+        let ds = synth::clustered(80, 3, 4, 0.1, 2, 2);
+        let m = UniformMatroid::new(6);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let e = ScalarEngine::new();
+        let (a, _) = greedy_matching_solution(&ds, &m, 5, &cands, &e).unwrap();
+        let (b, _) = greedy_matching_solution(&ds, &m, 5, &cands, &e).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn race_never_loses_to_either_arm() {
+        let ds = synth::clustered(100, 2, 5, 0.1, 3, 3);
+        let m = PartitionMatroid::new(vec![2, 2, 2]);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let e = ScalarEngine::new();
+        for obj in crate::diversity::ALL_OBJECTIVES {
+            let mut rng = Rng::new(7);
+            let race = matching_race(&ds, &m, 6, &cands, obj, &e, &mut rng).unwrap();
+            assert!(
+                race.diversity >= race.matching_value && race.diversity >= race.gmm_value,
+                "{obj:?}: best-of-both {} lost to an arm (matching {}, gmm {})",
+                race.diversity,
+                race.matching_value,
+                race.gmm_value
+            );
+            assert!(m.is_independent(&ds, &race.solution));
+        }
+    }
+
+    #[test]
+    fn race_winner_deterministic_given_seed() {
+        let ds = synth::clustered(90, 2, 3, 0.1, 3, 4);
+        let m = UniformMatroid::new(4);
+        let cands: Vec<usize> = (0..ds.n()).collect();
+        let e = ScalarEngine::new();
+        let run = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            matching_race(&ds, &m, 4, &cands, Objective::RemoteEdge, &e, &mut rng).unwrap()
+        };
+        let (a, b) = (run(11), run(11));
+        assert_eq!(a.solution, b.solution);
+        assert_eq!(a.winner, b.winner);
+        assert_eq!(a.diversity.to_bits(), b.diversity.to_bits());
+    }
+}

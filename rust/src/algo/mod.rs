@@ -1,13 +1,15 @@
 //! The paper's algorithms: GMM clustering, the coreset constructions
 //! (sequential + streaming; the MapReduce version lives in
-//! [`crate::mapreduce`]), the AMT local-search baseline/finisher and the
-//! exhaustive finisher for the non-sum DMMC variants.
+//! [`crate::mapreduce`]), the AMT local-search baseline/finisher, the
+//! exhaustive finisher for the non-sum DMMC variants, and the
+//! matching-vs-GMM race finisher for remote-clique/remote-edge.
 
 pub mod exhaustive;
 pub mod extract;
 pub mod gmm;
 pub mod greedy;
 pub mod local_search;
+pub mod matching;
 pub mod seq_coreset;
 pub mod stream_coreset;
 

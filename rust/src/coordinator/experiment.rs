@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 use crate::algo::exhaustive::exhaustive_best;
 use crate::algo::greedy::greedy_sum;
 use crate::algo::local_search::{local_search_sum, LocalSearchParams};
+use crate::algo::matching::matching_race;
 use crate::algo::seq_coreset::seq_coreset;
 use crate::algo::Budget;
 use crate::core::Dataset;
@@ -54,6 +55,9 @@ pub enum Finisher {
     Exhaustive,
     /// Greedy heuristic (cheap baseline).
     Greedy,
+    /// Greedy maximum-weight matching raced against matroid Gonzalez,
+    /// best-of-both (any objective; built for remote-clique/remote-edge).
+    Matching,
 }
 
 /// One experiment configuration.
@@ -91,6 +95,12 @@ pub fn run_pipeline<M: Matroid + Sync>(
     pipeline: Pipeline,
     seed: u64,
 ) -> Result<RunOutcome> {
+    if k < 2 {
+        // diversity (and the farness machinery behind the coreset radius)
+        // is defined over pairs; reject here so no surface can reach the
+        // `farness_coefficient` assert with k < 2
+        bail!("k must be >= 2 for diversity maximization (got k={k})");
+    }
     let mut extra = BTreeMap::new();
     let mut rng = Rng::new(seed);
     // one engine shared by every phase that computes distances: the
@@ -234,6 +244,19 @@ pub fn run_pipeline<M: Matroid + Sync>(
         Finisher::Greedy => {
             let (sol, dt) = time_it(|| greedy_sum(ds, m, k, &candidates));
             (sol, dt)
+        }
+        Finisher::Matching => {
+            let (res, dt) =
+                time_it(|| matching_race(ds, m, k, &candidates, obj, engine, &mut rng));
+            let res = res?;
+            extra.insert("matching_value".into(), res.matching_value);
+            extra.insert("gmm_value".into(), res.gmm_value);
+            extra.insert("matching_edges".into(), res.matching_edges as f64);
+            extra.insert(
+                "race_winner_matching".into(),
+                if res.winner == "matching" { 1.0 } else { 0.0 },
+            );
+            (res.solution, dt)
         }
     };
 
@@ -428,6 +451,51 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn seq_plus_matching_runs_remote_edge() {
+        let ds = synth::clustered(200, 2, 5, 0.1, 3, 9);
+        let m = PartitionMatroid::new(vec![2; 3]);
+        let out = run_pipeline(
+            &ds,
+            &m,
+            5,
+            Objective::RemoteEdge,
+            pipe(
+                Setting::Seq {
+                    budget: Budget::Clusters(16),
+                },
+                Finisher::Matching,
+            ),
+            1,
+        )
+        .unwrap();
+        assert_eq!(out.solution.len(), 5);
+        assert!(m.is_independent(&ds, &out.solution));
+        assert!(out.diversity > 0.0);
+        // the race ledger surfaces both arms and never loses to either
+        assert!(out.diversity >= out.extra["matching_value"]);
+        assert!(out.diversity >= out.extra["gmm_value"]);
+        assert!(out.extra.contains_key("matching_edges"));
+    }
+
+    #[test]
+    fn small_k_is_an_error_not_a_panic() {
+        let ds = synth::uniform_cube(50, 2, 5);
+        let m = UniformMatroid::new(3);
+        for k in [0, 1] {
+            let res = run_pipeline(
+                &ds,
+                &m,
+                k,
+                Objective::Sum,
+                pipe(Setting::Full, Finisher::Greedy),
+                5,
+            );
+            let msg = format!("{:#}", res.unwrap_err());
+            assert!(msg.contains("k must be >= 2"), "k={k}: {msg}");
         }
     }
 

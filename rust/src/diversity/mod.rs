@@ -1,8 +1,14 @@
-//! Diversity objectives (paper Table 1) and average-farness machinery (§3).
+//! Diversity objectives (paper Table 1, plus remote-edge) and
+//! average-farness machinery (§3).
 //!
-//! Every objective is a sum of `f(k)` pairwise distances; the coreset radius
-//! bound `r <= (eps/4) * rho_{S,k}` of Lemma 2 is expressed through
-//! [`farness_lower_bound`] (Lemma 1).
+//! Every Table-1 objective is a sum of `f(k)` pairwise distances; the
+//! coreset radius bound `r <= (eps/4) * rho_{S,k}` of Lemma 2 is
+//! expressed through [`farness_lower_bound`] (Lemma 1).  The sixth
+//! objective, remote-edge (max-min), is the single smallest pairwise
+//! distance rather than a sum; it has no known matroid-constrained
+//! approximation algorithm, so the coreset route solves it exhaustively
+//! on the root (the libcoral exemplar's own guidance) and GMM-style
+//! farthest-point greedy serves as the full-input heuristic.
 //!
 //! ## Engine-backed evaluation
 //!
@@ -14,15 +20,15 @@
 //!   backend (a pinned bit-identity contract) and exclude self-pairs
 //!   exactly, so both objectives keep full f64 precision and the Table-1
 //!   definitions — `sum = Σ sums / 2`, `star = min sums`.
-//! * **tree / cycle / bipartition** consume the dense submatrix
-//!   materialized by one [`DistanceEngine::pairwise_block`] tile.  Tiles
-//!   are f32 (the PJRT artifact representation), upcast to f64 for the
-//!   matrix solvers; CPU backends must produce bit-identical tiles (with
-//!   a true-zero diagonal, computed as an upper triangle + mirror), so
-//!   these objective values are also engine-independent.
+//! * **tree / cycle / bipartition / remote-edge** consume the dense
+//!   submatrix materialized by one [`DistanceEngine::pairwise_block`]
+//!   tile.  Tiles are f32 (the PJRT artifact representation), upcast to
+//!   f64 for the matrix solvers; CPU backends must produce bit-identical
+//!   tiles (with a true-zero diagonal, computed as an upper triangle +
+//!   mirror), so these objective values are also engine-independent.
 //!
 //! [`Evaluator`] carries the engine and exposes the per-objective methods
-//! plus [`Evaluator::diversity_all`], which scores all five objectives
+//! plus [`Evaluator::diversity_all`], which scores all six objectives
 //! from a single sums pass + a single tile (no duplicate distance work —
 //! pinned by an evaluation-count regression test).  The free functions
 //! ([`diversity`], [`sum_diversity`], [`star_diversity`],
@@ -39,7 +45,7 @@ pub mod bipartition;
 pub mod mst;
 pub mod tsp;
 
-/// The five DMMC instantiations of Table 1.
+/// The five DMMC instantiations of Table 1, plus remote-edge (max-min).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Objective {
     /// sum-DMMC: sum of all pairwise distances (a.k.a. max-sum dispersion).
@@ -52,14 +58,17 @@ pub enum Objective {
     Cycle,
     /// bipartition-DMMC: minimum weight balanced-cut.
     Bipartition,
+    /// remote-edge-DMMC: minimum pairwise distance (max-min dispersion).
+    RemoteEdge,
 }
 
-pub const ALL_OBJECTIVES: [Objective; 5] = [
+pub const ALL_OBJECTIVES: [Objective; 6] = [
     Objective::Sum,
     Objective::Star,
     Objective::Tree,
     Objective::Cycle,
     Objective::Bipartition,
+    Objective::RemoteEdge,
 ];
 
 impl Objective {
@@ -70,11 +79,23 @@ impl Objective {
             Objective::Tree => "tree",
             Objective::Cycle => "cycle",
             Objective::Bipartition => "bipartition",
+            Objective::RemoteEdge => "remote-edge",
         }
     }
 
     pub fn parse(s: &str) -> Option<Objective> {
         ALL_OBJECTIVES.into_iter().find(|o| o.name() == s)
+    }
+
+    /// All valid objective names joined with `|`, for parse-error messages
+    /// (every surface enumerates the same list, so a new objective can
+    /// never be silently missing from one of them).
+    pub fn names() -> String {
+        ALL_OBJECTIVES
+            .iter()
+            .map(|o| o.name())
+            .collect::<Vec<_>>()
+            .join("|")
     }
 
     /// `f(k)`: the number of distances contributing to the objective (§3).
@@ -84,6 +105,8 @@ impl Objective {
             Objective::Star | Objective::Tree => k.saturating_sub(1) as f64,
             Objective::Cycle => k as f64,
             Objective::Bipartition => ((k / 2) * k.div_ceil(2)) as f64,
+            // the max-min objective is a single edge, not a sum
+            Objective::RemoteEdge => 1.0,
         }
     }
 
@@ -97,6 +120,12 @@ impl Objective {
             Objective::Tree => 1.0 / (2.0 * (k as f64 - 1.0)),
             Objective::Cycle => 1.0 / k as f64,
             Objective::Bipartition => 1.0 / (2.0 * (k as f64 + 1.0)),
+            // Remote-edge is outside the Lemma-1 sum family; the GMM
+            // anchor-set argument gives the same Delta/(2(k-1)) floor as
+            // tree (any k points contain a pair at most that far below
+            // the diameter-spanning pair), which is what the exemplar
+            // uses to size the coreset radius for max-min.
+            Objective::RemoteEdge => 1.0 / (2.0 * (k as f64 - 1.0)),
         }
     }
 }
@@ -106,7 +135,7 @@ pub fn farness_lower_bound(obj: Objective, k: usize, diameter: f64) -> f64 {
     obj.farness_coefficient(k) * diameter
 }
 
-/// Engine-backed evaluator for the five Table-1 objectives.
+/// Engine-backed evaluator for the six objectives (Table 1 + remote-edge).
 ///
 /// Wraps a [`DistanceEngine`] and dispatches every objective to the
 /// batched engine shapes (see the module docs for the dispatch rules).
@@ -177,6 +206,17 @@ impl<'e> Evaluator<'e> {
         ))
     }
 
+    /// Minimum pairwise distance over `set` (remote-edge / max-min) from
+    /// an engine-built submatrix.
+    pub fn remote_edge(&self, ds: &Dataset, set: &[usize]) -> Result<f64> {
+        let m = self.submatrix(ds, set)?;
+        Ok(remote_edge_from_matrix(
+            &m,
+            set.len(),
+            &positions(set.len()),
+        ))
+    }
+
     /// Evaluate one objective.
     pub fn diversity(&self, ds: &Dataset, set: &[usize], obj: Objective) -> Result<f64> {
         match obj {
@@ -185,14 +225,15 @@ impl<'e> Evaluator<'e> {
             Objective::Tree => self.tree(ds, set),
             Objective::Cycle => self.cycle(ds, set),
             Objective::Bipartition => self.bipartition(ds, set),
+            Objective::RemoteEdge => self.remote_edge(ds, set),
         }
     }
 
-    /// All five objective values (in [`ALL_OBJECTIVES`] order) from one
+    /// All six objective values (in [`ALL_OBJECTIVES`] order) from one
     /// sums pass (`k(k-1)` distance evaluations) + one symmetric tile
     /// (`k(k-1)/2` more), where scoring the objectives one by one would
     /// re-walk the pairwise distances per objective.
-    pub fn diversity_all(&self, ds: &Dataset, set: &[usize]) -> Result<[f64; 5]> {
+    pub fn diversity_all(&self, ds: &Dataset, set: &[usize]) -> Result<[f64; 6]> {
         let k = set.len();
         let (sum, star) = if k < 2 {
             (0.0, 0.0)
@@ -211,6 +252,7 @@ impl<'e> Evaluator<'e> {
             mst::mst_weight_matrix(&m, k, &members),
             tsp::tsp_weight_matrix(&m, k, &members),
             bipartition::min_bipartition_matrix(&m, k, &members),
+            remote_edge_from_matrix(&m, k, &members),
         ])
     }
 }
@@ -287,6 +329,7 @@ pub fn diversity_from_matrix(m: &[f64], k: usize, members: &[usize], obj: Object
         Objective::Tree => mst::mst_weight_matrix(m, k, members),
         Objective::Cycle => tsp::tsp_weight_matrix(m, k, members),
         Objective::Bipartition => bipartition::min_bipartition_matrix(m, k, members),
+        Objective::RemoteEdge => remote_edge_from_matrix(m, k, members),
     }
 }
 
@@ -299,6 +342,22 @@ pub fn sum_from_matrix(m: &[f64], k: usize, members: &[usize]) -> f64 {
         }
     }
     acc
+}
+
+/// Remote-edge objective over matrix positions: minimum distance among
+/// the strict upper triangle (0.0 below two members, matching the other
+/// degenerate-set conventions).
+pub fn remote_edge_from_matrix(m: &[f64], k: usize, members: &[usize]) -> f64 {
+    if members.len() < 2 {
+        return 0.0;
+    }
+    let mut best = f64::INFINITY;
+    for (a, &i) in members.iter().enumerate() {
+        for &j in &members[a + 1..] {
+            best = best.min(m[i * k + j]);
+        }
+    }
+    best
 }
 
 /// Star objective over matrix positions (the zero diagonal makes each row
@@ -340,6 +399,31 @@ mod tests {
         assert_eq!(Objective::Cycle.f_k(5), 5.0);
         assert_eq!(Objective::Bipartition.f_k(5), 6.0); // 2*3
         assert_eq!(Objective::Bipartition.f_k(4), 4.0); // 2*2
+        assert_eq!(Objective::RemoteEdge.f_k(5), 1.0);
+    }
+
+    #[test]
+    fn remote_edge_line() {
+        let ds = line();
+        // closest pair among {0, 1, 3, 7} is (0, 1)
+        assert!((diversity(&ds, &[0, 1, 2, 3], Objective::RemoteEdge) - 1.0).abs() < 1e-12);
+        // dropping point 1 makes (1, 3) the closest remaining pair
+        assert!((diversity(&ds, &[0, 2, 3], Objective::RemoteEdge) - 3.0).abs() < 1e-12);
+        let m = distance_submatrix(&ds, &[0, 1, 2, 3]);
+        assert!((remote_edge_from_matrix(&m, 4, &[0, 3]) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_names_round_trip_and_enumerate() {
+        for obj in ALL_OBJECTIVES {
+            assert_eq!(Objective::parse(obj.name()), Some(obj));
+        }
+        assert_eq!(Objective::parse("remote-edge"), Some(Objective::RemoteEdge));
+        assert_eq!(Objective::parse("maxmin"), None);
+        assert_eq!(
+            Objective::names(),
+            "sum|star|tree|cycle|bipartition|remote-edge"
+        );
     }
 
     #[test]
@@ -443,7 +527,7 @@ mod tests {
     #[test]
     fn diversity_all_deduplicates_distance_work() {
         // one sums pass (k(k-1)) + one symmetric tile (k(k-1)/2) for all
-        // five objectives; the pre-evaluator code re-walked Dataset::dist
+        // six objectives; the pre-evaluator code re-walked Dataset::dist
         // per objective (and per star center)
         let ds = line();
         let e = ScalarEngine::new();

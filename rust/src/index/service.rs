@@ -17,7 +17,7 @@
 //! `Mutex`); the cold path itself is the free function
 //! [`run_cold_query`], callable without a `&mut QueryService` so serve
 //! worker threads can run it against a borrowed root.  Accounting is
-//! error-aware: a rejected query (`k > k_max`, empty index,
+//! error-aware: a rejected query (`k < 2`, `k > k_max`, empty index,
 //! local-search-on-non-sum, engine construction failure) counts in
 //! [`ServiceStats::errors`], never as a miss — misses feed the hit rate
 //! the load harness reports, and error paths must not skew it.
@@ -29,6 +29,7 @@ use anyhow::{bail, Result};
 use crate::algo::exhaustive::exhaustive_best;
 use crate::algo::greedy::greedy_sum;
 use crate::algo::local_search::{local_search_sum, LocalSearchParams};
+use crate::algo::matching::matching_race;
 use crate::coordinator::spec::{build_matroid, MatroidSpec};
 use crate::diversity::{diversity_with_engine, Objective};
 use crate::index::tree::{AppendReceipt, CoresetIndex, DeleteReceipt};
@@ -49,6 +50,9 @@ pub enum QueryFinisher {
     Exhaustive,
     /// Greedy heuristic (cheap baseline, any objective scored after).
     Greedy,
+    /// Matching-vs-GMM race, best-of-both (any objective; built for
+    /// remote-clique/remote-edge).
+    Matching,
 }
 
 impl QueryFinisher {
@@ -57,6 +61,7 @@ impl QueryFinisher {
             QueryFinisher::LocalSearch { gamma } => format!("ls:{:x}", gamma.to_bits()),
             QueryFinisher::Exhaustive => "exhaustive".into(),
             QueryFinisher::Greedy => "greedy".into(),
+            QueryFinisher::Matching => "matching".into(),
         }
     }
 }
@@ -184,7 +189,7 @@ pub struct ServiceStats {
     pub hits: u64,
     /// Successful cold runs.  A failed query is an error, not a miss.
     pub misses: u64,
-    /// Rejected queries: `k > k_max`, empty index, invalid
+    /// Rejected queries: `k < 2`, `k > k_max`, empty index, invalid
     /// finisher/objective combination, engine construction failure.
     pub errors: u64,
     /// Requests that waited on an identical in-flight `(spec, epoch)`
@@ -370,6 +375,14 @@ pub fn run_cold_query(
     key: &str,
     engine: Option<&dyn DistanceEngine>,
 ) -> Result<(QueryResult, DistEvals)> {
+    if spec.k < 2 {
+        // rejected before it can reach the farness machinery, whose
+        // coefficients assert k > 1
+        bail!(
+            "query k = {} is below the minimum of 2 (diversity is defined over pairs)",
+            spec.k,
+        );
+    }
     if spec.k > cx.k_max {
         bail!(
             "query k = {} exceeds the index's k_max = {} (rebuild the index for larger k)",
@@ -561,6 +574,9 @@ fn finish(
             exhaustive_best(ds, m, spec.k, root, spec.objective, engine)?.solution
         }
         QueryFinisher::Greedy => greedy_sum(ds, m, spec.k, root),
+        QueryFinisher::Matching => {
+            matching_race(ds, m, spec.k, root, spec.objective, engine, rng)?.solution
+        }
     };
     let diversity = diversity_with_engine(ds, &solution, spec.objective, engine)?;
     Ok(QueryResult {
@@ -654,6 +670,11 @@ mod tests {
         svc.append(&order).unwrap();
         let big = QuerySpec::sum_local_search(5, EngineKind::Scalar);
         assert!(svc.query(&big).is_err(), "k > k_max must error");
+        // k < 2 is a structured error (not the farness assert's panic)
+        let tiny = QuerySpec::sum_local_search(1, EngineKind::Scalar);
+        let msg = format!("{:#}", svc.query(&tiny).unwrap_err());
+        assert!(msg.contains("below the minimum of 2"), "{msg}");
+        assert!(svc.query(&QuerySpec::sum_local_search(0, EngineKind::Scalar)).is_err());
     }
 
     #[test]

@@ -9,11 +9,14 @@
 //! * **coreset constructions** for partition / transversal / general
 //!   matroids ([`algo::seq_coreset`], [`algo::stream_coreset`],
 //!   [`mapreduce`]),
-//! * the **five DMMC objectives** of Table 1 ([`diversity`]), scored
-//!   through the engine-backed [`diversity::Evaluator`] (see below),
+//! * the **six DMMC objectives** — Table 1 plus remote-edge/max-min —
+//!   ([`diversity`]), scored through the engine-backed
+//!   [`diversity::Evaluator`] (see below),
 //! * **final-solution extractors**: AMT local search for sum-DMMC
-//!   ([`algo::local_search`]) and matroid-pruned exhaustive search for the
-//!   other variants ([`algo::exhaustive`]),
+//!   ([`algo::local_search`]), matroid-pruned exhaustive search for the
+//!   other variants ([`algo::exhaustive`]), and a maximum-weight-matching
+//!   vs farthest-point race for remote-clique/remote-edge
+//!   ([`algo::matching`]),
 //! * the **distance-engine runtime** ([`runtime`]): a widened
 //!   [`runtime::DistanceEngine`] trait (min-folds, pairwise tiles,
 //!   per-candidate sums) behind a backend registry
@@ -104,7 +107,7 @@
 //!   diagonal); CPU backends must produce bit-identical tiles, making
 //!   every objective value engine-independent
 //!   (`tests/engine_equivalence.rs`);
-//! * [`diversity::Evaluator::diversity_all`] scores all five objectives
+//! * [`diversity::Evaluator::diversity_all`] scores all six objectives
 //!   from one sums pass + one tile, and the exhaustive finisher evaluates
 //!   every DFS leaf from a single candidate tile — no duplicate distance
 //!   work (pinned by an evaluation-count regression).

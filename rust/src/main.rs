@@ -16,6 +16,7 @@
 //! dmmc run --data wikisim:20000 --algo seq --tau 64 --k 25 --finisher local-search
 //! dmmc run --data songsim:20000 --algo mr --workers 8 --tau 64 --k 22
 //! dmmc run --data cube:5000x8 --algo stream --tau 32 --k 6 --objective tree --finisher exhaustive
+//! dmmc run --data cube:5000x8 --algo seq --tau 32 --k 6 --objective remote-edge --finisher matching
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -47,8 +48,8 @@ SUBCOMMANDS
   stats      --data <file|kind:n>
   run        --data <file|kind:n> --algo seq|stream|mr|index|full
              [--k K] [--tau T | --eps E] [--workers L] [--segment N]
-             [--objective sum|star|tree|cycle|bipartition]
-             [--finisher local-search|exhaustive|greedy] [--gamma G]
+             [--objective sum|star|tree|cycle|bipartition|remote-edge]
+             [--finisher local-search|exhaustive|greedy|matching] [--gamma G]
              [--engine batch|scalar|simd|pjrt] [--matroid transversal|partition:R|uniform:R]
              [--seed S]
   index      build  --data <file|kind:n> --out F.dmmcx [--k K] [--tau T] [--segment N]
@@ -66,7 +67,7 @@ SUBCOMMANDS
              wire protocol, one line per request, replies `OK ...`/`ERR ...`:
                PING | TENANTS | LOAD n F | UNLOAD n | STATS n | SAVE n
                QUERY n <objective> <k> [finisher=F] [gamma=G] [engine=E] [matroid=M]
-               APPEND n [count] [segment=N] | DELETE n <rows> | QUIT | SHUTDOWN
+               APPEND n [count] [segment=N] | DELETE n <rows> | DEBUG n panic | QUIT | SHUTDOWN
   sweep      --config configs/<file>.toml [--csv out.csv]
   artifacts-check  [--data <kind:n>]
   help
@@ -196,14 +197,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown --algo {other}"),
     };
     let objective = Objective::parse(args.str_or("objective", "sum"))
-        .context("bad --objective")?;
+        .with_context(|| format!("bad --objective (valid: {})", Objective::names()))?;
     let finisher = match args.str_or("finisher", "local-search") {
         "local-search" | "ls" => Finisher::LocalSearch {
             gamma: args.f64_or("gamma", 0.0)?,
         },
         "exhaustive" => Finisher::Exhaustive,
         "greedy" => Finisher::Greedy,
-        other => bail!("unknown --finisher {other}"),
+        "matching" => Finisher::Matching,
+        other => bail!("unknown --finisher {other} (local-search|exhaustive|greedy|matching)"),
     };
     let engine = EngineKind::parse(args.str_or("engine", EngineKind::default().name()))
         .context("bad --engine (batch|scalar|simd|pjrt)")?;
@@ -503,7 +505,7 @@ fn cmd_index_query(args: &Args) -> Result<()> {
     service.warm_cache(warm);
 
     let objective = Objective::parse(args.str_or("objective", "sum"))
-        .context("bad --objective")?;
+        .with_context(|| format!("bad --objective (valid: {})", Objective::names()))?;
     let default_finisher = if objective == Objective::Sum { "local-search" } else { "exhaustive" };
     let finisher = match args.str_or("finisher", default_finisher) {
         "local-search" | "ls" => QueryFinisher::LocalSearch {
@@ -511,7 +513,8 @@ fn cmd_index_query(args: &Args) -> Result<()> {
         },
         "exhaustive" => QueryFinisher::Exhaustive,
         "greedy" => QueryFinisher::Greedy,
-        other => bail!("unknown --finisher {other}"),
+        "matching" => QueryFinisher::Matching,
+        other => bail!("unknown --finisher {other} (local-search|exhaustive|greedy|matching)"),
     };
     let spec = QuerySpec {
         objective,
@@ -609,15 +612,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let taus = cfg.usize_list("sweep.taus")?;
     let seeds = cfg.usize_list("sweep.seeds")?;
     let k_fracs = cfg.usize_list("sweep.k_fractions")?;
-    let objective =
-        Objective::parse(cfg.str_or("run.objective", "sum")).context("run.objective")?;
+    let objective = Objective::parse(cfg.str_or("run.objective", "sum"))
+        .with_context(|| format!("run.objective (valid: {})", Objective::names()))?;
     let finisher = match cfg.str_or("run.finisher", "local-search") {
         "local-search" => Finisher::LocalSearch {
             gamma: cfg.f64_or("run.gamma", 0.0),
         },
         "exhaustive" => Finisher::Exhaustive,
         "greedy" => Finisher::Greedy,
-        other => bail!("run.finisher {other} unknown"),
+        "matching" => Finisher::Matching,
+        other => bail!("run.finisher {other} unknown (local-search|exhaustive|greedy|matching)"),
     };
     let engine = EngineKind::parse(cfg.str_or("run.engine", EngineKind::default().name()))
         .context("run.engine")?;

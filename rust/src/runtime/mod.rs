@@ -45,7 +45,7 @@ use crate::core::Dataset;
 ///
 /// `Batch` is the default: bit-identical to `Scalar` on every path
 /// (min-folds, pairwise tiles, sums — so switching engines never changes
-/// a result, including the five diversity objectives that evaluate
+/// a result, including the six diversity objectives that evaluate
 /// through the tiles), several times faster on multi-core.  `Simd` adds
 /// lane-unrolled inner loops with deterministic reductions (Euclidean
 /// bit-identical, cosine within [`simd::SIMD_COSINE_ABS_TOL`]).  `Scalar`

@@ -31,6 +31,18 @@ pub mod replay;
 pub mod server;
 pub mod state;
 
+/// Render a `catch_unwind` payload as a one-line message (panic payloads
+/// are `&str` or `String` in practice; anything else is opaque).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
 pub use protocol::{execute, handle_line, parse_request, Request};
 pub use replay::{run_replay, write_replay_csv, ReplayReport};
 pub use server::{serve, spawn, ServerHandle, DEFAULT_WORKERS};

@@ -10,15 +10,20 @@
 //! TENANTS
 //! LOAD <name> <path.dmmcx>
 //! UNLOAD <name>
-//! QUERY <tenant> <objective> <k> [finisher=ls|exhaustive|greedy]
+//! QUERY <tenant> <objective> <k> [finisher=ls|exhaustive|greedy|matching]
 //!       [gamma=G] [engine=E] [matroid=M]
 //! APPEND <tenant> [count] [segment=N]
 //! DELETE <tenant> <rows>          # N or A..B, comma-separated
 //! STATS <tenant>
 //! SAVE <tenant>
+//! DEBUG <tenant> panic            # fault injection: panics in execute
 //! QUIT                            # close this connection
 //! SHUTDOWN                        # stop the whole server
 //! ```
+//!
+//! `DEBUG ... panic` exists so the worker-pool panic containment is
+//! testable over the wire without a deliberately buggy finisher: the
+//! server must answer `ERR internal ...` and keep every worker alive.
 //!
 //! Query replies carry the diversity both human-readable (`div=`) and as
 //! f64 hex bits (`bits=`), so a client can assert bit-identity of
@@ -57,8 +62,29 @@ pub enum Request {
     Delete { tenant: String, rows: Vec<usize> },
     Stats { tenant: String },
     Save { tenant: String },
+    /// Fault injection (`DEBUG <tenant> panic`): deliberately panics
+    /// inside `execute` to exercise the worker-pool containment path.
+    Debug { tenant: String, action: String },
     Quit,
     Shutdown,
+}
+
+impl Request {
+    /// The tenant a request addresses, when it addresses one — used by
+    /// the panic-containment path to charge the failure to the right
+    /// tenant's error counter.
+    pub fn tenant(&self) -> Option<&str> {
+        match self {
+            Request::Load { name, .. } | Request::Unload { name } => Some(name),
+            Request::Query { tenant, .. }
+            | Request::Append { tenant, .. }
+            | Request::Delete { tenant, .. }
+            | Request::Stats { tenant }
+            | Request::Save { tenant }
+            | Request::Debug { tenant, .. } => Some(tenant),
+            Request::Ping | Request::Tenants | Request::Quit | Request::Shutdown => None,
+        }
+    }
 }
 
 fn kv(tok: &str) -> Option<(&str, &str)> {
@@ -90,6 +116,14 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "SAVE" => Ok(Request::Save {
             tenant: arg(1, "a tenant name")?.to_string(),
         }),
+        "DEBUG" => {
+            let tenant = arg(1, "a tenant name")?.to_string();
+            let action = arg(2, "an action (panic)")?.to_string();
+            if action != "panic" {
+                bail!("unknown DEBUG action {action} (panic)");
+            }
+            Ok(Request::Debug { tenant, action })
+        }
         "DELETE" => Ok(Request::Delete {
             tenant: arg(1, "a tenant name")?.to_string(),
             rows: parse_rows(arg(2, "a row list")?)?,
@@ -116,9 +150,13 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }
         "QUERY" => {
             let tenant = arg(1, "a tenant name")?.to_string();
-            let objective = Objective::parse(arg(2, "an objective")?)
-                .with_context(|| format!("bad objective {}", toks[2]))?;
+            let objective = Objective::parse(arg(2, "an objective")?).with_context(|| {
+                format!("bad objective {} ({})", toks[2], Objective::names())
+            })?;
             let k: usize = arg(3, "k")?.parse().with_context(|| format!("bad k {}", toks[3]))?;
+            if k < 2 {
+                bail!("bad k {k}: diversity queries need k >= 2");
+            }
             let mut finisher_name: Option<&str> = None;
             let mut gamma = 0.0f64;
             let mut engine = None;
@@ -139,25 +177,27 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     other => bail!("unknown QUERY option {other} (finisher|gamma|engine|matroid)"),
                 }
             }
-            // default mirrors `dmmc index query`: local search for sum
-            // (the only objective it applies to), greedy otherwise —
-            // exhaustive is opt-in on a server (exponential in k)
+            // defaults: local search for sum (the only objective it
+            // applies to), the matching race for remote-edge (its
+            // purpose-built heuristic), greedy otherwise — exhaustive is
+            // opt-in on a server (exponential in k)
             let finisher = match finisher_name {
-                None => {
-                    if objective == Objective::Sum {
-                        QueryFinisher::LocalSearch { gamma }
-                    } else {
-                        QueryFinisher::Greedy
-                    }
-                }
+                None => match objective {
+                    Objective::Sum => QueryFinisher::LocalSearch { gamma },
+                    Objective::RemoteEdge => QueryFinisher::Matching,
+                    _ => QueryFinisher::Greedy,
+                },
                 Some("local-search") | Some("ls") => QueryFinisher::LocalSearch { gamma },
                 Some("exhaustive") => QueryFinisher::Exhaustive,
                 Some("greedy") => QueryFinisher::Greedy,
-                Some(other) => bail!("unknown finisher {other} (local-search|exhaustive|greedy)"),
+                Some("matching") => QueryFinisher::Matching,
+                Some(other) => {
+                    bail!("unknown finisher {other} (local-search|exhaustive|greedy|matching)")
+                }
             };
             Ok(Request::Query { tenant, objective, k, finisher, engine, matroid })
         }
-        other => bail!("unknown command {other} (PING TENANTS LOAD UNLOAD QUERY APPEND DELETE STATS SAVE QUIT SHUTDOWN)"),
+        other => bail!("unknown command {other} (PING TENANTS LOAD UNLOAD QUERY APPEND DELETE STATS SAVE DEBUG QUIT SHUTDOWN)"),
     }
 }
 
@@ -266,6 +306,15 @@ pub fn execute(state: &ServeState, req: &Request) -> Result<String> {
             let (path, entries) = t.save()?;
             Ok(format!("saved tenant={} path={} entries={}", tenant, path.display(), entries))
         }
+        Request::Debug { tenant, action } => {
+            // unknown tenant is a normal error; a known tenant panics on
+            // purpose so tests can poison a worker deterministically
+            state.get(tenant)?;
+            match action.as_str() {
+                "panic" => panic!("DEBUG {tenant} panic: injected fault"),
+                other => bail!("unknown DEBUG action {other} (panic)"),
+            }
+        }
     }
 }
 
@@ -317,6 +366,22 @@ mod tests {
             Request::Query { finisher, .. } => assert_eq!(finisher, QueryFinisher::Greedy),
             other => panic!("parsed {other:?}"),
         }
+        // remote-edge parses on the wire and defaults to the matching race
+        match parse_request("QUERY main remote-edge 4").unwrap() {
+            Request::Query { objective, finisher, .. } => {
+                assert_eq!(objective, Objective::RemoteEdge);
+                assert_eq!(finisher, QueryFinisher::Matching);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        match parse_request("QUERY main tree 3 finisher=matching").unwrap() {
+            Request::Query { finisher, .. } => assert_eq!(finisher, QueryFinisher::Matching),
+            other => panic!("parsed {other:?}"),
+        }
+        assert_eq!(
+            parse_request("DEBUG main panic").unwrap(),
+            Request::Debug { tenant: "main".into(), action: "panic".into() }
+        );
         assert_eq!(
             parse_request("APPEND main 500 segment=100").unwrap(),
             Request::Append { tenant: "main".into(), count: Some(500), segment: Some(100) }
@@ -344,6 +409,37 @@ mod tests {
         assert!(parse_request("APPEND main 10 20").is_err());
         assert!(parse_request("DELETE main").is_err());
         assert!(parse_request("DELETE main 9..3").is_err());
+        assert!(parse_request("DEBUG main frobnicate").is_err());
+    }
+
+    #[test]
+    fn parse_errors_enumerate_valid_names() {
+        // an unknown objective/finisher names every valid choice, so a
+        // new variant missing from one surface is caught by eye (and by
+        // these pins)
+        let obj_err = format!("{:#}", parse_request("QUERY main maxmin 4").unwrap_err());
+        assert!(
+            obj_err.contains("sum|star|tree|cycle|bipartition|remote-edge"),
+            "{obj_err}"
+        );
+        let fin_err =
+            format!("{:#}", parse_request("QUERY main sum 4 finisher=magic").unwrap_err());
+        assert!(
+            fin_err.contains("local-search|exhaustive|greedy|matching"),
+            "{fin_err}"
+        );
+    }
+
+    #[test]
+    fn small_k_query_is_a_structured_error() {
+        // k=1 used to reach the farness assert and panic the handler;
+        // now it is rejected at the protocol boundary
+        let err = format!("{:#}", parse_request("QUERY main sum 1").unwrap_err());
+        assert!(err.contains("k >= 2"), "{err}");
+        let state = ServeState::new(4);
+        let reply = handle_line(&state, "QUERY main remote-edge 1");
+        assert!(reply.starts_with("ERR "), "{reply}");
+        assert!(reply.contains("k >= 2"), "{reply}");
     }
 
     #[test]

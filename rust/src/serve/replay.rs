@@ -69,6 +69,7 @@ fn synth_ops(state: &ServeState, n: usize, seed: u64) -> Result<Vec<String>> {
         specs.push(format!("QUERY {name} sum {k}"));
         specs.push(format!("QUERY {name} sum {k} finisher=greedy"));
         specs.push(format!("QUERY {name} tree {k} finisher=greedy"));
+        specs.push(format!("QUERY {name} remote-edge {k} finisher=matching"));
     }
     if specs.is_empty() {
         specs.push(format!("QUERY {name} sum {k_max}"));

@@ -9,9 +9,16 @@
 //! mutations.  `SHUTDOWN` sets the stop flag and pokes the listener with
 //! a loopback connect so the blocking `accept` wakes and the scope can
 //! join.
+//!
+//! Panic containment: the pool is fixed-size, so an uncontained panic
+//! would permanently shrink it.  Every request executes under
+//! `catch_unwind` — a panicking handler answers `ERR internal ...`,
+//! charges the tenant's error counter, and the worker keeps serving
+//! (pinned by the poisoned-request pool-survival test).
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -62,8 +69,10 @@ fn worker_loop(
             Ok(stream) => stream,
             Err(_) => break,
         };
-        // a broken connection only ends that connection
-        let _ = handle_conn(state, stream, stop, local);
+        // a broken connection only ends that connection, and a panic
+        // that escapes the per-request containment only ends that
+        // connection too — the pool never shrinks
+        let _ = catch_unwind(AssertUnwindSafe(|| handle_conn(state, stream, stop, local)));
     }
 }
 
@@ -101,9 +110,18 @@ fn handle_conn(
                 break;
             }
             Ok(req) => {
-                let reply = match execute(state, &req) {
-                    Ok(payload) => format!("OK {payload}"),
-                    Err(e) => format!("ERR {}", flatten_error(&e)),
+                let reply = match catch_unwind(AssertUnwindSafe(|| execute(state, &req))) {
+                    Ok(Ok(payload)) => format!("OK {payload}"),
+                    Ok(Err(e)) => format!("ERR {}", flatten_error(&e)),
+                    Err(payload) => {
+                        // contained panic: reply like any other error and
+                        // charge the addressed tenant's error counter
+                        if let Some(t) = req.tenant().and_then(|n| state.get(n).ok()) {
+                            t.record_error();
+                        }
+                        let msg = crate::serve::panic_message(payload.as_ref());
+                        format!("ERR internal {}", msg.replace('\n', " "))
+                    }
                 };
                 writeln!(writer, "{reply}")?;
                 writer.flush()?;

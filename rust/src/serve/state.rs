@@ -34,6 +34,7 @@
 //! MapReduce simulator follows.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
@@ -251,6 +252,12 @@ impl Tenant {
         *self.cache.lock().unwrap().stats()
     }
 
+    /// Charge one error to this tenant's stats — the server's
+    /// panic-containment path, where no query-layer accounting ran.
+    pub fn record_error(&self) {
+        self.cache.lock().unwrap().record_error();
+    }
+
     /// Warm the result cache from persisted entries (no counters touched).
     pub fn warm(&self, entries: Vec<(String, u64, QueryResult)>) {
         let mut cache = self.cache.lock().unwrap();
@@ -314,8 +321,19 @@ impl Tenant {
             epoch,
         };
         // the cold run happens outside every lock; the engine is built
-        // per run (DistanceEngine is not Send + Sync)
-        match run_cold_query(&cx, spec, &key, None) {
+        // per run (DistanceEngine is not Send + Sync).  A panicking
+        // finisher is converted to a plain error *here*, before the
+        // publish/deregister protocol below — otherwise the leader's
+        // inflight slot would leak registered forever and every future
+        // identical query would block on it
+        let cold = catch_unwind(AssertUnwindSafe(|| run_cold_query(&cx, spec, &key, None)))
+            .unwrap_or_else(|payload| {
+                Err(anyhow::anyhow!(
+                    "internal panic in cold query: {}",
+                    crate::serve::panic_message(payload.as_ref())
+                ))
+            });
+        match cold {
             Ok((result, dist_evals)) => {
                 // publish-before-deregister: cache first, then remove the
                 // slot, then wake followers — no instant exists where a

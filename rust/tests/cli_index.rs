@@ -8,7 +8,11 @@
 //!   bugfix); an exhausted index refuses further appends;
 //! * **cross-process warm cache** — `index query` persists its result
 //!   cache to the `.cache` sidecar, so a repeat invocation in a fresh
-//!   process answers from cache (`dist_evals=cached`) bit-identically.
+//!   process answers from cache (`dist_evals=cached`) bit-identically;
+//! * **structured argument errors** — a bogus `--objective` enumerates
+//!   every valid name (all six), `--k 1` is a clean error (diversity is
+//!   defined over pairs, and `farness_coefficient` would divide by zero),
+//!   and the remote-edge objective answers through the matching finisher.
 
 use std::path::PathBuf;
 use std::process::{Command, Output};
@@ -101,4 +105,58 @@ fn repeat_query_hits_the_persisted_cache_across_processes() {
 
     std::fs::remove_file(&idx).ok();
     std::fs::remove_file(&sidecar).ok();
+}
+
+#[test]
+fn bad_objective_and_small_k_are_structured_errors() {
+    let idx = tmp("errs.dmmcx");
+    let idx_s = idx.to_str().unwrap();
+    let built = dmmc(&[
+        "index", "build", "--data", "cube:150x2", "--out", idx_s, "--k", "4", "--tau", "8",
+        "--matroid", "uniform:4", "--engine", "scalar", "--seed", "7",
+    ]);
+    assert!(built.status.success(), "build failed: {}", String::from_utf8_lossy(&built.stderr));
+
+    // a bogus objective must enumerate every valid name, all six of them
+    let bogus = dmmc(&[
+        "index", "query", "--index", idx_s, "--k", "4", "--objective", "frobnicate",
+    ]);
+    assert!(!bogus.status.success());
+    let err = String::from_utf8_lossy(&bogus.stderr).to_string();
+    assert!(
+        err.contains("sum|star|tree|cycle|bipartition|remote-edge"),
+        "objective error does not enumerate the valid names:\n{err}"
+    );
+
+    // k = 1 is an error (diversity is defined over pairs), not a panic
+    let small = dmmc(&["index", "query", "--index", idx_s, "--k", "1"]);
+    assert!(!small.status.success());
+    let err = String::from_utf8_lossy(&small.stderr).to_string();
+    assert!(err.contains("below the minimum of 2"), "wrong small-k error:\n{err}");
+
+    // an unknown finisher enumerates the valid ones, including matching
+    let fin = dmmc(&["index", "query", "--index", idx_s, "--k", "4", "--finisher", "bogus"]);
+    assert!(!fin.status.success());
+    let err = String::from_utf8_lossy(&fin.stderr).to_string();
+    assert!(
+        err.contains("local-search|exhaustive|greedy|matching"),
+        "finisher error does not enumerate the valid names:\n{err}"
+    );
+
+    // and the new surface works end to end: remote-edge via the matching race
+    let re = dmmc(&[
+        "index", "query", "--index", idx_s, "--k", "4", "--objective", "remote-edge",
+        "--finisher", "matching",
+    ]);
+    let out = stdout(&re);
+    assert!(
+        re.status.success(),
+        "remote-edge query failed: {out}\n{}",
+        String::from_utf8_lossy(&re.stderr)
+    );
+    assert!(out.contains("diversity="), "{out}");
+    assert!(out.contains("|sol|=4"), "{out}");
+
+    std::fs::remove_file(&idx).ok();
+    std::fs::remove_file(PathBuf::from(format!("{idx_s}.cache"))).ok();
 }

@@ -2,10 +2,11 @@
 //!
 //! On instances small enough to brute-force, the (1-eps)-coreset property
 //! (Definition 3) is checked directly: for every diversity function and
-//! matroid type — the full Lemma-2 grid of all five Table-1 objectives
-//! under partition and transversal matroids, seeded deterministically —
-//! the best independent k-set inside the coreset must be within (1 - eps)
-//! of the best independent k-set of the whole input.
+//! matroid type — the full Lemma-2 grid of all six objectives (Table 1
+//! plus remote-edge, whose max-min value moves by at most 2r under
+//! coreset substitution) under partition and transversal matroids, seeded
+//! deterministically — the best independent k-set inside the coreset must
+//! be within (1 - eps) of the best independent k-set of the whole input.
 
 use matroid_coreset::algo::exhaustive::exhaustive_best;
 use matroid_coreset::algo::seq_coreset::seq_coreset;

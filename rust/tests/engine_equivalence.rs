@@ -284,7 +284,13 @@ fn diversity_evaluator_threaded_tile_bit_identical() {
         es.submatrix(&ds, &set).unwrap(),
         eb.submatrix(&ds, &set).unwrap()
     );
-    for obj in [Objective::Sum, Objective::Star, Objective::Tree, Objective::Cycle] {
+    for obj in [
+        Objective::Sum,
+        Objective::Star,
+        Objective::Tree,
+        Objective::Cycle,
+        Objective::RemoteEdge,
+    ] {
         let a = es.diversity(&ds, &set, obj).unwrap();
         let b = eb.diversity(&ds, &set, obj).unwrap();
         assert!(a.to_bits() == b.to_bits(), "{obj:?}: {a} vs {b}");
@@ -312,9 +318,9 @@ fn evaluator_distance_evaluation_counts() {
     assert_eq!(
         e.dist_evals(),
         9 * 8 + 9 * 8 / 2,
-        "all five objectives = one sums pass + one symmetric tile; the \
-         pre-evaluator code re-walked Dataset::dist per objective and per \
-         star center"
+        "all six objectives = one sums pass + one symmetric tile (the \
+         remote-edge min reads the same tile); the pre-evaluator code \
+         re-walked Dataset::dist per objective and per star center"
     );
 
     e.reset_dist_evals();
@@ -347,6 +353,46 @@ fn seq_coreset_identical_across_engines() {
     let c = seq_coreset(&ds, &m, 6, Budget::Clusters(20), &SimdEngine::for_dataset(&ds)).unwrap();
     assert_eq!(a.indices, c.indices);
     assert_eq!(a.radius, c.radius);
+}
+
+#[test]
+fn remote_edge_engine_independent_and_matches_reference() {
+    // the new max-min objective on every CPU backend: bit-identical
+    // values, and equal to an index-pair min over Dataset::dist upcast
+    // the same way the tile is (f32 then f64) — the reference the tile
+    // path must reproduce
+    for metric in [Metric::Euclidean, Metric::Cosine] {
+        let ds = dataset(metric, 401, 7, 21);
+        let scalar = ScalarEngine::new();
+        let batch = BatchEngine::for_dataset(&ds);
+        let mut rng = Rng::new(23);
+        for k in [2usize, 3, 7, 12] {
+            let set = rng.sample_indices(ds.n(), k);
+            let a = Evaluator::new(&scalar)
+                .diversity(&ds, &set, Objective::RemoteEdge)
+                .unwrap();
+            let b = Evaluator::new(&batch)
+                .diversity(&ds, &set, Objective::RemoteEdge)
+                .unwrap();
+            assert!(a.to_bits() == b.to_bits(), "{metric:?} k={k}: {a} vs {b}");
+            if metric == Metric::Euclidean {
+                let c = Evaluator::new(&SimdEngine::for_dataset(&ds))
+                    .diversity(&ds, &set, Objective::RemoteEdge)
+                    .unwrap();
+                assert!(a.to_bits() == c.to_bits(), "simd k={k}: {a} vs {c}");
+            }
+            let mut reference = f64::INFINITY;
+            for (i, &x) in set.iter().enumerate() {
+                for &y in &set[i + 1..] {
+                    reference = reference.min(f64::from(ds.dist(x, y) as f32));
+                }
+            }
+            assert!(
+                a.to_bits() == reference.to_bits(),
+                "{metric:?} k={k}: tile min {a} vs pairwise reference {reference}"
+            );
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,119 @@
+//! Integration: the matching-vs-GMM finisher race (`algo::matching`).
+//!
+//! Pins the race's three contracts across objectives and matroid types:
+//!
+//! * **best-of-both never loses** — the race result is at least as good
+//!   as each standalone arm (matching, GMM) for every objective, under
+//!   partition and transversal matroids;
+//! * **determinism** — the winner is a pure function of
+//!   `(dataset, matroid, k, candidates, objective, seed)`, and on
+//!   Euclidean data the race is engine-independent (scalar vs batch
+//!   produce bit-identical tiles, hence identical races);
+//! * **quality sanity** — the race never exceeds the exhaustive optimum,
+//!   and for remote-edge under a uniform matroid the GMM arm's classic
+//!   farthest-point 2-approximation carries over to the race.
+
+use matroid_coreset::algo::exhaustive::exhaustive_best;
+use matroid_coreset::algo::matching::matching_race;
+use matroid_coreset::data::synth;
+use matroid_coreset::diversity::{Objective, ALL_OBJECTIVES};
+use matroid_coreset::matroid::{Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid};
+use matroid_coreset::runtime::{BatchEngine, ScalarEngine};
+use matroid_coreset::util::rng::Rng;
+
+#[test]
+fn race_never_loses_under_partition_matroid() {
+    let ds = synth::clustered(90, 2, 5, 0.1, 3, 21);
+    let m = PartitionMatroid::new(vec![2, 2, 2]);
+    let cands: Vec<usize> = (0..ds.n()).collect();
+    let e = ScalarEngine::new();
+    for obj in ALL_OBJECTIVES {
+        let mut rng = Rng::new(5);
+        let race = matching_race(&ds, &m, 5, &cands, obj, &e, &mut rng).unwrap();
+        assert_eq!(race.solution.len(), 5, "{obj:?}");
+        assert!(m.is_independent(&ds, &race.solution), "{obj:?}");
+        assert!(
+            race.diversity >= race.matching_value - 1e-12
+                && race.diversity >= race.gmm_value - 1e-12,
+            "{obj:?}: race {} lost to an arm (matching {}, gmm {})",
+            race.diversity,
+            race.matching_value,
+            race.gmm_value
+        );
+    }
+}
+
+#[test]
+fn race_never_loses_under_transversal_matroid() {
+    let ds = synth::wikisim(60, 5);
+    let m = TransversalMatroid::new();
+    let cands: Vec<usize> = (0..ds.n()).collect();
+    let e = ScalarEngine::new();
+    for obj in ALL_OBJECTIVES {
+        let mut rng = Rng::new(9);
+        let race = matching_race(&ds, &m, 4, &cands, obj, &e, &mut rng).unwrap();
+        assert_eq!(race.solution.len(), 4, "{obj:?}");
+        assert!(m.is_independent(&ds, &race.solution), "{obj:?}");
+        assert!(
+            race.diversity >= race.matching_value - 1e-12
+                && race.diversity >= race.gmm_value - 1e-12,
+            "{obj:?}: race {} lost to an arm (matching {}, gmm {})",
+            race.diversity,
+            race.matching_value,
+            race.gmm_value
+        );
+    }
+}
+
+#[test]
+fn race_is_deterministic_and_engine_independent() {
+    let ds = synth::clustered(70, 3, 4, 0.1, 2, 8);
+    let m = UniformMatroid::new(6);
+    let cands: Vec<usize> = (0..ds.n()).collect();
+    let scalar = ScalarEngine::new();
+    let batch = BatchEngine::for_dataset(&ds);
+    for obj in [Objective::RemoteEdge, Objective::Sum, Objective::Tree] {
+        let run = |e: &dyn matroid_coreset::runtime::DistanceEngine, seed: u64| {
+            let mut rng = Rng::new(seed);
+            matching_race(&ds, &m, 6, &cands, obj, e, &mut rng).unwrap()
+        };
+        let (a, b) = (run(&scalar, 31), run(&scalar, 31));
+        assert_eq!(a.solution, b.solution, "{obj:?}: same seed, different race");
+        assert_eq!(a.winner, b.winner, "{obj:?}");
+        assert_eq!(a.diversity.to_bits(), b.diversity.to_bits(), "{obj:?}");
+
+        // Euclidean scalar/batch tiles are bit-identical, so the whole
+        // race — both arms and the scoring — must match bitwise
+        let c = run(&batch, 31);
+        assert_eq!(a.solution, c.solution, "{obj:?}: engine changed the race");
+        assert_eq!(a.winner, c.winner, "{obj:?}");
+        assert_eq!(a.diversity.to_bits(), c.diversity.to_bits(), "{obj:?}");
+    }
+}
+
+#[test]
+fn race_bounded_by_exhaustive_and_two_approx_on_remote_edge() {
+    // small enough to brute-force: the race can never beat the optimum,
+    // and for remote-edge under a uniform matroid the farthest-point arm
+    // guarantees half the optimum (Ravi–Rosenkrantz–Tayi), which the
+    // best-of-both inherits
+    let ds = synth::clustered(30, 2, 5, 0.05, 1, 17);
+    let m = UniformMatroid::new(4);
+    let cands: Vec<usize> = (0..ds.n()).collect();
+    let e = ScalarEngine::new();
+    let opt = exhaustive_best(&ds, &m, 4, &cands, Objective::RemoteEdge, &e)
+        .unwrap()
+        .diversity;
+    let mut rng = Rng::new(3);
+    let race = matching_race(&ds, &m, 4, &cands, Objective::RemoteEdge, &e, &mut rng).unwrap();
+    assert!(
+        race.diversity <= opt + 1e-9,
+        "race {} beat the exhaustive optimum {opt}",
+        race.diversity
+    );
+    assert!(
+        race.diversity >= 0.5 * opt - 1e-9,
+        "race {} below the 2-approximation floor of optimum {opt}",
+        race.diversity
+    );
+}

@@ -5,7 +5,8 @@
 //!
 //! * **quality** — the root coreset of a B-batch index matches the
 //!   one-shot SeqCoreset grid of `coreset_quality` on the same data,
-//!   within a pinned ratio, for every Table-1 objective;
+//!   within a pinned ratio, for all six objectives (Table 1 plus
+//!   remote-edge) under both partition and transversal matroids;
 //! * **sublinear appends** — each append touches exactly
 //!   `1 + trailing_ones(segments)` nodes (O(log segments)), and the
 //!   cumulative dist-eval ledger stays far below rebuilding a one-shot
@@ -23,7 +24,9 @@ use matroid_coreset::diversity::{Objective, ALL_OBJECTIVES};
 use matroid_coreset::index::{
     CoresetIndex, DistEvals, IndexConfig, LeafIngest, QueryService, QuerySpec,
 };
-use matroid_coreset::matroid::{maximal_independent, PartitionMatroid, UniformMatroid};
+use matroid_coreset::matroid::{
+    maximal_independent, PartitionMatroid, TransversalMatroid, UniformMatroid,
+};
 use matroid_coreset::prop_assert;
 use matroid_coreset::proptest::{check, Gen};
 use matroid_coreset::runtime::{EngineKind, ScalarEngine};
@@ -80,6 +83,33 @@ fn root_quality_matches_one_shot_grid() {
         root_sum >= PINNED_RATIO * brute - 1e-9,
         "sum: index root {root_sum} < {PINNED_RATIO} * brute {brute}"
     );
+}
+
+#[test]
+fn root_quality_matches_one_shot_grid_transversal() {
+    // the exact dataset/matroid of coreset_quality's transversal grid
+    let ds = synth::wikisim(50, 3);
+    let m = TransversalMatroid::new();
+    let k = 3;
+    let one_shot = seq_coreset(&ds, &m, k, Budget::Epsilon(0.5), &ScalarEngine::new()).unwrap();
+
+    let mut idx = CoresetIndex::new(&ds, &m, scalar_cfg(k, 10));
+    let order: Vec<usize> = (0..ds.n()).collect();
+    idx.ingest(&order, 13).unwrap();
+    assert_eq!(idx.segments(), 4);
+    let root = idx.root();
+
+    let scalar = ScalarEngine::new();
+    for obj in ALL_OBJECTIVES {
+        let os_opt = exhaustive_best(&ds, &m, k, &one_shot.indices, obj, &scalar)
+            .unwrap()
+            .diversity;
+        let root_opt = exhaustive_best(&ds, &m, k, &root, obj, &scalar).unwrap().diversity;
+        assert!(
+            root_opt >= PINNED_RATIO * os_opt - 1e-9,
+            "transversal {obj:?}: index root {root_opt} < {PINNED_RATIO} * one-shot {os_opt}"
+        );
+    }
 }
 
 #[test]

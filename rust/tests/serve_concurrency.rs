@@ -15,7 +15,11 @@
 //! * **error accounting** — a failing query counts as an error, never a
 //!   miss;
 //! * **the TCP front end** — a real socket roundtrip: query cold, query
-//!   warm, mutate, query cold again, clean shutdown.
+//!   warm, mutate, query cold again, clean shutdown;
+//! * **panic containment** — a request that panics mid-execution (the
+//!   `DEBUG <tenant> panic` fault injector) answers `ERR internal`,
+//!   charges the tenant's error counter, and leaves every worker in the
+//!   pool serviceable.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -245,6 +249,78 @@ fn failed_queries_count_as_errors_not_misses() {
     let ok = QuerySpec::sum_local_search(3, EngineKind::Scalar);
     assert_eq!(tenant.query(&ok).unwrap().source, QuerySource::Cold);
     assert_eq!(tenant.query(&ok).unwrap().source, QuerySource::Cache);
+}
+
+fn ask_on(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    line: &str,
+) -> String {
+    writeln!(writer, "{line}").unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim_end().to_string()
+}
+
+#[test]
+fn poisoned_requests_do_not_kill_the_worker_pool() {
+    const WORKERS: usize = 2;
+    let state = Arc::new(ServeState::new(8));
+    let snap = snapshot(200, 120, 99);
+    let tenant = state.add("main", &snap).unwrap();
+    let handle = spawn(Arc::clone(&state), WORKERS).unwrap();
+
+    // hold one connection per worker so every worker in the pool sees a
+    // poisoned request
+    let mut conns: Vec<(BufReader<TcpStream>, BufWriter<TcpStream>)> = (0..WORKERS)
+        .map(|_| {
+            let stream = TcpStream::connect(handle.addr).unwrap();
+            let reader = BufReader::new(stream.try_clone().unwrap());
+            (reader, BufWriter::new(stream))
+        })
+        .collect();
+    for (r, w) in conns.iter_mut() {
+        assert_eq!(ask_on(r, w, "PING"), "OK pong");
+    }
+
+    // the injected fault panics inside execute(); the per-request
+    // containment must answer a structured internal error on the same
+    // connection instead of tearing it (or the worker) down
+    for (r, w) in conns.iter_mut() {
+        let reply = ask_on(r, w, "DEBUG main panic");
+        assert!(reply.starts_with("ERR internal "), "{reply}");
+        assert!(reply.contains("injected fault"), "{reply}");
+    }
+    assert_eq!(tenant.stats().errors, WORKERS as u64, "panics must be charged as tenant errors");
+
+    // every worker is still serviceable on its original connection...
+    for (r, w) in conns.iter_mut() {
+        assert_eq!(ask_on(r, w, "PING"), "OK pong", "worker died after a poisoned request");
+        let q = ask_on(r, w, "QUERY main sum 4");
+        assert!(q.starts_with("OK query tenant=main"), "{q}");
+    }
+
+    // ...a panic against an unknown tenant is an ordinary ERR (the fault
+    // injector validates the tenant before detonating)...
+    {
+        let (r, w) = &mut conns[0];
+        let reply = ask_on(r, w, "DEBUG nosuch panic");
+        assert!(reply.starts_with("ERR "), "{reply}");
+        assert!(!reply.starts_with("ERR internal"), "{reply}");
+    }
+
+    // ...and a fresh connection is still accepted after the poison round
+    drop(conns.pop());
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+    assert_eq!(ask_on(&mut reader, &mut writer, "PING"), "OK pong");
+
+    drop(reader);
+    drop(writer);
+    drop(conns);
+    handle.shutdown().unwrap();
 }
 
 #[test]
