@@ -14,6 +14,7 @@ use matroid_coreset::diversity::{
     diversity, star_diversity_with_engine, Evaluator, ALL_OBJECTIVES,
 };
 use matroid_coreset::matroid::{Matroid, PartitionMatroid, TransversalMatroid, UniformMatroid};
+use matroid_coreset::obs::MetricsRegistry;
 use matroid_coreset::runtime::{BatchEngine, DistanceEngine, ScalarEngine, SimdEngine};
 use matroid_coreset::util::csv::CsvWriter;
 use matroid_coreset::util::rng::Rng;
@@ -26,6 +27,8 @@ fn main() -> anyhow::Result<()> {
         &["bench", "p50_us", "per_item_ns"],
     )?;
     let mut table = Table::new(&["bench", "p50", "per-item"]);
+    let registry = MetricsRegistry::new();
+    let reg = &registry;
     let mut emit = |name: &str, p50_s: f64, items: f64, table: &mut Table| {
         table.row(csv_row![
             name,
@@ -33,6 +36,9 @@ fn main() -> anyhow::Result<()> {
             format!("{:.0}ns", p50_s / items * 1e9)
         ]);
         csv.row(&csv_row![name, p50_s * 1e6, p50_s / items * 1e9]).unwrap();
+        // the CSV rows and BENCH_micro.json come from the same numbers
+        reg.gauge("dmmc_micro_p50_us", &[("bench", name)]).set(p50_s * 1e6);
+        reg.gauge("dmmc_micro_per_item_ns", &[("bench", name)]).set(p50_s / items * 1e9);
     };
 
     // distance evaluation
@@ -232,6 +238,13 @@ fn main() -> anyhow::Result<()> {
 
     table.print();
     csv.flush()?;
+    matroid_coreset::bench::write_bench_json(
+        "bench_results/BENCH_micro.json",
+        "micro",
+        &format!("{{\"seed\":{seed},\"iters\":20}}"),
+        &registry,
+    )?;
     println!("\nCSV -> bench_results/micro.csv");
+    println!("JSON -> bench_results/BENCH_micro.json");
     Ok(())
 }

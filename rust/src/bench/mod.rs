@@ -9,6 +9,9 @@ pub mod scenarios;
 
 use std::time::Instant;
 
+use anyhow::{Context, Result};
+
+use crate::obs::metrics::MetricsRegistry;
 use crate::util::stats::Summary;
 
 /// Time one closure, returning (result, seconds).
@@ -88,6 +91,30 @@ impl Table {
 pub fn bench_header(name: &str, description: &str) {
     println!("\n=== {name} ===");
     println!("{description}");
+}
+
+/// Write a `bench_results/BENCH_*.json` trajectory (schema_version 1, see
+/// EXPERIMENTS.md): run metadata (a pre-rendered JSON object) plus a full
+/// snapshot of a metrics registry — the envelope every machine-readable
+/// bench artifact shares, so downstream tooling parses one shape.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    meta_json: &str,
+    registry: &MetricsRegistry,
+) -> Result<()> {
+    let body = format!(
+        "{{\"schema_version\":1,\"bench\":{},\"meta\":{meta_json},\"metrics\":{}}}\n",
+        crate::obs::metrics::json_string(bench),
+        registry.render_json(),
+    );
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, body).with_context(|| format!("write bench json {path}"))?;
+    Ok(())
 }
 
 #[cfg(test)]

@@ -113,6 +113,7 @@ pub fn run_pipeline<M: Matroid + Sync>(
     let engine = &*engine;
 
     // ---- phase 1: candidate set ----
+    let coreset_span = crate::span!("coreset-build", "k" = k);
     let (candidates, coreset_time) = match pipeline.setting {
         Setting::Seq { budget } => {
             let (cs, dt) = time_it(|| seq_coreset(ds, m, k, budget, engine));
@@ -212,9 +213,11 @@ pub fn run_pipeline<M: Matroid + Sync>(
         }
         Setting::Full => ((0..ds.n()).collect(), Duration::ZERO),
     };
+    drop(coreset_span);
     extra.insert("coreset_size".into(), candidates.len() as f64);
 
     // ---- phase 2: finisher ----
+    let finisher_span = crate::span!("finisher", "candidates" = candidates.len());
     let (solution, finish_time) = match pipeline.finisher {
         Finisher::LocalSearch { gamma } => {
             if obj != Objective::Sum {
@@ -259,6 +262,28 @@ pub fn run_pipeline<M: Matroid + Sync>(
             (res.solution, dt)
         }
     };
+    drop(finisher_span);
+
+    // telemetry side channel: phase timings and work ledgers into the
+    // process-global registry (`dmmc run --metrics-out` renders it);
+    // nothing below reads any of it back
+    let metrics = crate::obs::MetricsRegistry::global();
+    metrics
+        .histogram("dmmc_phase_seconds", &[("phase", "coreset-build")])
+        .observe(coreset_time);
+    metrics
+        .histogram("dmmc_phase_seconds", &[("phase", "finisher")])
+        .observe(finish_time);
+    for (key, val) in &extra {
+        if key.ends_with("dist_evals") {
+            metrics
+                .counter(
+                    "dmmc_engine_dist_evals_total",
+                    &[("engine", pipeline.engine.name()), ("ledger", key)],
+                )
+                .add(*val as u64);
+        }
+    }
 
     let div = diversity_with_engine(ds, &solution, obj, engine)?;
     Ok(RunOutcome {

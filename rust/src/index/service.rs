@@ -22,7 +22,7 @@
 //! [`ServiceStats::errors`], never as a miss — misses feed the hit rate
 //! the load harness reports, and error paths must not skew it.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -38,6 +38,7 @@ use crate::runtime::engine::DistanceEngine;
 use crate::runtime::{build_engine, EngineKind, ScalarEngine};
 use crate::util::fnv1a;
 use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
 
 /// Final-solution extractor of a query (mirrors the pipeline finishers;
 /// a separate type so the service layer does not depend on the
@@ -375,6 +376,7 @@ pub fn run_cold_query(
     key: &str,
     engine: Option<&dyn DistanceEngine>,
 ) -> Result<(QueryResult, DistEvals)> {
+    let _span = crate::span!("query.cold", "key" = key, "epoch" = cx.epoch);
     if spec.k < 2 {
         // rejected before it can reach the farness machinery, whose
         // coefficients assert k > 1
@@ -496,32 +498,36 @@ impl<'a> QueryService<'a> {
 
     /// Serve one query from the root coreset (cache-first).
     pub fn query(&mut self, spec: &QuerySpec) -> Result<QueryOutcome> {
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         let key = spec.cache_key();
+        let mut span = crate::span!("index.query", "key" = key);
         let epoch = self.index.epoch();
         if let Some(result) = self.cache.lookup(&key, epoch) {
+            span.tag("source", "cache");
             return Ok(QueryOutcome {
                 result,
                 cache_hit: true,
                 epoch,
                 dist_evals: DistEvals::CachedZero,
-                elapsed: t0.elapsed(),
+                elapsed: sw.elapsed(),
             });
         }
         match self.cold_outcome(spec, &key, epoch) {
             Ok((result, dist_evals)) => {
+                span.tag("source", "cold");
                 self.cache.complete_miss(&key, epoch, result.clone());
                 Ok(QueryOutcome {
                     result,
                     cache_hit: false,
                     epoch,
                     dist_evals,
-                    elapsed: t0.elapsed(),
+                    elapsed: sw.elapsed(),
                 })
             }
             Err(e) => {
                 // rejected queries are errors, not misses: they must not
                 // skew the hit rate the load harness reports
+                span.tag("source", "error");
                 self.cache.record_error();
                 Err(e)
             }

@@ -138,6 +138,17 @@
 //! ThreadSanitizer; `tests/determinism_contract.rs` pins the runtime side
 //! (identical solutions across category insertion orders and replays).
 //!
+//! ## Telemetry is a side channel
+//!
+//! The [`obs`] module (metrics registry, span tracing, the serve
+//! `METRICS` verb, `--trace` JSONL sinks) observes the system but must
+//! never feed a result path: no algorithm, finisher, cache, or index
+//! decision reads a metric, span, or the clock behind them — deleting
+//! every `obs` call site leaves every result bit-identical.  Span
+//! durations come only from [`util::timer::Stopwatch`]/`PhaseTimer`; the
+//! one ambient `Instant::now` in [`obs::trace`] anchors the trace epoch
+//! and carries the single obs allow entry in `rust/lint.toml`.
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
@@ -152,6 +163,7 @@ pub mod diversity;
 pub mod index;
 pub mod mapreduce;
 pub mod matroid;
+pub mod obs;
 pub mod proptest;
 pub mod runtime;
 pub mod serve;

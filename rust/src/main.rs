@@ -34,6 +34,7 @@ use matroid_coreset::index::{
     QuerySpec, RetentionPolicy, DEFAULT_REBUILD_THRESHOLD,
 };
 use matroid_coreset::matroid::Matroid;
+use matroid_coreset::obs;
 use matroid_coreset::runtime::EngineKind;
 use matroid_coreset::serve::{self, ServeState};
 use matroid_coreset::streaming::StreamMode;
@@ -51,7 +52,7 @@ SUBCOMMANDS
              [--objective sum|star|tree|cycle|bipartition|remote-edge]
              [--finisher local-search|exhaustive|greedy|matching] [--gamma G]
              [--engine batch|scalar|simd|pjrt] [--matroid transversal|partition:R|uniform:R]
-             [--seed S]
+             [--seed S] [--trace out.jsonl] [--metrics-out out.prom]
   index      build  --data <file|kind:n> --out F.dmmcx [--k K] [--tau T] [--segment N]
                     [--count C] [--ingest seq|stream] [--engine E] [--matroid M] [--seed S]
                     [--retention keep-all|last:W|ttl:E] [--rebuild-threshold F]
@@ -59,15 +60,19 @@ SUBCOMMANDS
              delete --index F.dmmcx --rows N,A..B,... (tombstones rows; A..B is half-open)
              query  --index F.dmmcx [--objective O] [--k K] [--finisher F] [--gamma G]
                     [--engine E] [--matroid M] [--repeat R]
+             (every index action also accepts --trace out.jsonl)
   serve      [name=F.dmmcx ...] [--index name=F.dmmcx,name2=G.dmmcx]
              [--listen HOST:PORT] [--workers N] [--cache-cap N]
              [--replay <ops.txt|synth:N>] [--threads N] [--csv out.csv] [--seed S]
+             [--trace out.jsonl]
              (tenant specs go before any flags; --replay runs the load
-              harness in-process and exits instead of listening)
+              harness in-process and exits instead of listening; replay also
+              writes BENCH_serve.json next to the CSV)
              wire protocol, one line per request, replies `OK ...`/`ERR ...`:
                PING | TENANTS | LOAD n F | UNLOAD n | STATS n | SAVE n
                QUERY n <objective> <k> [finisher=F] [gamma=G] [engine=E] [matroid=M]
                APPEND n [count] [segment=N] | DELETE n <rows> | DEBUG n panic | QUIT | SHUTDOWN
+               METRICS (multi-line: Prometheus text exposition, ends `# EOF`)
   sweep      --config configs/<file>.toml [--csv out.csv]
   artifacts-check  [--data <kind:n>]
   help
@@ -104,6 +109,27 @@ fn run(argv: Vec<String>) -> Result<()> {
         }
         other => bail!("unknown subcommand {other}\n{USAGE}"),
     }
+}
+
+/// When `--trace F` is present, switch the span ring on for this process
+/// and return the output path for the matching [`trace_finish`] drain.
+fn trace_enable(args: &Args) -> Option<String> {
+    let path = args.opt("trace")?.to_string();
+    obs::trace::enable(obs::trace::DEFAULT_RING_CAPACITY);
+    Some(path)
+}
+
+/// Drain the span ring to JSONL (no-op when `--trace` was not given).
+fn trace_finish(path: &Option<String>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    let (written, dropped) = obs::trace::write_jsonl(path)?;
+    obs::trace::disable();
+    if dropped > 0 {
+        println!("trace: wrote {written} spans to {path} ({dropped} dropped by ring overflow)");
+    } else {
+        println!("trace: wrote {written} spans to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -155,8 +181,9 @@ fn print_stats(ds: &matroid_coreset::core::Dataset) {
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_known(&[
         "data", "algo", "k", "tau", "eps", "workers", "segment", "objective", "finisher",
-        "gamma", "engine", "matroid", "seed", "second-round-tau",
+        "gamma", "engine", "matroid", "seed", "second-round-tau", "trace", "metrics-out",
     ])?;
+    let trace = trace_enable(args);
     let seed = args.u64_or("seed", 1)?;
     let spec = DatasetSpec::parse(args.require("data")?, seed)?;
     let ds = build_dataset(&spec)?;
@@ -241,6 +268,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     for (key, value) in &out.extra {
         println!("  {key} = {value}");
     }
+    trace_finish(&trace)?;
+    if let Some(path) = args.opt("metrics-out") {
+        let text = obs::MetricsRegistry::global().render_prometheus();
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, &text).with_context(|| format!("write {path}"))?;
+        println!("metrics: wrote {} lines to {path}", text.lines().count());
+    }
     Ok(())
 }
 
@@ -258,13 +296,18 @@ fn cmd_index(args: &Args) -> Result<()> {
         .first()
         .map(|s| s.as_str())
         .context("index needs an action: build | append | delete | query (before any flags)")?;
-    match action {
+    // --trace is handled once here so every action gets it for free; the
+    // per-action expect_known lists still name it as a known flag
+    let trace = trace_enable(args);
+    let res = match action {
         "build" => cmd_index_build(args),
         "append" => cmd_index_append(args),
         "delete" => cmd_index_delete(args),
         "query" => cmd_index_query(args),
         other => bail!("unknown index action {other} (build | append | delete | query)"),
-    }
+    };
+    trace_finish(&trace)?;
+    res
 }
 
 /// The multi-tenant serving front end (see `rust/src/serve/`): load the
@@ -272,8 +315,9 @@ fn cmd_index(args: &Args) -> Result<()> {
 /// (`--replay`) or listen for protocol connections until `SHUTDOWN`.
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
-        "index", "listen", "workers", "cache-cap", "replay", "threads", "csv", "seed",
+        "index", "listen", "workers", "cache-cap", "replay", "threads", "csv", "seed", "trace",
     ])?;
+    let trace = trace_enable(args);
     let state = ServeState::new(
         args.usize_or("cache-cap", matroid_coreset::index::DEFAULT_CACHE_CAPACITY)?,
     );
@@ -313,7 +357,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let csv = args.str_or("csv", "bench_results/serve_load.csv");
         serve::replay::write_replay_csv(csv, &report)?;
         println!("wrote {csv}");
-        return Ok(());
+        let bench = match std::path::Path::new(csv).parent() {
+            Some(dir) if !dir.as_os_str().is_empty() => {
+                dir.join("BENCH_serve.json").to_string_lossy().into_owned()
+            }
+            _ => "BENCH_serve.json".to_string(),
+        };
+        serve::replay::write_replay_bench_json(&bench, &report, state.metrics())?;
+        println!("wrote {bench}");
+        return trace_finish(&trace);
     }
     let listen = args.str_or("listen", "127.0.0.1:7466");
     let workers = args.usize_or("workers", serve::DEFAULT_WORKERS)?;
@@ -324,13 +376,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         listener.local_addr()?,
         state.names().len(),
     );
-    serve::server::serve(&state, listener, workers)
+    serve::server::serve(&state, listener, workers)?;
+    trace_finish(&trace)
 }
 
 fn cmd_index_build(args: &Args) -> Result<()> {
     args.expect_known(&[
         "data", "out", "k", "tau", "eps", "segment", "count", "ingest", "engine", "matroid",
-        "seed", "retention", "rebuild-threshold",
+        "seed", "retention", "rebuild-threshold", "trace",
     ])?;
     let seed = args.u64_or("seed", 1)?;
     let data = args.require("data")?.to_string();
@@ -412,7 +465,7 @@ fn cmd_index_build(args: &Args) -> Result<()> {
 }
 
 fn cmd_index_append(args: &Args) -> Result<()> {
-    args.expect_known(&["index", "count", "segment"])?;
+    args.expect_known(&["index", "count", "segment", "trace"])?;
     let path = args.require("index")?;
     let snap = store::load(path)?;
     let (ds, matroid) = store::snapshot_world(&snap)?;
@@ -455,7 +508,7 @@ fn cmd_index_append(args: &Args) -> Result<()> {
 }
 
 fn cmd_index_delete(args: &Args) -> Result<()> {
-    args.expect_known(&["index", "rows"])?;
+    args.expect_known(&["index", "rows", "trace"])?;
     let path = args.require("index")?;
     let rows = parse_rows(args.require("rows")?)?;
     let snap = store::load(path)?;
@@ -488,7 +541,7 @@ fn cmd_index_delete(args: &Args) -> Result<()> {
 
 fn cmd_index_query(args: &Args) -> Result<()> {
     args.expect_known(&[
-        "index", "objective", "k", "finisher", "gamma", "engine", "matroid", "repeat",
+        "index", "objective", "k", "finisher", "gamma", "engine", "matroid", "repeat", "trace",
     ])?;
     let path = args.require("index")?;
     let snap = store::load(path)?;

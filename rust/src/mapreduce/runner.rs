@@ -1,6 +1,6 @@
 //! The MapReduce simulator runner.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -11,6 +11,7 @@ use crate::diversity::sum_diversity_with_engine;
 use crate::matroid::Matroid;
 use crate::runtime::{build_engine, build_engine_with_threads, EngineKind};
 use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
 
 /// Configuration of one MR coreset job.
 #[derive(Clone, Copy, Debug)]
@@ -77,7 +78,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
     cfg: MapReduceConfig,
 ) -> Result<MrReport> {
     assert!(cfg.workers >= 1);
-    let t0 = Instant::now();
+    let sw = Stopwatch::start();
     let n = ds.n();
     // map phase: random even partition into `workers` shards
     let mut rng = Rng::new(cfg.seed);
@@ -100,7 +101,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
             .iter()
             .map(|shard| {
                 scope.spawn(move || -> ShardOut {
-                    let w0 = Instant::now();
+                    let w0 = Stopwatch::start();
                     let local = ds.subset(shard);
                     let engine = build_engine_with_threads(cfg.engine, &local, threads_per_shard)?;
                     let engine = &*engine;
@@ -174,7 +175,7 @@ pub fn mr_coreset<M: Matroid + Sync>(
         local_memory_points,
         worker_times,
         makespan_round1,
-        wall_time: t0.elapsed(),
+        wall_time: sw.elapsed(),
         shard_coreset_sizes,
         shard_coreset_diversities,
         shard_score_dist_evals,

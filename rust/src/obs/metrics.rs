@@ -1,0 +1,502 @@
+//! Metrics registry: named counters, gauges, and fixed-bucket latency
+//! histograms with Prometheus text exposition.
+//!
+//! The registry is lock-striped: a metric handle is resolved once through
+//! a striped `Mutex<BTreeMap>` (stripe chosen by FNV-1a of the metric
+//! name) and every subsequent increment is a plain atomic on the shared
+//! handle — the hot path (a serve worker stamping a query) never contends
+//! on registry structure.  Keys are `(name, sorted label pairs)`, and the
+//! per-stripe `BTreeMap`s merge into one sorted view at render time, so
+//! exposition order is deterministic regardless of registration order.
+//!
+//! Determinism note: a [`Histogram`] stores its sum as *integer
+//! microseconds*, not a float, so the same multiset of samples produces
+//! identical exposition text no matter the observation order — the
+//! merge-determinism contract `tests/obs_telemetry.rs` pins.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::fnv1a;
+
+/// Upper bucket bounds (inclusive) of the shared latency histogram, in
+/// microseconds: 10us .. 10s in a 1-2.5-5 ladder, plus an implicit +Inf
+/// bucket.  One fixed ladder everywhere keeps every latency histogram in
+/// the process mergeable and the exposition text schema-stable.
+pub const LATENCY_BUCKETS_US: [u64; 19] = [
+    10,
+    25,
+    50,
+    100,
+    250,
+    500,
+    1_000,
+    2_500,
+    5_000,
+    10_000,
+    25_000,
+    50_000,
+    100_000,
+    250_000,
+    500_000,
+    1_000_000,
+    2_500_000,
+    5_000_000,
+    10_000_000,
+];
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as f64 bits).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket latency histogram over [`LATENCY_BUCKETS_US`].
+///
+/// The sum is accumulated in integer microseconds so accumulation order
+/// can never change the rendered text (no float rounding drift), and the
+/// quantile estimator reads the same buckets the exposition prints —
+/// replay CSV p50/p99 and `METRICS` agree by construction.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Per-bucket counts; `buckets[LATENCY_BUCKETS_US.len()]` is +Inf.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..=LATENCY_BUCKETS_US.len())
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        self.observe_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts, +Inf last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Bucket-interpolated quantile estimate in microseconds (the
+    /// `histogram_quantile` rule: linear within the covering bucket,
+    /// clamped to the last finite bound for the +Inf bucket).  Monotone
+    /// in `q`, so p99 >= p50 always holds.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += c;
+            if (cum as f64) >= target {
+                if i >= LATENCY_BUCKETS_US.len() {
+                    return LATENCY_BUCKETS_US[LATENCY_BUCKETS_US.len() - 1] as f64;
+                }
+                let lo = if i == 0 { 0.0 } else { LATENCY_BUCKETS_US[i - 1] as f64 };
+                let hi = LATENCY_BUCKETS_US[i] as f64;
+                let frac = ((target - prev as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+        }
+        LATENCY_BUCKETS_US[LATENCY_BUCKETS_US.len() - 1] as f64
+    }
+}
+
+/// Sorted `key=value` label pairs — the metric identity alongside the name.
+type Labels = Vec<(String, String)>;
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+const STRIPES: usize = 8;
+
+/// Process-wide (or per-server) registry of named metrics.
+pub struct MetricsRegistry {
+    stripes: Vec<Mutex<BTreeMap<(String, Labels), Metric>>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            stripes: (0..STRIPES).map(|_| Mutex::new(BTreeMap::new())).collect(),
+        }
+    }
+
+    /// A fresh shared registry — what a `ServeState` owns so concurrent
+    /// tests (and co-hosted servers) never share counters.
+    pub fn fresh() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry::new())
+    }
+
+    /// The process-global registry: pipeline phases and `dmmc run
+    /// --metrics-out` publish here.
+    pub fn global() -> &'static MetricsRegistry {
+        static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::new)
+    }
+
+    fn stripe(&self, name: &str) -> &Mutex<BTreeMap<(String, Labels), Metric>> {
+        &self.stripes[(fnv1a(name) as usize) % STRIPES]
+    }
+
+    fn entry(&self, name: &str, labels: &[(&str, &str)], make: impl FnOnce() -> Metric) -> Metric {
+        let mut key_labels: Labels = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        key_labels.sort();
+        let mut map = self
+            .stripe(name)
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        map.entry((name.to_string(), key_labels)).or_insert_with(make).clone()
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.entry(name, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            other => panic!("metric {name} already registered as {}", other.type_name()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.entry(name, labels, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric {name} already registered as {}", other.type_name()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        match self.entry(name, labels, || Metric::Histogram(Arc::new(Histogram::new()))) {
+            Metric::Histogram(h) => h,
+            other => panic!("metric {name} already registered as {}", other.type_name()),
+        }
+    }
+
+    /// Merged sorted snapshot of every registered metric.
+    fn snapshot(&self) -> BTreeMap<(String, Labels), Metric> {
+        let mut all = BTreeMap::new();
+        for stripe in &self.stripes {
+            let map = stripe.lock().unwrap_or_else(|e| e.into_inner());
+            for (k, v) in map.iter() {
+                all.insert(k.clone(), v.clone());
+            }
+        }
+        all
+    }
+
+    /// Prometheus text exposition (`# TYPE` headers, `_bucket`/`_sum`/
+    /// `_count` histogram series, escaped label values).  Sorted by
+    /// `(name, labels)`, so two registries holding the same samples render
+    /// byte-identical text.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name: Option<String> = None;
+        for ((name, labels), metric) in self.snapshot() {
+            if last_name.as_deref() != Some(name.as_str()) {
+                out.push_str(&format!("# TYPE {name} {}\n", metric.type_name()));
+                last_name = Some(name.clone());
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{name}{} {}\n", label_set(&labels, None), c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("{name}{} {}\n", label_set(&labels, None), g.get()));
+                }
+                Metric::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, &bound) in LATENCY_BUCKETS_US.iter().enumerate() {
+                        cum += counts[i];
+                        let le = le_seconds(bound);
+                        out.push_str(&format!(
+                            "{name}_bucket{} {cum}\n",
+                            label_set(&labels, Some(&le))
+                        ));
+                    }
+                    cum += counts[LATENCY_BUCKETS_US.len()];
+                    out.push_str(&format!(
+                        "{name}_bucket{} {cum}\n",
+                        label_set(&labels, Some("+Inf"))
+                    ));
+                    out.push_str(&format!(
+                        "{name}_sum{} {}\n",
+                        label_set(&labels, None),
+                        sum_seconds(h.sum_us())
+                    ));
+                    out.push_str(&format!("{name}_count{} {cum}\n", label_set(&labels, None)));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot of the same registry — the `BENCH_*.json` payload
+    /// (schema in EXPERIMENTS.md).  Sorted like the exposition.
+    pub fn render_json(&self) -> String {
+        let mut items = Vec::new();
+        for ((name, labels), metric) in self.snapshot() {
+            let lbl = labels
+                .iter()
+                .map(|(k, v)| format!("{}:{}", json_string(k), json_string(v)))
+                .collect::<Vec<_>>()
+                .join(",");
+            let head = format!(
+                "{{\"name\":{},\"type\":\"{}\",\"labels\":{{{lbl}}}",
+                json_string(&name),
+                metric.type_name()
+            );
+            let body = match metric {
+                Metric::Counter(c) => format!(",\"value\":{}}}", c.get()),
+                Metric::Gauge(g) => format!(",\"value\":{}}}", json_f64(g.get())),
+                Metric::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let bounds = LATENCY_BUCKETS_US
+                        .iter()
+                        .map(|b| b.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    let cells = counts
+                        .iter()
+                        .map(|c| c.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    format!(
+                        ",\"buckets_le_us\":[{bounds}],\"bucket_counts\":[{cells}],\"sum_us\":{},\"count\":{}}}",
+                        h.sum_us(),
+                        h.count()
+                    )
+                }
+            };
+            items.push(format!("{head}{body}"));
+        }
+        format!("[{}]", items.join(","))
+    }
+}
+
+/// Render a label set `{k="v",...}` (empty string when no labels), with
+/// the optional `le` histogram label appended last as Prometheus does.
+fn label_set(labels: &Labels, le: Option<&str>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double quote, newline.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A bucket bound in seconds with trailing zeros trimmed (`10us` ->
+/// `0.00001`, `1s` -> `1`): exact decimal text, no float formatting.
+fn le_seconds(us: u64) -> String {
+    let s = format!("{}.{:06}", us / 1_000_000, us % 1_000_000);
+    let t = s.trim_end_matches('0').trim_end_matches('.');
+    t.to_string()
+}
+
+/// The histogram sum in seconds, printed exactly from integer micros.
+fn sum_seconds(us: u64) -> String {
+    format!("{}.{:06}", us / 1_000_000, us % 1_000_000)
+}
+
+/// Minimal JSON string encoder (quotes + escapes).
+pub(crate) fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number for a gauge: finite f64s via Display (shortest roundtrip
+/// text), non-finite mapped to null.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("x_total", &[("t", "a")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(reg.counter("x_total", &[("t", "a")]).get(), 5);
+        let g = reg.gauge("g", &[]);
+        g.set(0.75);
+        assert_eq!(reg.gauge("g", &[]).get(), 0.75);
+    }
+
+    #[test]
+    fn label_order_is_identity_insensitive() {
+        let reg = MetricsRegistry::new();
+        reg.counter("c_total", &[("a", "1"), ("b", "2")]).inc();
+        reg.counter("c_total", &[("b", "2"), ("a", "1")]).inc();
+        assert_eq!(reg.counter("c_total", &[("a", "1"), ("b", "2")]).get(), 2);
+    }
+
+    #[test]
+    fn histogram_bucket_assignment_is_inclusive_upper() {
+        let h = Histogram::new();
+        h.observe_us(10); // lands in le=10us, not le=25us
+        h.observe_us(11);
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 1);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_us(), 21);
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let h = Histogram::new();
+        for us in [5, 40, 90, 400, 2_000, 80_000, 20_000_000] {
+            h.observe_us(us);
+        }
+        let p50 = h.quantile_us(0.50);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 > 0.0);
+        assert!(p99 >= p50);
+        // the +Inf sample clamps to the last finite bound
+        assert!(p99 <= LATENCY_BUCKETS_US[LATENCY_BUCKETS_US.len() - 1] as f64);
+    }
+
+    #[test]
+    fn le_labels_are_trimmed_decimal_text() {
+        assert_eq!(le_seconds(10), "0.00001");
+        assert_eq!(le_seconds(250_000), "0.25");
+        assert_eq!(le_seconds(1_000_000), "1");
+        assert_eq!(le_seconds(10_000_000), "10");
+    }
+}

@@ -1,0 +1,53 @@
+//! Unified telemetry: metrics registry, structured spans, exposition.
+//!
+//! Everything in this module is a **side channel**.  The invariant the
+//! dmmc-lint L4 contract protects extends here verbatim: telemetry may
+//! *observe* a result path (durations from [`crate::util::timer`], event
+//! counts, receipt ledgers) but must never *feed* one — no algorithm,
+//! finisher, cache, or index decision reads a metric, a span, or the
+//! clock behind them.  Deleting every `obs` call site must leave every
+//! result bit-identical.
+//!
+//! Three pieces:
+//!
+//! * [`metrics`] — a lock-striped [`metrics::MetricsRegistry`] of named
+//!   counters, gauges, and fixed-bucket latency histograms, rendered as
+//!   Prometheus text (the serve `METRICS` verb, `dmmc run
+//!   --metrics-out`) or JSON (`bench_results/BENCH_*.json`).
+//! * [`trace`] — `span!`/[`trace::span`] RAII guards recording
+//!   start/duration/parent into a bounded ring buffer, drained to JSONL
+//!   by `--trace out.jsonl` on `run`, `index`, and `serve`.
+//! * the [`span!`](crate::span) macro — `span!("phase")` or
+//!   `span!("phase", "tenant" = name)` sugar over [`trace::span`].
+//!
+//! Time discipline: [`crate::util::timer::Stopwatch`] and `PhaseTimer`
+//! are the only sources feeding span durations; the single ambient
+//! `Instant::now` in [`trace`] anchors the trace epoch for start offsets
+//! and carries the one obs allow entry in `rust/lint.toml`.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry, LATENCY_BUCKETS_US};
+pub use trace::{span, SpanGuard, SpanRecord};
+
+/// Open a span guard, optionally tagging it inline:
+///
+/// ```
+/// let _sp = matroid_coreset::span!("coreset-build");
+/// let tenant = "main";
+/// let _sp = matroid_coreset::span!("serve.query", "tenant" = tenant);
+/// ```
+///
+/// Tags stringify via `Display`.  Guards are inert while tracing is off.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::trace::span($name)
+    };
+    ($name:expr, $($key:literal = $val:expr),+ $(,)?) => {{
+        let mut __span = $crate::obs::trace::span($name);
+        $(__span.tag($key, &($val).to_string());)+
+        __span
+    }};
+}

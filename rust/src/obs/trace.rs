@@ -1,0 +1,210 @@
+//! Structured span tracing: RAII guards into a bounded ring buffer,
+//! drainable as JSONL (`--trace out.jsonl` on `run`, `index`, `serve`).
+//!
+//! Tracing is off by default and costs one relaxed atomic load per
+//! `span()` call when disabled, so instrumented hot paths stay free for
+//! every run that didn't ask for a trace.  Durations come from
+//! [`Stopwatch`] — the blessed wall-clock wrapper — and the only ambient
+//! time read in this module is the process *trace epoch* below, which
+//! anchors span start offsets and nothing else.  Spans are a write-only
+//! side channel: no result path ever reads the ring.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs::metrics::json_string;
+use crate::util::timer::Stopwatch;
+
+/// Default ring capacity: enough for every phase of a full pipeline run
+/// plus a few thousand per-request serve spans before overwrite.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// One completed span, recorded at guard drop.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Process-unique id (1-based; 0 means "no parent").
+    pub id: u64,
+    /// Enclosing span's id on the same thread, 0 at top level.
+    pub parent: u64,
+    pub name: String,
+    pub tags: Vec<(String, String)>,
+    /// Start offset from the trace epoch, microseconds.
+    pub start_us: u64,
+    /// Wall-clock duration, microseconds (from `Stopwatch`).
+    pub dur_us: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+struct Ring {
+    capacity: usize,
+    spans: VecDeque<SpanRecord>,
+    dropped: u64,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| {
+        Mutex::new(Ring {
+            capacity: DEFAULT_RING_CAPACITY,
+            spans: VecDeque::new(),
+            dropped: 0,
+        })
+    })
+}
+
+/// Microseconds since the process trace epoch.  The `Instant::now` here
+/// is the single ambient-time read of the obs module (pinned by the
+/// `rust/lint.toml` allow entry): it anchors span *offsets* only — span
+/// durations come from `Stopwatch`, and nothing downstream of a result
+/// ever reads either.
+fn epoch_offset_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+thread_local! {
+    static PARENT_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Turn tracing on with the given ring capacity, clearing any previous
+/// spans and pinning the trace epoch.
+pub fn enable(capacity: usize) {
+    let mut r = ring().lock().unwrap_or_else(|e| e.into_inner());
+    r.capacity = capacity.max(1);
+    r.spans.clear();
+    r.dropped = 0;
+    drop(r);
+    epoch_offset_us(); // pin the epoch at enable time
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Open a span guard.  Inert (and nearly free) while tracing is off.
+pub fn span(name: &str) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { live: None };
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = PARENT_STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let parent = s.last().copied().unwrap_or(0);
+        s.push(id);
+        parent
+    });
+    SpanGuard {
+        live: Some(LiveSpan {
+            id,
+            parent,
+            name: name.to_string(),
+            tags: Vec::new(),
+            start_us: epoch_offset_us(),
+            sw: Stopwatch::start(),
+        }),
+    }
+}
+
+struct LiveSpan {
+    id: u64,
+    parent: u64,
+    name: String,
+    tags: Vec<(String, String)>,
+    start_us: u64,
+    sw: Stopwatch,
+}
+
+/// RAII span: records into the ring when dropped.
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+impl SpanGuard {
+    /// Attach a `key=value` tag (no-op on an inert guard).
+    pub fn tag(&mut self, key: &str, value: &str) {
+        if let Some(live) = &mut self.live {
+            live.tags.push((key.to_string(), value.to_string()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(live) = self.live.take() else {
+            return;
+        };
+        let dur_us = live.sw.elapsed().as_micros() as u64;
+        PARENT_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.last() == Some(&live.id) {
+                s.pop();
+            } else {
+                // out-of-order drop (guard moved across scopes): unlink by id
+                s.retain(|&id| id != live.id);
+            }
+        });
+        let mut r = ring().lock().unwrap_or_else(|e| e.into_inner());
+        if r.spans.len() >= r.capacity {
+            r.spans.pop_front();
+            r.dropped += 1;
+        }
+        r.spans.push_back(SpanRecord {
+            id: live.id,
+            parent: live.parent,
+            name: live.name,
+            tags: live.tags,
+            start_us: live.start_us,
+            dur_us,
+        });
+    }
+}
+
+/// Take every recorded span out of the ring, returning them in
+/// completion order plus the count overwritten by ring overflow.
+pub fn drain() -> (Vec<SpanRecord>, u64) {
+    let mut r = ring().lock().unwrap_or_else(|e| e.into_inner());
+    let spans = std::mem::take(&mut r.spans).into(); // VecDeque -> Vec
+    let dropped = std::mem::take(&mut r.dropped);
+    (spans, dropped)
+}
+
+/// Drain the ring to a JSONL file (one span object per line); returns
+/// `(spans written, spans dropped by ring overflow)`.
+pub fn write_jsonl(path: &str) -> std::io::Result<(usize, u64)> {
+    let (spans, dropped) = drain();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for s in &spans {
+        writeln!(f, "{}", span_json(s))?;
+    }
+    f.flush()?;
+    Ok((spans.len(), dropped))
+}
+
+/// One span as a single-line JSON object.
+pub fn span_json(s: &SpanRecord) -> String {
+    let tags = s
+        .tags
+        .iter()
+        .map(|(k, v)| format!("{}:{}", json_string(k), json_string(v)))
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"id\":{},\"parent\":{},\"name\":{},\"start_us\":{},\"dur_us\":{},\"tags\":{{{tags}}}}}",
+        s.id,
+        s.parent,
+        json_string(&s.name),
+        s.start_us,
+        s.dur_us
+    )
+}

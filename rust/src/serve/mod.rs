@@ -13,8 +13,10 @@
 //!   coalescing**: concurrent identical `(spec, epoch)` requests ride one
 //!   cold computation and all receive the bit-identical result.
 //! * [`protocol`] — the line-oriented request grammar
-//!   (`QUERY`/`APPEND`/`DELETE`/`LOAD`/`STATS`/...), its parser, and the
-//!   executor that turns requests into single-line `OK`/`ERR` replies.
+//!   (`QUERY`/`APPEND`/`DELETE`/`LOAD`/`STATS`/`METRICS`/...), its
+//!   parser, and the executor that turns requests into `OK`/`ERR`
+//!   replies (single-line except `METRICS`, which renders the server's
+//!   [`crate::obs::MetricsRegistry`] as Prometheus text ending `# EOF`).
 //! * [`server`] — the TCP front end: accept loop + fixed worker pool,
 //!   clean `SHUTDOWN` via a stop flag and a loopback self-connect.
 //! * [`replay`] — the load harness behind `dmmc serve --replay`:

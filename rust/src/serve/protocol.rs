@@ -1,9 +1,11 @@
 //! The line-oriented `dmmc serve` request protocol.
 //!
 //! One request per line, whitespace-separated tokens, commands
-//! case-insensitive; every reply is a single line starting `OK ` or
-//! `ERR ` (errors are flattened to one line).  The grammar is the wire
-//! twin of the `dmmc index` subcommands:
+//! case-insensitive; every reply starts `OK ` or `ERR ` (errors are
+//! flattened to one line).  `METRICS` is the one multi-line reply: a
+//! header line, the Prometheus text exposition, then a `# EOF`
+//! terminator line.  The grammar is the wire twin of the `dmmc index`
+//! subcommands:
 //!
 //! ```text
 //! PING
@@ -15,6 +17,7 @@
 //! APPEND <tenant> [count] [segment=N]
 //! DELETE <tenant> <rows>          # N or A..B, comma-separated
 //! STATS <tenant>
+//! METRICS                         # Prometheus exposition, ends `# EOF`
 //! SAVE <tenant>
 //! DEBUG <tenant> panic            # fault injection: panics in execute
 //! QUIT                            # close this connection
@@ -61,6 +64,8 @@ pub enum Request {
     },
     Delete { tenant: String, rows: Vec<usize> },
     Stats { tenant: String },
+    /// Render the server's metrics registry as Prometheus text.
+    Metrics,
     Save { tenant: String },
     /// Fault injection (`DEBUG <tenant> panic`): deliberately panics
     /// inside `execute` to exercise the worker-pool containment path.
@@ -82,7 +87,11 @@ impl Request {
             | Request::Stats { tenant }
             | Request::Save { tenant }
             | Request::Debug { tenant, .. } => Some(tenant),
-            Request::Ping | Request::Tenants | Request::Quit | Request::Shutdown => None,
+            Request::Ping
+            | Request::Tenants
+            | Request::Metrics
+            | Request::Quit
+            | Request::Shutdown => None,
         }
     }
 }
@@ -101,6 +110,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
     match cmd.as_str() {
         "PING" => Ok(Request::Ping),
         "TENANTS" => Ok(Request::Tenants),
+        "METRICS" => Ok(Request::Metrics),
         "QUIT" => Ok(Request::Quit),
         "SHUTDOWN" => Ok(Request::Shutdown),
         "LOAD" => Ok(Request::Load {
@@ -197,7 +207,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             };
             Ok(Request::Query { tenant, objective, k, finisher, engine, matroid })
         }
-        other => bail!("unknown command {other} (PING TENANTS LOAD UNLOAD QUERY APPEND DELETE STATS SAVE DEBUG QUIT SHUTDOWN)"),
+        other => bail!("unknown command {other} (PING TENANTS LOAD UNLOAD QUERY APPEND DELETE STATS METRICS SAVE DEBUG QUIT SHUTDOWN)"),
     }
 }
 
@@ -301,6 +311,24 @@ pub fn execute(state: &ServeState, req: &Request) -> Result<String> {
                 st.cursor,
             ))
         }
+        Request::Metrics => {
+            // refresh the point-in-time gauges from each tenant's status
+            // before rendering (counters and histograms are live already)
+            for name in state.names() {
+                let Ok(tenant) = state.get(&name) else { continue };
+                let st = tenant.status();
+                let m = state.metrics();
+                let lbl = [("tenant", name.as_str())];
+                m.gauge("dmmc_tenant_epoch", &lbl).set(st.epoch as f64);
+                m.gauge("dmmc_index_live_fraction", &lbl).set(st.live_fraction);
+                m.gauge("dmmc_index_root_size", &lbl).set(st.root as f64);
+                m.gauge("dmmc_cache_entries", &lbl).set(st.cache_len as f64);
+            }
+            let text = state.metrics().render_prometheus();
+            // multi-line payload: header, exposition, `# EOF` terminator —
+            // clients read lines until the terminator
+            Ok(format!("metrics lines={}\n{text}# EOF", text.lines().count()))
+        }
         Request::Save { tenant } => {
             let t = state.get(tenant)?;
             let (path, entries) = t.save()?;
@@ -394,6 +422,8 @@ mod tests {
             parse_request("DELETE main 1,4..6").unwrap(),
             Request::Delete { tenant: "main".into(), rows: vec![1, 4, 5] }
         );
+        assert_eq!(parse_request("metrics").unwrap(), Request::Metrics);
+        assert_eq!(Request::Metrics.tenant(), None);
     }
 
     #[test]
@@ -450,5 +480,19 @@ mod tests {
         let err = handle_line(&state, "QUERY missing sum 4");
         assert!(err.starts_with("ERR "), "{err}");
         assert!(!err.contains('\n'));
+    }
+
+    #[test]
+    fn metrics_reply_is_terminated_exposition() {
+        // empty server: the one multi-line reply still carries its header
+        // and `# EOF` terminator, so wire clients always know where to stop
+        let state = ServeState::new(4);
+        assert_eq!(handle_line(&state, "METRICS"), "OK metrics lines=0\n# EOF");
+        state.metrics().counter("dmmc_queries_total", &[("tenant", "t")]).add(3);
+        let reply = handle_line(&state, "METRICS");
+        assert!(reply.starts_with("OK metrics lines=2\n"), "{reply}");
+        assert!(reply.contains("# TYPE dmmc_queries_total counter\n"), "{reply}");
+        assert!(reply.contains("dmmc_queries_total{tenant=\"t\"} 3\n"), "{reply}");
+        assert!(reply.ends_with("# EOF"), "{reply}");
     }
 }

@@ -12,17 +12,17 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::csv_row;
 use crate::index::service::ServiceStats;
+use crate::obs::metrics::{json_string, MetricsRegistry};
 use crate::serve::protocol::handle_line;
 use crate::serve::state::ServeState;
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Rng;
-use crate::util::stats::quantile_sorted;
 use crate::util::timer::Stopwatch;
 
 /// Latency/throughput summary for one op kind (plus the `all` row).
@@ -127,9 +127,9 @@ pub fn run_replay(
                             .next()
                             .unwrap_or("?")
                             .to_ascii_lowercase();
-                        let t0 = Instant::now();
+                        let op_sw = Stopwatch::start();
                         let reply = handle_line(state, op);
-                        let us = t0.elapsed().as_secs_f64() * 1e6;
+                        let us = op_sw.elapsed().as_secs_f64() * 1e6;
                         local.push((kind, us, reply.starts_with("OK ")));
                     }
                     local
@@ -143,21 +143,29 @@ pub fn run_replay(
     let err_replies = samples.iter().filter(|(_, _, ok)| !ok).count();
 
     // `all` row plus one per kind; sort keys for a deterministic CSV row
-    // order (sample *values* are timing, inherently run-specific)
+    // order (sample *values* are timing, inherently run-specific).  The
+    // quantiles come from the shared obs histogram — the same object the
+    // `METRICS` verb renders (`dmmc_replay_latency_seconds{kind}`), so
+    // the CSV and the exposition agree by construction.
     samples.sort_by(|a, b| a.0.cmp(&b.0));
     let mut kinds: Vec<KindSummary> = Vec::new();
-    let summarize = |kind: &str, lats: &mut Vec<f64>| -> KindSummary {
-        lats.sort_by(f64::total_cmp);
+    let summarize = |kind: &str, lats: &[f64]| -> KindSummary {
+        let hist = state
+            .metrics()
+            .histogram("dmmc_replay_latency_seconds", &[("kind", kind)]);
+        for &us in lats {
+            hist.observe_us(us as u64);
+        }
         KindSummary {
             kind: kind.to_string(),
             count: lats.len(),
-            p50_us: quantile_sorted(lats, 0.5),
-            p99_us: quantile_sorted(lats, 0.99),
+            p50_us: hist.quantile_us(0.5),
+            p99_us: hist.quantile_us(0.99),
             qps: lats.len() as f64 / wall_s,
         }
     };
-    let mut all: Vec<f64> = samples.iter().map(|(_, us, _)| *us).collect();
-    kinds.push(summarize("all", &mut all));
+    let all: Vec<f64> = samples.iter().map(|(_, us, _)| *us).collect();
+    kinds.push(summarize("all", &all));
     let mut i = 0;
     while i < samples.len() {
         let kind = samples[i].0.clone();
@@ -166,7 +174,7 @@ pub fn run_replay(
             lats.push(samples[i].1);
             i += 1;
         }
-        kinds.push(summarize(&kind, &mut lats));
+        kinds.push(summarize(&kind, &lats));
     }
 
     Ok(ReplayReport {
@@ -210,6 +218,35 @@ pub fn write_replay_csv(path: &str, report: &ReplayReport) -> Result<()> {
     }
     csv.flush()?;
     Ok(())
+}
+
+/// Write the machine-readable bench trajectory
+/// (`bench_results/BENCH_serve.json`, schema in EXPERIMENTS.md): run
+/// metadata plus a full snapshot of the serve metrics registry — the
+/// same counters and histograms the `METRICS` verb exposes.
+pub fn write_replay_bench_json(
+    path: &str,
+    report: &ReplayReport,
+    registry: &MetricsRegistry,
+) -> Result<()> {
+    let s = &report.stats;
+    let meta = format!(
+        "{{\"tenant\":{},\"threads\":{},\"ops\":{},\"wall_s\":{:.6},\"err_replies\":{},\
+         \"queries\":{},\"hits\":{},\"misses\":{},\"errors\":{},\"coalesced\":{},\
+         \"hit_rate\":{:.6}}}",
+        json_string(&report.tenant),
+        report.threads,
+        report.ops,
+        report.wall.as_secs_f64(),
+        report.err_replies,
+        s.queries,
+        s.hits,
+        s.misses,
+        s.errors,
+        s.coalesced,
+        s.hit_rate(),
+    );
+    crate::bench::write_bench_json(path, "serve", &meta, registry)
 }
 
 /// Render the report for stdout.
@@ -306,6 +343,17 @@ mod tests {
             "tenant,threads,kind,ops,p50_us,p99_us,qps,hits,misses,errors,coalesced,hit_rate"
         ));
         assert!(text.lines().count() >= 3, "header + all + at least one kind");
+
+        // the bench trajectory carries the same registry the METRICS verb
+        // renders, as JSON
+        let json_path = std::env::temp_dir()
+            .join(format!("dmmc_replay_{}.json", std::process::id()));
+        write_replay_bench_json(json_path.to_str().unwrap(), &report, state.metrics()).unwrap();
+        let json = std::fs::read_to_string(&json_path).unwrap();
+        let _ = std::fs::remove_file(&json_path);
+        assert!(json.starts_with("{\"schema_version\":1,\"bench\":\"serve\""));
+        assert!(json.contains("\"name\":\"dmmc_replay_latency_seconds\""));
+        assert!(json.contains("\"name\":\"dmmc_queries_total\""));
     }
 
     #[test]

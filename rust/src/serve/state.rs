@@ -49,6 +49,7 @@ use crate::index::service::{
 use crate::index::store;
 use crate::index::tree::{CoresetIndex, DeleteReceipt, IndexConfig, IndexParts};
 use crate::index::IndexSnapshot;
+use crate::obs::metrics::MetricsRegistry;
 use crate::runtime::EngineKind;
 use crate::util::timer::Stopwatch;
 
@@ -162,6 +163,8 @@ pub struct TenantStatus {
     pub root: usize,
     pub tombstones: usize,
     pub cursor: usize,
+    /// Live member fraction across tree nodes (1.0 when nothing is dead).
+    pub live_fraction: f64,
 }
 
 /// One served index: owned world + tree state + shared result cache.
@@ -179,6 +182,10 @@ pub struct Tenant {
     inner: RwLock<TenantInner>,
     cache: Mutex<ResultCache>,
     inflight: Mutex<BTreeMap<String, Arc<InflightSlot>>>,
+    /// Shared with the owning [`ServeState`]: the registry the `METRICS`
+    /// verb renders.  Telemetry only — nothing in the query or mutation
+    /// paths reads it back.
+    metrics: Arc<MetricsRegistry>,
 }
 
 /// Tenant names travel inside whitespace-separated protocol lines.
@@ -199,6 +206,7 @@ impl Tenant {
         snap: &IndexSnapshot,
         path: Option<PathBuf>,
         cache_capacity: usize,
+        metrics: Arc<MetricsRegistry>,
     ) -> Result<Tenant> {
         validate_name(name)?;
         let (ds, matroid) = store::snapshot_world(snap)?;
@@ -217,6 +225,7 @@ impl Tenant {
             }),
             cache: Mutex::new(ResultCache::new(cache_capacity)),
             inflight: Mutex::new(BTreeMap::new()),
+            metrics,
         })
     }
 
@@ -256,6 +265,7 @@ impl Tenant {
     /// panic-containment path, where no query-layer accounting ran.
     pub fn record_error(&self) {
         self.cache.lock().unwrap().record_error();
+        self.metrics.counter("dmmc_errors_total", &[("tenant", &self.name)]).inc();
     }
 
     /// Warm the result cache from persisted entries (no counters touched).
@@ -266,9 +276,45 @@ impl Tenant {
         }
     }
 
-    /// Serve one query: cache, then coalesce, then cold.
+    /// Serve one query: cache, then coalesce, then cold.  The wrapper
+    /// stamps the per-tenant obs counters and latency histogram so the
+    /// `METRICS` exposition reconciles with `STATS` one-for-one: every
+    /// request counts in `dmmc_queries_total` and in exactly one of
+    /// hits / misses / coalesced / errors — mirroring [`ServiceStats`].
     pub fn query(&self, spec: &QuerySpec) -> Result<TenantAnswer> {
         let sw = Stopwatch::start();
+        let mut span = crate::span!("serve.query", "tenant" = self.name);
+        let res = self.query_inner(spec, sw);
+        let tenant: &str = &self.name;
+        let m = &self.metrics;
+        m.counter("dmmc_queries_total", &[("tenant", tenant)]).inc();
+        match &res {
+            Ok(ans) => {
+                let source = ans.source.name();
+                span.tag("source", source);
+                let bucket = match ans.source {
+                    QuerySource::Cold => "dmmc_cache_misses_total",
+                    QuerySource::Cache => "dmmc_cache_hits_total",
+                    QuerySource::Coalesced => "dmmc_coalesced_total",
+                };
+                m.counter(bucket, &[("tenant", tenant)]).inc();
+                if let DistEvals::Measured(n) = ans.outcome.dist_evals {
+                    m.counter("dmmc_dist_evals_total", &[("tenant", tenant)]).add(n);
+                }
+                m.histogram("dmmc_query_latency_seconds", &[("tenant", tenant), ("source", source)])
+                    .observe(ans.outcome.elapsed);
+            }
+            Err(_) => {
+                span.tag("source", "error");
+                m.counter("dmmc_errors_total", &[("tenant", tenant)]).inc();
+                m.histogram("dmmc_query_latency_seconds", &[("tenant", tenant), ("source", "error")])
+                    .observe(sw.elapsed());
+            }
+        }
+        res
+    }
+
+    fn query_inner(&self, spec: &QuerySpec, sw: Stopwatch) -> Result<TenantAnswer> {
         let key = spec.cache_key();
         // capture (root, epoch) atomically: the result is stamped with
         // the epoch of exactly the root it was computed from
@@ -395,12 +441,23 @@ impl Tenant {
             bail!("append of zero rows (pass a positive count or omit it)");
         }
         let segment = segment.unwrap_or(count).max(1);
+        let _span = crate::span!("serve.append", "tenant" = self.name, "rows" = count);
         let mut idx =
             CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
         let order: Vec<usize> = (inner.cursor..inner.cursor + count).collect();
         let receipts = idx.ingest(&order, segment)?;
         inner.cursor += count;
         inner.parts = idx.parts();
+        // publish the receipts' ledgers (telemetry only: the receipts the
+        // caller sees are untouched)
+        let m = &self.metrics;
+        let lbl = [("op", "append"), ("tenant", self.name.as_str())];
+        m.counter("dmmc_index_nodes_touched_total", &lbl)
+            .add(receipts.iter().map(|r| r.nodes_touched as u64).sum());
+        m.counter("dmmc_index_dist_evals_total", &lbl)
+            .add(receipts.iter().map(|r| r.dist_evals).sum());
+        m.counter("dmmc_index_merges_total", &[("tenant", self.name.as_str())])
+            .add(receipts.iter().map(|r| r.merges as u64).sum());
         Ok(AppendSummary {
             requested,
             appended: count,
@@ -414,10 +471,17 @@ impl Tenant {
     /// Tombstone rows (serialized; an effective delete bumps the epoch).
     pub fn delete(&self, rows: &[usize]) -> Result<DeleteSummary> {
         let mut inner = self.inner.write().unwrap();
+        let _span = crate::span!("serve.delete", "tenant" = self.name, "rows" = rows.len());
         let mut idx =
             CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
         let receipt = idx.delete(rows)?;
         inner.parts = idx.parts();
+        let m = &self.metrics;
+        let lbl = [("op", "delete"), ("tenant", self.name.as_str())];
+        m.counter("dmmc_index_nodes_touched_total", &lbl).add(receipt.nodes_touched as u64);
+        m.counter("dmmc_index_dist_evals_total", &lbl).add(receipt.dist_evals);
+        m.counter("dmmc_index_rebuilds_total", &[("tenant", self.name.as_str())])
+            .add(receipt.rebuilds as u64);
         Ok(DeleteSummary {
             receipt,
             epoch: inner.parts.epoch,
@@ -460,7 +524,7 @@ impl Tenant {
     }
 
     pub fn status(&self) -> TenantStatus {
-        let (epoch, segments, points, root, tombstones, cursor) = {
+        let (epoch, segments, points, root, tombstones, cursor, live_fraction) = {
             let inner = self.inner.read().unwrap();
             let idx =
                 CoresetIndex::from_parts(&self.ds, &*self.matroid, self.cfg, inner.parts.clone());
@@ -471,6 +535,7 @@ impl Tenant {
                 idx.root().len(),
                 idx.tombstones().len(),
                 inner.cursor,
+                idx.live_fraction(),
             )
         };
         let (stats, cache_len) = {
@@ -487,6 +552,7 @@ impl Tenant {
             root,
             tombstones,
             cursor,
+            live_fraction,
         }
     }
 }
@@ -495,6 +561,10 @@ impl Tenant {
 pub struct ServeState {
     cache_capacity: usize,
     tenants: RwLock<BTreeMap<String, Arc<Tenant>>>,
+    /// One registry per server (not the process-global one): co-hosted
+    /// states — every test in this binary, for instance — must never
+    /// share counters, or `METRICS` could not reconcile with `STATS`.
+    metrics: Arc<MetricsRegistry>,
 }
 
 impl ServeState {
@@ -502,7 +572,13 @@ impl ServeState {
         ServeState {
             cache_capacity: cache_capacity.max(1),
             tenants: RwLock::new(BTreeMap::new()),
+            metrics: MetricsRegistry::fresh(),
         }
+    }
+
+    /// The registry the `METRICS` verb renders.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
     }
 
     /// Load (or replace) a tenant from a snapshot file, warming its
@@ -511,8 +587,13 @@ impl ServeState {
     pub fn load(&self, name: &str, path: &Path) -> Result<Arc<Tenant>> {
         let snap = store::load(path)
             .with_context(|| format!("load index {} for tenant {name}", path.display()))?;
-        let tenant =
-            Tenant::from_snapshot(name, &snap, Some(path.to_path_buf()), self.cache_capacity)?;
+        let tenant = Tenant::from_snapshot(
+            name,
+            &snap,
+            Some(path.to_path_buf()),
+            self.cache_capacity,
+            Arc::clone(&self.metrics),
+        )?;
         let warm = store::load_result_cache(store::result_cache_path(path), store::snapshot_id(&snap));
         tenant.warm(warm);
         let tenant = Arc::new(tenant);
@@ -523,7 +604,13 @@ impl ServeState {
     /// Register an in-memory tenant directly from a snapshot (tests, and
     /// anything that does not need persistence).
     pub fn add(&self, name: &str, snap: &IndexSnapshot) -> Result<Arc<Tenant>> {
-        let tenant = Arc::new(Tenant::from_snapshot(name, snap, None, self.cache_capacity)?);
+        let tenant = Arc::new(Tenant::from_snapshot(
+            name,
+            snap,
+            None,
+            self.cache_capacity,
+            Arc::clone(&self.metrics),
+        )?);
         self.tenants.write().unwrap().insert(name.to_string(), Arc::clone(&tenant));
         Ok(tenant)
     }
@@ -589,9 +676,13 @@ mod tests {
     #[test]
     fn tenant_names_are_validated() {
         let snap = snapshot(100, 50, 7);
-        assert!(Tenant::from_snapshot("ok-name_2", &snap, None, 8).is_ok());
+        let m = MetricsRegistry::fresh;
+        assert!(Tenant::from_snapshot("ok-name_2", &snap, None, 8, m()).is_ok());
         for bad in ["", "has space", "a/b", "a=b", "q@e"] {
-            assert!(Tenant::from_snapshot(bad, &snap, None, 8).is_err(), "{bad:?} accepted");
+            assert!(
+                Tenant::from_snapshot(bad, &snap, None, 8, m()).is_err(),
+                "{bad:?} accepted"
+            );
         }
     }
 

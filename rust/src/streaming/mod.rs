@@ -7,7 +7,7 @@ pub mod window;
 
 pub use window::SlidingWindowCoreset;
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -18,6 +18,7 @@ use crate::diversity::{diversity_with_engine, Objective};
 use crate::matroid::Matroid;
 use crate::runtime::engine::DistanceEngine;
 use crate::runtime::EngineKind;
+use crate::util::timer::Stopwatch;
 
 /// How the streaming algorithm is parameterized.
 #[derive(Clone, Copy, Debug)]
@@ -91,7 +92,7 @@ pub fn run_stream_with_engine(
     order: &[usize],
     engine: EngineKind,
 ) -> Result<StreamReport> {
-    let t0 = Instant::now();
+    let sw = Stopwatch::start();
     let mut alg = match mode {
         StreamMode::Epsilon(eps) => StreamCoreset::new(ds, m, k, eps, DEFAULT_C),
         StreamMode::Tau(tau) => StreamCoreset::with_tau(ds, m, k, tau),
@@ -103,7 +104,7 @@ pub fn run_stream_with_engine(
         alg.push(x);
     }
     let (coreset, stats) = alg.finish();
-    let elapsed = t0.elapsed();
+    let elapsed = sw.elapsed();
     let throughput = order.len() as f64 / elapsed.as_secs_f64().max(1e-12);
     Ok(StreamReport {
         coreset,

@@ -46,8 +46,11 @@ impl PhaseTimer {
         Self::default()
     }
 
-    /// Run `f` accounted under `phase` (accumulates across calls).
+    /// Run `f` accounted under `phase` (accumulates across calls).  Also
+    /// opens an identically named trace span, so every `PhaseTimer` user
+    /// shows up in `--trace` output for free (inert unless tracing is on).
     pub fn phase<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let _span = crate::obs::trace::span(phase);
         let (out, dt) = time_it(f);
         self.add(phase, dt);
         out

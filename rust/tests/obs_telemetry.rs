@@ -1,0 +1,112 @@
+//! Contract tests for the telemetry subsystem (`rust/src/obs/`): the
+//! Prometheus exposition's bucket boundaries and escaping, the
+//! merge-determinism guarantee (same samples, any order, byte-identical
+//! text), and the span ring's overflow + JSONL drain behavior.
+//!
+//! Trace state is process-global, so every span assertion lives in ONE
+//! test fn — parallel test threads would otherwise race on the ring.
+
+use matroid_coreset::obs::{self, MetricsRegistry};
+
+#[test]
+fn histogram_bucket_boundaries_render_cumulatively() {
+    let reg = MetricsRegistry::new();
+    let h = reg.histogram("lat_seconds", &[("t", "a")]);
+    h.observe_us(10); // exactly on the first bound: le="0.00001"
+    h.observe_us(11); // just over: le="0.000025"
+    h.observe_us(1_000_000); // le="1"
+    h.observe_us(99_000_000); // beyond the ladder: +Inf only
+    let text = reg.render_prometheus();
+    assert!(text.contains("# TYPE lat_seconds histogram\n"), "{text}");
+    assert!(text.contains("lat_seconds_bucket{t=\"a\",le=\"0.00001\"} 1\n"), "{text}");
+    assert!(text.contains("lat_seconds_bucket{t=\"a\",le=\"0.000025\"} 2\n"), "{text}");
+    assert!(text.contains("lat_seconds_bucket{t=\"a\",le=\"1\"} 3\n"), "{text}");
+    assert!(text.contains("lat_seconds_bucket{t=\"a\",le=\"10\"} 3\n"), "{text}");
+    assert!(text.contains("lat_seconds_bucket{t=\"a\",le=\"+Inf\"} 4\n"), "{text}");
+    assert!(text.contains("lat_seconds_sum{t=\"a\"} 100.000021\n"), "{text}");
+    assert!(text.contains("lat_seconds_count{t=\"a\"} 4\n"), "{text}");
+}
+
+#[test]
+fn same_samples_any_order_render_identical_text() {
+    let samples = [5u64, 40, 90, 400, 2_000, 2_000, 80_000, 20_000_000];
+    let a = MetricsRegistry::new();
+    let b = MetricsRegistry::new();
+    for &us in &samples {
+        a.histogram("h_seconds", &[("src", "x")]).observe_us(us);
+    }
+    for &us in samples.iter().rev() {
+        b.histogram("h_seconds", &[("src", "x")]).observe_us(us);
+    }
+    // registration order differs too: exposition sorts by (name, labels)
+    a.counter("z_total", &[]).add(7);
+    a.gauge("a_gauge", &[("n", "1")]).set(0.5);
+    b.gauge("a_gauge", &[("n", "1")]).set(0.5);
+    b.counter("z_total", &[]).add(7);
+    assert_eq!(a.render_prometheus(), b.render_prometheus());
+    assert_eq!(a.render_json(), b.render_json());
+    // integer-microsecond sums are what make the float-free guarantee
+    // hold: both orders accumulated exactly 20_082_535us
+    assert!(a.render_prometheus().contains("h_seconds_sum{src=\"x\"} 20.082535\n"));
+}
+
+#[test]
+fn label_values_are_prometheus_escaped() {
+    let reg = MetricsRegistry::new();
+    reg.counter("esc_total", &[("v", "a\\b\"c\nd")]).inc();
+    let text = reg.render_prometheus();
+    assert!(text.contains("esc_total{v=\"a\\\\b\\\"c\\nd\"} 1\n"), "{text}");
+}
+
+#[test]
+fn span_ring_nesting_overflow_and_jsonl_drain() {
+    // nesting: inner completes first, carries the outer's id as parent
+    obs::trace::enable(16);
+    {
+        let mut outer = matroid_coreset::span!("outer", "k" = 42);
+        outer.tag("extra", "v");
+        let _inner = matroid_coreset::span!("inner");
+    }
+    let (spans, dropped) = obs::trace::drain();
+    assert_eq!(dropped, 0);
+    assert_eq!(spans.len(), 2, "{spans:#?}");
+    let (inner, outer) = (&spans[0], &spans[1]);
+    assert_eq!(inner.name, "inner");
+    assert_eq!(outer.name, "outer");
+    assert_eq!(inner.parent, outer.id);
+    assert_eq!(outer.parent, 0);
+    assert_eq!(
+        outer.tags,
+        vec![("k".to_string(), "42".to_string()), ("extra".to_string(), "v".to_string())]
+    );
+
+    // overflow: capacity 4, six spans -> the two oldest are overwritten
+    obs::trace::enable(4);
+    for i in 0..6 {
+        let _s = obs::trace::span(&format!("s{i}"));
+    }
+    let path = std::env::temp_dir().join("dmmc_obs_telemetry_trace.jsonl");
+    let path = path.to_str().unwrap().to_string();
+    let (written, dropped) = obs::trace::write_jsonl(&path).unwrap();
+    assert_eq!(written, 4);
+    assert_eq!(dropped, 2);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4);
+    for line in &lines {
+        assert!(line.starts_with("{\"id\":"), "{line}");
+        assert!(line.ends_with('}'), "{line}");
+        assert!(line.contains("\"name\":\"s"), "{line}");
+        assert!(line.contains("\"start_us\":"), "{line}");
+        assert!(line.contains("\"dur_us\":"), "{line}");
+    }
+    assert!(lines[0].contains("\"name\":\"s2\""), "oldest survivor is s2: {text}");
+    std::fs::remove_file(&path).ok();
+
+    // disabled tracing produces inert guards and an empty ring
+    obs::trace::disable();
+    drop(obs::trace::span("off"));
+    let (spans, dropped) = obs::trace::drain();
+    assert!(spans.is_empty());
+    assert_eq!(dropped, 0);
+}

@@ -19,7 +19,11 @@
 //! * **panic containment** — a request that panics mid-execution (the
 //!   `DEBUG <tenant> panic` fault injector) answers `ERR internal`,
 //!   charges the tenant's error counter, and leaves every worker in the
-//!   pool serviceable.
+//!   pool serviceable;
+//! * **telemetry reconciliation** — after a coalesced burst plus an
+//!   error, the `METRICS` exposition fetched over TCP agrees exactly
+//!   with `ServiceStats` (hits + misses + coalesced + errors == queries,
+//!   counter for counter).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -320,6 +324,91 @@ fn poisoned_requests_do_not_kill_the_worker_pool() {
     drop(reader);
     drop(writer);
     drop(conns);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_reconcile_with_stats_after_a_coalesced_burst() {
+    const THREADS: usize = 8;
+    let state = Arc::new(ServeState::new(16));
+    let snap = snapshot(500, 400, 13);
+    let tenant = state.add("main", &snap).unwrap();
+    let spec = QuerySpec::sum_local_search(4, EngineKind::Scalar);
+    let barrier = Barrier::new(THREADS);
+    thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                barrier.wait();
+                tenant.query(&spec).unwrap();
+            });
+        }
+    });
+    // one failing query (k above k_max) and one warm hit, so every
+    // outcome counter is exercised: hit, miss, coalesced, error
+    assert!(tenant.query(&QuerySpec::sum_local_search(10, EngineKind::Scalar)).is_err());
+    assert_eq!(tenant.query(&spec).unwrap().source, QuerySource::Cache);
+    let st = state.total_stats();
+    assert_eq!(st.queries, THREADS as u64 + 2);
+
+    // fetch the exposition over a real socket: header, N lines, `# EOF`
+    let handle = spawn(Arc::clone(&state), 2).unwrap();
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+    writeln!(writer, "METRICS").unwrap();
+    writer.flush().unwrap();
+    let mut header = String::new();
+    reader.read_line(&mut header).unwrap();
+    let header = header.trim_end();
+    assert!(header.starts_with("OK metrics lines="), "{header}");
+    let n: usize = header.rsplit('=').next().unwrap().parse().unwrap();
+    let mut body = Vec::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "reply ended before # EOF");
+        let line = line.trim_end().to_string();
+        if line == "# EOF" {
+            break;
+        }
+        body.push(line);
+    }
+    assert_eq!(body.len(), n, "header line count matches the exposition");
+
+    // the registry must reconcile with ServiceStats counter for counter:
+    // telemetry is a mirror of the result path, never a second opinion
+    let sum_family = |family: &str| -> u64 {
+        body.iter()
+            .filter_map(|l| {
+                let rest = l.strip_prefix(family)?;
+                if !rest.starts_with('{') && !rest.starts_with(' ') {
+                    return None;
+                }
+                l.rsplit(' ').next().unwrap().parse::<u64>().ok()
+            })
+            .sum()
+    };
+    assert_eq!(sum_family("dmmc_queries_total"), st.queries, "{body:#?}");
+    assert_eq!(sum_family("dmmc_cache_hits_total"), st.hits);
+    assert_eq!(sum_family("dmmc_cache_misses_total"), st.misses);
+    assert_eq!(sum_family("dmmc_coalesced_total"), st.coalesced);
+    assert_eq!(sum_family("dmmc_errors_total"), st.errors);
+    assert_eq!(
+        st.hits + st.misses + st.coalesced + st.errors,
+        st.queries,
+        "every request resolves to exactly one outcome: {st:?}"
+    );
+    assert!(
+        body.iter().any(|l| l.starts_with("dmmc_query_latency_seconds_bucket{")),
+        "latency histogram exposed: {body:#?}"
+    );
+    // gauges are stamped from tenant status at METRICS time
+    assert!(body.iter().any(|l| l.starts_with("dmmc_tenant_epoch{tenant=\"main\"}")), "{body:#?}");
+    assert!(body.iter().any(|l| l.starts_with("dmmc_index_live_fraction{tenant=\"main\"}")));
+
+    writeln!(writer, "QUIT").unwrap();
+    writer.flush().unwrap();
+    drop(reader);
+    drop(writer);
     handle.shutdown().unwrap();
 }
 

@@ -102,6 +102,40 @@ fn allowlist_suppresses_and_pins_symbols() {
     assert_eq!(symbols, ["HashMap", "HashMap"], "HashMap survives the pinned entry");
 }
 
+/// The telemetry subsystem gets exactly ONE ambient-clock dispensation:
+/// the pinned `Instant::now` allow entry for `rust/src/obs/trace.rs` in
+/// the real checked-in lint.toml (the trace-epoch anchor).  Any other
+/// time or RNG source inside obs still fails the tree, and the entry is
+/// load-bearing (symbol-pinned, justified) rather than a blanket waiver.
+#[test]
+fn obs_clock_is_allowed_only_via_the_pinned_entry() {
+    let src = include_str!("../../lint.toml");
+    let mut policy = xtask::allowlist::parse(src, "rust/lint.toml").expect("rust/lint.toml parses");
+    policy.allow.retain(|e| e.path == "rust/src/obs/trace.rs");
+    assert_eq!(policy.allow.len(), 1, "exactly one obs allow entry in rust/lint.toml");
+    assert_eq!(policy.allow[0].lint, "L4");
+    assert_eq!(policy.allow[0].symbol, "Instant::now", "entry is symbol-pinned");
+    assert!(!policy.allow[0].justification.is_empty());
+
+    // the L4 fixture (Instant::now + SystemTime + thread_rng), dropped
+    // into the allowed file: only the pinned symbol is suppressed
+    let files = [SourceFile {
+        path: "rust/src/obs/trace.rs".to_string(),
+        content: L4_FIXTURE.to_string(),
+    }];
+    let report = xtask::run(&files, &policy);
+    assert_eq!(report.suppressed, 1, "only Instant::now rides the entry");
+    let symbols: Vec<&str> = report.findings.iter().map(|f| f.symbol.as_str()).collect();
+    assert_eq!(symbols, ["SystemTime", "thread_rng"], "{:#?}", report.findings);
+
+    // and without the entry the clock is a raw finding — obs is L4-scoped
+    let raw = lint_at("rust/src/obs/trace.rs", L4_FIXTURE, &real_policy_no_allow());
+    assert!(
+        raw.iter().any(|f| f.lint == "L4" && f.symbol == "Instant::now"),
+        "{raw:#?}"
+    );
+}
+
 #[test]
 fn stale_and_unjustified_entries_are_findings() {
     let mut policy = real_policy_no_allow();
